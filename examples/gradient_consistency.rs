@@ -1,0 +1,39 @@
+//! §IV demo: the Optimize-Then-Discretize adjoint (Eq. 10) is inconsistent
+//! with the discrete forward pass — its gradient error is O(dt) — while the
+//! neural-ODE [8] gradient carries an O(1) reconstruction error that no dt
+//! refinement fixes. The ANODE (DTO) gradient matches finite differences
+//! at every dt.
+//!
+//!     make artifacts && cargo run --release --example gradient_consistency
+
+use anode::harness::{format_gradcheck, gradient_consistency};
+use anode::runtime::ArtifactRegistry;
+use anode::util::cli::Args;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::from_env();
+    let reg =
+        ArtifactRegistry::open(std::path::Path::new(&args.get_or("artifacts", "artifacts")))?;
+    let rows = gradient_consistency(&reg, args.get_parse_or("seed", 5))?;
+    println!("§IV — gradient consistency on the tiny ODE block (Euler, dt = 1/Nt)\n");
+    println!("{}", format_gradcheck(&rows));
+
+    // Fit the OTD error slope: err ≈ C · dt^p  =>  p ≈ 1 (Eq. 9 vs Eq. 10).
+    let (mut sx, mut sy, mut sxx, mut sxy) = (0.0f64, 0.0, 0.0, 0.0);
+    for r in &rows {
+        let x = (r.dt as f64).ln();
+        let y = (r.otd_rel_err as f64).ln();
+        sx += x;
+        sy += y;
+        sxx += x * x;
+        sxy += x * y;
+    }
+    let n = rows.len() as f64;
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    println!("fitted OTD error order in dt: p ≈ {slope:.2} (paper: O(dt) ⇒ p ≈ 1)");
+    println!(
+        "[8] error at finest dt: {:.3} (does not vanish — reconstruction instability)",
+        rows.last().unwrap().node_rel_err
+    );
+    Ok(())
+}

@@ -1,0 +1,22 @@
+use anode::runtime::ArtifactRegistry;
+use anode::tensor::Tensor;
+use std::time::Instant;
+
+fn main() {
+    let reg = ArtifactRegistry::open(std::path::Path::new("artifacts")).unwrap();
+    for name in ["stem_fwd", "block_resnet_s0_euler_fwd", "block_resnet_s0_euler_vjp",
+                 "block_resnet_s1_euler_fwd", "block_resnet_s1_euler_vjp",
+                 "block_resnet_s2_euler_fwd", "block_resnet_s2_euler_vjp",
+                 "block_sqnxt_s0_euler_fwd", "block_sqnxt_s0_euler_vjp",
+                 "trans0_fwd", "head10_loss_grad"] {
+        let spec = reg.module_spec(name).unwrap().clone();
+        let inputs: Vec<Tensor> = spec.inputs.iter().map(|s| Tensor::full(&s.shape, 0.1)).collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let t0 = Instant::now();
+        reg.call(name, &refs).unwrap();
+        let compile_and_first = t0.elapsed();
+        let t1 = Instant::now();
+        for _ in 0..3 { reg.call(name, &refs).unwrap(); }
+        println!("{:<32} first(incl compile)={:>8.1?} warm={:>8.1?}", name, compile_and_first, t1.elapsed()/3);
+    }
+}

@@ -1,0 +1,63 @@
+//! Quickstart: load the AOT artifacts, run one ODE block forward, compute
+//! its ANODE (DTO) gradient, and cross-check against finite differences.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anode::rng::Rng;
+use anode::runtime::ArtifactRegistry;
+use anode::tensor::Tensor;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let reg = ArtifactRegistry::open(std::path::Path::new("artifacts"))?;
+    println!("manifest: {} modules", reg.module_names().len());
+
+    // 1. Run the tiny ODE block forward: z(1) = z(0) + ∫ f(z, θ) dt.
+    let fwd = "tiny_euler_nt4_fwd";
+    let spec = reg.module_spec(fwd)?.clone();
+    let mut rng = Rng::new(7);
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|s| {
+            let n: usize = s.shape.iter().product();
+            Tensor::from_vec(s.shape.clone(), rng.normal_vec(n).iter().map(|x| x * 0.2).collect())
+                .unwrap()
+        })
+        .collect();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let z1 = reg.call(fwd, &refs)?.remove(0);
+    println!(
+        "forward:  z0 {:?} -> z1 {:?}  (norm {:.4})",
+        inputs[0].shape(),
+        z1.shape(),
+        z1.norm2()
+    );
+
+    // 2. ANODE gradient: reverse-mode through the discrete solver (DTO).
+    let g = Tensor::full(z1.shape(), 1.0); // dL/dz1 for L = sum(z1)
+    let mut vjp_in = refs.clone();
+    vjp_in.push(&g);
+    let grads = reg.call("tiny_euler_nt4_vjp", &vjp_in)?;
+    println!(
+        "backward: dL/dz0 norm {:.4}, {} parameter grads",
+        grads[0].norm2(),
+        grads.len() - 1
+    );
+
+    // 3. Finite-difference check on one coordinate.
+    let idx = 42;
+    let eps = 1e-3f32;
+    let sum = |t: &Tensor| t.data().iter().map(|&x| x as f64).sum::<f64>();
+    let mut plus = inputs.clone();
+    plus[0].data_mut()[idx] += eps;
+    let mut minus = inputs.clone();
+    minus[0].data_mut()[idx] -= eps;
+    let fp = sum(&reg.call(fwd, &plus.iter().collect::<Vec<_>>())?[0]);
+    let fm = sum(&reg.call(fwd, &minus.iter().collect::<Vec<_>>())?[0]);
+    let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+    let ad = grads[0].data()[idx];
+    println!("fd check: finite-diff {fd:.5} vs adjoint {ad:.5} (|Δ| {:.2e})", (fd - ad).abs());
+    assert!((fd - ad).abs() < 1e-2 * (1.0 + ad.abs()));
+    println!("quickstart OK");
+    Ok(())
+}

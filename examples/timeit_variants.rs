@@ -1,0 +1,19 @@
+use anode::runtime::XlaRuntime;
+use anode::tensor::Tensor;
+use std::time::Instant;
+fn main() {
+    let rt = XlaRuntime::cpu().unwrap();
+    for (path, nin) in [("/tmp/blk_ref_vjp.hlo.txt", 6usize), ("/tmp/blk_flat_fwd.hlo.txt", 5), ("/tmp/blk_grid_fwd.hlo.txt", 5)] {
+        let exe = rt.compile_hlo_text(path, std::path::Path::new(path)).unwrap();
+        let shapes: Vec<Vec<usize>> = match nin {
+            6 => vec![vec![32,32,32,16], vec![3,3,16,16], vec![16], vec![3,3,16,16], vec![16], vec![32,32,32,16]],
+            _ => vec![vec![32,32,32,16], vec![3,3,16,16], vec![16], vec![3,3,16,16], vec![16]],
+        };
+        let inputs: Vec<Tensor> = shapes.iter().map(|s| Tensor::full(s, 0.1)).collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        exe.call(&refs).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..3 { exe.call(&refs).unwrap(); }
+        println!("{:<30} warm={:?}", path, t0.elapsed()/3);
+    }
+}

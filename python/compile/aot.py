@@ -1,0 +1,278 @@
+# AOT compile path: lower every module the Rust coordinator needs to HLO
+# *text* and write artifacts/{manifest.json, params.bin}.
+#
+# HLO text — NOT lowered.compile().serialize() — is the interchange format:
+# jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+# xla_extension 0.5.1 (the version the published `xla` 0.1.6 crate binds)
+# rejects; the text parser reassigns ids and round-trips cleanly. See
+# /opt/xla-example/README.md.
+#
+# Python runs ONCE here (`make artifacts`); it is never on the training path.
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model
+
+
+def to_hlo_text(fn, specs):
+    # keep_unused=True: jit would otherwise prune parameters whose *value*
+    # is unused (e.g. a bias that only contributes a shape to its gradient),
+    # desynchronizing the compiled program arity from the manifest.
+    lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def spec_entry(name, s):
+    return {"name": name, "shape": list(s.shape), "dtype": "f32"}
+
+
+def block_module_set(cfg: configs.NetConfig, stage: int):
+    """(suffix, fn, input specs, output specs) for one stage's ODE block."""
+    b, hw, c = cfg.batch, cfg.stage_hw(stage), cfg.channels[stage]
+    z = f32((b, hw, hw, c))
+    theta_shapes = configs.block_param_shapes(cfg, stage)
+    theta = [f32(s) for _, s in theta_shapes]
+    theta_names = [n for n, _ in theta_shapes]
+    arch, nt = cfg.arch, cfg.nt
+
+    def iospec(ins, outs):
+        return ([spec_entry(n, s) for n, s in ins], [spec_entry(n, s) for n, s in outs])
+
+    mods = []
+    for solver in configs.SOLVERS[arch]:
+        mods.append(
+            (f"{solver}_fwd", model.block_fwd(arch, solver, nt),
+             *iospec([("z", z)] + list(zip(theta_names, theta)), [("z1", z)]))
+        )
+        mods.append(
+            (f"{solver}_vjp", model.block_vjp(arch, solver, nt),
+             *iospec([("z", z)] + list(zip(theta_names, theta)) + [("g", z)],
+                     [("gz", z)] + [(f"g_{n}", s) for n, s in zip(theta_names, theta)]))
+        )
+        mods.append(
+            (f"{solver}_node", model.block_node(arch, solver, nt),
+             *iospec([("z1", z)] + list(zip(theta_names, theta)) + [("g", z)],
+                     [("gz", z)] + [(f"g_{n}", s) for n, s in zip(theta_names, theta)]
+                     + [("z0_rec", z)]))
+        )
+        mods.append(
+            (f"{solver}_step_fwd", model.block_step_fwd(arch, solver, nt),
+             *iospec([("z", z)] + list(zip(theta_names, theta)), [("z1", z)]))
+        )
+        mods.append(
+            (f"{solver}_step_vjp", model.block_step_vjp(arch, solver, nt),
+             *iospec([("z", z)] + list(zip(theta_names, theta)) + [("g", z)],
+                     [("gz", z)] + [(f"g_{n}", s) for n, s in zip(theta_names, theta)]))
+        )
+    # OTD study is Euler-only (§IV analyzes the Euler inconsistency).
+    mods.append(
+        ("euler_otd", model.block_otd(arch, "euler", nt),
+         *iospec([("z", z)] + list(zip(theta_names, theta)) + [("g", z)],
+                 [("gz", z)] + [(f"g_{n}", s) for n, s in zip(theta_names, theta)]))
+    )
+    # RK45: forward + [8]-gradient (the divergent configuration of Figs 3-5).
+    mods.append(
+        ("rk45_fwd", model.block_fwd(arch, "rk45", nt),
+         *iospec([("z", z)] + list(zip(theta_names, theta)), [("z1", z)]))
+    )
+    mods.append(
+        ("rk45_node", model.block_node(arch, "rk45", nt),
+         *iospec([("z1", z)] + list(zip(theta_names, theta)) + [("g", z)],
+                 [("gz", z)] + [(f"g_{n}", s) for n, s in zip(theta_names, theta)]
+                 + [("z0_rec", z)]))
+    )
+
+    out = []
+    for suffix, fn, ins, outs in mods:
+        name = f"block_{arch}_s{stage}_{suffix}"
+        argspecs = [f32(tuple(i["shape"])) for i in ins]
+        out.append((name, fn, argspecs, ins, outs))
+    return out
+
+
+def shared_module_set(cfg: configs.NetConfig, num_classes_list):
+    """Stem / transitions / heads (shared across solvers)."""
+    b, img = cfg.batch, cfg.image
+    c = cfg.channels
+    mods = []
+
+    x = f32((b, img, img, cfg.in_channels))
+    z0 = f32((b, img, img, c[0]))
+    sw, sb = f32((3, 3, cfg.in_channels, c[0])), f32((c[0],))
+    mods.append(("stem_fwd", model.stem_fwd_fn, [x, sw, sb],
+                 [spec_entry("x", x), spec_entry("w", sw), spec_entry("b", sb)],
+                 [spec_entry("z0", z0)]))
+    mods.append(("stem_vjp", model.stem_vjp_fn, [x, sw, sb, z0],
+                 [spec_entry("x", x), spec_entry("w", sw), spec_entry("b", sb),
+                  spec_entry("g", z0)],
+                 [spec_entry("gw", sw), spec_entry("gb", sb)]))
+
+    for s in range(cfg.stages - 1):
+        hw = cfg.stage_hw(s)
+        zin = f32((b, hw, hw, c[s]))
+        zout = f32((b, hw // 2, hw // 2, c[s + 1]))
+        tw, tb = f32((3, 3, c[s], c[s + 1])), f32((c[s + 1],))
+        mods.append((f"trans{s}_fwd", model.trans_fwd_fn, [zin, tw, tb],
+                     [spec_entry("z", zin), spec_entry("w", tw), spec_entry("b", tb)],
+                     [spec_entry("z1", zout)]))
+        mods.append((f"trans{s}_vjp", model.trans_vjp_fn, [zin, tw, tb, zout],
+                     [spec_entry("z", zin), spec_entry("w", tw), spec_entry("b", tb),
+                      spec_entry("g", zout)],
+                     [spec_entry("gz", zin), spec_entry("gw", tw), spec_entry("gb", tb)]))
+
+    hw_last = cfg.stage_hw(cfg.stages - 1)
+    zl = f32((b, hw_last, hw_last, c[-1]))
+    for ncls in num_classes_list:
+        hww, hb = f32((c[-1], ncls)), f32((ncls,))
+        y = f32((b,))
+        scalar = f32(())
+        mods.append((f"head{ncls}_loss_grad", model.head_loss_grad_fn, [zl, hww, hb, y],
+                     [spec_entry("z", zl), spec_entry("w", hww), spec_entry("b", hb),
+                      spec_entry("labels", y)],
+                     [spec_entry("loss", scalar), spec_entry("correct", scalar),
+                      spec_entry("gz", zl), spec_entry("gw", hww), spec_entry("gb", hb)]))
+        mods.append((f"head{ncls}_eval", model.head_eval_fn, [zl, hww, hb, y],
+                     [spec_entry("z", zl), spec_entry("w", hww), spec_entry("b", hb),
+                      spec_entry("labels", y)],
+                     [spec_entry("loss", scalar), spec_entry("correct", scalar)]))
+    return mods
+
+
+def tiny_module_set(tiny: configs.TinyConfig):
+    """Tiny resnet block at several Nt values for the §IV dt-sweep
+    (gradient-consistency study) and fast Rust integration tests."""
+    b, hw, c = tiny.batch, tiny.hw, tiny.channels
+    cfg = configs.NetConfig(arch="resnet", batch=b, image=hw, channels=(c,))
+    z = f32((b, hw, hw, c))
+    theta_shapes = configs.block_param_shapes(cfg, 0)
+    theta = [f32(s) for _, s in theta_shapes]
+    theta_names = [n for n, _ in theta_shapes]
+    mods = []
+    for nt in tiny.nts:
+        common_in = [spec_entry("z", z)] + [
+            spec_entry(n, s) for n, s in zip(theta_names, theta)
+        ]
+        gout = [spec_entry("gz", z)] + [
+            spec_entry(f"g_{n}", s) for n, s in zip(theta_names, theta)
+        ]
+        mods.append((f"tiny_euler_nt{nt}_fwd", model.block_fwd("resnet", "euler", nt),
+                     [z] + theta, common_in, [spec_entry("z1", z)]))
+        mods.append((f"tiny_euler_nt{nt}_vjp", model.block_vjp("resnet", "euler", nt),
+                     [z] + theta + [z], common_in + [spec_entry("g", z)], gout))
+        mods.append((f"tiny_euler_nt{nt}_otd", model.block_otd("resnet", "euler", nt),
+                     [z] + theta + [z], common_in + [spec_entry("g", z)], gout))
+        mods.append((f"tiny_euler_nt{nt}_node", model.block_node("resnet", "euler", nt),
+                     [z] + theta + [z], common_in + [spec_entry("g", z)],
+                     gout + [spec_entry("z0_rec", z)]))
+        mods.append((f"tiny_euler_nt{nt}_step_fwd", model.block_step_fwd("resnet", "euler", nt),
+                     [z] + theta, common_in, [spec_entry("z1", z)]))
+        mods.append((f"tiny_euler_nt{nt}_step_vjp", model.block_step_vjp("resnet", "euler", nt),
+                     [z] + theta + [z], common_in + [spec_entry("g", z)], gout))
+    return mods
+
+
+def write_params(out_dir):
+    """Seeded initial parameters for every (arch, num_classes) model,
+    concatenated into one params.bin; manifest records offsets."""
+    params_index = {}
+    blob = bytearray()
+    offset = 0
+    for arch, cfg in (("resnet", configs.RESNET), ("sqnxt", configs.SQNXT)):
+        for ncls in (10, 100):
+            layout, values = model.init_params(cfg, ncls, seed=0)
+            entries = []
+            for (name, shape), val in zip(layout, values):
+                import numpy as np
+
+                arr = np.asarray(val, dtype="<f4")
+                entries.append({"name": name, "shape": list(shape), "offset": offset})
+                blob.extend(arr.tobytes())
+                offset += arr.size
+            params_index[f"{arch}{ncls}"] = entries
+    with open(os.path.join(out_dir, "params.bin"), "wb") as f:
+        f.write(bytes(blob))
+    return params_index
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="substring filter of module names")
+    args = ap.parse_args()
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+
+    mods = []
+    for cfg in (configs.RESNET, configs.SQNXT):
+        for s in range(cfg.stages):
+            mods.extend(block_module_set(cfg, s))
+    # Shared stem/transition/head (identical shapes for both archs).
+    mods.extend(shared_module_set(configs.RESNET, (10, 100)))
+    mods.extend(tiny_module_set(configs.TINY))
+
+    if args.only:
+        mods = [m for m in mods if args.only in m[0]]
+
+    manifest_modules = []
+    t_all = time.time()
+    for name, fn, argspecs, ins, outs in mods:
+        t0 = time.time()
+        text = to_hlo_text(fn, argspecs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        manifest_modules.append({"name": name, "file": fname, "inputs": ins, "outputs": outs})
+        print(f"  {name:<44} {len(text)//1024:>6} KB  {time.time()-t0:5.1f}s", flush=True)
+
+    params_index = write_params(out_dir)
+
+    # With --only, merge into the existing manifest instead of clobbering it.
+    if args.only:
+        manifest_path = os.path.join(out_dir, "manifest.json")
+        if os.path.exists(manifest_path):
+            with open(manifest_path) as f:
+                old = json.load(f)
+            rebuilt = {m["name"] for m in manifest_modules}
+            manifest_modules = [
+                m for m in old.get("modules", []) if m["name"] not in rebuilt
+            ] + manifest_modules
+
+    manifest = {
+        "config": {
+            "batch": configs.RESNET.batch,
+            "image": configs.RESNET.image,
+            "nt": configs.RESNET.nt,
+            "channels": list(configs.RESNET.channels),
+            "blocks_per_stage": configs.RESNET.blocks_per_stage,
+            "tiny_batch": configs.TINY.batch,
+            "tiny_hw": configs.TINY.hw,
+            "tiny_channels": configs.TINY.channels,
+            "tiny_nts": list(configs.TINY.nts),
+            "rk45_max_steps": configs.RK45_MAX_STEPS,
+        },
+        "modules": manifest_modules,
+        "params": params_index,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest_modules)} modules + params.bin in {time.time()-t_all:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

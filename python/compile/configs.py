@@ -1,0 +1,116 @@
+# Shared model/solver configuration between aot.py, the tests, and (via
+# manifest.json) the Rust coordinator. Single source of truth for shapes.
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """ODE-network family configuration (paper §V experiments).
+
+    `arch` selects the residual RHS:
+      - "resnet": f = conv3x3 -> relu -> conv3x3 (ResNet-18-like basic block)
+      - "sqnxt":  f = SqueezeNext low-rank block of Fig. 2
+        (1x1 /2, 1x1 /2, 3x1, 1x3, 1x1 expand)
+    Non-transition blocks are ODE blocks; transitions are plain strided
+    residual-free conv downsamples (paper keeps transitions non-ODE).
+    """
+
+    arch: str = "resnet"
+    batch: int = 32
+    image: int = 32
+    in_channels: int = 3
+    channels: tuple = (16, 32, 64)
+    blocks_per_stage: int = 2
+    nt: int = 5  # time steps per ODE block
+    time_horizon: float = 1.0
+
+    @property
+    def stages(self):
+        return len(self.channels)
+
+    def stage_hw(self, s):
+        """Spatial side length at stage s (0-based)."""
+        return self.image // (2**s)
+
+
+@dataclass(frozen=True)
+class TinyConfig:
+    """Small block used for the gradient-consistency study (§IV) and fast
+    integration tests: dt sweep needs several Nt values baked, so the shape
+    is kept tiny."""
+
+    batch: int = 4
+    hw: int = 8
+    channels: int = 8
+    nts: tuple = (1, 2, 4, 8, 16, 32)
+
+
+RESNET = NetConfig(arch="resnet")
+SQNXT = NetConfig(arch="sqnxt")
+TINY = TinyConfig()
+
+# Solvers whose block artifacts are emitted per architecture (DESIGN.md §5).
+SOLVERS = {
+    "resnet": ("euler",),
+    "sqnxt": ("euler", "rk2"),
+}
+RK45_MAX_STEPS = 64
+RK45_RTOL = 1e-4
+RK45_ATOL = 1e-6
+
+
+def block_param_shapes(cfg: NetConfig, stage: int):
+    """Parameter (name, shape) list of one ODE block at `stage` (0-based)."""
+    c = cfg.channels[stage]
+    if cfg.arch == "resnet":
+        return [
+            ("w1", (3, 3, c, c)),
+            ("b1", (c,)),
+            ("w2", (3, 3, c, c)),
+            ("b2", (c,)),
+        ]
+    if cfg.arch == "sqnxt":
+        c2, c4 = max(c // 2, 1), max(c // 4, 1)
+        return [
+            ("w1", (1, 1, c, c2)),
+            ("b1", (c2,)),
+            ("w2", (1, 1, c2, c4)),
+            ("b2", (c4,)),
+            ("w3", (3, 1, c4, c4)),
+            ("b3", (c4,)),
+            ("w4", (1, 3, c4, c4)),
+            ("b4", (c4,)),
+            ("w5", (1, 1, c4, c)),
+            ("b5", (c,)),
+        ]
+    raise ValueError(f"unknown arch {cfg.arch!r}")
+
+
+def stem_param_shapes(cfg: NetConfig):
+    return [("w", (3, 3, cfg.in_channels, cfg.channels[0])), ("b", (cfg.channels[0],))]
+
+
+def trans_param_shapes(cfg: NetConfig, stage: int):
+    """Transition after stage `stage` (0-based): C_s -> C_{s+1}, /2 spatial."""
+    return [
+        ("w", (3, 3, cfg.channels[stage], cfg.channels[stage + 1])),
+        ("b", (cfg.channels[stage + 1],)),
+    ]
+
+
+def head_param_shapes(cfg: NetConfig, num_classes: int):
+    return [("w", (cfg.channels[-1], num_classes)), ("b", (num_classes,))]
+
+
+def model_param_layout(cfg: NetConfig, num_classes: int):
+    """Canonical (name, shape) list in execution order — must match the Rust
+    coordinator's parameter ordering and params.bin."""
+    layout = [(f"stem.{n}", s) for n, s in stem_param_shapes(cfg)]
+    for s in range(cfg.stages):
+        for b in range(cfg.blocks_per_stage):
+            layout += [(f"s{s}.b{b}.{n}", shp) for n, shp in block_param_shapes(cfg, s)]
+        if s + 1 < cfg.stages:
+            layout += [(f"trans{s}.{n}", shp) for n, shp in trans_param_shapes(cfg, s)]
+    layout += [(f"head.{n}", s) for n, s in head_param_shapes(cfg, num_classes)]
+    return layout

@@ -1,0 +1,10 @@
+# L1: Pallas kernels for the paper's compute hot-spot (conv patch-matmul).
+from .conv import (  # noqa: F401
+    act_grad,
+    conv2d_input_grad,
+    conv2d_pallas_raw,
+    conv2d_weight_grad,
+    downsample2x,
+    kernel_footprint,
+    make_conv2d,
+)

@@ -1,0 +1,213 @@
+# L1: Pallas convolution kernels (the compute hot-spot of the ODE RHS).
+#
+# TPU adaptation of the paper's GPU convnets (DESIGN.md §3): stride-1 SAME
+# convolution expressed as an im2col *patch-matmul* so the contraction runs
+# on the MXU systolic array. BlockSpec tiles the HBM->VMEM schedule over the
+# batch grid (one image block per grid step), the role threadblocks play in
+# the CUDA formulation. Bias-add + activation are fused into the same kernel
+# to avoid an HBM round trip.
+#
+# `pallas_call` has no reverse-mode rule, so convolution is wrapped in
+# `jax.custom_vjp` whose backward pass is *also* Pallas kernels:
+#   - input gradient  = SAME conv of the pre-activation gradient with the
+#     spatially-flipped, channel-transposed weights (same fwd kernel);
+#   - weight gradient = patch-matmul correlation accumulated across the
+#     batch grid (revisited output block + @pl.when init).
+# This is exactly the Discretize-Then-Optimize construction the paper
+# advocates: the gradient of the *discrete* kernel, not of a continuous
+# idealization.
+#
+# interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+# custom-calls; interpret mode folds the kernel into plain HLO (see
+# /opt/xla-example/README.md).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Activations supported inside the fused kernel.
+LEAKY_SLOPE = 0.1
+
+
+def _apply_act(pre, act):
+    if act == "id":
+        return pre
+    if act == "relu":
+        return jnp.maximum(pre, 0.0)
+    if act == "leaky":
+        return jnp.where(pre > 0, pre, LEAKY_SLOPE * pre)
+    if act == "softplus":
+        # Numerically-stable softplus.
+        return jnp.logaddexp(pre, 0.0)
+    raise ValueError(f"unknown act {act!r}")
+
+
+def act_grad(pre, act):
+    """d act / d pre, evaluated at the stored pre-activation."""
+    if act == "id":
+        return jnp.ones_like(pre)
+    if act == "relu":
+        return (pre > 0).astype(pre.dtype)
+    if act == "leaky":
+        return jnp.where(pre > 0, 1.0, LEAKY_SLOPE).astype(pre.dtype)
+    if act == "softplus":
+        return jax.nn.sigmoid(pre)
+    raise ValueError(f"unknown act {act!r}")
+
+
+def _patches(xp, kh, kw, h, w):
+    """im2col: (B, Hp, Wp, Cin) padded batch -> (B*H*W, kh*kw*Cin) patch
+    matrix.
+
+    Static unrolled shifts (kh*kw slices) — on TPU these are cheap VMEM
+    re-reads; the expensive op is the single big matmul that follows.
+    """
+    b = xp.shape[0]
+    cols = [xp[:, i : i + h, j : j + w, :] for i in range(kh) for j in range(kw)]
+    stack = jnp.concatenate(cols, axis=-1)  # (B, H, W, kh*kw*Cin)
+    return stack.reshape(b * h * w, kh * kw * xp.shape[-1])
+
+
+def _conv_fwd_kernel(xp_ref, w_ref, b_ref, pre_ref, y_ref, *, kh, kw, act):
+    """Fused patch-matmul + bias + activation over the whole block.
+
+    CPU-interpret runs one whole-batch block (grid=()); a real-TPU build
+    would tile the same kernel over (batch, row-tile) grid with VMEM-sized
+    BlockSpecs — `kernel_footprint` models that geometry for the perf
+    estimates in DESIGN.md §8.
+    """
+    xp = xp_ref[...]  # (B, H+kh-1, W+kw-1, Cin)
+    bsz, h, w = pre_ref.shape[0], pre_ref.shape[1], pre_ref.shape[2]
+    cout = w_ref.shape[-1]
+    pmat = _patches(xp, kh, kw, h, w)
+    wmat = w_ref[...].reshape(kh * kw * xp.shape[-1], cout)
+    # f32 accumulation regardless of input dtype (MXU-style).
+    pre = jnp.dot(pmat, wmat, preferred_element_type=jnp.float32)
+    pre = pre + b_ref[...].astype(jnp.float32)
+    pre = pre.reshape(bsz, h, w, cout)
+    pre_ref[...] = pre.astype(pre_ref.dtype)
+    y_ref[...] = _apply_act(pre, act).astype(y_ref.dtype)
+
+
+def _conv_wgrad_kernel(xp_ref, g_ref, gw_ref, *, kh, kw):
+    """Weight gradient: correlation as one patch-matmul over the batch
+    (pmatᵀ @ g); on TPU this contraction maps directly onto the MXU with
+    the batch·spatial axis as the reduction dimension."""
+    xp = xp_ref[...]
+    g = g_ref[...]  # (B, H, W, Cout)
+    bsz, h, w, cout = g.shape
+    cin = xp.shape[-1]
+    pmat = _patches(xp, kh, kw, h, w)  # (B*H*W, kh*kw*Cin)
+    gmat = g.reshape(bsz * h * w, cout).astype(jnp.float32)
+    gw = jnp.dot(pmat.T.astype(jnp.float32), gmat, preferred_element_type=jnp.float32)
+    gw_ref[...] = gw.reshape(kh, kw, cin, cout).astype(gw_ref.dtype)
+
+
+def _pad_same(x, kh, kw):
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    return jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+
+
+def conv2d_pallas_raw(x, w, b, act, *, interpret=True):
+    """Forward conv returning (pre, y). x: (B,H,W,Cin); w: (kh,kw,Cin,Cout)."""
+    bsz, h, wd, _ = x.shape
+    kh, kw, _, cout = w.shape
+    xp = _pad_same(x, kh, kw)
+    kern = functools.partial(_conv_fwd_kernel, kh=kh, kw=kw, act=act)
+    out_shape = [
+        jax.ShapeDtypeStruct((bsz, h, wd, cout), x.dtype),
+        jax.ShapeDtypeStruct((bsz, h, wd, cout), x.dtype),
+    ]
+    pre, y = pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(xp, w, b)
+    return pre, y
+
+
+def conv2d_input_grad(gpre, w, *, interpret=True):
+    """∂L/∂x for stride-1 SAME conv: conv(gpre, flip_hw(w) with Cin<->Cout)."""
+    wt = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)
+    cin = w.shape[2]
+    zero_b = jnp.zeros((cin,), dtype=gpre.dtype)
+    _, gx = conv2d_pallas_raw(gpre, wt, zero_b, "id", interpret=interpret)
+    return gx
+
+
+def conv2d_weight_grad(x, gpre, kh, kw, *, interpret=True):
+    """∂L/∂w via the Pallas correlation kernel."""
+    bsz, h, wd, cin = x.shape
+    cout = gpre.shape[-1]
+    xp = _pad_same(x, kh, kw)
+    kern = functools.partial(_conv_wgrad_kernel, kh=kh, kw=kw)
+    gw = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((kh, kw, cin, cout), jnp.float32),
+        interpret=interpret,
+    )(xp, gpre)
+    return gw.astype(x.dtype)
+
+
+@functools.lru_cache(maxsize=None)
+def make_conv2d(act: str, interpret: bool = True):
+    """Differentiable fused conv+bias+act with Pallas forward AND backward.
+
+    Returns conv(x, w, b) -> y with a custom VJP. The VJP is the exact
+    gradient of the discrete kernel (DTO), implemented with the same Pallas
+    machinery as the forward pass.
+    """
+
+    @jax.custom_vjp
+    def conv(x, w, b):
+        _, y = conv2d_pallas_raw(x, w, b, act, interpret=interpret)
+        return y
+
+    def fwd(x, w, b):
+        pre, y = conv2d_pallas_raw(x, w, b, act, interpret=interpret)
+        return y, (x, w, pre)
+
+    def bwd(res, gy):
+        x, w, pre = res
+        gpre = gy * act_grad(pre, act)
+        # Bias grad is a trivial reduction; XLA fuses it — no kernel needed.
+        gb = gpre.sum(axis=(0, 1, 2)).astype(gpre.dtype)
+        gx = conv2d_input_grad(gpre, w, interpret=interpret)
+        gw = conv2d_weight_grad(x, gpre, w.shape[0], w.shape[1], interpret=interpret)
+        return gx, gw, gb
+
+    conv.defvjp(fwd, bwd)
+    return conv
+
+
+def downsample2x(x):
+    """Stride-2 as stride-1 conv + slice.
+
+    For even H and SAME padding, XLA's stride-2 conv pads (0,1) while
+    stride-1 pads (1,1), so conv_s2(x)[i,j] == conv_s1(x)[2i+1, 2j+1] — the
+    odd phase. Keeps every Pallas kernel stride-1 (transposed/dilated
+    backward kernels never needed); autodiff through the slice is an exact
+    scatter.
+    """
+    return x[:, 1::2, 1::2, :]
+
+
+# VMEM/MXU structural estimate used by the perf pass (DESIGN.md §8).
+def kernel_footprint(batch_block, h, w, cin, cout, kh, kw, dtype_bytes=4):
+    """Return dict of VMEM bytes per grid step and MXU utilization estimate."""
+    hp, wp = h + kh - 1, w + kw - 1
+    vmem_in = batch_block * hp * wp * cin * dtype_bytes
+    vmem_patches = h * w * kh * kw * cin * dtype_bytes
+    vmem_w = kh * kw * cin * cout * dtype_bytes
+    vmem_out = 2 * batch_block * h * w * cout * dtype_bytes  # pre + y
+    m, k, n = h * w, kh * kw * cin, cout
+    # MXU is a 128x128 systolic array: utilization ~ how well (m,k,n) fill it.
+    mxu_util = min(1.0, k / 128.0) * min(1.0, n / 128.0)
+    return {
+        "vmem_bytes": vmem_in + vmem_patches + vmem_w + vmem_out,
+        "matmul_mkn": (m, k, n),
+        "mxu_utilization_est": mxu_util,
+        "flops": 2.0 * m * k * n,
+    }

@@ -1,0 +1,51 @@
+# Pure-jnp correctness oracles for the Pallas kernels.
+#
+# Everything here is plain `lax`/`jnp` with no Pallas, differentiable by
+# ordinary jax autodiff — the ground truth the kernel tests (and the DTO
+# gradient tests) compare against.
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+LEAKY_SLOPE = 0.1
+
+
+def apply_act(pre, act):
+    if act == "id":
+        return pre
+    if act == "relu":
+        return jnp.maximum(pre, 0.0)
+    if act == "leaky":
+        return jnp.where(pre > 0, pre, LEAKY_SLOPE * pre)
+    if act == "softplus":
+        return jnp.logaddexp(pre, 0.0)
+    raise ValueError(f"unknown act {act!r}")
+
+
+def conv2d_ref(x, w, b, act="id"):
+    """Stride-1 SAME conv, NHWC x HWIO -> NHWC, fused bias + activation."""
+    pre = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    pre = pre + b.astype(jnp.float32)
+    return apply_act(pre, act).astype(x.dtype)
+
+
+def downsample2x_ref(x):
+    return x[:, 1::2, 1::2, :]
+
+
+def dense_ref(x, w, b):
+    """(B, F) @ (F, C) + b."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+
+
+def softmax_xent_ref(logits, labels_onehot):
+    """Mean softmax cross-entropy; labels one-hot (B, C)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -(labels_onehot * logp).sum(axis=-1).mean()

@@ -1,0 +1,273 @@
+# L2: the ODE-network compute graphs, built on the L1 Pallas kernels.
+#
+# Everything the Rust coordinator calls at runtime is defined here as a pure
+# jax function and AOT-lowered by aot.py:
+#   - ODE block forward (fixed-step / RK45)                     -> *_fwd
+#   - ANODE gradient: reverse-mode AD through the discrete
+#     stepper (Discretize-Then-Optimize, Appendix C)            -> *_vjp
+#   - OTD gradient: continuous adjoint discretized with stored
+#     forward states (Eq. 10 — the *inconsistent* one)          -> *_otd
+#   - neural-ODE [8] gradient: augmented reverse-time solve
+#     that *reconstructs* z(t) backwards (the unstable one)     -> *_node
+#   - single time step fwd/vjp for the revolve executor         -> *_step_*
+#   - stem / transition / head modules and their VJPs.
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import downsample2x, make_conv2d
+from .solvers import odeint_fixed, odeint_fixed_traj, odeint_rk45, tree_axpy
+
+# ---------------------------------------------------------------------------
+# Residual-block right-hand sides f(z, theta)
+# ---------------------------------------------------------------------------
+
+
+def resnet_rhs(z, theta):
+    """Basic-block RHS: conv3x3 -> ReLU -> conv3x3 (norm-free; DESIGN.md §9)."""
+    w1, b1, w2, b2 = theta
+    h = make_conv2d("relu")(z, w1, b1)
+    return make_conv2d("id")(h, w2, b2)
+
+
+def sqnxt_rhs(z, theta):
+    """SqueezeNext low-rank block of Fig. 2:
+    1x1 (C->C/2) -> 1x1 (->C/4) -> 3x1 -> 1x3 -> 1x1 expand (->C)."""
+    w1, b1, w2, b2, w3, b3, w4, b4, w5, b5 = theta
+    h = make_conv2d("relu")(z, w1, b1)
+    h = make_conv2d("relu")(h, w2, b2)
+    h = make_conv2d("relu")(h, w3, b3)
+    h = make_conv2d("relu")(h, w4, b4)
+    return make_conv2d("id")(h, w5, b5)
+
+
+RHS = {"resnet": resnet_rhs, "sqnxt": sqnxt_rhs}
+
+
+def rhs_with_tuple(arch):
+    """rhs(z, theta_tuple) — theta as a flat tuple of arrays."""
+    return RHS[arch]
+
+
+# ---------------------------------------------------------------------------
+# ODE block: forward + the three gradient methods
+# ---------------------------------------------------------------------------
+
+
+def block_fwd(arch, solver, nt, T=1.0):
+    """z1 = z0 + ∫ f dt, discretized (Eq. 1b)."""
+    rhs = rhs_with_tuple(arch)
+    if solver == "rk45":
+        integ = odeint_rk45(rhs, configs.RK45_MAX_STEPS, T, configs.RK45_RTOL, configs.RK45_ATOL)
+
+        def fwd(z, *theta):
+            z1, _, _ = integ(z, tuple(theta))
+            return (z1,)
+
+        return fwd
+    integ = odeint_fixed(rhs, solver, nt, T)
+
+    def fwd(z, *theta):
+        return (integ(z, tuple(theta)),)
+
+    return fwd
+
+
+def block_vjp(arch, solver, nt, T=1.0):
+    """ANODE/DTO gradient: exact reverse-mode AD through the discrete
+    stepper. The O(Nt) trajectory lives *inside* this executable's working
+    set and is freed when the call returns — the coordinator stores only the
+    block input (O(L) across blocks). Returns (g_z, g_theta...)."""
+    fwd = block_fwd(arch, solver, nt, T)
+
+    def vjp(z, *args):
+        *theta, g = args
+        _, pull = jax.vjp(lambda z_, *th: fwd(z_, *th)[0], z, *theta)
+        return pull(g)
+
+    return vjp
+
+
+def block_otd(arch, solver, nt, T=1.0):
+    """Optimize-Then-Discretize gradient (§IV, Eq. 10): solve the continuous
+    adjoint -dα/dt = (∂f/∂z)ᵀ α backwards with explicit Euler, evaluating the
+    Jacobian at the *stored forward* states. For forward Euler this evaluates
+    ∂f/∂z at z_{i+1} where DTO uses z_i — the O(dt) inconsistency.
+
+    Uses the stored trajectory, so it has NO reconstruction instability; it
+    isolates the OTD-vs-DTO error from the reversal error of [8]."""
+    rhs = rhs_with_tuple(arch)
+    h = T / nt
+    traj_fn = odeint_fixed_traj(rhs, solver, nt, T)
+
+    def otd(z, *args):
+        *theta, g = args
+        theta = tuple(theta)
+        _, traj = traj_fn(z, theta)  # z_1 .. z_nt, each (B,H,W,C)
+
+        def body(carry, z_right):
+            alpha, gth = carry
+            # vjp of f at the right endpoint (OTD's inconsistent choice).
+            _, pull = jax.vjp(lambda zz, *th: rhs(zz, tuple(th)), z_right, *theta)
+            pulled = pull(alpha)
+            az, ath = pulled[0], pulled[1:]
+            alpha = tree_axpy(h, az, alpha)
+            gth = tuple(tree_axpy(h, a, g0) for a, g0 in zip(ath, gth))
+            return (alpha, gth), None
+
+        gth0 = tuple(jnp.zeros_like(t) for t in theta)
+        # March the adjoint backwards over the stored states z_nt .. z_1.
+        rev_traj = jax.tree_util.tree_map(lambda t: jnp.flip(t, axis=0), traj)
+        (alpha, gth), _ = jax.lax.scan(body, (g, gth0), rev_traj)
+        return (alpha, *gth)
+
+    return otd
+
+
+def block_node(arch, solver, nt, T=1.0):
+    """Neural-ODE [8] gradient: integrate the augmented system
+    (z, α, g_θ) *backwards in time from z1*, reconstructing z(t) by solving
+    the forward ODE in reverse — the numerically unstable part (§III).
+    Returns (g_z, g_theta..., z0_reconstructed)."""
+    rhs = rhs_with_tuple(arch)
+
+    def aug_rhs(y, theta):
+        z, alpha, gth = y
+        f, pull = jax.vjp(lambda zz, *th: rhs(zz, tuple(th)), z, *theta)
+        pulled = pull(alpha)
+        az, ath = pulled[0], pulled[1:]
+        # d/dt (z, α, gθ) = (f, -αᵀ∂f/∂z, -αᵀ∂f/∂θ); integrated from t=T to 0.
+        return (f, jax.tree_util.tree_map(jnp.negative, az),
+                tuple(jax.tree_util.tree_map(jnp.negative, a) for a in ath))
+
+    def node(z1, *args):
+        *theta, g = args
+        theta = tuple(theta)
+        gth0 = tuple(jnp.zeros_like(t) for t in theta)
+        y1 = (z1, g, gth0)
+        if solver == "rk45":
+            integ = odeint_rk45(
+                aug_rhs, configs.RK45_MAX_STEPS, -T, configs.RK45_RTOL, configs.RK45_ATOL
+            )
+            y0, _, _ = integ(y1, theta)
+        else:
+            y0 = odeint_fixed(aug_rhs, solver, nt, -T)(y1, theta)
+        z0_rec, alpha0, gth = y0
+        return (alpha0, *gth, z0_rec)
+
+    return node
+
+
+def block_step_fwd(arch, solver, nt, T=1.0):
+    """A single time step z_{i+1} = Φ(z_i) — the unit of the revolve
+    schedule executed by the Rust checkpoint executor."""
+    rhs = rhs_with_tuple(arch)
+    from .solvers import step_fn
+
+    step = step_fn(rhs, solver, T / nt)
+
+    def fwd(z, *theta):
+        return (step(z, tuple(theta)),)
+
+    return fwd
+
+
+def block_step_vjp(arch, solver, nt, T=1.0):
+    """VJP of a single time step (used when replaying a revolve schedule)."""
+    fwd = block_step_fwd(arch, solver, nt, T)
+
+    def vjp(z, *args):
+        *theta, g = args
+        _, pull = jax.vjp(lambda z_, *th: fwd(z_, *th)[0], z, *theta)
+        return pull(g)
+
+    return vjp
+
+
+# ---------------------------------------------------------------------------
+# Non-ODE modules: stem, transition, head
+# ---------------------------------------------------------------------------
+
+
+def stem_fwd_fn(z, w, b):
+    """Input conv: 3 -> C0, ReLU."""
+    return (make_conv2d("relu")(z, w, b),)
+
+
+def stem_vjp_fn(z, w, b, g):
+    _, pull = jax.vjp(lambda zz, ww, bb: stem_fwd_fn(zz, ww, bb)[0], z, w, b)
+    gz, gw, gb = pull(g)
+    return (gw, gb)  # input image gradient not needed
+
+
+def trans_fwd_fn(z, w, b):
+    """Transition (non-ODE, paper §V): conv3x3 C->2C + ReLU, then 2x
+    downsample (stride-2 conv expressed as stride-1 + slice; conv.py)."""
+    return (downsample2x(make_conv2d("relu")(z, w, b)),)
+
+
+def trans_vjp_fn(z, w, b, g):
+    _, pull = jax.vjp(lambda zz, ww, bb: trans_fwd_fn(zz, ww, bb)[0], z, w, b)
+    return pull(g)  # (gz, gw, gb)
+
+
+def _head_loss(z, w, b, labels_f):
+    """Global average pool -> dense -> mean softmax cross-entropy.
+
+    labels_f: f32 (B,) class indices (f32 so the Rust I/O path is uniformly
+    f32; cast here). Returns (loss, correct_count)."""
+    labels = labels_f.astype(jnp.int32)
+    feat = z.mean(axis=(1, 2))  # (B, C)
+    logits = jnp.dot(feat, w) + b
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    loss = -(onehot * logp).sum(axis=-1).mean()
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32).sum()
+    return loss, correct
+
+
+def head_loss_grad_fn(z, w, b, labels):
+    """(loss, correct, g_z, g_w, g_b) in one call — the terminal condition
+    Eq. 5c for the block adjoints plus the head parameter gradients."""
+    (loss, correct), pull = jax.vjp(lambda zz, ww, bb: _head_loss(zz, ww, bb, labels), z, w, b)
+    gz, gw, gb = pull((jnp.ones((), loss.dtype), jnp.zeros((), loss.dtype)))
+    return (loss, correct, gz, gw, gb)
+
+
+def head_eval_fn(z, w, b, labels):
+    loss, correct = _head_loss(z, w, b, labels)
+    return (loss, correct)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (shared with Rust via params.bin)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: configs.NetConfig, num_classes: int, seed: int = 0):
+    """He-normal conv weights, zero biases, He-normal head. The *last* conv
+    of each block RHS is scaled by 0.1 so the ODE forward map stays
+    well-conditioned at init (paper §VI: forward stability is the user's
+    responsibility; this mirrors the common zero/small-init of the last
+    block conv in ResNets)."""
+    key = jax.random.PRNGKey(seed)
+    layout = configs.model_param_layout(cfg, num_classes)
+    out = []
+    last_w = {f"w{5 if cfg.arch == 'sqnxt' else 2}"}
+    for name, shape in layout:
+        key, sub = jax.random.split(key)
+        leaf = name.split(".")[-1]
+        if leaf.startswith("w") and len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+            std = (2.0 / fan_in) ** 0.5
+            w = jax.random.normal(sub, shape, jnp.float32) * std
+            if leaf in last_w and ".b" in name:  # block's last conv
+                w = w * 0.1
+            out.append(w)
+        elif leaf.startswith("w"):  # head dense
+            std = (2.0 / shape[0]) ** 0.5
+            out.append(jax.random.normal(sub, shape, jnp.float32) * std)
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return layout, out

@@ -1,0 +1,178 @@
+# Fixed-step and adaptive ODE solvers over pytree state.
+#
+# These are the *discrete* time steppers the paper's analysis is about:
+# the DTO gradient is reverse-mode AD through exactly these loops, the OTD
+# gradient discretizes the continuous adjoint instead (model.py), and the
+# neural-ODE [8] baseline runs them backwards in time.
+
+import jax
+import jax.numpy as jnp
+
+FIXED_SOLVERS = ("euler", "rk2", "rk4")
+
+
+def tree_axpy(a, x, y):
+    """y + a*x over pytrees."""
+    return jax.tree_util.tree_map(lambda xi, yi: yi + a * xi, x, y)
+
+
+def tree_scale(a, x):
+    return jax.tree_util.tree_map(lambda xi: a * xi, x)
+
+
+def tree_add(*xs):
+    return jax.tree_util.tree_map(lambda *v: sum(v), *xs)
+
+
+def step_fn(rhs, solver, h):
+    """One fixed step of `solver` with step size `h` (h may be negative).
+
+    rhs(z, theta) -> dz/dt; z is a pytree.
+    """
+    if solver == "euler":
+
+        def step(z, theta):
+            return tree_axpy(h, rhs(z, theta), z)
+
+    elif solver == "rk2":
+        # Explicit trapezoidal (Heun) — the "RK2 (Trapezoidal method)" of
+        # Fig. 3; self-adjoint up to O(h^2), which is why the paper notes
+        # OTD's inconsistency is milder for it.
+        def step(z, theta):
+            k1 = rhs(z, theta)
+            k2 = rhs(tree_axpy(h, k1, z), theta)
+            return tree_axpy(h / 2.0, tree_add(k1, k2), z)
+
+    elif solver == "rk4":
+
+        def step(z, theta):
+            k1 = rhs(z, theta)
+            k2 = rhs(tree_axpy(h / 2.0, k1, z), theta)
+            k3 = rhs(tree_axpy(h / 2.0, k2, z), theta)
+            k4 = rhs(tree_axpy(h, k3, z), theta)
+            incr = tree_add(k1, tree_scale(2.0, k2), tree_scale(2.0, k3), k4)
+            return tree_axpy(h / 6.0, incr, z)
+
+    else:
+        raise ValueError(f"unknown fixed-step solver {solver!r}")
+
+    return step
+
+
+def odeint_fixed(rhs, solver, nt, T=1.0):
+    """Integrate dz/dt = rhs(z, theta) over `nt` steps of size T/nt.
+
+    T may be negative (reverse-time integration, used by the neural-ODE [8]
+    baseline). Returns fn(z0, theta) -> z(T).
+    """
+    h = T / nt
+    step = step_fn(rhs, solver, h)
+
+    def integrate(z0, theta):
+        def body(z, _):
+            return step(z, theta), None
+
+        z, _ = jax.lax.scan(body, z0, None, length=nt)
+        return z
+
+    return integrate
+
+
+def odeint_fixed_traj(rhs, solver, nt, T=1.0):
+    """Like `odeint_fixed` but also returns the stacked trajectory
+    (z_1 .. z_nt) — the forward states the OTD adjoint needs."""
+    h = T / nt
+    step = step_fn(rhs, solver, h)
+
+    def integrate(z0, theta):
+        def body(z, _):
+            z1 = step(z, theta)
+            return z1, z1
+
+        z, traj = jax.lax.scan(body, z0, None, length=nt)
+        return z, traj
+
+    return integrate
+
+
+# ---------------------------------------------------------------------------
+# Adaptive Dormand–Prince RK45 with a bounded step count, AOT-friendly:
+# a lax.scan over max_steps where steps past the horizon are no-ops. This is
+# the solver the paper reports as *divergent* when used for the reverse
+# reconstruction of [8].
+# ---------------------------------------------------------------------------
+
+# Dormand–Prince 5(4) Butcher tableau.
+_DP_C = (0.0, 1 / 5, 3 / 10, 4 / 5, 8 / 9, 1.0, 1.0)
+_DP_A = (
+    (),
+    (1 / 5,),
+    (3 / 40, 9 / 40),
+    (44 / 45, -56 / 15, 32 / 9),
+    (19372 / 6561, -25360 / 2187, 64448 / 6561, -212 / 729),
+    (9017 / 3168, -355 / 33, 46732 / 5247, 49 / 176, -5103 / 18656),
+    (35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84),
+)
+_DP_B5 = (35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84, 0.0)
+_DP_B4 = (5179 / 57600, 0.0, 7571 / 16695, 393 / 640, -92097 / 339200, 187 / 2100, 1 / 40)
+
+
+def _tree_norm_inf(t):
+    leaves = jax.tree_util.tree_leaves(t)
+    return jnp.max(jnp.stack([jnp.max(jnp.abs(l)) for l in leaves]))
+
+
+def odeint_rk45(rhs, max_steps, T=1.0, rtol=1e-4, atol=1e-6):
+    """Adaptive RK45 from t=0 to t=T (T may be negative).
+
+    Fixed iteration count (`max_steps` scan) so the lowered HLO has a static
+    while structure; unconverged integrations simply stop short — which is
+    exactly the failure mode that makes [8]+RK45 diverge in training.
+    Returns fn(z0, theta) -> (z(T_reached), steps_taken, t_reached).
+    """
+    sign = 1.0 if T >= 0 else -1.0
+
+    def integrate(z0, theta):
+        h0 = T / 8.0
+
+        def body(carry, _):
+            z, t, h, done = carry
+            # Clamp the step to the remaining horizon.
+            h_eff = jnp.where(sign * (t + h) > sign * T, T - t, h)
+
+            ks = []
+            for i in range(7):
+                zi = z
+                for j, aij in enumerate(_DP_A[i]):
+                    zi = tree_axpy(h_eff * aij, ks[j], zi)
+                ks.append(rhs(zi, theta))
+
+            z5 = z
+            z4 = z
+            for i in range(7):
+                if _DP_B5[i] != 0.0:
+                    z5 = tree_axpy(h_eff * _DP_B5[i], ks[i], z5)
+                if _DP_B4[i] != 0.0:
+                    z4 = tree_axpy(h_eff * _DP_B4[i], ks[i], z4)
+
+            err = _tree_norm_inf(tree_add(z5, tree_scale(-1.0, z4)))
+            scale = atol + rtol * jnp.maximum(_tree_norm_inf(z), _tree_norm_inf(z5))
+            ratio = err / scale
+            accept = ratio <= 1.0
+
+            z_next = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(jnp.logical_and(accept, ~done), a, b), z5, z
+            )
+            t_next = jnp.where(jnp.logical_and(accept, ~done), t + h_eff, t)
+            # PI-less step-size controller.
+            factor = jnp.clip(0.9 * ratio ** (-0.2), 0.2, 5.0)
+            h_next = jnp.where(done, h, h_eff * factor)
+            done_next = jnp.logical_or(done, sign * t_next >= sign * T - 1e-12)
+            counted = jnp.logical_and(accept, jnp.logical_not(done))
+            return (z_next, t_next, h_next, done_next), counted
+
+        init = (z0, jnp.asarray(0.0, jnp.float32), jnp.asarray(h0, jnp.float32), jnp.asarray(False))
+        (z, t, _, _), accepts = jax.lax.scan(body, init, None, length=max_steps)
+        return z, jnp.sum(accepts.astype(jnp.int32)), t
+
+    return integrate

@@ -1,0 +1,119 @@
+# AOT path: manifest structure, params.bin layout, HLO text lowering and
+# init-statistics sanity.
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, configs, model
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_roundtrip(tmp_path):
+    # A tiny function lowers to HLO text parseable by the old XLA (no
+    # serialized protos — DESIGN.md §5 / aot.py docstring).
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    text = aot.to_hlo_text(fn, [jax.ShapeDtypeStruct((4,), jnp.float32)])
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_param_layout_matches_init():
+    for cfg, ncls in [(configs.RESNET, 10), (configs.SQNXT, 100)]:
+        layout = configs.model_param_layout(cfg, ncls)
+        l2, values = model.init_params(cfg, ncls, seed=0)
+        assert [n for n, _ in layout] == [n for n, _ in l2]
+        for (name, shape), v in zip(layout, values):
+            assert tuple(v.shape) == tuple(shape), name
+
+
+def test_init_statistics():
+    _, values = model.init_params(configs.RESNET, 10, seed=0)
+    layout = configs.model_param_layout(configs.RESNET, 10)
+    for (name, shape), v in zip(layout, values):
+        leaf = name.split(".")[-1]
+        if leaf.startswith("b"):
+            assert float(jnp.abs(v).max()) == 0.0, f"{name} biases must start at 0"
+        elif len(shape) == 4:
+            fan_in = shape[0] * shape[1] * shape[2]
+            std = float(jnp.std(v))
+            he = (2.0 / fan_in) ** 0.5
+            # Block-final convs are down-scaled by 0.1.
+            assert std < he * 1.5, f"{name}: std {std} vs he {he}"
+
+
+def test_init_deterministic():
+    _, a = model.init_params(configs.RESNET, 10, seed=0)
+    _, b = model.init_params(configs.RESNET, 10, seed=0)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    _, c = model.init_params(configs.RESNET, 10, seed=1)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="artifacts not built",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_manifest_lists_all_expected_modules(self, manifest):
+        names = {m["name"] for m in manifest["modules"]}
+        # Spot-check the full experiment matrix.
+        for arch in ("resnet", "sqnxt"):
+            for s in range(3):
+                for kind in ("fwd", "vjp", "node", "step_fwd", "step_vjp"):
+                    assert f"block_{arch}_s{s}_euler_{kind}" in names
+                assert f"block_{arch}_s{s}_euler_otd" in names
+                assert f"block_{arch}_s{s}_rk45_fwd" in names
+                assert f"block_{arch}_s{s}_rk45_node" in names
+        for s in range(3):
+            for kind in ("fwd", "vjp", "node", "step_fwd", "step_vjp"):
+                assert f"block_sqnxt_s{s}_rk2_{kind}" in names
+        assert "stem_fwd" in names and "stem_vjp" in names
+        assert "head10_loss_grad" in names and "head100_eval" in names
+        for nt in manifest["config"]["tiny_nts"]:
+            assert f"tiny_euler_nt{nt}_vjp" in names
+
+    def test_module_files_exist_and_are_hlo(self, manifest):
+        for m in manifest["modules"][:10]:
+            path = os.path.join(ARTIFACTS, m["file"])
+            assert os.path.exists(path)
+            with open(path) as f:
+                head = f.read(200)
+            assert "HloModule" in head
+
+    def test_params_bin_length_covers_offsets(self, manifest):
+        size = os.path.getsize(os.path.join(ARTIFACTS, "params.bin"))
+        n_floats = size // 4
+        for key, specs in manifest["params"].items():
+            for p in specs:
+                need = p["offset"] + int(np.prod(p["shape"]))
+                assert need <= n_floats, f"{key}/{p['name']}"
+
+    def test_params_bin_matches_python_init(self, manifest):
+        specs = manifest["params"]["resnet10"]
+        layout, values = model.init_params(configs.RESNET, 10, seed=0)
+        raw = np.fromfile(os.path.join(ARTIFACTS, "params.bin"), dtype="<f4")
+        for (name, _), v, spec in zip(layout, values, specs):
+            assert spec["name"] == name
+            n = int(np.prod(spec["shape"]))
+            got = raw[spec["offset"] : spec["offset"] + n].reshape(spec["shape"])
+            np.testing.assert_allclose(got, np.asarray(v), rtol=1e-6)
+
+    def test_io_specs_have_shapes_and_dtypes(self, manifest):
+        for m in manifest["modules"]:
+            for io in m["inputs"] + m["outputs"]:
+                assert isinstance(io["shape"], list)
+                assert io["dtype"] == "f32"

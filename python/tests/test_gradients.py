@@ -1,0 +1,175 @@
+# The paper's core claims at the block level (§III, §IV):
+#   1. DTO VJP == jax autodiff through the discrete solver (exact).
+#   2. OTD gradient error is O(dt) relative to DTO.
+#   3. Neural-ODE [8] reconstruction error does not vanish; its gradient is
+#      corrupted for generic (non-contractive) blocks.
+#   4. RK2 (self-adjoint) narrows the OTD/DTO gap vs Euler.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = configs.NetConfig(arch="resnet", batch=2, image=8, channels=(8,))
+    key = jax.random.PRNGKey(42)
+    k1, k2 = jax.random.split(key)
+    z = jax.random.normal(k1, (2, 8, 8, 8), jnp.float32) * 0.5
+    theta = []
+    for i, (_, s) in enumerate(configs.block_param_shapes(cfg, 0)):
+        k2, sub = jax.random.split(k2)
+        theta.append(jax.random.normal(sub, s) * (0.25 if len(s) == 4 else 0.05))
+    g = jax.random.normal(k2, z.shape)
+    return z, theta, g
+
+
+def test_dto_vjp_equals_jax_grad(tiny_setup):
+    z, theta, g = tiny_setup
+    nt = 4
+    fwd = model.block_fwd("resnet", "euler", nt)
+    vjp = model.block_vjp("resnet", "euler", nt)
+    outs = vjp(z, *theta, g)
+    _, pull = jax.vjp(lambda zz, *th: fwd(zz, *th)[0], z, *theta)
+    expect = pull(g)
+    for a, b in zip(outs, expect):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_otd_error_scales_linearly_with_dt(tiny_setup):
+    z, theta, g = tiny_setup
+    errs = {}
+    for nt in (4, 8, 16, 32):
+        dto = model.block_vjp("resnet", "euler", nt)(z, *theta, g)
+        otd = model.block_otd("resnet", "euler", nt)(z, *theta, g)
+        errs[nt] = float(
+            jnp.linalg.norm(otd[0] - dto[0]) / jnp.linalg.norm(dto[0])
+        )
+    # Halving dt should roughly halve the error (O(dt)).
+    r1 = errs[4] / errs[8]
+    r2 = errs[8] / errs[16]
+    r3 = errs[16] / errs[32]
+    for r in (r1, r2, r3):
+        assert 1.4 < r < 2.8, f"O(dt) scaling violated: {errs}"
+
+
+def test_node_reconstruction_fails_for_generic_block(tiny_setup):
+    z, theta, g = tiny_setup
+    nt = 8
+    fwd = model.block_fwd("resnet", "euler", nt)
+    z1 = fwd(z, *theta)[0]
+    node = model.block_node("resnet", "euler", nt)
+    outs = node(z1, *theta, g)
+    z0_rec = outs[-1]
+    rec_err = float(jnp.linalg.norm(z0_rec - z) / jnp.linalg.norm(z))
+    assert rec_err > 0.05, f"expected O(1) reconstruction error, got {rec_err}"
+    # And the resulting gradient differs from DTO far beyond O(dt).
+    dto = model.block_vjp("resnet", "euler", nt)(z, *theta, g)
+    gerr = float(jnp.linalg.norm(outs[0] - dto[0]) / jnp.linalg.norm(dto[0]))
+    assert gerr > 0.05, f"node gradient suspiciously accurate: {gerr}"
+
+
+def test_node_is_accurate_for_tiny_lipschitz_block(tiny_setup):
+    # §III theory: with a small enough Lipschitz constant the reverse solve
+    # IS well conditioned — [8] works there. Scale θ down hard.
+    z, theta, g = tiny_setup
+    theta_small = [t * 0.05 for t in theta]
+    nt = 16
+    fwd = model.block_fwd("resnet", "euler", nt)
+    z1 = fwd(z, *theta_small)[0]
+    outs = model.block_node("resnet", "euler", nt)(z1, *theta_small, g)
+    rec_err = float(jnp.linalg.norm(outs[-1] - z) / jnp.linalg.norm(z))
+    assert rec_err < 1e-2, f"small-λ reconstruction should work: {rec_err}"
+    dto = model.block_vjp("resnet", "euler", nt)(z, *theta_small, g)
+    gerr = float(jnp.linalg.norm(outs[0] - dto[0]) / jnp.linalg.norm(dto[0]))
+    assert gerr < 0.05, f"small-λ node grad should be close: {gerr}"
+
+
+def test_rk2_self_adjointness_narrows_gap(tiny_setup):
+    # DTO-vs-node gap under RK2 with stored-output start should behave like
+    # Euler or better for well-conditioned θ; mainly we verify RK2 block
+    # machinery runs and VJP matches autodiff.
+    z, theta, g = tiny_setup
+    nt = 8
+    fwd = model.block_fwd("resnet", "rk2", nt)
+    vjp = model.block_vjp("resnet", "rk2", nt)
+    outs = vjp(z, *theta, g)
+    _, pull = jax.vjp(lambda zz, *th: fwd(zz, *th)[0], z, *theta)
+    expect = pull(g)
+    for a, b in zip(outs, expect):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+def test_step_fwd_composes_to_block_fwd(tiny_setup):
+    z, theta, _ = tiny_setup
+    nt = 4
+    step = model.block_step_fwd("resnet", "euler", nt)
+    zz = z
+    for _ in range(nt):
+        zz = step(zz, *theta)[0]
+    full = model.block_fwd("resnet", "euler", nt)(z, *theta)[0]
+    np.testing.assert_allclose(zz, full, rtol=1e-6, atol=1e-7)
+
+
+def test_step_vjp_chain_equals_block_vjp(tiny_setup):
+    # Chaining single-step VJPs in reverse (what the revolve executor does)
+    # reproduces the fused block VJP exactly: the revolve correctness
+    # argument at the JAX level.
+    z, theta, g = tiny_setup
+    nt = 4
+    step_f = model.block_step_fwd("resnet", "euler", nt)
+    step_b = model.block_step_vjp("resnet", "euler", nt)
+    states = [z]
+    for _ in range(nt):
+        states.append(step_f(states[-1], *theta)[0])
+    adj = g
+    gth_acc = [jnp.zeros_like(t) for t in theta]
+    for i in reversed(range(nt)):
+        outs = step_b(states[i], *theta, adj)
+        adj = outs[0]
+        gth_acc = [a + d for a, d in zip(gth_acc, outs[1:])]
+    block = model.block_vjp("resnet", "euler", nt)(z, *theta, g)
+    np.testing.assert_allclose(adj, block[0], rtol=1e-5, atol=1e-6)
+    for a, b in zip(gth_acc, block[1:]):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_sqnxt_block_vjp_matches_autodiff():
+    cfg = configs.NetConfig(arch="sqnxt", batch=2, image=8, channels=(8,))
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    z = jax.random.normal(k1, (2, 8, 8, 8)) * 0.5
+    theta = []
+    for _, s in configs.block_param_shapes(cfg, 0):
+        k2, sub = jax.random.split(k2)
+        theta.append(jax.random.normal(sub, s) * (0.3 if len(s) == 4 else 0.05))
+    g = jax.random.normal(k2, z.shape)
+    nt = 3
+    fwd = model.block_fwd("sqnxt", "euler", nt)
+    outs = model.block_vjp("sqnxt", "euler", nt)(z, *theta, g)
+    _, pull = jax.vjp(lambda zz, *th: fwd(zz, *th)[0], z, *theta)
+    expect = pull(g)
+    for a, b in zip(outs, expect):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_head_loss_grad_matches_autodiff():
+    key = jax.random.PRNGKey(9)
+    k1, k2, k3 = jax.random.split(key, 3)
+    z = jax.random.normal(k1, (4, 8, 8, 16))
+    w = jax.random.normal(k2, (16, 10)) * 0.3
+    b = jnp.zeros((10,))
+    labels = jnp.asarray([1.0, 3.0, 7.0, 3.0])
+    loss, correct, gz, gw, gb = model.head_loss_grad_fn(z, w, b, labels)
+    from compile.model import _head_loss
+
+    gradfn = jax.grad(lambda zz, ww, bb: _head_loss(zz, ww, bb, labels)[0], argnums=(0, 1, 2))
+    egz, egw, egb = gradfn(z, w, b)
+    np.testing.assert_allclose(gz, egz, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gw, egw, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gb, egb, rtol=1e-5, atol=1e-6)
+    assert 0 <= float(correct) <= 4
+    assert float(loss) > 0

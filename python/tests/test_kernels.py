@@ -1,0 +1,164 @@
+# L1 correctness: Pallas conv kernels vs the pure-jnp oracle, forward and
+# custom-VJP backward, swept over shapes/dtypes with hypothesis.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    act_grad,
+    conv2d_input_grad,
+    conv2d_pallas_raw,
+    conv2d_weight_grad,
+    downsample2x,
+    kernel_footprint,
+    make_conv2d,
+)
+from compile.kernels import ref
+
+ACTS = ["id", "relu", "leaky", "softplus"]
+
+
+def rand(key, shape, dtype=jnp.float32, scale=0.5):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("act", ACTS)
+@pytest.mark.parametrize(
+    "kh,kw,cin,cout,h,w,b",
+    [(3, 3, 4, 8, 8, 8, 2), (1, 1, 8, 4, 8, 8, 2), (3, 1, 4, 4, 6, 6, 1), (1, 3, 4, 4, 6, 6, 1)],
+)
+def test_forward_matches_ref(act, kh, kw, cin, cout, h, w, b):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(hash((act, kh, kw)) % 2**31), 3)
+    x = rand(k1, (b, h, w, cin))
+    wgt = rand(k2, (kh, kw, cin, cout), scale=0.3)
+    bias = rand(k3, (cout,), scale=0.1)
+    y = make_conv2d(act)(x, wgt, bias)
+    yr = ref.conv2d_ref(x, wgt, bias, act)
+    np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_custom_vjp_matches_autodiff_of_ref(act):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = rand(k1, (2, 8, 8, 4))
+    wgt = rand(k2, (3, 3, 4, 6), scale=0.3)
+    bias = rand(k3, (6,), scale=0.1)
+    g = rand(k4, (2, 8, 8, 6))
+    conv = make_conv2d(act)
+    gk = jax.grad(lambda *a: (conv(*a) * g).sum(), argnums=(0, 1, 2))(x, wgt, bias)
+    gr = jax.grad(lambda *a: (ref.conv2d_ref(*a, act) * g).sum(), argnums=(0, 1, 2))(x, wgt, bias)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kh=st.sampled_from([1, 3]),
+    kw=st.sampled_from([1, 3]),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 8),
+    h=st.integers(3, 12),
+    w=st.integers(3, 12),
+    b=st.integers(1, 3),
+    act=st.sampled_from(ACTS),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_forward_sweep(kh, kw, cin, cout, h, w, b, act, seed):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = rand(k1, (b, h, w, cin))
+    wgt = rand(k2, (kh, kw, cin, cout), scale=0.3)
+    bias = rand(k3, (cout,), scale=0.1)
+    pre, y = conv2d_pallas_raw(x, wgt, bias, act)
+    yr = ref.conv2d_ref(x, wgt, bias, act)
+    pr = ref.conv2d_ref(x, wgt, bias, "id")
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(pre, pr, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    h=st.integers(3, 10),
+    b=st.integers(1, 3),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_gradient_sweep(cin, cout, h, b, seed):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = rand(k1, (b, h, h, cin))
+    wgt = rand(k2, (3, 3, cin, cout), scale=0.3)
+    bias = rand(k3, (cout,), scale=0.1)
+    g = rand(k4, (b, h, h, cout))
+    conv = make_conv2d("relu")
+    gk = jax.grad(lambda *a: (conv(*a) * g).sum(), argnums=(0, 1, 2))(x, wgt, bias)
+    gr = jax.grad(lambda *a: (ref.conv2d_ref(*a, "relu") * g).sum(), argnums=(0, 1, 2))(
+        x, wgt, bias
+    )
+    for a, bb in zip(gk, gr):
+        np.testing.assert_allclose(a, bb, rtol=1e-3, atol=1e-3)
+
+
+def test_bf16_inputs_accumulate_in_f32():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = rand(k1, (2, 8, 8, 16), jnp.bfloat16)
+    wgt = rand(k2, (3, 3, 16, 16), jnp.bfloat16, scale=0.2)
+    bias = jnp.zeros((16,), jnp.bfloat16)
+    pre, y = conv2d_pallas_raw(x, wgt, bias, "relu")
+    assert y.dtype == jnp.bfloat16
+    yr = ref.conv2d_ref(x.astype(jnp.float32), wgt.astype(jnp.float32), bias.astype(jnp.float32), "relu")
+    np.testing.assert_allclose(y.astype(jnp.float32), yr, rtol=5e-2, atol=5e-2)
+
+
+def test_input_and_weight_grad_kernels_directly():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = rand(k1, (2, 6, 6, 3))
+    wgt = rand(k2, (3, 3, 3, 5), scale=0.3)
+    g = rand(k3, (2, 6, 6, 5))
+    # Reference via autodiff of the pure conv.
+    gx_ref, gw_ref = jax.grad(
+        lambda xx, ww: (ref.conv2d_ref(xx, ww, jnp.zeros((5,)), "id") * g).sum(), argnums=(0, 1)
+    )(x, wgt)
+    gx = conv2d_input_grad(g, wgt)
+    gw = conv2d_weight_grad(x, g, 3, 3)
+    np.testing.assert_allclose(gx, gx_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, gw_ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ACTS)
+def test_act_grad_finite_difference(act):
+    pre = jnp.linspace(-2.0, 2.0, 41)
+    eps = 1e-3
+    from compile.kernels.conv import _apply_act
+
+    fd = (_apply_act(pre + eps, act) - _apply_act(pre - eps, act)) / (2 * eps)
+    ad = act_grad(pre, act)
+    # ReLU/leaky kink at 0 excluded.
+    mask = jnp.abs(pre) > 1e-2
+    np.testing.assert_allclose(ad[mask], fd[mask], rtol=1e-3, atol=1e-3)
+
+
+def test_downsample_is_stride2_conv_equivalent():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+    x = rand(k1, (2, 8, 8, 4))
+    wgt = rand(k2, (3, 3, 4, 6), scale=0.3)
+    b = jnp.zeros((6,))
+    full = ref.conv2d_ref(x, wgt, b, "id")
+    strided = jax.lax.conv_general_dilated(
+        x, wgt, window_strides=(2, 2), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    np.testing.assert_allclose(downsample2x(full), strided, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_footprint_model():
+    fp = kernel_footprint(1, 32, 32, 16, 16, 3, 3)
+    assert fp["matmul_mkn"] == (1024, 144, 16)
+    assert fp["flops"] == 2.0 * 1024 * 144 * 16
+    assert 0.0 < fp["mxu_utilization_est"] <= 1.0
+    assert fp["vmem_bytes"] > 0
+    # Larger channel counts fill the MXU better.
+    fp2 = kernel_footprint(1, 32, 32, 128, 128, 3, 3)
+    assert fp2["mxu_utilization_est"] > fp["mxu_utilization_est"]

@@ -1,0 +1,104 @@
+# L2 solver correctness: order of accuracy, pytree handling, reverse-time
+# integration, and the bounded-step adaptive RK45.
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.solvers import odeint_fixed, odeint_fixed_traj, odeint_rk45, step_fn
+
+
+def linear_rhs(lam):
+    return lambda z, theta: lam * z
+
+
+@pytest.mark.parametrize("solver,order,nts", [
+    ("euler", 1, (8, 16)),
+    ("rk2", 2, (8, 16)),
+    # rk4 at nt=16 hits f32 round-off; use coarser steps for a clean ratio.
+    ("rk4", 4, (2, 4)),
+])
+def test_order_of_accuracy(solver, order, nts):
+    lam = -1.0
+    z0 = jnp.ones(())
+    exact = float(np.exp(lam))
+    errs = []
+    for nt in nts:
+        z = odeint_fixed(linear_rhs(lam), solver, nt)(z0, ())
+        errs.append(abs(float(z) - exact))
+    ratio = errs[0] / errs[1]
+    assert ratio == pytest.approx(2.0**order, rel=0.4), f"{solver}: ratio {ratio}"
+
+
+def test_negative_horizon_reverses_linear_flow():
+    rhs = linear_rhs(-0.5)
+    z1 = odeint_fixed(rhs, "rk4", 64)(jnp.asarray(2.0), ())
+    z0 = odeint_fixed(rhs, "rk4", 64, T=-1.0)(z1, ())
+    assert float(z0) == pytest.approx(2.0, rel=1e-5)
+
+
+def test_pytree_state():
+    rhs = lambda z, theta: jax.tree_util.tree_map(lambda x: -x, z)
+    z0 = {"a": jnp.ones((2, 2)), "b": (jnp.zeros(3) + 2.0,)}
+    z1 = odeint_fixed(rhs, "rk4", 32)(z0, ())
+    expect = float(np.exp(-1.0))
+    np.testing.assert_allclose(z1["a"], expect, rtol=1e-4)
+    np.testing.assert_allclose(z1["b"][0], 2.0 * expect, rtol=1e-4)
+
+
+def test_traj_matches_step_iteration():
+    rhs = linear_rhs(-1.0)
+    nt = 5
+    zT, traj = odeint_fixed_traj(rhs, "euler", nt)(jnp.asarray(1.0), ())
+    # Manual iteration.
+    z = jnp.asarray(1.0)
+    step = step_fn(rhs, "euler", 1.0 / nt)
+    manual = []
+    for _ in range(nt):
+        z = step(z, ())
+        manual.append(float(z))
+    np.testing.assert_allclose(traj, manual, rtol=1e-6)
+    assert float(zT) == pytest.approx(manual[-1])
+
+
+def test_theta_is_passed_through():
+    rhs = lambda z, theta: theta[0] * z
+    z1 = odeint_fixed(rhs, "euler", 10)(jnp.asarray(1.0), (jnp.asarray(-1.0),))
+    z2 = odeint_fixed(rhs, "euler", 10)(jnp.asarray(1.0), (jnp.asarray(-2.0),))
+    assert float(z1) > float(z2)
+
+
+class TestRk45:
+    def test_matches_exact_solution(self):
+        integ = odeint_rk45(linear_rhs(-1.0), max_steps=64)
+        z, steps, t = integ(jnp.asarray(1.0), ())
+        assert float(t) == pytest.approx(1.0, abs=1e-6)
+        assert float(z) == pytest.approx(float(np.exp(-1.0)), rel=1e-4)
+        assert int(steps) < 64
+
+    def test_bounded_steps_stop_short_on_stiff_reverse(self):
+        # Reversing dz/dt = -100 z under a small step budget: the error
+        # controller caps h (the reverse flow grows like e^{100 s}), the
+        # horizon is not reached, and the "reconstruction" is garbage —
+        # the divergence mechanism of [8]+RK45 (footnote 2 of the paper).
+        integ = odeint_rk45(linear_rhs(-30.0), max_steps=12, T=-1.0, rtol=1e-12, atol=1e-14)
+        z1 = float(np.exp(-30.0))
+        z, steps, t = integ(jnp.asarray(z1), ())
+        assert abs(float(t)) < 0.9, f"reached t={float(t)}"  # did not reach -1
+        # Reconstruction is nowhere near z0 = 1.
+        assert abs(float(z) - 1.0) > 0.5
+
+    def test_adapts_to_tolerance(self):
+        loose = odeint_rk45(linear_rhs(-5.0), max_steps=128, rtol=1e-2, atol=1e-4)
+        tight = odeint_rk45(linear_rhs(-5.0), max_steps=128, rtol=1e-8, atol=1e-10)
+        _, s1, _ = loose(jnp.asarray(1.0), ())
+        _, s2, _ = tight(jnp.asarray(1.0), ())
+        assert int(s2) > int(s1)
+
+    def test_pytree_state(self):
+        rhs = lambda z, th: jax.tree_util.tree_map(lambda x: -x, z)
+        integ = odeint_rk45(rhs, max_steps=64)
+        z, _, t = integ({"x": jnp.ones(4)}, ())
+        assert float(t) == pytest.approx(1.0, abs=1e-6)
+        np.testing.assert_allclose(z["x"], np.exp(-1.0), rtol=1e-4)

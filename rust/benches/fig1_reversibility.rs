@@ -1,0 +1,25 @@
+//! Bench + regeneration of Fig. 1 / Fig. 7: reversibility of a random
+//! Gaussian conv residual block across activations and solvers.
+//! `cargo bench --bench fig1_reversibility`
+
+use anode::harness::{fig1_reversibility, format_fig1};
+use anode::util::bench::bench;
+
+fn main() {
+    println!("=== Fig. 1 / Fig. 7 — residual-block reversibility ===\n");
+    let rows = fig1_reversibility(3, 3.0, 8);
+    println!("{}", format_fig1(&rows));
+
+    // Paper-shape assertions (who wins / what fails).
+    let euler_bad = rows
+        .iter()
+        .filter(|r| r.solver.starts_with("euler"))
+        .all(|r| r.rho > 1e-2);
+    let rk45_bad = rows.iter().filter(|r| r.solver == "rk45").all(|r| r.rho > 1e-3);
+    println!("shape check: euler roundtrip O(1) error = {euler_bad}; rk45 above own tol = {rk45_bad}\n");
+
+    let s = bench("fig1_full_study(4 acts x 2 solvers)", 1, 5, || {
+        anode::util::bench::black_box(fig1_reversibility(3, 3.0, 8));
+    });
+    println!("{}", s.report());
+}

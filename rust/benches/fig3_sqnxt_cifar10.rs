@@ -1,0 +1,71 @@
+//! Bench + miniature regeneration of Fig. 3: SqueezeNext+ODE on (synthetic)
+//! Cifar-10, Euler (top) and RK2 (bottom), ANODE vs neural-ODE [8], plus the
+//! [8]+RK45 divergence footnote. Short-budget version — the full curves come
+//! from `anode figures --fig fig3` (see Makefile `figures` target).
+//! Requires `make artifacts`. `cargo bench --bench fig3_sqnxt_cifar10`
+
+use anode::harness::{train_figure, TrainFigOptions};
+use anode::metrics::format_table;
+use anode::models::{Arch, GradMethod, Solver};
+use anode::runtime::ArtifactRegistry;
+
+fn main() {
+    let Ok(reg) = ArtifactRegistry::open(std::path::Path::new("artifacts")) else {
+        eprintln!("artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    println!("=== Fig. 3 (miniature) — SqueezeNext+ODE on synthetic Cifar-10 ===\n");
+    let mut curves = Vec::new();
+    let mut summary = Vec::new();
+    for solver in [Solver::Euler, Solver::Rk2] {
+        for method in [GradMethod::Anode, GradMethod::Node] {
+            let o = TrainFigOptions {
+                arch: Arch::Sqnxt,
+                solver,
+                method,
+                num_classes: 10,
+                train_size: 160,
+                test_size: 32,
+                steps: 10,
+                eval_every: 5,
+                lr: 0.02,
+                seed: 0,
+                verbose: false,
+            };
+            match train_figure(&reg, &o) {
+                Ok(run) => {
+                    summary.push((run.series.clone(), run.curve.final_acc(), run.diverged, run.sec_per_step));
+                    curves.push(run.curve);
+                }
+                Err(e) => eprintln!("{solver:?}/{method:?} failed: {e}"),
+            }
+        }
+    }
+    // [8]+RK45: the divergence footnote.
+    let o = TrainFigOptions {
+        arch: Arch::Sqnxt,
+        solver: Solver::Rk45,
+        method: GradMethod::Node,
+        num_classes: 10,
+        train_size: 160,
+        test_size: 32,
+        steps: 8,
+        eval_every: 5,
+        lr: 0.02,
+        seed: 0,
+        verbose: false,
+    };
+    if let Ok(run) = train_figure(&reg, &o) {
+        summary.push((run.series.clone(), run.curve.final_acc(), run.diverged, run.sec_per_step));
+        curves.push(run.curve);
+    }
+
+    println!("{}", format_table(&curves));
+    println!("{:<28} {:>10} {:>10} {:>12}", "series", "final_acc", "diverged", "sec/step");
+    for (name, acc, div, sps) in &summary {
+        println!("{:<28} {:>9.2}% {:>10} {:>12.3}", name, acc * 100.0, div, sps);
+    }
+    let anode_acc = summary.iter().find(|s| s.0.starts_with("anode-")).map(|s| s.1).unwrap_or(0.0);
+    let node_acc = summary.iter().find(|s| s.0.starts_with("node-sqnxt-euler")).map(|s| s.1).unwrap_or(0.0);
+    println!("\nshape check: anode acc {:.1}% vs node acc {:.1}% (paper: ANODE converges higher)", anode_acc * 100.0, node_acc * 100.0);
+}

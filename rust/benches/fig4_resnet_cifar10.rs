@@ -1,0 +1,50 @@
+//! Bench + miniature regeneration of Fig. 4: ResNet-18-like ODE net on
+//! (synthetic) Cifar-10 with Euler, ANODE vs neural-ODE [8] (+RK45 footnote).
+//! Requires `make artifacts`. `cargo bench --bench fig4_resnet_cifar10`
+
+use anode::harness::{train_figure, TrainFigOptions};
+use anode::metrics::format_table;
+use anode::models::{Arch, GradMethod, Solver};
+use anode::runtime::ArtifactRegistry;
+
+fn main() {
+    let Ok(reg) = ArtifactRegistry::open(std::path::Path::new("artifacts")) else {
+        eprintln!("artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    println!("=== Fig. 4 (miniature) — ResNet+ODE on synthetic Cifar-10, Euler ===\n");
+    let mut curves = Vec::new();
+    for (method, solver, steps) in [
+        (GradMethod::Anode, Solver::Euler, 10),
+        (GradMethod::Node, Solver::Euler, 10),
+        (GradMethod::Node, Solver::Rk45, 8),
+    ] {
+        let o = TrainFigOptions {
+            arch: Arch::Resnet,
+            solver,
+            method,
+            num_classes: 10,
+            train_size: 160,
+            test_size: 32,
+            steps,
+            eval_every: 5,
+            lr: 0.02,
+            seed: 0,
+            verbose: false,
+        };
+        match train_figure(&reg, &o) {
+            Ok(run) => {
+                println!(
+                    "{:<28} final_acc {:>6.2}%  diverged {}  sec/step {:.3}",
+                    run.series,
+                    run.curve.final_acc() * 100.0,
+                    run.diverged,
+                    run.sec_per_step
+                );
+                curves.push(run.curve);
+            }
+            Err(e) => eprintln!("{method:?}/{solver:?} failed: {e}"),
+        }
+    }
+    println!("\n{}", format_table(&curves));
+}

@@ -1,0 +1,32 @@
+//! Bench + regeneration of the §IV gradient-consistency study (DTO vs OTD
+//! vs [8], dt sweep). Requires `make artifacts`.
+//! `cargo bench --bench gradient_consistency`
+
+use anode::harness::{format_gradcheck, gradient_consistency};
+use anode::runtime::ArtifactRegistry;
+use anode::util::bench::bench;
+
+fn main() {
+    let Ok(reg) = ArtifactRegistry::open(std::path::Path::new("artifacts")) else {
+        eprintln!("artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    println!("=== §IV — gradient consistency (tiny block, Euler) ===\n");
+    let rows = gradient_consistency(&reg, 5).unwrap();
+    println!("{}", format_gradcheck(&rows));
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    println!(
+        "shape check: OTD err {:.3}->{:.3} (O(dt) decay), node recon {:.2}->{:.2} (stays large), dto-vs-fd <= {:.1e}\n",
+        first.otd_rel_err,
+        last.otd_rel_err,
+        first.node_recon_err,
+        last.node_recon_err,
+        rows.iter().map(|r| r.dto_fd_err).fold(0.0f32, f32::max)
+    );
+
+    let s = bench("gradcheck_sweep(6 nt values)", 1, 2, || {
+        anode::util::bench::black_box(gradient_consistency(&reg, 5).unwrap());
+    });
+    println!("{}", s.report());
+}

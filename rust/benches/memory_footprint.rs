@@ -1,0 +1,54 @@
+//! Bench + regeneration of the §V memory table: modeled peaks over (L, Nt)
+//! plus LIVE ledger measurements from real coordinator backward passes.
+//! Requires `make artifacts`. `cargo bench --bench memory_footprint`
+
+use anode::coordinator::Coordinator;
+use anode::data::SyntheticCifar;
+use anode::harness::{format_memtable, memory_table};
+use anode::memory::{human_bytes, Category, MemoryLedger};
+use anode::models::{Arch, GradMethod, ModelConfig, Solver};
+use anode::runtime::ArtifactRegistry;
+use anode::tensor::Tensor;
+
+fn main() {
+    println!("=== §V — activation-memory footprint (model) ===\n");
+    let act = 32 * 32 * 32 * 16 * 4usize; // one stage-0 activation
+    let rows = memory_table(&[6, 8, 16], &[5, 16, 32], &[2, 4], act);
+    println!("{}", format_memtable(&rows));
+
+    let Ok(reg) = ArtifactRegistry::open(std::path::Path::new("artifacts")) else {
+        eprintln!("artifacts/ missing — skipping live measurement");
+        return;
+    };
+    println!("=== live ledger measurement (ResNet, Euler, one batch) ===\n");
+    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
+    let batch = cfg.batch;
+    let ds = SyntheticCifar::new(10, 3, 0.1);
+    let (imgs, labels) = ds.generate(batch, 0);
+    let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+
+    println!(
+        "{:<22} {:>16} {:>16} {:>12}",
+        "method", "block_input peak", "step_state peak", "wall"
+    );
+    for method in [
+        GradMethod::Anode,
+        GradMethod::AnodeRevolve(3),
+        GradMethod::AnodeRevolve(1),
+        GradMethod::Node,
+    ] {
+        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
+        let params = co.load_params().unwrap();
+        let mut ledger = MemoryLedger::new();
+        let t0 = std::time::Instant::now();
+        co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap();
+        println!(
+            "{:<22} {:>16} {:>16} {:>12.2?}",
+            method.name(),
+            human_bytes(ledger.peak_of(Category::BlockInput)),
+            human_bytes(ledger.peak_of(Category::StepState)),
+            t0.elapsed()
+        );
+    }
+    println!("\nshape check: store_all O(L*Nt) > anode O(L)+O(Nt) > revolve O(L)+O(m) > node O(L).");
+}

@@ -1,0 +1,33 @@
+//! Bench + regeneration of the §III scalar/matrix reversibility studies.
+//! `cargo bench --bench sec3_scalar_reversibility`
+
+use anode::harness::{format_sec3, sec3_scalar_studies};
+use anode::util::bench::bench;
+
+fn main() {
+    println!("=== §III — scalar/matrix reversibility ===\n");
+    let rows = sec3_scalar_studies(0);
+    println!("{}", format_sec3(&rows));
+
+    // Paper-shape assertions.
+    let lin: Vec<_> = rows.iter().filter(|r| r.study == "linear_lambda-100").collect();
+    println!(
+        "shape check: lambda=-100 coarse rho={:.3} -> 200k-step rho={:.3} (paper: ~2e5 steps for % regime)",
+        lin.first().unwrap().rho,
+        lin.last().unwrap().rho
+    );
+    let raw128 = rows.iter().find(|r| r.study == "gaussian_W_raw" && r.param.contains("n=128")).unwrap();
+    let norm128 = rows
+        .iter()
+        .find(|r| r.study == "gaussian_W_normalized" && r.param.contains("n=128"))
+        .unwrap();
+    println!(
+        "shape check: gaussian W n=128 raw rho={:.3e} vs normalized rho={:.3e} (paper: normalization makes reversal possible)\n",
+        raw128.rho, norm128.rho
+    );
+
+    let s = bench("sec3_full_study", 1, 3, || {
+        anode::util::bench::black_box(sec3_scalar_studies(0));
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,65 @@
+//! §V compute-cost claim: "ANODE has the same computational cost as the
+//! neural ODE of [8]" — wall-clock per gradient computation, per method.
+//! Requires `make artifacts`. `cargo bench --bench step_throughput`
+
+use anode::coordinator::Coordinator;
+use anode::data::SyntheticCifar;
+use anode::memory::MemoryLedger;
+use anode::models::{Arch, GradMethod, ModelConfig, Solver};
+use anode::runtime::ArtifactRegistry;
+use anode::tensor::Tensor;
+use anode::util::bench::bench;
+
+fn main() {
+    let Ok(reg) = ArtifactRegistry::open(std::path::Path::new("artifacts")) else {
+        eprintln!("artifacts/ missing — run `make artifacts`");
+        return;
+    };
+    println!("=== §V — per-step gradient cost by method (ResNet, Euler, B=32) ===\n");
+    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
+    let batch = cfg.batch;
+    let ds = SyntheticCifar::new(10, 3, 0.1);
+    let (imgs, labels) = ds.generate(batch, 0);
+    let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+
+    let mut anode_time = None;
+    let mut node_time = None;
+    for method in [
+        GradMethod::Anode,
+        GradMethod::Node,
+        GradMethod::Otd,
+        GradMethod::AnodeRevolve(3),
+        GradMethod::AnodeRevolve(1),
+        GradMethod::AnodeEquispaced(2),
+    ] {
+        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
+        let params = co.load_params().unwrap();
+        let stats = bench(&format!("loss_and_grad[{}]", method.name()), 1, 3, || {
+            let mut ledger = MemoryLedger::new();
+            anode::util::bench::black_box(
+                co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap(),
+            );
+        });
+        println!("{}", stats.report());
+        match method {
+            GradMethod::Anode => anode_time = Some(stats.median),
+            GradMethod::Node => node_time = Some(stats.median),
+            _ => {}
+        }
+    }
+    if let (Some(a), Some(n)) = (anode_time, node_time) {
+        println!(
+            "\nshape check: anode/node cost ratio = {:.2} (paper claims ~1.0 — same cost)",
+            a.as_secs_f64() / n.as_secs_f64()
+        );
+    }
+
+    // Forward-only throughput for context.
+    let co = Coordinator::new(&reg, cfg, Solver::Euler, GradMethod::Anode).unwrap();
+    let params = co.load_params().unwrap();
+    let stats = bench("forward_only", 1, 3, || {
+        let mut ledger = MemoryLedger::new();
+        anode::util::bench::black_box(co.forward(&imgs, &params, &mut ledger).unwrap());
+    });
+    println!("{}", stats.report());
+}

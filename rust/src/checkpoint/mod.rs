@@ -1,0 +1,393 @@
+//! Checkpointing schedules for adjoint computation (paper §V).
+//!
+//! The ANODE backward pass needs the forward states z_0..z_{Nt-1} of each
+//! ODE block in *reverse* order. Storing all of them costs O(Nt) memory;
+//! the classical alternative (Griewank [17], Griewank & Walther's `revolve`
+//! [18]) stores only `m` checkpoints and recomputes the rest, with provably
+//! minimal recomputation.
+//!
+//! This module provides:
+//! - [`Strategy`]: store-all / equispaced(m) / revolve(m) / O(1),
+//! - [`plan`]: turn a strategy into an explicit [`Schedule`] of actions,
+//! - [`ScheduleExecutor`]: replay a schedule against any step function while
+//!   enforcing the memory budget (used by the coordinator and the tests),
+//! - [`binomial_eta`]: Griewank's η(m, r) optimality bound used to *prove*
+//!   (in tests) the revolve plan achieves the theoretical minimum.
+
+mod executor;
+mod revolve;
+
+pub use executor::run_backward;
+pub use revolve::{binomial_eta, min_recomputations, revolve_plan};
+
+/// How to trade memory for recomputation inside one ODE block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Store every intermediate state (PyTorch-style autograd): O(Nt) memory,
+    /// zero recomputation.
+    StoreAll,
+    /// Keep `m` equispaced checkpoints; recompute segments from the nearest
+    /// one (the "naive approach" the paper contrasts with revolve).
+    Equispaced(usize),
+    /// Griewank–Walther binomial checkpointing with `m` checkpoint slots:
+    /// provably minimal recomputation.
+    Revolve(usize),
+    /// Only the block input is kept: O(1) memory, O(Nt²) recomputation
+    /// (the paper's extreme case).
+    MinMemory,
+}
+
+impl Strategy {
+    pub fn name(&self) -> String {
+        match self {
+            Strategy::StoreAll => "store_all".into(),
+            Strategy::Equispaced(m) => format!("equispaced({m})"),
+            Strategy::Revolve(m) => format!("revolve({m})"),
+            Strategy::MinMemory => "min_memory".into(),
+        }
+    }
+
+    /// Checkpoint slots this strategy may hold at once (incl. block input).
+    pub fn slots(&self, nt: usize) -> usize {
+        match self {
+            Strategy::StoreAll => nt + 1,
+            Strategy::Equispaced(m) | Strategy::Revolve(m) => (*m).max(1),
+            Strategy::MinMemory => 1,
+        }
+    }
+}
+
+/// One primitive action in a checkpointing schedule over steps 0..nt.
+///
+/// States are numbered 0..=nt (state i is *before* step i); the executor
+/// holds states in named slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Action {
+    /// Copy the current state into checkpoint slot `slot` (records state id
+    /// for validation).
+    Checkpoint { slot: usize, state: usize },
+    /// Restore the current state from slot `slot` (must hold `state`).
+    Restore { slot: usize, state: usize },
+    /// Advance the current state by one forward step: state -> state+1.
+    /// `store_tape` marks steps whose input is pushed to the adjoint tape
+    /// (i.e. this forward step will be immediately followed by its VJP).
+    Forward { state: usize, store_tape: bool },
+    /// Consume the tape entry for step `state` -> `state`+1 and apply its
+    /// VJP, moving the adjoint from `state`+1 to `state`.
+    Backward { state: usize },
+}
+
+/// A full schedule: actions plus bookkeeping for validation.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub nt: usize,
+    pub strategy: Strategy,
+    pub actions: Vec<Action>,
+}
+
+impl Schedule {
+    /// Count of forward-step evaluations (the recomputation cost measure;
+    /// an ideal store-all run uses exactly `nt`).
+    pub fn forward_evals(&self) -> usize {
+        self.actions.iter().filter(|a| matches!(a, Action::Forward { .. })).count()
+    }
+
+    /// Recomputations beyond the mandatory first forward sweep.
+    pub fn extra_forwards(&self) -> usize {
+        self.forward_evals().saturating_sub(self.nt)
+    }
+
+    /// Peak number of simultaneously-live checkpoint slots.
+    pub fn peak_slots(&self) -> usize {
+        let mut live: std::collections::HashSet<usize> = Default::default();
+        let mut peak = 0;
+        for a in &self.actions {
+            if let Action::Checkpoint { slot, .. } = a {
+                live.insert(*slot);
+                peak = peak.max(live.len());
+            }
+        }
+        peak
+    }
+
+    /// Peak tape depth (states held for pending VJPs). Store-all tapes the
+    /// whole trajectory (= Nt); revolve/equispaced tape one step at a time.
+    pub fn peak_tape(&self) -> usize {
+        let mut depth = 0usize;
+        let mut peak = 0usize;
+        for a in &self.actions {
+            match a {
+                Action::Forward { store_tape: true, .. } => {
+                    depth += 1;
+                    peak = peak.max(depth);
+                }
+                Action::Backward { .. } => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+        }
+        peak
+    }
+
+    /// Peak live states = checkpoint slots + tape depth, the true memory
+    /// measure (in units of one activation) used by the memory ledger.
+    pub fn peak_states(&self) -> usize {
+        let mut live: std::collections::HashSet<usize> = Default::default();
+        let mut depth = 0usize;
+        let mut peak = 0usize;
+        for a in &self.actions {
+            match a {
+                Action::Checkpoint { slot, .. } => {
+                    live.insert(*slot);
+                }
+                Action::Forward { store_tape: true, .. } => depth += 1,
+                Action::Backward { .. } => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+            peak = peak.max(live.len() + depth);
+        }
+        peak
+    }
+
+    /// Validate the schedule is executable and computes every VJP exactly
+    /// once in reverse order. Returns the list of violated invariants.
+    pub fn validate(&self) -> Vec<String> {
+        let mut errs = Vec::new();
+        let mut cur: Option<usize> = Some(0); // current forward state
+        let mut slots: std::collections::HashMap<usize, usize> = Default::default();
+        let mut tape: Vec<usize> = Vec::new(); // stack of step inputs
+        let mut next_backward = self.nt; // expect Backward nt-1, nt-2, ...
+        for (idx, a) in self.actions.iter().enumerate() {
+            match *a {
+                Action::Checkpoint { slot, state } => {
+                    if cur != Some(state) {
+                        errs.push(format!("action {idx}: checkpoint of state {state} but current is {cur:?}"));
+                    }
+                    slots.insert(slot, state);
+                }
+                Action::Restore { slot, state } => match slots.get(&slot) {
+                    Some(&s) if s == state => cur = Some(state),
+                    other => errs.push(format!(
+                        "action {idx}: restore slot {slot} expected state {state}, holds {other:?}"
+                    )),
+                },
+                Action::Forward { state, store_tape } => {
+                    if cur != Some(state) {
+                        errs.push(format!("action {idx}: forward from {state} but current is {cur:?}"));
+                    }
+                    if store_tape {
+                        tape.push(state);
+                    }
+                    cur = Some(state + 1);
+                }
+                Action::Backward { state } => {
+                    if state + 1 != next_backward {
+                        errs.push(format!(
+                            "action {idx}: backward over step {state} out of order (expected {})",
+                            next_backward - 1
+                        ));
+                    }
+                    match tape.pop() {
+                        Some(s) if s == state => {}
+                        other => errs.push(format!(
+                            "action {idx}: tape top {other:?} but backward needs {state}"
+                        )),
+                    }
+                    next_backward = state;
+                }
+            }
+        }
+        if next_backward != 0 {
+            errs.push(format!("did not backward through all steps (stopped at {next_backward})"));
+        }
+        errs
+    }
+}
+
+/// Build the action schedule for a strategy over `nt` steps.
+pub fn plan(strategy: Strategy, nt: usize) -> Schedule {
+    assert!(nt > 0);
+    let actions = match strategy {
+        Strategy::StoreAll => {
+            let mut acts = Vec::with_capacity(2 * nt);
+            for i in 0..nt {
+                acts.push(Action::Forward { state: i, store_tape: true });
+            }
+            for i in (0..nt).rev() {
+                acts.push(Action::Backward { state: i });
+            }
+            acts
+        }
+        Strategy::MinMemory => min_memory_plan(nt),
+        Strategy::Equispaced(m) => equispaced_plan(nt, m.max(1)),
+        Strategy::Revolve(m) => revolve::revolve_plan(nt, m.max(1)),
+    };
+    Schedule { nt, strategy, actions }
+}
+
+/// Pick the cheapest strategy whose per-block activation memory fits
+/// `budget_bytes`, given `nt` steps of `act_bytes` each.
+///
+/// Preference order (paper §V): the fused DTO backward (store-all within
+/// the block, O(Nt)) when it fits; otherwise revolve(m) with the largest m
+/// that fits (peak = m slots + 1 tape state); never fails — m=1 is the
+/// O(1)-memory extreme with O(Nt²) recompute.
+pub fn suggest_strategy(nt: usize, act_bytes: usize, budget_bytes: usize) -> Strategy {
+    if act_bytes == 0 || (nt + 1) * act_bytes <= budget_bytes {
+        return Strategy::StoreAll;
+    }
+    let slots = budget_bytes / act_bytes;
+    let m = slots.saturating_sub(1).max(1).min(nt);
+    Strategy::Revolve(m)
+}
+
+/// O(1)-memory plan: recompute from the block input for every step.
+/// Cost: nt + (nt-1) + ... + 1 = O(nt²) forwards.
+fn min_memory_plan(nt: usize) -> Vec<Action> {
+    let mut acts = vec![Action::Checkpoint { slot: 0, state: 0 }];
+    for target in (0..nt).rev() {
+        acts.push(Action::Restore { slot: 0, state: 0 });
+        for s in 0..target {
+            acts.push(Action::Forward { state: s, store_tape: false });
+        }
+        acts.push(Action::Forward { state: target, store_tape: true });
+        acts.push(Action::Backward { state: target });
+    }
+    acts
+}
+
+/// Equispaced-m plan (the paper's "naive approach": checkpoint the
+/// trajectory at equispaced points; when a state is needed, forward-solve
+/// from the nearest saved value). Tape depth is 1 — each step's VJP runs
+/// right after that step is recomputed.
+fn equispaced_plan(nt: usize, m: usize) -> Vec<Action> {
+    // Checkpoint states: 0 plus up to m-1 further equispaced states.
+    let mut cps: Vec<usize> = vec![0];
+    if m > 1 {
+        for k in 1..m {
+            let s = k * nt / m;
+            if s > 0 && s < nt && !cps.contains(&s) {
+                cps.push(s);
+            }
+        }
+    }
+    cps.sort();
+    let slot_of = |state: usize, cps: &[usize]| cps.iter().position(|&c| c == state).unwrap();
+
+    let mut acts = Vec::new();
+    // Positioning descent: advance once to the last checkpoint position,
+    // dropping checkpoints on the way (backward-phase-only schedule; the
+    // training forward pass itself uses the fused block_fwd artifact).
+    let last_cp = *cps.last().unwrap();
+    for s in 0..=last_cp {
+        if cps.contains(&s) {
+            acts.push(Action::Checkpoint { slot: slot_of(s, &cps), state: s });
+        }
+        if s < last_cp {
+            acts.push(Action::Forward { state: s, store_tape: false });
+        }
+    }
+    // Backward: for each step t (last first), replay from the nearest
+    // checkpoint <= t, tape only step t, then run its VJP.
+    for t in (0..nt).rev() {
+        let cp = *cps.iter().filter(|&&c| c <= t).max().unwrap();
+        acts.push(Action::Restore { slot: slot_of(cp, &cps), state: cp });
+        for s in cp..t {
+            acts.push(Action::Forward { state: s, store_tape: false });
+        }
+        acts.push(Action::Forward { state: t, store_tape: true });
+        acts.push(Action::Backward { state: t });
+    }
+    acts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_all_is_valid_and_minimal() {
+        for nt in [1, 2, 5, 16] {
+            let s = plan(Strategy::StoreAll, nt);
+            assert!(s.validate().is_empty(), "{:?}", s.validate());
+            assert_eq!(s.forward_evals(), nt);
+            assert_eq!(s.extra_forwards(), 0);
+        }
+    }
+
+    #[test]
+    fn min_memory_is_valid_and_quadratic() {
+        for nt in [1, 2, 5, 12] {
+            let s = plan(Strategy::MinMemory, nt);
+            assert!(s.validate().is_empty(), "{:?}", s.validate());
+            assert_eq!(s.forward_evals(), nt * (nt + 1) / 2);
+            assert_eq!(s.peak_slots(), 1);
+        }
+    }
+
+    #[test]
+    fn equispaced_is_valid() {
+        for nt in [1, 2, 5, 16, 33] {
+            for m in [1, 2, 3, 5, 8] {
+                let s = plan(Strategy::Equispaced(m), nt);
+                let errs = s.validate();
+                assert!(errs.is_empty(), "nt={nt} m={m}: {errs:?}");
+                assert!(s.peak_slots() <= m.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn equispaced_cost_between_storeall_and_minmem() {
+        let nt = 32;
+        let all = plan(Strategy::StoreAll, nt).forward_evals();
+        let one = plan(Strategy::MinMemory, nt).forward_evals();
+        for m in [2, 4, 8] {
+            let e = plan(Strategy::Equispaced(m), nt).forward_evals();
+            assert!(e >= all && e <= one, "m={m}: {e} not in [{all}, {one}]");
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_schedules() {
+        let bad = Schedule {
+            nt: 2,
+            strategy: Strategy::StoreAll,
+            actions: vec![
+                Action::Forward { state: 0, store_tape: true },
+                // missing forward of step 1
+                Action::Backward { state: 1 },
+                Action::Backward { state: 0 },
+            ],
+        };
+        assert!(!bad.validate().is_empty());
+    }
+
+    #[test]
+    fn slots_metadata() {
+        assert_eq!(Strategy::StoreAll.slots(8), 9);
+        assert_eq!(Strategy::Revolve(3).slots(8), 3);
+        assert_eq!(Strategy::MinMemory.slots(8), 1);
+    }
+
+    #[test]
+    fn suggest_strategy_respects_budget() {
+        let act = 1000;
+        // Plenty of memory: fused store-all within the block.
+        assert_eq!(suggest_strategy(8, act, 10_000), Strategy::StoreAll);
+        // Half the trajectory fits: revolve with the m that fits.
+        assert_eq!(suggest_strategy(8, act, 5_000), Strategy::Revolve(4));
+        // Two states fit: revolve(1) (the O(1) extreme).
+        assert_eq!(suggest_strategy(8, act, 2_000), Strategy::Revolve(1));
+        // Even a degenerate budget yields a runnable plan.
+        assert_eq!(suggest_strategy(8, act, 0), Strategy::Revolve(1));
+        // The suggestion's schedule really stays within the stated peak.
+        for budget in [2_000usize, 3_000, 5_000, 9_000] {
+            let s = suggest_strategy(8, act, budget);
+            let sched = plan(s, 8);
+            assert!(sched.validate().is_empty());
+            if let Strategy::Revolve(m) = s {
+                assert!((m + 1) * act <= budget.max(2 * act), "m={m} budget={budget}");
+            }
+        }
+    }
+}

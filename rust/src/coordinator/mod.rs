@@ -1,0 +1,205 @@
+//! The ANODE training coordinator — the paper's §V contribution as a
+//! runtime system.
+//!
+//! Responsibilities:
+//! - **Forward pass** over stem → (ODE blocks, transitions) → head, storing
+//!   only the O(L) block-boundary activations ([`Coordinator::forward`]).
+//! - **Multi-stage backward** ([`Coordinator::backward`]): per ODE block,
+//!   dispatch the configured gradient method:
+//!   `anode` re-runs the block's discrete forward inside the fused DTO-VJP
+//!   artifact (O(Nt) inside the call, freed on return); `anode-revolve(m)` /
+//!   `anode-equispaced(m)` drive step-level artifacts through a
+//!   [`crate::checkpoint`] schedule under an m-slot budget; `node` performs
+//!   the [8] reverse-time augmented solve; `otd` the inconsistent
+//!   optimize-then-discretize adjoint (§IV).
+//! - **Memory accounting**: every stored activation goes through the
+//!   [`crate::memory::MemoryLedger`], so the O(L·Nt) → O(L)+O(Nt) claim is
+//!   measured, not asserted.
+//! - **Training loop** with SGD+momentum, LR schedule, eval, divergence
+//!   detection ([`Trainer`]).
+
+mod backward;
+mod trainer;
+
+pub use trainer::{make_eval_batches, TrainOptions, TrainResult, Trainer};
+
+use crate::memory::{Category, MemoryLedger};
+use crate::models::{GradMethod, ModelConfig, ParamIndex, Solver};
+use crate::runtime::{ArtifactRegistry, Result, RuntimeError};
+use crate::tensor::Tensor;
+
+/// Activations stored by the forward pass (the O(L) term): inputs to every
+/// ODE block and transition, plus each block's output (needed by the [8]
+/// baseline, which starts its reverse solve from z1).
+pub struct ForwardState {
+    /// x (input batch) — needed for the stem VJP.
+    pub x: Tensor,
+    /// block_inputs[s][b] = input activation of ODE block (s, b).
+    pub block_inputs: Vec<Vec<Tensor>>,
+    /// block_outputs[s][b] = output activation (used by `node` only).
+    pub block_outputs: Vec<Vec<Tensor>>,
+    /// trans_inputs[s] = input of transition s.
+    pub trans_inputs: Vec<Tensor>,
+    /// Final activation entering the head.
+    pub z_final: Tensor,
+    /// Ledger ids backing the stored tensors (freed after backward).
+    ledger_ids: Vec<u64>,
+}
+
+/// The coordinator: owns the artifact registry handle, model structure and
+/// gradient-method dispatch for a single (arch, solver, method) config.
+pub struct Coordinator<'r> {
+    pub reg: &'r ArtifactRegistry,
+    pub cfg: ModelConfig,
+    pub index: ParamIndex,
+    pub solver: Solver,
+    pub method: GradMethod,
+    /// Calls made to each module (perf accounting).
+    pub call_count: std::cell::Cell<usize>,
+}
+
+impl<'r> Coordinator<'r> {
+    pub fn new(
+        reg: &'r ArtifactRegistry,
+        cfg: ModelConfig,
+        solver: Solver,
+        method: GradMethod,
+    ) -> Result<Self> {
+        let layout = reg.param_layout(&cfg.params_key())?;
+        let index = ParamIndex::from_layout(layout, &cfg)?;
+        // Fail fast if the manifest lacks the modules this config needs.
+        let probe = cfg.block_module(0, solver, backward::primary_kind(method));
+        if !reg.has_module(&probe) {
+            return Err(RuntimeError::Io(format!(
+                "manifest has no module {probe} for method {} — re-run `make artifacts`",
+                method.name()
+            )));
+        }
+        Ok(Self { reg, cfg, index, solver, method, call_count: std::cell::Cell::new(0) })
+    }
+
+    /// Initial parameters from params.bin (canonical order).
+    pub fn load_params(&self) -> Result<Vec<Tensor>> {
+        self.reg.load_params(&self.cfg.params_key())
+    }
+
+    pub(crate) fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.call_count.set(self.call_count.get() + 1);
+        self.reg.call(name, inputs)
+    }
+
+    /// Gather a block's parameter tensors in artifact order.
+    fn block_params<'a>(&self, params: &'a [Tensor], s: usize, b: usize) -> Vec<&'a Tensor> {
+        self.index.blocks[s][b].iter().map(|&i| &params[i]).collect()
+    }
+
+    /// Forward pass storing the O(L) block boundaries. Ledger records every
+    /// stored activation under `BlockInput`.
+    pub fn forward(
+        &self,
+        x: &Tensor,
+        params: &[Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<ForwardState> {
+        let mut ledger_ids = Vec::new();
+        let track = |t: &Tensor, ledger: &mut MemoryLedger, ids: &mut Vec<u64>| {
+            ids.push(ledger.alloc(t.byte_size(), Category::BlockInput));
+        };
+
+        let (sw, sb) = (&params[self.index.stem.0], &params[self.index.stem.1]);
+        let mut z = self.call("stem_fwd", &[x, sw, sb])?.remove(0);
+        track(x, ledger, &mut ledger_ids);
+
+        let mut block_inputs = Vec::new();
+        let mut block_outputs = Vec::new();
+        let mut trans_inputs = Vec::new();
+        for s in 0..self.cfg.stages() {
+            let mut ins = Vec::new();
+            let mut outs = Vec::new();
+            let fwd_name = self.cfg.block_module(s, self.solver, "fwd");
+            for b in 0..self.cfg.blocks_per_stage {
+                let mut args: Vec<&Tensor> = vec![&z];
+                args.extend(self.block_params(params, s, b));
+                let z1 = self.call(&fwd_name, &args)?.remove(0);
+                track(&z, ledger, &mut ledger_ids);
+                ins.push(z.clone());
+                // Output is the next block's input; stored once (the clone
+                // here is host-side bookkeeping, not device memory).
+                outs.push(z1.clone());
+                z = z1;
+            }
+            block_inputs.push(ins);
+            block_outputs.push(outs);
+            if s + 1 < self.cfg.stages() {
+                let (tw, tb) = self.index.trans[s];
+                track(&z, ledger, &mut ledger_ids);
+                trans_inputs.push(z.clone());
+                z = self
+                    .call(&format!("trans{s}_fwd"), &[&z, &params[tw], &params[tb]])?
+                    .remove(0);
+            }
+        }
+
+        Ok(ForwardState {
+            x: x.clone(),
+            block_inputs,
+            block_outputs,
+            trans_inputs,
+            z_final: z,
+            ledger_ids,
+        })
+    }
+
+    /// Loss + gradients for one batch. Returns (loss, correct, grads).
+    pub fn loss_and_grad(
+        &self,
+        x: &Tensor,
+        labels: &Tensor,
+        params: &[Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<(f32, f32, Vec<Tensor>)> {
+        let state = self.forward(x, params, ledger)?;
+        let (hw, hb) = self.index.head;
+        let head_name = format!("head{}_loss_grad", self.cfg.num_classes);
+        let mut outs =
+            self.call(&head_name, &[&state.z_final, &params[hw], &params[hb], labels])?;
+        let loss = outs[0].item().map_err(|e| RuntimeError::Shape(e.to_string()))?;
+        let correct = outs[1].item().map_err(|e| RuntimeError::Shape(e.to_string()))?;
+        let gz = outs.remove(2);
+        let ghw = outs.remove(2);
+        let ghb = outs.remove(2);
+
+        let mut grads = ParamIndex::zero_grads(params);
+        grads[hw] = ghw;
+        grads[hb] = ghb;
+        backward::backward(self, &state, gz, params, &mut grads, ledger)?;
+
+        // Release the O(L) stored activations.
+        for id in &state.ledger_ids {
+            ledger.free(*id);
+        }
+        Ok((loss, correct, grads))
+    }
+
+    /// Evaluation over pre-batched data: returns (mean loss, accuracy).
+    pub fn evaluate(&self, batches: &[(Tensor, Tensor)], params: &[Tensor]) -> Result<(f32, f32)> {
+        let (hw, hb) = self.index.head;
+        let head_name = format!("head{}_eval", self.cfg.num_classes);
+        let mut ledger = MemoryLedger::new();
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0usize;
+        for (x, labels) in batches {
+            let state = self.forward(x, params, &mut ledger)?;
+            let outs = self.call(&head_name, &[&state.z_final, &params[hw], &params[hb], labels])?;
+            loss_sum += outs[0].item().map_err(|e| RuntimeError::Shape(e.to_string()))? as f64;
+            correct += outs[1].item().map_err(|e| RuntimeError::Shape(e.to_string()))? as f64;
+            n += self.cfg.batch;
+            for id in &state.ledger_ids {
+                ledger.free(*id);
+            }
+        }
+        let batches_n = batches.len().max(1) as f64;
+        Ok(((loss_sum / batches_n) as f32, (correct / n.max(1) as f64) as f32))
+    }
+}

@@ -1,0 +1,182 @@
+//! Training loop: the end-to-end driver behind Figs. 3, 4, 5 and the
+//! `train` CLI subcommand / `train_cifar` example.
+
+use std::time::Instant;
+
+use crate::data::Batcher;
+use crate::memory::{Category, MemoryLedger};
+use crate::metrics::{Curve, CurvePoint, Mean};
+use crate::optim::{LrSchedule, Sgd};
+use crate::runtime::Result;
+use crate::tensor::Tensor;
+
+use super::Coordinator;
+
+/// Options for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: usize,
+    pub eval_every: usize,
+    pub lr: LrSchedule,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    pub clip_norm: Option<f32>,
+    /// Stop as soon as the loss goes non-finite (records the divergence).
+    pub stop_on_divergence: bool,
+    pub verbose: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            steps: 200,
+            eval_every: 25,
+            lr: LrSchedule::Constant(0.02),
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            clip_norm: Some(5.0),
+            stop_on_divergence: true,
+            verbose: true,
+        }
+    }
+}
+
+/// Outcome of a training run.
+pub struct TrainResult {
+    pub curve: Curve,
+    pub diverged: bool,
+    pub steps_run: usize,
+    pub wall_seconds: f64,
+    /// Peak activation bytes observed by the ledger.
+    pub peak_activation_bytes: usize,
+    pub peak_block_input_bytes: usize,
+    pub peak_step_state_bytes: usize,
+    /// Mean seconds per training step.
+    pub sec_per_step: f64,
+}
+
+/// Run the training loop for one (arch, solver, method) configuration.
+pub struct Trainer<'c, 'r> {
+    pub co: &'c Coordinator<'r>,
+    pub opts: TrainOptions,
+}
+
+impl<'c, 'r> Trainer<'c, 'r> {
+    pub fn new(co: &'c Coordinator<'r>, opts: TrainOptions) -> Self {
+        Self { co, opts }
+    }
+
+    pub fn train(
+        &self,
+        train: &mut Batcher,
+        test_batches: &[(Tensor, Tensor)],
+        series_name: &str,
+    ) -> Result<TrainResult> {
+        let co = self.co;
+        let mut params = co.load_params()?;
+        let mut opt = Sgd::new(&params, self.opts.lr.at(0), self.opts.momentum, self.opts.weight_decay);
+        let mut ledger = MemoryLedger::new();
+        // Params + optimizer state are persistent allocations.
+        let pbytes: usize = params.iter().map(|p| p.byte_size()).sum();
+        ledger.alloc(pbytes, Category::Param);
+        ledger.alloc(opt.state_bytes(), Category::OptState);
+
+        let mut curve = Curve::new(series_name);
+        let mut train_loss = Mean::default();
+        let mut diverged = false;
+        let t0 = Instant::now();
+        let mut steps_run = 0;
+        let batches_per_epoch = train.batches_per_epoch().max(1);
+
+        for step in 0..self.opts.steps {
+            let batch = train.next_batch();
+            opt.lr = self.opts.lr.at(step);
+            let (loss, _corr, mut grads) =
+                co.loss_and_grad(&batch.images, &batch.labels, &params, &mut ledger)?;
+            steps_run = step + 1;
+            train_loss.add(loss);
+
+            let finite = loss.is_finite() && grads.iter().all(|g| g.all_finite());
+            if finite {
+                if let Some(c) = self.opts.clip_norm {
+                    Sgd::clip_grads(&mut grads, c);
+                }
+                opt.step(&mut params, &grads);
+            } else {
+                diverged = true;
+            }
+
+            let at_eval = (step + 1) % self.opts.eval_every == 0 || step + 1 == self.opts.steps;
+            if at_eval || diverged {
+                let (tl, ta) = if diverged {
+                    (f32::NAN, curve.points.last().map(|p| p.test_acc).unwrap_or(0.0))
+                } else {
+                    co.evaluate(test_batches, &params)?
+                };
+                let point = CurvePoint {
+                    step: step + 1,
+                    epoch: (step + 1) as f32 / batches_per_epoch as f32,
+                    train_loss: if diverged { f32::NAN } else { train_loss.value() },
+                    test_loss: tl,
+                    test_acc: ta,
+                };
+                if self.opts.verbose {
+                    eprintln!(
+                        "[{series_name}] step {:>5} epoch {:>5.2} train_loss {:>9.4} test_loss {:>9.4} test_acc {:>6.2}%{}",
+                        point.step,
+                        point.epoch,
+                        point.train_loss,
+                        point.test_loss,
+                        point.test_acc * 100.0,
+                        if diverged { "  << DIVERGED" } else { "" }
+                    );
+                }
+                curve.push(point);
+                train_loss.reset();
+                if diverged && self.opts.stop_on_divergence {
+                    break;
+                }
+            }
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        Ok(TrainResult {
+            diverged: diverged || curve.diverged(),
+            curve,
+            steps_run,
+            wall_seconds: wall,
+            peak_activation_bytes: ledger.peak_of(Category::BlockInput)
+                + ledger.peak_of(Category::StepState),
+            peak_block_input_bytes: ledger.peak_of(Category::BlockInput),
+            peak_step_state_bytes: ledger.peak_of(Category::StepState),
+            sec_per_step: wall / steps_run.max(1) as f64,
+        })
+    }
+}
+
+/// Build eval batches (fixed, unaugmented) from a dataset tensor.
+pub fn make_eval_batches(
+    images: &Tensor,
+    labels: &[usize],
+    batch: usize,
+    max_batches: usize,
+) -> Vec<(Tensor, Tensor)> {
+    let n = labels.len();
+    let per: usize = images.shape()[1..].iter().product();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + batch <= n && out.len() < max_batches {
+        let data = images.data()[i * per..(i + batch) * per].to_vec();
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&images.shape()[1..]);
+        let x = Tensor::from_vec(shape, data).unwrap();
+        let y = Tensor::from_vec(
+            vec![batch],
+            labels[i..i + batch].iter().map(|&l| l as f32).collect(),
+        )
+        .unwrap();
+        out.push((x, y));
+        i += batch;
+    }
+    out
+}

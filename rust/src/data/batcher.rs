@@ -1,0 +1,145 @@
+//! Mini-batch iteration with per-epoch shuffling and optional augmentation.
+
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+use super::cifar::{SyntheticCifar, CIFAR_HW};
+
+/// One training batch: images (B,H,W,C) and f32 labels (B,)
+/// (labels are f32 because the AOT head modules take uniform f32 inputs).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Tensor,
+    pub labels: Tensor,
+}
+
+/// Epoch-shuffling batcher over a dataset held in memory.
+pub struct Batcher {
+    images: Tensor,
+    labels: Vec<usize>,
+    batch_size: usize,
+    augment: bool,
+    rng: Rng,
+    order: Vec<usize>,
+    cursor: usize,
+    pub epoch: usize,
+}
+
+impl Batcher {
+    pub fn new(images: Tensor, labels: Vec<usize>, batch_size: usize, augment: bool, seed: u64) -> Self {
+        assert_eq!(images.shape()[0], labels.len());
+        assert!(batch_size > 0 && batch_size <= labels.len());
+        let mut rng = Rng::new(seed);
+        let order = rng.permutation(labels.len());
+        Self { images, labels, batch_size, augment, rng, order, cursor: 0, epoch: 0 }
+    }
+
+    /// Number of full batches per epoch (remainder dropped, standard practice).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.labels.len() / self.batch_size
+    }
+
+    /// Total examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Next batch; reshuffles and increments `epoch` at epoch end.
+    pub fn next_batch(&mut self) -> Batch {
+        if self.cursor + self.batch_size > self.order.len() {
+            self.rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch_size];
+        self.cursor += self.batch_size;
+
+        let img_dims = &self.images.shape()[1..];
+        let per: usize = img_dims.iter().product();
+        let mut data = Vec::with_capacity(self.batch_size * per);
+        let mut labels = Vec::with_capacity(self.batch_size);
+        for &i in idx {
+            data.extend_from_slice(&self.images.data()[i * per..(i + 1) * per]);
+            labels.push(self.labels[i] as f32);
+        }
+        if self.augment && per == CIFAR_HW * CIFAR_HW * 3 {
+            for b in 0..self.batch_size {
+                SyntheticCifar::augment(&mut data[b * per..(b + 1) * per], &mut self.rng);
+            }
+        }
+        let mut shape = vec![self.batch_size];
+        shape.extend_from_slice(img_dims);
+        Batch {
+            images: Tensor::from_vec(shape, data).unwrap(),
+            labels: Tensor::from_vec(vec![self.batch_size], labels).unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> (Tensor, Vec<usize>) {
+        // 2x2x1 "images" whose single distinguishing value is the index.
+        let mut data = vec![0.0f32; n * 4];
+        for i in 0..n {
+            data[i * 4] = i as f32;
+        }
+        (Tensor::from_vec(vec![n, 2, 2, 1], data).unwrap(), (0..n).map(|i| i % 3).collect())
+    }
+
+    #[test]
+    fn batches_have_right_shape() {
+        let (imgs, labels) = toy(10);
+        let mut b = Batcher::new(imgs, labels, 4, false, 0);
+        let batch = b.next_batch();
+        assert_eq!(batch.images.shape(), &[4, 2, 2, 1]);
+        assert_eq!(batch.labels.shape(), &[4]);
+    }
+
+    #[test]
+    fn epoch_covers_every_example_once() {
+        let (imgs, labels) = toy(12);
+        let mut b = Batcher::new(imgs, labels, 4, false, 1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..3 {
+            let batch = b.next_batch();
+            for k in 0..4 {
+                seen.insert(batch.images.data()[k * 4] as usize);
+            }
+        }
+        assert_eq!(seen.len(), 12);
+        assert_eq!(b.epoch, 0);
+        b.next_batch();
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (imgs, labels) = toy(12);
+        let mut b1 = Batcher::new(imgs.clone(), labels.clone(), 4, false, 5);
+        let mut b2 = Batcher::new(imgs, labels, 4, false, 5);
+        for _ in 0..6 {
+            assert_eq!(b1.next_batch().images.data(), b2.next_batch().images.data());
+        }
+    }
+
+    #[test]
+    fn labels_match_images() {
+        let (imgs, labels) = toy(9);
+        let expect = labels.clone();
+        let mut b = Batcher::new(imgs, labels, 3, false, 2);
+        for _ in 0..3 {
+            let batch = b.next_batch();
+            for k in 0..3 {
+                let idx = batch.images.data()[k * 4] as usize;
+                assert_eq!(batch.labels.data()[k] as usize, expect[idx]);
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Procedural MNIST-like digit rendering for the Fig. 1 / Fig. 7
+//! reversibility experiments (DESIGN.md §2: those figures only need a
+//! structured grayscale image pushed through a random conv residual block).
+
+use crate::rng::Rng;
+
+/// Stroke segments per digit on a [0,1]² canvas (crude seven-segment-ish
+/// skeletons; visual fidelity is irrelevant, spatial structure is not).
+fn strokes(digit: u8) -> &'static [((f32, f32), (f32, f32))] {
+    const S: f32 = 0.22;
+    const E: f32 = 0.78;
+    const M: f32 = 0.5;
+    // Segments: top, top-left, top-right, middle, bottom-left, bottom-right, bottom.
+    const TOP: ((f32, f32), (f32, f32)) = ((S, S), (E, S));
+    const TL: ((f32, f32), (f32, f32)) = ((S, S), (S, M));
+    const TR: ((f32, f32), (f32, f32)) = ((E, S), (E, M));
+    const MID: ((f32, f32), (f32, f32)) = ((S, M), (E, M));
+    const BL: ((f32, f32), (f32, f32)) = ((S, M), (S, E));
+    const BR: ((f32, f32), (f32, f32)) = ((E, M), (E, E));
+    const BOT: ((f32, f32), (f32, f32)) = ((S, E), (E, E));
+    match digit % 10 {
+        0 => &[TOP, TL, TR, BL, BR, BOT],
+        1 => &[TR, BR],
+        2 => &[TOP, TR, MID, BL, BOT],
+        3 => &[TOP, TR, MID, BR, BOT],
+        4 => &[TL, TR, MID, BR],
+        5 => &[TOP, TL, MID, BR, BOT],
+        6 => &[TOP, TL, MID, BL, BR, BOT],
+        7 => &[TOP, TR, BR],
+        8 => &[TOP, TL, TR, MID, BL, BR, BOT],
+        _ => &[TOP, TL, TR, MID, BR, BOT],
+    }
+}
+
+/// Render `digit` into an h×w grayscale image with stroke width ~w/10,
+/// mild per-call jitter, and values in [0, 1].
+pub fn render_digit(digit: u8, h: usize, w: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut img = vec![0.0f32; h * w];
+    let jx = rng.normal() * 0.02;
+    let jy = rng.normal() * 0.02;
+    let width = 0.06f32;
+    for &((x0, y0), (x1, y1)) in strokes(digit) {
+        let (x0, y0, x1, y1) = (x0 + jx, y0 + jy, x1 + jx, y1 + jy);
+        for i in 0..h {
+            for j in 0..w {
+                let px = (j as f32 + 0.5) / w as f32;
+                let py = (i as f32 + 0.5) / h as f32;
+                // Distance from pixel to segment.
+                let (dx, dy) = (x1 - x0, y1 - y0);
+                let len2 = dx * dx + dy * dy;
+                let t = if len2 > 0.0 {
+                    (((px - x0) * dx + (py - y0) * dy) / len2).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                };
+                let cx = x0 + t * dx;
+                let cy = y0 + t * dy;
+                let d = ((px - cx).powi(2) + (py - cy).powi(2)).sqrt();
+                let v = (1.0 - (d / width).powi(2)).max(0.0);
+                let cell = &mut img[i * w + j];
+                *cell = cell.max(v);
+            }
+        }
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_structured_images() {
+        let mut rng = Rng::new(0);
+        for d in 0..10u8 {
+            let img = render_digit(d, 28, 28, &mut rng);
+            assert_eq!(img.len(), 28 * 28);
+            let on = img.iter().filter(|&&v| v > 0.5).count();
+            // Strokes light up some but not most pixels.
+            assert!(on > 20 && on < 500, "digit {d}: {on} lit pixels");
+            assert!(img.iter().all(|v| (0.0..=1.0).contains(v)));
+        }
+    }
+
+    #[test]
+    fn digits_differ() {
+        let mut rng = Rng::new(1);
+        let a = render_digit(1, 28, 28, &mut rng);
+        let mut rng = Rng::new(1);
+        let b = render_digit(8, 28, 28, &mut rng);
+        let diff: f32 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 10.0);
+    }
+}

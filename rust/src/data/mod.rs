@@ -1,0 +1,15 @@
+//! Synthetic datasets (DESIGN.md §2 substitution table).
+//!
+//! Real CIFAR-10/100 is not available in this environment; the paper's
+//! claims are about *gradient quality* (convergence vs. divergence of the
+//! three gradient methods), so a learnable synthetic classification task
+//! that exercises the identical code paths preserves the experiment: all
+//! methods see the same data and differ only in how they backpropagate.
+
+mod batcher;
+mod cifar;
+mod mnist_like;
+
+pub use batcher::{Batch, Batcher};
+pub use cifar::{SyntheticCifar, CIFAR_HW};
+pub use mnist_like::render_digit;

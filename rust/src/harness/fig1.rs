@@ -1,0 +1,129 @@
+//! Figs. 1 & 7: reversibility of a single-conv residual block on an
+//! MNIST-like image, across activations and solvers.
+//!
+//! Paper setup: one residual block (one 3×3 conv, random Gaussian init,
+//! activation ∈ {none, ReLU, leaky ReLU, softplus}); solve the block's ODE
+//! forward, then solve the forward problem backwards as [8] proposes; the
+//! reconstruction is "completely different than the original image".
+
+use crate::data::render_digit;
+use crate::ode::{
+    odeint, odeint_rk45, reversibility_error, Activation, FixedSolver, Negated, RevBlock,
+    Rk45Options,
+};
+use crate::rng::Rng;
+
+/// One row: activation × solver → reconstruction error ρ (Eq. 6).
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    pub activation: &'static str,
+    pub solver: String,
+    /// ‖forward output‖ (sanity: the forward solve is fine).
+    pub forward_norm: f32,
+    /// ρ of the round trip (the paper's instability evidence).
+    pub rho: f32,
+    /// Adaptive solver convergence flag (false = reverse solve stalled).
+    pub reverse_converged: bool,
+}
+
+/// Run the Fig. 1 (Euler) and Fig. 7 (RK45) study.
+///
+/// `kernel_std` controls the Lipschitz constant of the conv (paper: random
+/// Gaussian). Returns one row per (activation, solver).
+pub fn fig1_reversibility(seed: u64, kernel_std: f32, nt_euler: usize) -> Vec<Fig1Row> {
+    let mut rng = Rng::new(seed);
+    let h = 28;
+    let img = render_digit((seed % 10) as u8, h, h, &mut rng);
+    let mut rows = Vec::new();
+
+    for act in Activation::all() {
+        let block = RevBlock::random(h, h, act, kernel_std, &mut rng.split(act.name().len() as u64));
+
+        // Euler fixed-step round trip (Fig. 1).
+        let z1 = odeint(&block, FixedSolver::Euler, &img, 1.0, nt_euler);
+        let zr = odeint(&block, FixedSolver::Euler, &z1, -1.0, nt_euler);
+        rows.push(Fig1Row {
+            activation: act.name(),
+            solver: format!("euler(nt={nt_euler})"),
+            forward_norm: l2(&z1),
+            rho: reversibility_error(&img, &zr),
+            reverse_converged: zr.iter().all(|v| v.is_finite()),
+        });
+
+        // Adaptive RK45 round trip (Fig. 7): adaptivity does NOT rescue it.
+        // Tolerances are MATLAB ode45 defaults (the paper's solver).
+        let opts = Rk45Options { rtol: 1e-3, atol: 1e-6, max_steps: 20_000, ..Default::default() };
+        let f = odeint_rk45(&block, &img, 1.0, opts);
+        // Reverse: solve dz/ds = -f(z) from z(1).
+        let r = odeint_rk45(&Negated(&block), &f.z, 1.0, opts);
+        rows.push(Fig1Row {
+            activation: act.name(),
+            solver: "rk45".into(),
+            forward_norm: l2(&f.z),
+            rho: reversibility_error(&img, &r.z),
+            reverse_converged: r.converged && r.z.iter().all(|v| v.is_finite()),
+        });
+    }
+    rows
+}
+
+fn l2(v: &[f32]) -> f32 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Render rows as the harness table.
+pub fn format_rows(rows: &[Fig1Row]) -> String {
+    let mut s = String::from(
+        "activation   solver          ||z1||      rho(roundtrip)  reverse_converged\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<12} {:<15} {:>9.3} {:>15.4e}  {}\n",
+            r.activation, r.solver, r.forward_norm, r.rho, r.reverse_converged
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_gaussian_block_is_irreversible() {
+        let rows = fig1_reversibility(3, 3.0, 8);
+        assert_eq!(rows.len(), 8); // 4 activations × 2 solvers
+        // The paper's claim: significant reconstruction error for the
+        // random Gaussian block, for BOTH fixed and adaptive solvers. The
+        // fixed-step roundtrip error is O(1); the adaptive solver's error
+        // still exceeds its own tolerance (rtol=1e-3) — adaptivity does not
+        // restore reversibility (Fig. 7).
+        for r in &rows {
+            let threshold = if r.solver.starts_with("euler") { 1e-2 } else { 1e-3 };
+            assert!(
+                r.rho > threshold || !r.reverse_converged,
+                "{} {} unexpectedly reversible (rho={})",
+                r.activation,
+                r.solver,
+                r.rho
+            );
+        }
+    }
+
+    #[test]
+    fn forward_solve_is_well_behaved() {
+        let rows = fig1_reversibility(3, 3.0, 8);
+        for r in &rows {
+            assert!(r.forward_norm.is_finite() && r.forward_norm > 0.0);
+        }
+    }
+
+    #[test]
+    fn small_lipschitz_block_is_reversible() {
+        // §III contrast case: tiny kernel std => reversal works.
+        let rows = fig1_reversibility(3, 0.02, 64);
+        for r in &rows {
+            assert!(r.rho < 1e-3, "{} {}: rho {}", r.activation, r.solver, r.rho);
+        }
+    }
+}

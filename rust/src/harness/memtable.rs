@@ -1,0 +1,132 @@
+//! §V memory-footprint table: measured peak activation bytes and recompute
+//! counts for store-all / ANODE / ANODE+revolve(m) / ANODE+equispaced(m) /
+//! neural-ODE [8], over a grid of (L, Nt). The headline O(L·Nt) →
+//! O(L)+O(Nt) claim, measured by the ledger models and schedule costs.
+
+use crate::checkpoint::{min_recomputations, plan, Strategy};
+use crate::memory::{human_bytes, model_peak_bytes};
+
+/// One (scheme, L, Nt, m) row.
+#[derive(Debug, Clone)]
+pub struct MemoryRow {
+    pub scheme: String,
+    pub l: usize,
+    pub nt: usize,
+    pub m: usize,
+    /// Peak activation bytes (model; act = `act_bytes`).
+    pub peak_bytes: usize,
+    /// Forward-step evaluations per block backward (recomputation measure;
+    /// the forward pass itself always costs Nt per block).
+    pub fwd_evals_per_block: usize,
+}
+
+/// Generate the table for one activation size.
+pub fn memory_table(ls: &[usize], nts: &[usize], ms: &[usize], act_bytes: usize) -> Vec<MemoryRow> {
+    let mut rows = Vec::new();
+    for &l in ls {
+        for &nt in nts {
+            rows.push(MemoryRow {
+                scheme: "store_all (naive)".into(),
+                l,
+                nt,
+                m: 0,
+                peak_bytes: model_peak_bytes("store_all", l, nt, 0, act_bytes),
+                fwd_evals_per_block: nt,
+            });
+            rows.push(MemoryRow {
+                scheme: "anode".into(),
+                l,
+                nt,
+                m: 0,
+                peak_bytes: model_peak_bytes("anode", l, nt, 0, act_bytes),
+                fwd_evals_per_block: nt,
+            });
+            for &m in ms {
+                if m >= nt {
+                    continue;
+                }
+                rows.push(MemoryRow {
+                    scheme: format!("anode+revolve({m})"),
+                    l,
+                    nt,
+                    m,
+                    peak_bytes: model_peak_bytes("anode_revolve", l, nt, m, act_bytes),
+                    fwd_evals_per_block: min_recomputations(nt, m) as usize,
+                });
+                rows.push(MemoryRow {
+                    scheme: format!("anode+equispaced({m})"),
+                    l,
+                    nt,
+                    m,
+                    peak_bytes: model_peak_bytes("anode_revolve", l, nt, m, act_bytes),
+                    fwd_evals_per_block: plan(Strategy::Equispaced(m), nt).forward_evals(),
+                });
+            }
+            rows.push(MemoryRow {
+                scheme: "node [8] (unstable grad)".into(),
+                l,
+                nt,
+                m: 0,
+                peak_bytes: model_peak_bytes("node", l, nt, 0, act_bytes),
+                // Reverse solve costs ~Nt augmented steps (each ~2 forwards:
+                // f and its VJP fused in the augmented RHS).
+                fwd_evals_per_block: nt,
+            });
+        }
+    }
+    rows
+}
+
+/// Harness table format.
+pub fn format_rows(rows: &[MemoryRow]) -> String {
+    let mut s = String::from(
+        "scheme                      L   Nt   m   peak_activation   fwd_evals/block\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:<26} {:>3} {:>4} {:>3}   {:>14}   {:>8}\n",
+            r.scheme,
+            r.l,
+            r.nt,
+            r.m,
+            human_bytes(r.peak_bytes),
+            r.fwd_evals_per_block
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_reproduces_complexity_ordering() {
+        let rows = memory_table(&[8], &[16], &[2, 4], 1 << 20);
+        let get = |name: &str| rows.iter().find(|r| r.scheme.starts_with(name)).unwrap();
+        let store = get("store_all");
+        let anode = get("anode");
+        let rev = get("anode+revolve(2)");
+        let node = get("node");
+        assert!(store.peak_bytes > anode.peak_bytes);
+        assert!(anode.peak_bytes > rev.peak_bytes);
+        assert!(rev.peak_bytes > node.peak_bytes);
+        // Compute cost ordering is the mirror image.
+        assert!(rev.fwd_evals_per_block > anode.fwd_evals_per_block);
+        // Revolve beats equispaced at equal m.
+        let eq = get("anode+equispaced(2)");
+        assert!(rev.fwd_evals_per_block <= eq.fwd_evals_per_block);
+    }
+
+    #[test]
+    fn anode_memory_is_l_plus_nt() {
+        let act = 1000;
+        for (l, nt) in [(4, 8), (16, 2), (10, 10)] {
+            let rows = memory_table(&[l], &[nt], &[], act);
+            let anode = rows.iter().find(|r| r.scheme == "anode").unwrap();
+            assert_eq!(anode.peak_bytes, (l + nt) * act);
+            let store = rows.iter().find(|r| r.scheme.starts_with("store_all")).unwrap();
+            assert_eq!(store.peak_bytes, l * nt * act);
+        }
+    }
+}

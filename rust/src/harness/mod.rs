@@ -1,0 +1,15 @@
+//! Experiment harnesses — one function per paper figure/table, shared by
+//! the CLI (`anode figures --fig ...`), the examples, and the benches, so
+//! every number in EXPERIMENTS.md has exactly one implementation.
+
+mod fig1;
+mod gradcheck;
+mod memtable;
+mod sec3;
+mod trainfig;
+
+pub use fig1::{fig1_reversibility, format_rows as format_fig1, Fig1Row};
+pub use gradcheck::{format_rows as format_gradcheck, gradient_consistency, GradCheckRow};
+pub use memtable::{format_rows as format_memtable, memory_table, MemoryRow};
+pub use sec3::{format_rows as format_sec3, sec3_scalar_studies, MatrixReluRhs, Sec3Row};
+pub use trainfig::{train_figure, TrainFigOptions, TrainFigRun};

@@ -1,0 +1,259 @@
+//! §III scalar / linear-system reversibility studies:
+//!  (a) dz/dt = λz with λ = -100: forward easy, reverse needs ~2·10⁵ steps;
+//!  (b) dz/dt = -max(0, 10 z): the ReLU ODE step-count table
+//!      (≈11 steps → 1% error, ≈211 → single precision, per ode45);
+//!  (c) dz/dt = max(0, W z), W Gaussian: ‖W‖₂ ~ √n makes reversal
+//!      impossible for n ≈ 100; normalizing W fixes it.
+
+use crate::ode::{odeint, odeint_rk45, reversibility_error, FixedSolver, Negated, Rhs, Rk45Options};
+use crate::rng::Rng;
+
+/// One study row.
+#[derive(Debug, Clone)]
+pub struct Sec3Row {
+    pub study: &'static str,
+    pub param: String,
+    pub steps: usize,
+    pub rho: f32,
+    pub converged: bool,
+}
+
+struct ReluScalar {
+    gain: f32,
+}
+
+impl Rhs for ReluScalar {
+    fn eval(&self, z: &[f32], out: &mut [f32]) {
+        for (o, zi) in out.iter_mut().zip(z) {
+            *o = -(self.gain * zi).max(0.0);
+        }
+    }
+    fn dim(&self) -> usize {
+        1
+    }
+}
+
+/// dz/dt = max(0, W z) with a dense random W.
+pub struct MatrixReluRhs {
+    pub n: usize,
+    pub w: Vec<f32>,
+}
+
+impl MatrixReluRhs {
+    /// Gaussian W with entries ~ N(0, scale²/n^0) — paper's raw init has
+    /// ‖W‖₂ ≈ scale·√n; pass `normalize=true` to rescale to unit spectral
+    /// norm estimate.
+    pub fn random(n: usize, rng: &mut Rng, normalize: bool) -> Self {
+        let mut w: Vec<f32> = (0..n * n).map(|_| rng.normal()).collect();
+        if normalize {
+            // Power iteration for the top singular value.
+            let mut v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            for _ in 0..50 {
+                let mut u = vec![0.0f32; n];
+                for i in 0..n {
+                    for j in 0..n {
+                        u[i] += w[i * n + j] * v[j];
+                    }
+                }
+                let mut vt = vec![0.0f32; n];
+                for j in 0..n {
+                    for i in 0..n {
+                        vt[j] += w[i * n + j] * u[i];
+                    }
+                }
+                let norm = vt.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+                for x in vt.iter_mut() {
+                    *x /= norm;
+                }
+                v = vt;
+            }
+            let mut u = vec![0.0f32; n];
+            for i in 0..n {
+                for j in 0..n {
+                    u[i] += w[i * n + j] * v[j];
+                }
+            }
+            let sigma = u.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+            for x in w.iter_mut() {
+                *x /= sigma;
+            }
+        }
+        Self { n, w }
+    }
+
+    /// ‖W‖₂ estimate via power iteration (for reporting √n growth).
+    pub fn spectral_norm(&self, rng: &mut Rng) -> f32 {
+        let n = self.n;
+        let mut v: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut sigma = 0.0;
+        for _ in 0..50 {
+            let mut u = vec![0.0f32; n];
+            for i in 0..n {
+                for j in 0..n {
+                    u[i] += self.w[i * n + j] * v[j];
+                }
+            }
+            let un = u.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+            sigma = un;
+            let mut vt = vec![0.0f32; n];
+            for j in 0..n {
+                for i in 0..n {
+                    vt[j] += self.w[i * n + j] * u[i] / un;
+                }
+            }
+            let vn = vt.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+            for x in vt.iter_mut() {
+                *x /= vn;
+            }
+            v = vt;
+        }
+        sigma
+    }
+}
+
+impl Rhs for MatrixReluRhs {
+    fn eval(&self, z: &[f32], out: &mut [f32]) {
+        let n = self.n;
+        for i in 0..n {
+            let mut acc = 0.0f32;
+            for j in 0..n {
+                acc += self.w[i * n + j] * z[j];
+            }
+            out[i] = acc.max(0.0);
+        }
+    }
+    fn dim(&self) -> usize {
+        self.n
+    }
+}
+
+/// Round-trip ρ for a fixed-step solve with `nt` steps each way.
+fn roundtrip_fixed<R: Rhs>(rhs: &R, z0: &[f32], nt: usize) -> f32 {
+    let z1 = odeint(rhs, FixedSolver::Rk4, z0, 1.0, nt);
+    let zr = odeint(rhs, FixedSolver::Rk4, &z1, -1.0, nt);
+    reversibility_error(z0, &zr)
+}
+
+/// Run all §III studies; rows mirror the paper's in-text numbers.
+pub fn sec3_scalar_studies(seed: u64) -> Vec<Sec3Row> {
+    let mut rows = Vec::new();
+
+    // (a) λ = -100: ρ vs step count; the paper reports ~200k steps for 1%.
+    // Double precision, like the paper (e^-100 underflows f32).
+    for &nt in &[100usize, 1_000, 10_000, 100_000, 200_000] {
+        let lam = -100.0f64;
+        let h = 1.0 / nt as f64;
+        let mut z = 1.0f64;
+        for _ in 0..nt {
+            z += h * lam * z; // forward Euler
+        }
+        for _ in 0..nt {
+            z -= h * lam * z; // reverse solve: dz/ds = -λz
+        }
+        let rho = ((z - 1.0).abs()) as f32;
+        rows.push(Sec3Row {
+            study: "linear_lambda-100",
+            param: format!("euler(f64) nt={nt}"),
+            steps: nt,
+            rho,
+            converged: rho.is_finite(),
+        });
+    }
+
+    // (b) ReLU ODE dz/dt = -max(0, 10z) with adaptive RK45 at varying tol,
+    // reporting accepted steps vs round-trip error (paper: 11 steps → 1%).
+    for &(rtol, atol) in &[(1e-2f32, 1e-4f32), (1e-3, 1e-6), (1e-6, 1e-9), (1e-9, 1e-12)] {
+        let rhs = ReluScalar { gain: 10.0 };
+        let opts = Rk45Options { rtol, atol, max_steps: 100_000, ..Default::default() };
+        let f = odeint_rk45(&rhs, &[1.0], 1.0, opts);
+        let r = odeint_rk45(&Negated(&rhs), &f.z, 1.0, opts);
+        rows.push(Sec3Row {
+            study: "relu_scalar_gain10",
+            param: format!("rk45 rtol={rtol:.0e}"),
+            steps: f.steps + r.steps,
+            rho: reversibility_error(&[1.0], &r.z),
+            converged: f.converged && r.converged,
+        });
+    }
+
+    // (c) Gaussian W: raw (‖W‖₂ ≈ √n, irreversible) vs normalized (fine).
+    let mut rng = Rng::new(seed);
+    for &n in &[16usize, 64, 128] {
+        for normalize in [false, true] {
+            let rhs = MatrixReluRhs::random(n, &mut rng, normalize);
+            let z0: Vec<f32> = (0..n).map(|_| rng.uniform() + 0.1).collect();
+            let nt = 2048;
+            let rho = roundtrip_fixed(&rhs, &z0, nt);
+            rows.push(Sec3Row {
+                study: if normalize { "gaussian_W_normalized" } else { "gaussian_W_raw" },
+                param: format!("n={n} rk4 nt={nt}"),
+                steps: nt,
+                rho,
+                converged: rho.is_finite(),
+            });
+        }
+    }
+    rows
+}
+
+/// Harness table format.
+pub fn format_rows(rows: &[Sec3Row]) -> String {
+    let mut s =
+        String::from("study                    param                steps      rho         ok\n");
+    for r in rows {
+        s.push_str(&format!(
+            "{:<24} {:<20} {:>6} {:>12.4e}  {}\n",
+            r.study, r.param, r.steps, r.rho, r.converged
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stiff_linear_needs_many_steps() {
+        let rows = sec3_scalar_studies(0);
+        let lin: Vec<_> = rows.iter().filter(|r| r.study == "linear_lambda-100").collect();
+        // Coarse reversal fails badly (ρ ≈ 1 means the recovered state is
+        // as wrong as returning zero); ~200k steps gets near the 1% regime.
+        assert!(lin.first().unwrap().rho > 0.99 || !lin.first().unwrap().rho.is_finite());
+        assert!(lin.last().unwrap().rho < 0.05, "rho {}", lin.last().unwrap().rho);
+    }
+
+    #[test]
+    fn gaussian_w_normalization_restores_reversibility() {
+        let rows = sec3_scalar_studies(1);
+        for n in [64, 128] {
+            let raw = rows
+                .iter()
+                .find(|r| r.study == "gaussian_W_raw" && r.param.contains(&format!("n={n} ")))
+                .unwrap();
+            let norm = rows
+                .iter()
+                .find(|r| {
+                    r.study == "gaussian_W_normalized" && r.param.contains(&format!("n={n} "))
+                })
+                .unwrap();
+            assert!(
+                !raw.rho.is_finite() || raw.rho > 10.0 * norm.rho.max(1e-9),
+                "n={n}: raw {} vs norm {}",
+                raw.rho,
+                norm.rho
+            );
+            assert!(norm.rho < 0.05, "n={n}: normalized rho {}", norm.rho);
+        }
+    }
+
+    #[test]
+    fn spectral_norm_grows_like_sqrt_n() {
+        let mut rng = Rng::new(7);
+        let s16 = MatrixReluRhs::random(16, &mut rng, false).spectral_norm(&mut rng);
+        let s128 = MatrixReluRhs::random(128, &mut rng, false).spectral_norm(&mut rng);
+        let ratio = s128 / s16;
+        let expect = (128.0f32 / 16.0).sqrt();
+        assert!((ratio / expect - 1.0).abs() < 0.5, "ratio {ratio} vs sqrt {expect}");
+    }
+}

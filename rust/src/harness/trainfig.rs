@@ -1,0 +1,96 @@
+//! Figs. 3/4/5 runner: train one (arch, solver, method) configuration on
+//! synthetic CIFAR-10/100 and return its curve — the paper's training-loss /
+//! test-accuracy comparison between ANODE and neural-ODE [8].
+
+use crate::coordinator::{make_eval_batches, Coordinator, TrainOptions, Trainer};
+use crate::data::{Batcher, SyntheticCifar};
+use crate::metrics::Curve;
+use crate::models::{Arch, GradMethod, ModelConfig, Solver};
+use crate::optim::LrSchedule;
+use crate::runtime::{ArtifactRegistry, Result};
+
+/// Options for one figure run.
+#[derive(Debug, Clone)]
+pub struct TrainFigOptions {
+    pub arch: Arch,
+    pub solver: Solver,
+    pub method: GradMethod,
+    pub num_classes: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub steps: usize,
+    pub eval_every: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for TrainFigOptions {
+    fn default() -> Self {
+        Self {
+            arch: Arch::Resnet,
+            solver: Solver::Euler,
+            method: GradMethod::Anode,
+            num_classes: 10,
+            train_size: 2048,
+            test_size: 512,
+            steps: 200,
+            eval_every: 25,
+            lr: 0.02,
+            seed: 0,
+            verbose: true,
+        }
+    }
+}
+
+/// Result: the curve plus run metadata.
+pub struct TrainFigRun {
+    pub curve: Curve,
+    pub diverged: bool,
+    pub wall_seconds: f64,
+    pub sec_per_step: f64,
+    pub peak_activation_bytes: usize,
+    pub series: String,
+}
+
+/// Train one configuration and return its series.
+pub fn train_figure(reg: &ArtifactRegistry, o: &TrainFigOptions) -> Result<TrainFigRun> {
+    let cfg = ModelConfig::from_registry(reg, o.arch, o.num_classes)?;
+    let batch = cfg.batch;
+    let co = Coordinator::new(reg, cfg, o.solver, o.method)?;
+
+    let ds = SyntheticCifar::new(o.num_classes, o.seed ^ 0xDA7A, 0.12);
+    let (train_imgs, train_labels) = ds.generate(o.train_size, o.seed + 1);
+    let (test_imgs, test_labels) = ds.generate(o.test_size, o.seed + 2);
+    let mut train = Batcher::new(train_imgs, train_labels, batch, true, o.seed + 3);
+    let eval = make_eval_batches(&test_imgs, &test_labels, batch, o.test_size / batch);
+
+    let series = format!(
+        "{}-{}-{}-c{}",
+        o.method.name(),
+        o.arch.name(),
+        o.solver.name(),
+        o.num_classes
+    );
+    let opts = TrainOptions {
+        steps: o.steps,
+        eval_every: o.eval_every,
+        lr: LrSchedule::Step {
+            base: o.lr,
+            gamma: 0.3,
+            milestones: vec![o.steps / 2, o.steps * 4 / 5],
+        },
+        verbose: o.verbose,
+        ..Default::default()
+    };
+    let trainer = Trainer::new(&co, opts);
+    let res = trainer.train(&mut train, &eval, &series)?;
+    Ok(TrainFigRun {
+        diverged: res.diverged,
+        wall_seconds: res.wall_seconds,
+        sec_per_step: res.sec_per_step,
+        peak_activation_bytes: res.peak_activation_bytes,
+        curve: res.curve,
+        series,
+    })
+}

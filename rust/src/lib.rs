@@ -1,0 +1,30 @@
+//! # anode — Adjoint-based Neural ODEs with checkpointed DTO gradients
+//!
+//! A Rust + JAX + Pallas reproduction of *ANODE: Unconditionally Accurate
+//! Memory-Efficient Gradients for Neural ODEs* (Gholami, Keutzer, Biros —
+//! IJCAI 2019).
+//!
+//! Architecture (see DESIGN.md):
+//! - **L3 (this crate)** — the checkpointing training coordinator: stores
+//!   only ODE-block *input* activations (O(L)), re-runs each block forward
+//!   during backprop (O(Nt)) and backpropagates through the discrete time
+//!   stepper (Discretize-Then-Optimize), with optional Griewank–Walther
+//!   revolve schedules for tighter memory budgets.
+//! - **L2 (python/compile, build time)** — JAX ODE-block graphs AOT-lowered
+//!   to HLO text, executed here via PJRT ([`runtime`]).
+//! - **L1 (python/compile/kernels)** — Pallas conv kernels inside the block
+//!   RHS, interpret-mode lowered into the same HLO.
+
+pub mod checkpoint;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod memory;
+pub mod metrics;
+pub mod models;
+pub mod ode;
+pub mod optim;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

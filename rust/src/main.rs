@@ -1,0 +1,229 @@
+//! ANODE CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train       train one (arch, solver, method) config on synthetic CIFAR
+//!   figures     regenerate a paper figure/table (fig1|fig7|sec3|fig3|fig4|
+//!               fig5|memory|gradcheck)
+//!   memory      print the §V memory-footprint table
+//!   gradcheck   DTO vs OTD vs [8] gradient-consistency sweep (§IV)
+//!   modules     list AOT modules in the artifact manifest
+//!
+//! Examples:
+//!   anode train --arch sqnxt --solver euler --method anode --steps 200
+//!   anode figures --fig fig1
+//!   anode gradcheck --artifacts artifacts
+
+use std::path::PathBuf;
+
+use anode::harness;
+use anode::metrics::{format_table, write_csv};
+use anode::models::{Arch, GradMethod, Solver};
+use anode::runtime::ArtifactRegistry;
+use anode::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "train" => cmd_train(&args),
+        "figures" => cmd_figures(&args),
+        "memory" => cmd_memory(&args),
+        "gradcheck" => cmd_gradcheck(&args),
+        "modules" => cmd_modules(&args),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "anode — ANODE (IJCAI'19) reproduction\n\
+         usage: anode <train|figures|memory|gradcheck|modules> [--options]\n\
+         \n\
+         train:     --arch resnet|sqnxt  --solver euler|rk2|rk45\n\
+         \u{20}          --method anode|node|otd|anode-revolve<m>|anode-equispaced<m>\n\
+         \u{20}          --classes 10|100 --steps N --lr F --train-size N --seed N\n\
+         figures:   --fig fig1|fig7|sec3|fig3|fig4|fig5|memory|gradcheck [--fast]\n\
+         gradcheck: --seed N\n\
+         common:    --artifacts DIR (default: artifacts) --csv PATH"
+    );
+}
+
+fn open_registry(args: &Args) -> Result<ArtifactRegistry, i32> {
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    ArtifactRegistry::open(&dir).map_err(|e| {
+        eprintln!("error: {e}");
+        2
+    })
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let reg = match open_registry(args) {
+        Ok(r) => r,
+        Err(c) => return c,
+    };
+    let opts = harness::TrainFigOptions {
+        arch: Arch::parse(&args.get_or("arch", "resnet")).expect("bad --arch"),
+        solver: Solver::parse(&args.get_or("solver", "euler")).expect("bad --solver"),
+        method: GradMethod::parse(&args.get_or("method", "anode")).expect("bad --method"),
+        num_classes: args.get_parse_or("classes", 10),
+        train_size: args.get_parse_or("train-size", 2048),
+        test_size: args.get_parse_or("test-size", 512),
+        steps: args.get_parse_or("steps", 200),
+        eval_every: args.get_parse_or("eval-every", 25),
+        lr: args.get_parse_or("lr", 0.02),
+        seed: args.get_parse_or("seed", 0),
+        verbose: true,
+    };
+    match harness::train_figure(&reg, &opts) {
+        Ok(run) => {
+            println!("{}", format_table(std::slice::from_ref(&run.curve)));
+            println!(
+                "run: diverged={} wall={:.1}s sec/step={:.3} peak_act={}",
+                run.diverged,
+                run.wall_seconds,
+                run.sec_per_step,
+                anode::memory::human_bytes(run.peak_activation_bytes)
+            );
+            if let Some(csv) = args.get("csv") {
+                write_csv(std::path::Path::new(csv), &[run.curve]).expect("csv write");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("train failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_figures(args: &Args) -> i32 {
+    let fig = args.get_or("fig", "fig1");
+    let fast = args.has_flag("fast");
+    match fig.as_str() {
+        "fig1" | "fig7" => {
+            let rows = harness::fig1_reversibility(
+                args.get_parse_or("seed", 3),
+                args.get_parse_or("kernel-std", 3.0),
+                args.get_parse_or("nt", 8),
+            );
+            println!("Fig. 1/7 — reversibility of a random-Gaussian conv residual block");
+            println!("{}", harness::format_fig1(&rows));
+            0
+        }
+        "sec3" => {
+            let rows = harness::sec3_scalar_studies(args.get_parse_or("seed", 0));
+            println!("§III — scalar/matrix reversibility studies");
+            println!("{}", harness::format_sec3(&rows));
+            0
+        }
+        "memory" => cmd_memory(args),
+        "gradcheck" => cmd_gradcheck(args),
+        "fig3" | "fig4" | "fig5" => {
+            let reg = match open_registry(args) {
+                Ok(r) => r,
+                Err(c) => return c,
+            };
+            let (arch, classes, solvers): (Arch, usize, Vec<Solver>) = match fig.as_str() {
+                "fig3" => (Arch::Sqnxt, 10, vec![Solver::Euler, Solver::Rk2]),
+                "fig4" => (Arch::Resnet, 10, vec![Solver::Euler]),
+                _ => (Arch::Resnet, 100, vec![Solver::Euler]),
+            };
+            let steps = args.get_parse_or("steps", if fast { 60 } else { 200 });
+            let mut curves = Vec::new();
+            for solver in solvers {
+                for method in [GradMethod::Anode, GradMethod::Node] {
+                    let o = harness::TrainFigOptions {
+                        arch,
+                        solver,
+                        method,
+                        num_classes: classes,
+                        steps,
+                        eval_every: args.get_parse_or("eval-every", steps.div_ceil(8)),
+                        train_size: args.get_parse_or("train-size", if fast { 512 } else { 2048 }),
+                        test_size: args.get_parse_or("test-size", if fast { 128 } else { 512 }),
+                        seed: args.get_parse_or("seed", 0),
+                        lr: args.get_parse_or("lr", 0.02),
+                        verbose: true,
+                    };
+                    match harness::train_figure(&reg, &o) {
+                        Ok(run) => curves.push(run.curve),
+                        Err(e) => eprintln!("series failed: {e}"),
+                    }
+                }
+            }
+            // The paper's footnote: [8] with RK45 diverges in the first epoch.
+            let o = harness::TrainFigOptions {
+                arch,
+                solver: Solver::Rk45,
+                method: GradMethod::Node,
+                num_classes: classes,
+                steps: steps.min(60),
+                eval_every: args.get_parse_or("eval-every", 10),
+                train_size: if fast { 512 } else { 1024 },
+                test_size: 128,
+                seed: args.get_parse_or("seed", 0),
+                lr: args.get_parse_or("lr", 0.02),
+                verbose: true,
+            };
+            match harness::train_figure(&reg, &o) {
+                Ok(run) => curves.push(run.curve),
+                Err(e) => eprintln!("node-rk45 series failed: {e}"),
+            }
+            println!("{}", format_table(&curves));
+            if let Some(csv) = args.get("csv") {
+                write_csv(std::path::Path::new(csv), &curves).expect("csv write");
+            }
+            0
+        }
+        other => {
+            eprintln!("unknown figure {other}");
+            2
+        }
+    }
+}
+
+fn cmd_memory(args: &Args) -> i32 {
+    let act = args.get_parse_or("act-bytes", 32 * 32 * 32 * 16 * 4usize);
+    let rows = harness::memory_table(
+        &[2, 4, 6, 8, 16],
+        &[2, 5, 8, 16, 32],
+        &[2, 3, 4, 8],
+        act,
+    );
+    println!("§V — activation-memory footprint (act = one stage-0 batch activation)");
+    println!("{}", harness::format_memtable(&rows));
+    0
+}
+
+fn cmd_gradcheck(args: &Args) -> i32 {
+    let reg = match open_registry(args) {
+        Ok(r) => r,
+        Err(c) => return c,
+    };
+    match harness::gradient_consistency(&reg, args.get_parse_or("seed", 5)) {
+        Ok(rows) => {
+            println!("§IV — gradient consistency (tiny block, Euler, dt sweep)");
+            println!("{}", harness::format_gradcheck(&rows));
+            0
+        }
+        Err(e) => {
+            eprintln!("gradcheck failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_modules(args: &Args) -> i32 {
+    let reg = match open_registry(args) {
+        Ok(r) => r,
+        Err(c) => return c,
+    };
+    for name in reg.module_names() {
+        println!("{name}");
+    }
+    0
+}

@@ -1,0 +1,260 @@
+//! Byte-exact activation-memory accounting — the instrument that *proves*
+//! the paper's headline claim: ANODE needs O(L) + O(Nt) activation memory
+//! versus O(L·Nt) for store-everything backprop, and revolve(m) squeezes
+//! the O(Nt) term to O(m) at a recomputation cost.
+//!
+//! The ledger tracks logical allocations/frees of activation tensors during
+//! a training step (the PJRT working set of a single fused call is reported
+//! separately as `transient`), maintaining current and peak byte counts.
+
+use std::collections::HashMap;
+
+/// Category of a tracked allocation (for per-category peaks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Block-input activations stored across the forward pass (the O(L) term).
+    BlockInput,
+    /// Per-time-step states materialized during one block's backward
+    /// (the O(Nt) term — tape + checkpoint slots).
+    StepState,
+    /// Parameters and their gradients.
+    Param,
+    /// Optimizer state (momentum buffers).
+    OptState,
+    /// Short-lived working buffers inside a fused executable call.
+    Transient,
+}
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::BlockInput => "block_input",
+            Category::StepState => "step_state",
+            Category::Param => "param",
+            Category::OptState => "opt_state",
+            Category::Transient => "transient",
+        }
+    }
+}
+
+/// One live allocation.
+#[derive(Debug, Clone)]
+struct Alloc {
+    bytes: usize,
+    category: Category,
+}
+
+/// Activation-memory ledger with current/peak tracking.
+#[derive(Debug, Default)]
+pub struct MemoryLedger {
+    live: HashMap<u64, Alloc>,
+    next_id: u64,
+    current: usize,
+    peak: usize,
+    peak_by_cat: HashMap<Category, usize>,
+    current_by_cat: HashMap<Category, usize>,
+    /// Cumulative bytes ever allocated (traffic measure).
+    total_allocated: u64,
+}
+
+impl MemoryLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an allocation; returns a handle for [`Self::free`].
+    pub fn alloc(&mut self, bytes: usize, category: Category) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.live.insert(id, Alloc { bytes, category });
+        self.current += bytes;
+        self.total_allocated += bytes as u64;
+        *self.current_by_cat.entry(category).or_default() += bytes;
+        self.peak = self.peak.max(self.current);
+        let cat_cur = self.current_by_cat[&category];
+        let cat_peak = self.peak_by_cat.entry(category).or_default();
+        *cat_peak = (*cat_peak).max(cat_cur);
+        id
+    }
+
+    /// Release an allocation.
+    pub fn free(&mut self, id: u64) {
+        if let Some(a) = self.live.remove(&id) {
+            self.current -= a.bytes;
+            if let Some(c) = self.current_by_cat.get_mut(&a.category) {
+                *c -= a.bytes;
+            }
+        }
+    }
+
+    /// Free every live allocation in a category (e.g. all step states when a
+    /// block's backward completes).
+    pub fn free_category(&mut self, category: Category) {
+        let ids: Vec<u64> = self
+            .live
+            .iter()
+            .filter(|(_, a)| a.category == category)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in ids {
+            self.free(id);
+        }
+    }
+
+    pub fn current_bytes(&self) -> usize {
+        self.current
+    }
+
+    pub fn peak_bytes(&self) -> usize {
+        self.peak
+    }
+
+    pub fn peak_of(&self, category: Category) -> usize {
+        self.peak_by_cat.get(&category).copied().unwrap_or(0)
+    }
+
+    pub fn current_of(&self, category: Category) -> usize {
+        self.current_by_cat.get(&category).copied().unwrap_or(0)
+    }
+
+    pub fn total_traffic(&self) -> u64 {
+        self.total_allocated
+    }
+
+    /// Reset peaks (keep live allocations) — used between measurement phases.
+    pub fn reset_peaks(&mut self) {
+        self.peak = self.current;
+        self.peak_by_cat = self.current_by_cat.clone();
+    }
+
+    /// Human-readable summary line.
+    pub fn summary(&self) -> String {
+        let mut cats: Vec<_> = self.peak_by_cat.iter().collect();
+        cats.sort_by_key(|(c, _)| c.name());
+        let per = cats
+            .iter()
+            .map(|(c, b)| format!("{}={}", c.name(), human_bytes(**b)))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!("peak={} ({per})", human_bytes(self.peak))
+    }
+}
+
+/// Format bytes human-readably.
+pub fn human_bytes(b: usize) -> String {
+    if b >= 1 << 30 {
+        format!("{:.2}GiB", b as f64 / (1u64 << 30) as f64)
+    } else if b >= 1 << 20 {
+        format!("{:.2}MiB", b as f64 / (1u64 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.2}KiB", b as f64 / (1u64 << 10) as f64)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Closed-form activation-memory model for the §V comparison table:
+/// bytes needed per gradient computation over L ODE blocks of Nt steps with
+/// activation size `act_bytes`, under each scheme.
+pub fn model_peak_bytes(scheme: &str, l: usize, nt: usize, m: usize, act_bytes: usize) -> usize {
+    match scheme {
+        // Naive backprop through all blocks and steps.
+        "store_all" => l * nt * act_bytes,
+        // ANODE: block inputs (L) + one block's trajectory (Nt).
+        "anode" => (l + nt) * act_bytes,
+        // ANODE + revolve(m) inside the block: block inputs + m slots + tape 1.
+        "anode_revolve" => (l + m + 1) * act_bytes,
+        // Neural-ODE [8]: only the final state per block; backward
+        // reconstructs (no storage, but wrong/unstable gradients — §III).
+        "node" => l * act_bytes,
+        _ => panic!("unknown scheme {scheme}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut led = MemoryLedger::new();
+        let a = led.alloc(100, Category::BlockInput);
+        let b = led.alloc(50, Category::StepState);
+        assert_eq!(led.current_bytes(), 150);
+        led.free(a);
+        assert_eq!(led.current_bytes(), 50);
+        led.free(b);
+        assert_eq!(led.current_bytes(), 0);
+        assert_eq!(led.peak_bytes(), 150);
+        assert_eq!(led.total_traffic(), 150);
+    }
+
+    #[test]
+    fn per_category_peaks() {
+        let mut led = MemoryLedger::new();
+        let ids: Vec<u64> = (0..5).map(|_| led.alloc(10, Category::StepState)).collect();
+        assert_eq!(led.peak_of(Category::StepState), 50);
+        for id in ids {
+            led.free(id);
+        }
+        led.alloc(20, Category::BlockInput);
+        assert_eq!(led.peak_of(Category::StepState), 50);
+        assert_eq!(led.peak_of(Category::BlockInput), 20);
+        assert_eq!(led.peak_bytes(), 50);
+    }
+
+    #[test]
+    fn free_category_clears_only_that_category() {
+        let mut led = MemoryLedger::new();
+        led.alloc(10, Category::StepState);
+        led.alloc(10, Category::StepState);
+        let keep = led.alloc(7, Category::BlockInput);
+        led.free_category(Category::StepState);
+        assert_eq!(led.current_bytes(), 7);
+        led.free(keep);
+        assert_eq!(led.current_bytes(), 0);
+    }
+
+    #[test]
+    fn double_free_is_noop() {
+        let mut led = MemoryLedger::new();
+        let a = led.alloc(10, Category::Param);
+        led.free(a);
+        led.free(a);
+        assert_eq!(led.current_bytes(), 0);
+    }
+
+    #[test]
+    fn model_matches_paper_complexity() {
+        let act = 1 << 20; // 1 MiB activation
+        let (l, nt) = (8, 16);
+        let store_all = model_peak_bytes("store_all", l, nt, 0, act);
+        let anode = model_peak_bytes("anode", l, nt, 0, act);
+        let revolve = model_peak_bytes("anode_revolve", l, nt, 4, act);
+        let node = model_peak_bytes("node", l, nt, 0, act);
+        // O(L·Nt) vs O(L)+O(Nt) vs O(L)+O(m) vs O(L).
+        assert_eq!(store_all, 128 * act);
+        assert_eq!(anode, 24 * act);
+        assert_eq!(revolve, 13 * act);
+        assert_eq!(node, 8 * act);
+        assert!(store_all > anode && anode > revolve && revolve > node);
+    }
+
+    #[test]
+    fn human_bytes_formatting() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(2048), "2.00KiB");
+        assert_eq!(human_bytes(3 << 20), "3.00MiB");
+    }
+
+    #[test]
+    fn reset_peaks_keeps_live() {
+        let mut led = MemoryLedger::new();
+        let _a = led.alloc(100, Category::Param);
+        let b = led.alloc(200, Category::StepState);
+        led.free(b);
+        assert_eq!(led.peak_bytes(), 300);
+        led.reset_peaks();
+        assert_eq!(led.peak_bytes(), 100);
+    }
+}

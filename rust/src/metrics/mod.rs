@@ -1,0 +1,202 @@
+//! Training metrics: loss/accuracy accumulators and CSV/JSON series
+//! writers used by the figure-regeneration harnesses.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Streaming mean accumulator.
+#[derive(Debug, Default, Clone)]
+pub struct Mean {
+    sum: f64,
+    n: usize,
+}
+
+impl Mean {
+    pub fn add(&mut self, v: f32) {
+        if v.is_finite() {
+            self.sum += v as f64;
+        } else {
+            self.sum = f64::NAN;
+        }
+        self.n += 1;
+    }
+
+    pub fn value(&self) -> f32 {
+        if self.n == 0 {
+            0.0
+        } else {
+            (self.sum / self.n as f64) as f32
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+/// One recorded point of a training/eval curve.
+#[derive(Debug, Clone)]
+pub struct CurvePoint {
+    pub step: usize,
+    pub epoch: f32,
+    pub train_loss: f32,
+    pub test_loss: f32,
+    pub test_acc: f32,
+}
+
+/// A named series of curve points (one per method/solver combination —
+/// i.e. one line of a paper figure).
+#[derive(Debug, Clone, Default)]
+pub struct Curve {
+    pub name: String,
+    pub points: Vec<CurvePoint>,
+}
+
+impl Curve {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    /// Did the run diverge (NaN/inf loss anywhere)?
+    pub fn diverged(&self) -> bool {
+        self.points.iter().any(|p| !p.train_loss.is_finite())
+    }
+
+    /// Final test accuracy (0 if empty).
+    pub fn final_acc(&self) -> f32 {
+        self.points.last().map(|p| p.test_acc).unwrap_or(0.0)
+    }
+
+    /// Best test accuracy seen.
+    pub fn best_acc(&self) -> f32 {
+        self.points.iter().map(|p| p.test_acc).fold(0.0, f32::max)
+    }
+}
+
+/// Write curves to CSV: name,step,epoch,train_loss,test_loss,test_acc.
+pub fn write_csv(path: &Path, curves: &[Curve]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "name,step,epoch,train_loss,test_loss,test_acc")?;
+    for c in curves {
+        for p in &c.points {
+            writeln!(
+                f,
+                "{},{},{:.3},{:.6},{:.6},{:.4}",
+                c.name, p.step, p.epoch, p.train_loss, p.test_loss, p.test_acc
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Render curves as a compact fixed-width table (the harness output format).
+pub fn format_table(curves: &[Curve]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:>6} {:>7} {:>12} {:>12} {:>9}\n",
+        "series", "step", "epoch", "train_loss", "test_loss", "test_acc"
+    ));
+    for c in curves {
+        for p in &c.points {
+            out.push_str(&format!(
+                "{:<28} {:>6} {:>7.2} {:>12.4} {:>12.4} {:>8.2}%\n",
+                c.name,
+                p.step,
+                p.epoch,
+                p.train_loss,
+                p.test_loss,
+                p.test_acc * 100.0
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_accumulates() {
+        let mut m = Mean::default();
+        m.add(1.0);
+        m.add(2.0);
+        m.add(3.0);
+        assert_eq!(m.value(), 2.0);
+        assert_eq!(m.count(), 3);
+        m.reset();
+        assert_eq!(m.count(), 0);
+    }
+
+    #[test]
+    fn mean_propagates_nan() {
+        let mut m = Mean::default();
+        m.add(1.0);
+        m.add(f32::NAN);
+        assert!(m.value().is_nan());
+    }
+
+    #[test]
+    fn curve_divergence_detection() {
+        let mut c = Curve::new("node-rk45");
+        c.push(CurvePoint { step: 0, epoch: 0.0, train_loss: 2.3, test_loss: 2.3, test_acc: 0.1 });
+        assert!(!c.diverged());
+        c.push(CurvePoint {
+            step: 1,
+            epoch: 0.1,
+            train_loss: f32::NAN,
+            test_loss: f32::NAN,
+            test_acc: 0.1,
+        });
+        assert!(c.diverged());
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("anode_metrics_test");
+        let path = dir.join("curves.csv");
+        let mut c = Curve::new("anode");
+        c.push(CurvePoint { step: 5, epoch: 0.5, train_loss: 1.0, test_loss: 1.1, test_acc: 0.5 });
+        write_csv(&path, &[c]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("name,step"));
+        assert!(text.contains("anode,5,0.500"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_formatting() {
+        let mut c = Curve::new("anode-euler");
+        c.push(CurvePoint { step: 1, epoch: 0.1, train_loss: 2.0, test_loss: 2.1, test_acc: 0.25 });
+        let t = format_table(&[c]);
+        assert!(t.contains("anode-euler"));
+        assert!(t.contains("25.00%"));
+    }
+
+    #[test]
+    fn best_and_final_acc() {
+        let mut c = Curve::new("x");
+        for (i, acc) in [0.2f32, 0.5, 0.4].iter().enumerate() {
+            c.push(CurvePoint {
+                step: i,
+                epoch: 0.0,
+                train_loss: 1.0,
+                test_loss: 1.0,
+                test_acc: *acc,
+            });
+        }
+        assert_eq!(c.best_acc(), 0.5);
+        assert_eq!(c.final_acc(), 0.4);
+    }
+}

@@ -1,0 +1,322 @@
+//! Model definitions: the ODE-network families of the paper's experiments
+//! (ResNet-18-like and SqueezeNext-like with non-transition blocks replaced
+//! by ODE blocks), expressed as *structure over AOT artifacts* — the actual
+//! compute graphs live in python/compile/model.py and arrive as HLO.
+
+use crate::runtime::{ArtifactRegistry, ParamSpec, RuntimeError};
+use crate::tensor::Tensor;
+
+/// Architecture family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Resnet,
+    Sqnxt,
+}
+
+impl Arch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::Resnet => "resnet",
+            Arch::Sqnxt => "sqnxt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Arch> {
+        match s {
+            "resnet" => Some(Arch::Resnet),
+            "sqnxt" => Some(Arch::Sqnxt),
+            _ => None,
+        }
+    }
+}
+
+/// ODE solver baked into the block artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Solver {
+    Euler,
+    Rk2,
+    Rk45,
+}
+
+impl Solver {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Euler => "euler",
+            Solver::Rk2 => "rk2",
+            Solver::Rk45 => "rk45",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Solver> {
+        match s {
+            "euler" => Some(Solver::Euler),
+            "rk2" => Some(Solver::Rk2),
+            "rk45" => Some(Solver::Rk45),
+            _ => None,
+        }
+    }
+}
+
+/// Gradient method — the experimental axis of Figs. 3-5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradMethod {
+    /// ANODE (the paper): checkpoint block inputs, DTO backward per block.
+    Anode,
+    /// ANODE + revolve(m) within each block (step-level artifacts).
+    AnodeRevolve(usize),
+    /// ANODE + equispaced(m) checkpoints within each block.
+    AnodeEquispaced(usize),
+    /// Neural-ODE [8]: reverse-time augmented solve, reconstructing z(t).
+    Node,
+    /// Optimize-then-discretize adjoint with stored trajectory (§IV).
+    Otd,
+}
+
+impl GradMethod {
+    pub fn name(&self) -> String {
+        match self {
+            GradMethod::Anode => "anode".into(),
+            GradMethod::AnodeRevolve(m) => format!("anode-revolve{m}"),
+            GradMethod::AnodeEquispaced(m) => format!("anode-equispaced{m}"),
+            GradMethod::Node => "node".into(),
+            GradMethod::Otd => "otd".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<GradMethod> {
+        if s == "anode" {
+            return Some(GradMethod::Anode);
+        }
+        if s == "node" {
+            return Some(GradMethod::Node);
+        }
+        if s == "otd" {
+            return Some(GradMethod::Otd);
+        }
+        if let Some(m) = s.strip_prefix("anode-revolve") {
+            return m.parse().ok().map(GradMethod::AnodeRevolve);
+        }
+        if let Some(m) = s.strip_prefix("anode-equispaced") {
+            return m.parse().ok().map(GradMethod::AnodeEquispaced);
+        }
+        None
+    }
+}
+
+/// Model shape parameters (mirrors python/compile/configs.py; values are
+/// read from the artifact manifest so the two sides cannot drift).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub arch: Arch,
+    pub num_classes: usize,
+    pub batch: usize,
+    pub image: usize,
+    pub channels: Vec<usize>,
+    pub blocks_per_stage: usize,
+    pub nt: usize,
+}
+
+impl ModelConfig {
+    /// Read shape info from the manifest config section.
+    pub fn from_registry(
+        reg: &ArtifactRegistry,
+        arch: Arch,
+        num_classes: usize,
+    ) -> Result<Self, RuntimeError> {
+        let get = |k: &str| {
+            reg.config_u64(k)
+                .map(|v| v as usize)
+                .ok_or_else(|| RuntimeError::Io(format!("manifest config missing {k}")))
+        };
+        let channels = reg
+            .config()
+            .get("channels")
+            .and_then(|v| v.as_usize_vec())
+            .ok_or_else(|| RuntimeError::Io("manifest config missing channels".into()))?;
+        Ok(Self {
+            arch,
+            num_classes,
+            batch: get("batch")?,
+            image: get("image")?,
+            channels,
+            blocks_per_stage: get("blocks_per_stage")?,
+            nt: get("nt")?,
+        })
+    }
+
+    pub fn stages(&self) -> usize {
+        self.channels.len()
+    }
+
+    /// Total ODE blocks L.
+    pub fn num_ode_blocks(&self) -> usize {
+        self.stages() * self.blocks_per_stage
+    }
+
+    /// Spatial side at stage s.
+    pub fn stage_hw(&self, s: usize) -> usize {
+        self.image >> s
+    }
+
+    /// Activation shape entering stage `s`.
+    pub fn stage_act_shape(&self, s: usize) -> Vec<usize> {
+        vec![self.batch, self.stage_hw(s), self.stage_hw(s), self.channels[s]]
+    }
+
+    /// Bytes of one stage-s activation (f32).
+    pub fn stage_act_bytes(&self, s: usize) -> usize {
+        self.stage_act_shape(s).iter().product::<usize>() * 4
+    }
+
+    /// Artifact name of a block module for this config.
+    pub fn block_module(&self, stage: usize, solver: Solver, kind: &str) -> String {
+        format!("block_{}_s{}_{}_{}", self.arch.name(), stage, solver.name(), kind)
+    }
+
+    /// Key into the manifest params index.
+    pub fn params_key(&self) -> String {
+        format!("{}{}", self.arch.name(), self.num_classes)
+    }
+}
+
+/// Index of the flat canonical parameter vector by model structure.
+///
+/// The canonical order (matching configs.model_param_layout and params.bin):
+/// stem, stage0 blocks, trans0, stage1 blocks, trans1, ..., head.
+#[derive(Debug, Clone)]
+pub struct ParamIndex {
+    /// (w, b) indices of the stem conv.
+    pub stem: (usize, usize),
+    /// blocks[s][b] = ordered parameter indices of that ODE block.
+    pub blocks: Vec<Vec<Vec<usize>>>,
+    /// trans[s] = (w, b) indices of the transition after stage s.
+    pub trans: Vec<(usize, usize)>,
+    /// (w, b) indices of the classifier head.
+    pub head: (usize, usize),
+    /// Total parameter tensors.
+    pub len: usize,
+}
+
+impl ParamIndex {
+    /// Build from the manifest's named layout.
+    pub fn from_layout(layout: &[ParamSpec], cfg: &ModelConfig) -> Result<Self, RuntimeError> {
+        let find = |name: &str| -> Result<usize, RuntimeError> {
+            layout
+                .iter()
+                .position(|p| p.name == name)
+                .ok_or_else(|| RuntimeError::Io(format!("param {name} not in layout")))
+        };
+        let stem = (find("stem.w")?, find("stem.b")?);
+        let mut blocks = Vec::new();
+        for s in 0..cfg.stages() {
+            let mut stage_blocks = Vec::new();
+            for b in 0..cfg.blocks_per_stage {
+                let prefix = format!("s{s}.b{b}.");
+                let mut idxs: Vec<usize> = layout
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.name.starts_with(&prefix))
+                    .map(|(i, _)| i)
+                    .collect();
+                idxs.sort(); // layout order is canonical execution order
+                if idxs.is_empty() {
+                    return Err(RuntimeError::Io(format!("no params for block {prefix}")));
+                }
+                stage_blocks.push(idxs);
+            }
+            blocks.push(stage_blocks);
+        }
+        let mut trans = Vec::new();
+        for s in 0..cfg.stages() - 1 {
+            trans.push((find(&format!("trans{s}.w"))?, find(&format!("trans{s}.b"))?));
+        }
+        let head = (find("head.w")?, find("head.b")?);
+        Ok(Self { stem, blocks, trans, head, len: layout.len() })
+    }
+
+    /// Zero-filled gradient tensors matching `params`.
+    pub fn zero_grads(params: &[Tensor]) -> Vec<Tensor> {
+        params.iter().map(|p| Tensor::zeros(p.shape())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_layout(cfg: &ModelConfig) -> Vec<ParamSpec> {
+        // Mirror configs.model_param_layout for a resnet config.
+        let mut v = vec![
+            ParamSpec { name: "stem.w".into(), shape: vec![3, 3, 3, 16], offset: 0 },
+            ParamSpec { name: "stem.b".into(), shape: vec![16], offset: 0 },
+        ];
+        for s in 0..cfg.stages() {
+            for b in 0..cfg.blocks_per_stage {
+                for leaf in ["w1", "b1", "w2", "b2"] {
+                    v.push(ParamSpec {
+                        name: format!("s{s}.b{b}.{leaf}"),
+                        shape: vec![1],
+                        offset: 0,
+                    });
+                }
+            }
+            if s + 1 < cfg.stages() {
+                v.push(ParamSpec { name: format!("trans{s}.w"), shape: vec![1], offset: 0 });
+                v.push(ParamSpec { name: format!("trans{s}.b"), shape: vec![1], offset: 0 });
+            }
+        }
+        v.push(ParamSpec { name: "head.w".into(), shape: vec![64, 10], offset: 0 });
+        v.push(ParamSpec { name: "head.b".into(), shape: vec![10], offset: 0 });
+        v
+    }
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            arch: Arch::Resnet,
+            num_classes: 10,
+            batch: 32,
+            image: 32,
+            channels: vec![16, 32, 64],
+            blocks_per_stage: 2,
+            nt: 5,
+        }
+    }
+
+    #[test]
+    fn param_index_structure() {
+        let c = cfg();
+        let layout = fake_layout(&c);
+        let idx = ParamIndex::from_layout(&layout, &c).unwrap();
+        assert_eq!(idx.stem, (0, 1));
+        assert_eq!(idx.blocks.len(), 3);
+        assert_eq!(idx.blocks[0].len(), 2);
+        assert_eq!(idx.blocks[0][0], vec![2, 3, 4, 5]);
+        assert_eq!(idx.trans.len(), 2);
+        assert_eq!(idx.head, (layout.len() - 2, layout.len() - 1));
+        assert_eq!(idx.len, layout.len());
+    }
+
+    #[test]
+    fn shapes_and_names() {
+        let c = cfg();
+        assert_eq!(c.stages(), 3);
+        assert_eq!(c.num_ode_blocks(), 6);
+        assert_eq!(c.stage_hw(0), 32);
+        assert_eq!(c.stage_hw(2), 8);
+        assert_eq!(c.stage_act_shape(1), vec![32, 16, 16, 32]);
+        assert_eq!(c.stage_act_bytes(2), 32 * 8 * 8 * 64 * 4);
+        assert_eq!(c.block_module(1, Solver::Euler, "vjp"), "block_resnet_s1_euler_vjp");
+        assert_eq!(c.params_key(), "resnet10");
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(Arch::parse("sqnxt"), Some(Arch::Sqnxt));
+        assert_eq!(Solver::parse("rk45"), Some(Solver::Rk45));
+        assert_eq!(GradMethod::parse("anode"), Some(GradMethod::Anode));
+        assert_eq!(GradMethod::parse("anode-revolve3"), Some(GradMethod::AnodeRevolve(3)));
+        assert_eq!(GradMethod::parse("node"), Some(GradMethod::Node));
+        assert_eq!(GradMethod::parse("bogus"), None);
+        assert_eq!(GradMethod::AnodeEquispaced(2).name(), "anode-equispaced2");
+    }
+}

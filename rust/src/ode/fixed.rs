@@ -1,0 +1,174 @@
+//! Fixed-step explicit integrators (Euler, RK2/Heun-trapezoid, RK4) —
+//! the same schemes the L2 JAX solvers bake into the artifacts.
+
+use super::Rhs;
+
+/// Fixed-step solver family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FixedSolver {
+    Euler,
+    /// Explicit trapezoidal (Heun) — the paper's "RK2 (Trapezoidal method)".
+    Rk2,
+    Rk4,
+}
+
+impl FixedSolver {
+    /// Classical order of accuracy.
+    pub fn order(&self) -> u32 {
+        match self {
+            FixedSolver::Euler => 1,
+            FixedSolver::Rk2 => 2,
+            FixedSolver::Rk4 => 4,
+        }
+    }
+
+    /// RHS evaluations per step.
+    pub fn stages(&self) -> usize {
+        match self {
+            FixedSolver::Euler => 1,
+            FixedSolver::Rk2 => 2,
+            FixedSolver::Rk4 => 4,
+        }
+    }
+
+    /// Parse from CLI string.
+    pub fn parse(s: &str) -> Option<FixedSolver> {
+        match s {
+            "euler" => Some(FixedSolver::Euler),
+            "rk2" => Some(FixedSolver::Rk2),
+            "rk4" => Some(FixedSolver::Rk4),
+            _ => None,
+        }
+    }
+}
+
+fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// One step of `solver` with step size `h` (may be negative), in place.
+pub fn step<R: Rhs>(rhs: &R, solver: FixedSolver, h: f32, z: &mut [f32]) {
+    let n = z.len();
+    match solver {
+        FixedSolver::Euler => {
+            let mut k1 = vec![0.0; n];
+            rhs.eval(z, &mut k1);
+            axpy(z, h, &k1);
+        }
+        FixedSolver::Rk2 => {
+            let mut k1 = vec![0.0; n];
+            let mut k2 = vec![0.0; n];
+            let mut z1 = z.to_vec();
+            rhs.eval(z, &mut k1);
+            axpy(&mut z1, h, &k1);
+            rhs.eval(&z1, &mut k2);
+            axpy(z, h / 2.0, &k1);
+            axpy(z, h / 2.0, &k2);
+        }
+        FixedSolver::Rk4 => {
+            let mut k = vec![vec![0.0; n]; 4];
+            let mut tmp = z.to_vec();
+            rhs.eval(z, &mut k[0]);
+            tmp.copy_from_slice(z);
+            axpy(&mut tmp, h / 2.0, &k[0].clone());
+            rhs.eval(&tmp, &mut k[1]);
+            tmp.copy_from_slice(z);
+            axpy(&mut tmp, h / 2.0, &k[1].clone());
+            rhs.eval(&tmp, &mut k[2]);
+            tmp.copy_from_slice(z);
+            axpy(&mut tmp, h, &k[2].clone());
+            rhs.eval(&tmp, &mut k[3]);
+            axpy(z, h / 6.0, &k[0]);
+            axpy(z, h / 3.0, &k[1]);
+            axpy(z, h / 3.0, &k[2]);
+            axpy(z, h / 6.0, &k[3]);
+        }
+    }
+}
+
+/// Integrate dz/dt = f(z) from z0 over horizon T with `nt` fixed steps.
+/// T may be negative. Returns z(T).
+pub fn odeint<R: Rhs>(rhs: &R, solver: FixedSolver, z0: &[f32], t_horizon: f32, nt: usize) -> Vec<f32> {
+    assert!(nt > 0, "nt must be positive");
+    let h = t_horizon / nt as f32;
+    let mut z = z0.to_vec();
+    for _ in 0..nt {
+        step(rhs, solver, h, &mut z);
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// dz/dt = λ z has exact solution z0·exp(λT).
+    fn linear(lambda: f32) -> impl Rhs {
+        (move |z: &[f32], o: &mut [f32]| {
+            for (oi, zi) in o.iter_mut().zip(z.iter()) {
+                *oi = lambda * zi;
+            }
+        }, 1usize)
+    }
+
+    #[test]
+    fn euler_converges_first_order() {
+        let rhs = linear(-1.0);
+        let exact = (-1.0f64).exp() as f32;
+        let e1 = (odeint(&rhs, FixedSolver::Euler, &[1.0], 1.0, 100)[0] - exact).abs();
+        let e2 = (odeint(&rhs, FixedSolver::Euler, &[1.0], 1.0, 200)[0] - exact).abs();
+        let ratio = e1 / e2;
+        assert!((ratio - 2.0).abs() < 0.2, "order-1 ratio {ratio}");
+    }
+
+    #[test]
+    fn rk2_converges_second_order() {
+        let rhs = linear(-1.0);
+        let exact = (-1.0f64).exp() as f32;
+        let e1 = (odeint(&rhs, FixedSolver::Rk2, &[1.0], 1.0, 50)[0] - exact).abs();
+        let e2 = (odeint(&rhs, FixedSolver::Rk2, &[1.0], 1.0, 100)[0] - exact).abs();
+        let ratio = e1 / e2;
+        assert!((ratio - 4.0).abs() < 0.8, "order-2 ratio {ratio}");
+    }
+
+    #[test]
+    fn rk4_is_very_accurate() {
+        let rhs = linear(-1.0);
+        let exact = (-1.0f64).exp() as f32;
+        let e = (odeint(&rhs, FixedSolver::Rk4, &[1.0], 1.0, 20)[0] - exact).abs();
+        assert!(e < 1e-6, "rk4 error {e}");
+    }
+
+    #[test]
+    fn negative_horizon_reverses() {
+        // Forward then "reverse ODE solve" with fine steps on a mild λ
+        // recovers the initial condition (the well-conditioned case).
+        let rhs = linear(-1.0);
+        let z1 = odeint(&rhs, FixedSolver::Rk4, &[1.0], 1.0, 100);
+        let z0 = odeint(&rhs, FixedSolver::Rk4, &z1, -1.0, 100);
+        assert!((z0[0] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn stiff_lambda_reverse_is_unstable_with_coarse_steps() {
+        // §III: λ = -100 forward is fine, reverse with few steps explodes.
+        let rhs = linear(-100.0);
+        let z1 = odeint(&rhs, FixedSolver::Rk4, &[1.0], 1.0, 10_000);
+        let z0 = odeint(&rhs, FixedSolver::Rk4, &z1, -1.0, 50);
+        assert!(
+            !z0[0].is_finite() || (z0[0] - 1.0).abs() > 0.5,
+            "coarse reverse of stiff ODE should fail, got {}",
+            z0[0]
+        );
+    }
+
+    #[test]
+    fn solver_metadata() {
+        assert_eq!(FixedSolver::Euler.order(), 1);
+        assert_eq!(FixedSolver::Rk4.stages(), 4);
+        assert_eq!(FixedSolver::parse("rk2"), Some(FixedSolver::Rk2));
+        assert_eq!(FixedSolver::parse("x"), None);
+    }
+}

@@ -1,0 +1,189 @@
+//! Hamiltonian (symplectic) dynamics — the paper's §III counterpoint.
+//!
+//! ANODE's analysis shows generic residual-block ODEs cannot be reversed
+//! numerically. The paper contrasts this with Hamiltonian ODEs and their
+//! discrete counterparts ([5, 20]; leapfrog/Verlet integration), which are
+//! reversible **to machine precision** because the discrete map itself is
+//! a bijection with an explicit inverse — at the cost of constraining the
+//! architecture (and, per the paper, so far not matching SOTA accuracy).
+//!
+//! This module implements the leapfrog map for a separable Hamiltonian
+//! network block H(q, p) = T(p) + V(q) with V's gradient given by an
+//! arbitrary closure (e.g. a small conv/MLP force), plus its *exact*
+//! inverse, and tests that verify machine-precision reversibility where
+//! the generic blocks of [`super::revblock`] fail.
+
+/// One leapfrog step for dq/dt = p, dp/dt = f(q) (f = -∇V):
+///   p½ = p + (h/2) f(q);  q' = q + h p½;  p' = p½ + (h/2) f(q').
+pub fn leapfrog_step<F: Fn(&[f32], &mut [f32])>(
+    force: &F,
+    h: f32,
+    q: &mut [f32],
+    p: &mut [f32],
+    scratch: &mut [f32],
+) {
+    let n = q.len();
+    debug_assert_eq!(p.len(), n);
+    force(q, scratch);
+    for i in 0..n {
+        p[i] += 0.5 * h * scratch[i];
+    }
+    for i in 0..n {
+        q[i] += h * p[i];
+    }
+    force(q, scratch);
+    for i in 0..n {
+        p[i] += 0.5 * h * scratch[i];
+    }
+}
+
+/// The exact inverse of [`leapfrog_step`] — NOT a reverse-time integration
+/// but the algebraic inverse of the discrete map (negate momentum, step,
+/// negate back — leapfrog is time-symmetric).
+pub fn leapfrog_step_inverse<F: Fn(&[f32], &mut [f32])>(
+    force: &F,
+    h: f32,
+    q: &mut [f32],
+    p: &mut [f32],
+    scratch: &mut [f32],
+) {
+    for v in p.iter_mut() {
+        *v = -*v;
+    }
+    leapfrog_step(force, h, q, p, scratch);
+    for v in p.iter_mut() {
+        *v = -*v;
+    }
+}
+
+/// Integrate `nt` leapfrog steps forward; returns (q, p).
+pub fn leapfrog<F: Fn(&[f32], &mut [f32])>(
+    force: &F,
+    q0: &[f32],
+    p0: &[f32],
+    t_horizon: f32,
+    nt: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let h = t_horizon / nt as f32;
+    let mut q = q0.to_vec();
+    let mut p = p0.to_vec();
+    let mut scratch = vec![0.0f32; q.len()];
+    for _ in 0..nt {
+        leapfrog_step(force, h, &mut q, &mut p, &mut scratch);
+    }
+    (q, p)
+}
+
+/// Reverse `nt` leapfrog steps exactly.
+pub fn leapfrog_reverse<F: Fn(&[f32], &mut [f32])>(
+    force: &F,
+    q1: &[f32],
+    p1: &[f32],
+    t_horizon: f32,
+    nt: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let h = t_horizon / nt as f32;
+    let mut q = q1.to_vec();
+    let mut p = p1.to_vec();
+    let mut scratch = vec![0.0f32; q.len()];
+    for _ in 0..nt {
+        leapfrog_step_inverse(force, h, &mut q, &mut p, &mut scratch);
+    }
+    (q, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::{conv3x3_single, reversibility_error};
+    use crate::rng::Rng;
+
+    /// Nonlinear force from a random conv — the SAME kind of operator that
+    /// makes the generic residual block irreversible (Fig. 1).
+    fn conv_force(h: usize, w: usize, kernel: [f32; 9]) -> impl Fn(&[f32], &mut [f32]) {
+        move |q: &[f32], out: &mut [f32]| {
+            conv3x3_single(q, h, w, &kernel, out);
+            for o in out.iter_mut() {
+                *o = -o.tanh(); // bounded nonlinear force
+            }
+        }
+    }
+
+    #[test]
+    fn leapfrog_reverses_to_machine_precision() {
+        // The paper's §III contrast: the SAME random-Gaussian conv
+        // nonlinearity, but inside a Hamiltonian block — reversible exactly.
+        let mut rng = Rng::new(0xAB);
+        let (hh, ww) = (16, 16);
+        let mut kernel = [0.0f32; 9];
+        for k in kernel.iter_mut() {
+            *k = rng.normal() * 3.0; // strong dynamics, like the Fig. 1 case
+        }
+        let force = conv_force(hh, ww, kernel);
+        let q0: Vec<f32> = (0..hh * ww).map(|_| rng.uniform()).collect();
+        let p0: Vec<f32> = (0..hh * ww).map(|_| rng.normal() * 0.1).collect();
+
+        let (q1, p1) = leapfrog(&force, &q0, &p0, 1.0, 32);
+        let (qr, pr) = leapfrog_reverse(&force, &q1, &p1, 1.0, 32);
+        let rho_q = reversibility_error(&q0, &qr);
+        let rho_p = reversibility_error(&p0, &pr);
+        assert!(rho_q < 1e-5, "q reversal error {rho_q}");
+        assert!(rho_p < 1e-4, "p reversal error {rho_p}");
+    }
+
+    #[test]
+    fn generic_block_fails_where_hamiltonian_succeeds() {
+        // Side-by-side with the Fig. 1 block at the same kernel strength.
+        use crate::ode::{odeint, Activation, FixedSolver, RevBlock};
+        let mut rng = Rng::new(0xAC);
+        let block = RevBlock::random(16, 16, Activation::Relu, 3.0, &mut rng);
+        let z0: Vec<f32> = (0..256).map(|_| rng.uniform()).collect();
+        let z1 = odeint(&block, FixedSolver::Euler, &z0, 1.0, 32);
+        let zr = odeint(&block, FixedSolver::Euler, &z1, -1.0, 32);
+        let rho_generic = reversibility_error(&z0, &zr);
+        assert!(
+            rho_generic > 1e-2,
+            "generic block should be irreversible here: {rho_generic}"
+        );
+        // (Hamiltonian counterpart verified above at < 1e-5.)
+    }
+
+    #[test]
+    fn energy_is_approximately_conserved() {
+        // Symplectic integrators bound the energy error — a structural
+        // sanity check on the leapfrog implementation.
+        let force = |q: &[f32], out: &mut [f32]| {
+            for (o, qi) in out.iter_mut().zip(q) {
+                *o = -qi; // harmonic oscillator, V = q²/2
+            }
+        };
+        let energy = |q: &[f32], p: &[f32]| -> f64 {
+            q.iter().zip(p).map(|(q, p)| 0.5 * (q * q + p * p) as f64).sum()
+        };
+        let q0 = vec![1.0f32, -0.5];
+        let p0 = vec![0.0f32, 0.3];
+        let e0 = energy(&q0, &p0);
+        let (q1, p1) = leapfrog(&force, &q0, &p0, 10.0, 1000);
+        let e1 = energy(&q1, &p1);
+        assert!((e1 - e0).abs() / e0 < 1e-3, "energy drift {e0} -> {e1}");
+    }
+
+    #[test]
+    fn inverse_is_exact_per_step() {
+        let force = |q: &[f32], out: &mut [f32]| {
+            for (o, qi) in out.iter_mut().zip(q) {
+                *o = -(qi * 1.7).sin();
+            }
+        };
+        let mut q = vec![0.3f32, -0.8, 1.2];
+        let mut p = vec![0.1f32, 0.0, -0.4];
+        let (q0, p0) = (q.clone(), p.clone());
+        let mut s = vec![0.0f32; 3];
+        leapfrog_step(&force, 0.25, &mut q, &mut p, &mut s);
+        leapfrog_step_inverse(&force, 0.25, &mut q, &mut p, &mut s);
+        for i in 0..3 {
+            assert!((q[i] - q0[i]).abs() < 1e-6);
+            assert!((p[i] - p0[i]).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Native ODE integrators and reversibility analysis (§III of the paper).
+//!
+//! These pure-Rust integrators drive the *analysis* experiments — the scalar
+//! / linear-system / random-matrix reversibility studies of §III and the
+//! image residual-block demonstrations of Figs. 1 and 7 — where the point is
+//! the numerics of the solver itself, not the trained network. (Training
+//! uses the AOT-compiled JAX solvers via [`crate::runtime`].)
+
+mod fixed;
+mod hamiltonian;
+mod revblock;
+mod rk45;
+
+pub use fixed::{odeint, step, FixedSolver};
+pub use hamiltonian::{leapfrog, leapfrog_reverse, leapfrog_step, leapfrog_step_inverse};
+pub use revblock::{conv3x3_single, Activation, RevBlock};
+pub use rk45::{odeint_rk45, Rk45Options, Rk45Result};
+
+/// Right-hand side of an autonomous ODE dz/dt = f(z) over a flat state.
+pub trait Rhs {
+    fn eval(&self, z: &[f32], out: &mut [f32]);
+    fn dim(&self) -> usize;
+}
+
+impl<F: Fn(&[f32], &mut [f32])> Rhs for (F, usize) {
+    fn eval(&self, z: &[f32], out: &mut [f32]) {
+        (self.0)(z, out)
+    }
+    fn dim(&self) -> usize {
+        self.1
+    }
+}
+
+/// Reversibility error metric of Eq. 6:
+/// ρ = ‖φ(φ(z0, t), −t) − z0‖₂ / ‖z0‖₂.
+pub fn reversibility_error(z0: &[f32], z_roundtrip: &[f32]) -> f32 {
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (a, b) in z_roundtrip.iter().zip(z0.iter()) {
+        num += ((a - b) as f64).powi(2);
+        den += (*b as f64).powi(2);
+    }
+    if den == 0.0 {
+        num.sqrt() as f32
+    } else {
+        (num.sqrt() / den.sqrt()) as f32
+    }
+}
+
+impl<R: Rhs> Rhs for &R {
+    fn eval(&self, z: &[f32], out: &mut [f32]) {
+        (*self).eval(z, out)
+    }
+    fn dim(&self) -> usize {
+        (*self).dim()
+    }
+}
+
+/// Negated RHS wrapper: integrating dz/ds = −f(z) forwards in s is the
+/// "solve the forward ODE backwards" operation of [8].
+pub struct Negated<R: Rhs>(pub R);
+
+impl<R: Rhs> Rhs for Negated<R> {
+    fn eval(&self, z: &[f32], out: &mut [f32]) {
+        self.0.eval(z, out);
+        for o in out.iter_mut() {
+            *o = -*o;
+        }
+    }
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rho_zero_for_identity() {
+        let z = vec![1.0, 2.0, 3.0];
+        assert_eq!(reversibility_error(&z, &z), 0.0);
+    }
+
+    #[test]
+    fn rho_is_relative() {
+        let z0 = vec![2.0, 0.0];
+        let zr = vec![0.0, 2.0];
+        let e = reversibility_error(&z0, &zr);
+        assert!((e - std::f32::consts::SQRT_2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn negated_flips_sign() {
+        let f = (|z: &[f32], o: &mut [f32]| o.copy_from_slice(z), 2usize);
+        let n = Negated(f);
+        let mut out = vec![0.0; 2];
+        n.eval(&[3.0, -1.0], &mut out);
+        assert_eq!(out, vec![-3.0, 1.0]);
+    }
+}

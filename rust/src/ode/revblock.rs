@@ -1,0 +1,171 @@
+//! The Fig. 1 / Fig. 7 experiment substrate: a single-convolution residual
+//! block RHS f(z) = act(conv3x3(z)) over a grayscale image, with random
+//! Gaussian weights — the exact setup the paper uses to demonstrate that
+//! solving the forward ODE backwards destroys the input.
+
+use super::Rhs;
+use crate::rng::Rng;
+
+/// Activation after the convolution (the four rows of Fig. 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    None,
+    Relu,
+    LeakyRelu,
+    Softplus,
+}
+
+impl Activation {
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::None => x,
+            Activation::Relu => x.max(0.0),
+            Activation::LeakyRelu => {
+                if x > 0.0 {
+                    x
+                } else {
+                    0.1 * x
+                }
+            }
+            Activation::Softplus => {
+                // Stable softplus.
+                if x > 20.0 {
+                    x
+                } else {
+                    (1.0 + x.exp()).ln()
+                }
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Relu => "relu",
+            Activation::LeakyRelu => "leaky_relu",
+            Activation::Softplus => "softplus",
+        }
+    }
+
+    pub fn all() -> [Activation; 4] {
+        [Activation::None, Activation::Relu, Activation::LeakyRelu, Activation::Softplus]
+    }
+}
+
+/// 3x3 SAME convolution of a single-channel H×W image (zero padding).
+pub fn conv3x3_single(img: &[f32], h: usize, w: usize, kernel: &[f32; 9], out: &mut [f32]) {
+    debug_assert_eq!(img.len(), h * w);
+    debug_assert_eq!(out.len(), h * w);
+    for i in 0..h {
+        for j in 0..w {
+            let mut acc = 0.0f32;
+            for di in 0..3usize {
+                for dj in 0..3usize {
+                    let ii = i as isize + di as isize - 1;
+                    let jj = j as isize + dj as isize - 1;
+                    if ii >= 0 && jj >= 0 && (ii as usize) < h && (jj as usize) < w {
+                        acc += kernel[di * 3 + dj] * img[ii as usize * w + jj as usize];
+                    }
+                }
+            }
+            out[i * w + j] = acc;
+        }
+    }
+}
+
+/// f(z) = act(conv3x3(z)) with fixed random Gaussian weights.
+pub struct RevBlock {
+    pub h: usize,
+    pub w: usize,
+    pub kernel: [f32; 9],
+    pub act: Activation,
+}
+
+impl RevBlock {
+    /// Random Gaussian kernel, std `std` (paper: random Gaussian init).
+    pub fn random(h: usize, w: usize, act: Activation, std: f32, rng: &mut Rng) -> Self {
+        let mut kernel = [0.0f32; 9];
+        for k in kernel.iter_mut() {
+            *k = rng.normal() * std;
+        }
+        Self { h, w, kernel, act }
+    }
+}
+
+impl Rhs for RevBlock {
+    fn eval(&self, z: &[f32], out: &mut [f32]) {
+        conv3x3_single(z, self.h, self.w, &self.kernel, out);
+        for o in out.iter_mut() {
+            *o = self.act.apply(*o);
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.h * self.w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ode::{odeint, reversibility_error, FixedSolver};
+
+    #[test]
+    fn conv_identity_kernel() {
+        let img: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        let mut out = vec![0.0; 16];
+        let mut k = [0.0f32; 9];
+        k[4] = 1.0; // delta kernel
+        conv3x3_single(&img, 4, 4, &k, &mut out);
+        assert_eq!(out, img);
+    }
+
+    #[test]
+    fn conv_shift_kernel() {
+        // Kernel tap (di=0, dj=1) reads the pixel ABOVE... verify exact
+        // offset semantics: out[i,j] = sum k[di,dj] * img[i+di-1, j+dj-1].
+        let img = vec![1.0, 0.0, 0.0, 0.0]; // pixel at (0,0)
+        let mut out = vec![0.0; 4];
+        let mut k = [0.0f32; 9];
+        k[0] = 1.0; // (di=0,dj=0): out[i,j] = img[i-1, j-1]
+        conv3x3_single(&img, 2, 2, &k, &mut out);
+        assert_eq!(out, vec![0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn activations() {
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu.apply(2.0), 2.0);
+        assert!((Activation::LeakyRelu.apply(-1.0) + 0.1).abs() < 1e-7);
+        assert_eq!(Activation::None.apply(-3.0), -3.0);
+        let sp = Activation::Softplus.apply(0.0);
+        assert!((sp - (2.0f32).ln()).abs() < 1e-6);
+        assert!((Activation::Softplus.apply(30.0) - 30.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fig1_roundtrip_fails_for_random_gaussian_block() {
+        // The Fig. 1 phenomenon: forward Euler solve then reverse solve of a
+        // random-Gaussian conv+ReLU residual block does NOT recover the input.
+        let mut rng = Rng::new(0xF16);
+        let block = RevBlock::random(16, 16, Activation::Relu, 0.5, &mut rng);
+        let z0: Vec<f32> = (0..256).map(|_| rng.uniform()).collect();
+        let z1 = odeint(&block, FixedSolver::Euler, &z0, 1.0, 8);
+        let zr = odeint(&block, FixedSolver::Euler, &z1, -1.0, 8);
+        let rho = reversibility_error(&z0, &zr);
+        assert!(rho > 0.01, "expected O(1) reversal error, got {rho}");
+    }
+
+    #[test]
+    fn roundtrip_ok_for_tiny_lipschitz_constant() {
+        // With a very small kernel std (small Lipschitz constant) the block
+        // IS numerically reversible — matching §III's theory.
+        let mut rng = Rng::new(0xF17);
+        let block = RevBlock::random(16, 16, Activation::None, 0.01, &mut rng);
+        let z0: Vec<f32> = (0..256).map(|_| rng.uniform() + 0.5).collect();
+        let z1 = odeint(&block, FixedSolver::Rk4, &z0, 1.0, 64);
+        let zr = odeint(&block, FixedSolver::Rk4, &z1, -1.0, 64);
+        let rho = reversibility_error(&z0, &zr);
+        assert!(rho < 1e-3, "small-λ block should reverse, rho={rho}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Adaptive Dormand–Prince RK45 — the "ode45"-style solver used for the
+//! Fig. 7 reversibility study and the §III scalar experiments.
+
+use super::Rhs;
+
+/// Options for the adaptive integrator.
+#[derive(Debug, Clone, Copy)]
+pub struct Rk45Options {
+    pub rtol: f32,
+    pub atol: f32,
+    pub max_steps: usize,
+    /// Initial step as a fraction of the horizon.
+    pub initial_frac: f32,
+}
+
+impl Default for Rk45Options {
+    fn default() -> Self {
+        Self { rtol: 1e-6, atol: 1e-9, max_steps: 10_000, initial_frac: 0.125 }
+    }
+}
+
+/// Outcome of an adaptive solve.
+#[derive(Debug, Clone)]
+pub struct Rk45Result {
+    pub z: Vec<f32>,
+    /// Accepted steps.
+    pub steps: usize,
+    /// Rejected (re-tried) steps.
+    pub rejects: usize,
+    /// Time actually reached (== horizon iff converged).
+    pub t_reached: f32,
+    pub converged: bool,
+}
+
+// Dormand–Prince 5(4) tableau.
+const A: [[f64; 6]; 6] = [
+    [1.0 / 5.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+    [3.0 / 40.0, 9.0 / 40.0, 0.0, 0.0, 0.0, 0.0],
+    [44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0, 0.0, 0.0, 0.0],
+    [19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0, 0.0, 0.0],
+    [9017.0 / 3168.0, -355.0 / 33.0, 46732.0 / 5247.0, 49.0 / 176.0, -5103.0 / 18656.0, 0.0],
+    [35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0, 11.0 / 84.0],
+];
+const B5: [f64; 7] =
+    [35.0 / 384.0, 0.0, 500.0 / 1113.0, 125.0 / 192.0, -2187.0 / 6784.0, 11.0 / 84.0, 0.0];
+const B4: [f64; 7] = [
+    5179.0 / 57600.0,
+    0.0,
+    7571.0 / 16695.0,
+    393.0 / 640.0,
+    -92097.0 / 339200.0,
+    187.0 / 2100.0,
+    1.0 / 40.0,
+];
+
+/// Integrate dz/dt = f(z) from 0 to `t_horizon` (may be negative) with
+/// adaptive step-size control.
+pub fn odeint_rk45<R: Rhs>(rhs: &R, z0: &[f32], t_horizon: f32, opts: Rk45Options) -> Rk45Result {
+    let n = z0.len();
+    let sign = if t_horizon >= 0.0 { 1.0f32 } else { -1.0 };
+    let mut z = z0.to_vec();
+    let mut t = 0.0f32;
+    let mut h = t_horizon * opts.initial_frac;
+    let mut steps = 0;
+    let mut rejects = 0;
+
+    let mut k = vec![vec![0.0f32; n]; 7];
+    let mut ztmp = vec![0.0f32; n];
+
+    for _ in 0..opts.max_steps {
+        if sign * t >= sign * t_horizon - 1e-12 * t_horizon.abs().max(1.0) {
+            break;
+        }
+        // Clamp to the horizon.
+        let h_eff = if sign * (t + h) > sign * t_horizon { t_horizon - t } else { h };
+
+        rhs.eval(&z, &mut k[0]);
+        for i in 0..6 {
+            ztmp.copy_from_slice(&z);
+            for (j, &aij) in A[i].iter().enumerate().take(i + 1) {
+                if aij != 0.0 {
+                    let kj = &k[j];
+                    for (zt, kv) in ztmp.iter_mut().zip(kj.iter()) {
+                        *zt += h_eff * aij as f32 * kv;
+                    }
+                }
+            }
+            let (head, tail) = k.split_at_mut(i + 1);
+            let _ = head;
+            rhs.eval(&ztmp, &mut tail[0]);
+        }
+
+        // 5th-order solution and embedded error estimate.
+        let mut err_inf = 0.0f64;
+        let mut z_inf = 0.0f64;
+        let mut z5 = z.clone();
+        for (idx, z5i) in z5.iter_mut().enumerate() {
+            let mut d5 = 0.0f64;
+            let mut d4 = 0.0f64;
+            for s in 0..7 {
+                d5 += B5[s] * k[s][idx] as f64;
+                d4 += B4[s] * k[s][idx] as f64;
+            }
+            *z5i += (h_eff as f64 * d5) as f32;
+            err_inf = err_inf.max((h_eff as f64 * (d5 - d4)).abs());
+            z_inf = z_inf.max((*z5i as f64).abs().max((z[idx] as f64).abs()));
+        }
+        let scale = opts.atol as f64 + opts.rtol as f64 * z_inf;
+        let ratio = if scale > 0.0 { err_inf / scale } else { f64::INFINITY };
+
+        if !ratio.is_finite() {
+            // State blew up — unrecoverable (the §III instability).
+            return Rk45Result { z: z5, steps, rejects, t_reached: t, converged: false };
+        }
+
+        if ratio <= 1.0 {
+            z = z5;
+            t += h_eff;
+            steps += 1;
+        } else {
+            rejects += 1;
+        }
+        let factor = (0.9 * ratio.max(1e-10).powf(-0.2)).clamp(0.2, 5.0);
+        h = h_eff * factor as f32;
+        if h.abs() < 1e-12 * t_horizon.abs().max(1.0) {
+            // Step size underflow: cannot make progress.
+            return Rk45Result { z, steps, rejects, t_reached: t, converged: false };
+        }
+    }
+
+    let converged = sign * t >= sign * t_horizon - 1e-6 * t_horizon.abs().max(1.0);
+    Rk45Result { z, steps, rejects, t_reached: t, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linear(lambda: f32) -> impl Rhs {
+        (move |z: &[f32], o: &mut [f32]| {
+            for (oi, zi) in o.iter_mut().zip(z.iter()) {
+                *oi = lambda * zi;
+            }
+        }, 1usize)
+    }
+
+    #[test]
+    fn matches_exponential() {
+        let r = odeint_rk45(&linear(-1.0), &[1.0], 1.0, Rk45Options::default());
+        assert!(r.converged);
+        let exact = (-1.0f64).exp() as f32;
+        assert!((r.z[0] - exact).abs() < 1e-5, "{} vs {exact}", r.z[0]);
+    }
+
+    #[test]
+    fn adapts_step_count_to_tolerance() {
+        let tight = odeint_rk45(
+            &linear(-10.0),
+            &[1.0],
+            1.0,
+            Rk45Options { rtol: 1e-9, atol: 1e-12, ..Default::default() },
+        );
+        let loose = odeint_rk45(
+            &linear(-10.0),
+            &[1.0],
+            1.0,
+            Rk45Options { rtol: 1e-3, atol: 1e-6, ..Default::default() },
+        );
+        assert!(tight.converged && loose.converged);
+        assert!(tight.steps > loose.steps, "{} vs {}", tight.steps, loose.steps);
+    }
+
+    #[test]
+    fn nonlinear_cubic_blowup_detected() {
+        // §III example: dz/dt = z^3 with z0 chosen so the solution blows up
+        // before t = 1 (flow only defined for t < 1/(2 z0²) = 0.5).
+        let rhs = (|z: &[f32], o: &mut [f32]| o[0] = z[0].powi(3), 1usize);
+        let r = odeint_rk45(&rhs, &[1.0], 1.0, Rk45Options { max_steps: 2000, ..Default::default() });
+        assert!(!r.converged, "blow-up must not converge (t_reached {})", r.t_reached);
+        assert!(r.t_reached < 0.75);
+    }
+
+    #[test]
+    fn negative_horizon_integrates_backwards() {
+        let fwd = odeint_rk45(&linear(-1.0), &[1.0], 1.0, Rk45Options::default());
+        let back = odeint_rk45(&linear(-1.0), &fwd.z, -1.0, Rk45Options::default());
+        assert!(back.converged);
+        assert!((back.z[0] - 1.0).abs() < 1e-4, "{}", back.z[0]);
+    }
+
+    #[test]
+    fn stiff_reverse_needs_many_steps_or_fails() {
+        // §III: reversing dz/dt = -100 z over unit horizon is the hard case.
+        let fwd = odeint_rk45(&linear(-100.0), &[1.0], 1.0, Rk45Options::default());
+        assert!(fwd.converged);
+        let back = odeint_rk45(
+            &linear(-100.0),
+            &fwd.z,
+            -1.0,
+            Rk45Options { max_steps: 100_000, ..Default::default() },
+        );
+        // Either it fails to converge, or the recovered value is wrong, or it
+        // needed a huge number of steps — all three manifest the paper's point.
+        let err = (back.z[0] - 1.0).abs();
+        assert!(
+            !back.converged || err > 1e-3 || back.steps + back.rejects > 2_000,
+            "converged={} err={err} steps={}",
+            back.converged,
+            back.steps
+        );
+    }
+}

@@ -1,0 +1,158 @@
+//! Optimizers and learning-rate schedules (Eq. 3 of the paper).
+//!
+//! Runs on the host over flat f32 tensors; parameter updates are cheap
+//! relative to the ODE-block executions, so no AOT module is needed.
+
+use crate::tensor::Tensor;
+
+/// SGD with classical momentum and decoupled weight decay.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    velocity: Vec<Tensor>,
+}
+
+impl Sgd {
+    pub fn new(params: &[Tensor], lr: f32, momentum: f32, weight_decay: f32) -> Self {
+        let velocity = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        Self { lr, momentum, weight_decay, velocity }
+    }
+
+    /// Bytes of optimizer state (for the memory ledger).
+    pub fn state_bytes(&self) -> usize {
+        self.velocity.iter().map(|v| v.byte_size()).sum()
+    }
+
+    /// v ← μv + g + wd·p;  p ← p − lr·v
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.velocity.len());
+        for ((p, g), v) in params.iter_mut().zip(grads.iter()).zip(self.velocity.iter_mut()) {
+            assert_eq!(p.shape(), g.shape(), "param/grad shape mismatch");
+            let (pd, gd, vd) = (p.data_mut(), g.data(), v.data_mut());
+            let (mu, wd, lr) = (self.momentum, self.weight_decay, self.lr);
+            for i in 0..pd.len() {
+                vd[i] = mu * vd[i] + gd[i] + wd * pd[i];
+                pd[i] -= lr * vd[i];
+            }
+        }
+    }
+
+    /// Global gradient-norm clipping; returns the pre-clip norm.
+    pub fn clip_grads(grads: &mut [Tensor], max_norm: f32) -> f32 {
+        let norm = {
+            let sq: f64 = grads.iter().map(|g| {
+                g.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>()
+            }).sum();
+            sq.sqrt() as f32
+        };
+        if norm > max_norm && norm > 0.0 {
+            let scale = max_norm / norm;
+            for g in grads.iter_mut() {
+                g.scale(scale);
+            }
+        }
+        norm
+    }
+}
+
+/// Learning-rate schedule.
+#[derive(Debug, Clone)]
+pub enum LrSchedule {
+    Constant(f32),
+    /// Multiply by `gamma` at each milestone step (classic CIFAR recipe).
+    Step { base: f32, gamma: f32, milestones: Vec<usize> },
+    /// Cosine decay from `base` to `floor` over `total` steps.
+    Cosine { base: f32, floor: f32, total: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: usize) -> f32 {
+        match self {
+            LrSchedule::Constant(lr) => *lr,
+            LrSchedule::Step { base, gamma, milestones } => {
+                let k = milestones.iter().filter(|&&m| step >= m).count();
+                base * gamma.powi(k as i32)
+            }
+            LrSchedule::Cosine { base, floor, total } => {
+                let t = (step.min(*total)) as f32 / (*total).max(1) as f32;
+                floor + 0.5 * (base - floor) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimizing f(p) = ½‖p‖² with gradient p must converge to 0.
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        let mut params = vec![Tensor::from_vec(vec![3], vec![1.0, -2.0, 3.0]).unwrap()];
+        let mut opt = Sgd::new(&params, 0.1, 0.9, 0.0);
+        for _ in 0..200 {
+            let grads = vec![params[0].clone()];
+            opt.step(&mut params, &grads);
+        }
+        assert!(params[0].norm2() < 1e-3, "norm {}", params[0].norm2());
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let run = |mu: f32| {
+            let mut params = vec![Tensor::from_vec(vec![1], vec![1.0]).unwrap()];
+            let mut opt = Sgd::new(&params, 0.02, mu, 0.0);
+            for _ in 0..50 {
+                let grads = vec![params[0].clone()];
+                opt.step(&mut params, &grads);
+            }
+            params[0].data()[0].abs()
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params_with_zero_grad() {
+        let mut params = vec![Tensor::from_vec(vec![1], vec![2.0]).unwrap()];
+        let mut opt = Sgd::new(&params, 0.1, 0.0, 0.1);
+        let zero = vec![Tensor::zeros(&[1])];
+        for _ in 0..10 {
+            opt.step(&mut params, &zero);
+        }
+        assert!(params[0].data()[0] < 2.0 && params[0].data()[0] > 0.0);
+    }
+
+    #[test]
+    fn clipping_bounds_norm() {
+        let mut grads = vec![Tensor::from_vec(vec![2], vec![3.0, 4.0]).unwrap()];
+        let pre = Sgd::clip_grads(&mut grads, 1.0);
+        assert!((pre - 5.0).abs() < 1e-6);
+        assert!((grads[0].norm2() - 1.0).abs() < 1e-6);
+        // Below threshold: untouched.
+        let mut g2 = vec![Tensor::from_vec(vec![2], vec![0.3, 0.4]).unwrap()];
+        Sgd::clip_grads(&mut g2, 1.0);
+        assert!((g2[0].norm2() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn schedules() {
+        let s = LrSchedule::Step { base: 0.1, gamma: 0.1, milestones: vec![10, 20] };
+        assert!((s.at(0) - 0.1).abs() < 1e-8);
+        assert!((s.at(10) - 0.01).abs() < 1e-8);
+        assert!((s.at(25) - 0.001).abs() < 1e-8);
+        let c = LrSchedule::Cosine { base: 1.0, floor: 0.0, total: 100 };
+        assert!((c.at(0) - 1.0).abs() < 1e-6);
+        assert!((c.at(50) - 0.5).abs() < 1e-6);
+        assert!(c.at(100) < 1e-6);
+        assert_eq!(LrSchedule::Constant(0.05).at(999), 0.05);
+    }
+
+    #[test]
+    fn state_bytes_counts_velocity() {
+        let params = vec![Tensor::zeros(&[10]), Tensor::zeros(&[5])];
+        let opt = Sgd::new(&params, 0.1, 0.9, 0.0);
+        assert_eq!(opt.state_bytes(), 60);
+    }
+}

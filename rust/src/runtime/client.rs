@@ -1,0 +1,118 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Interchange format is HLO *text* (see DESIGN.md §5 and
+//! /opt/xla-example/README.md): jax ≥ 0.5 emits protos with 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+/// Errors surfaced by the runtime layer.
+#[derive(Debug)]
+pub enum RuntimeError {
+    /// Underlying xla crate error (PJRT, compilation, execution).
+    Xla(String),
+    /// Artifact file missing or unreadable.
+    Io(String),
+    /// Output arity or shape did not match expectations.
+    Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(e) => write!(f, "xla error: {e}"),
+            RuntimeError::Io(e) => write!(f, "artifact io error: {e}"),
+            RuntimeError::Shape(e) => write!(f, "shape error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// A PJRT client owning compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled HLO module, callable with host tensors.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Human-readable name (manifest module name) for error messages.
+    pub name: String,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Platform name, e.g. "cpu".
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_text(&self, name: &str, path: &Path) -> Result<Executable> {
+        if !path.exists() {
+            return Err(RuntimeError::Io(format!(
+                "artifact {} not found at {} — run `make artifacts`",
+                name,
+                path.display()
+            )));
+        }
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| RuntimeError::Io(format!("non-utf8 path {}", path.display())))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+}
+
+impl Executable {
+    /// Execute with host f32 tensors; returns output tensors.
+    ///
+    /// Modules are lowered with `return_tuple=True`, so the single PJRT
+    /// output buffer is a tuple we unpack into `Tensor`s.
+    pub fn call(&self, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let dims: Vec<usize> = t.shape().to_vec();
+                let lit = xla::Literal::vec1(t.data());
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64).map_err(RuntimeError::from)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let out = self.exe.execute::<xla::Literal>(&lits)?;
+        let mut result = out[0][0].to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        let mut tensors = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            tensors.push(literal_to_tensor(&lit, &self.name)?);
+        }
+        Ok(tensors)
+    }
+}
+
+/// Convert an xla literal (f32) to a host tensor.
+fn literal_to_tensor(lit: &xla::Literal, ctx: &str) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| RuntimeError::Shape(format!("{ctx}: output not f32: {e}")))?;
+    Tensor::from_vec(dims, data).map_err(|e| RuntimeError::Shape(format!("{ctx}: {e}")))
+}

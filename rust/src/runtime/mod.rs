@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only module that touches the `xla` crate. Everything above it
+//! (coordinator, models, examples) works in terms of [`crate::tensor::Tensor`]
+//! and module names from the artifact manifest.
+
+mod client;
+mod registry;
+
+pub use client::{Executable, Result, RuntimeError, XlaRuntime};
+pub use registry::{ArtifactRegistry, ModuleSpec, ParamSpec, TensorSpec};

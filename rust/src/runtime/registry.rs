@@ -1,0 +1,265 @@
+//! Manifest-driven artifact registry.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing every
+//! lowered module (input/output tensor specs) plus the canonical parameter
+//! layout matching `artifacts/params.bin`. The registry parses the manifest,
+//! compiles modules lazily on first use, and caches executables.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use super::client::{Executable, Result, RuntimeError, XlaRuntime};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Shape+dtype+name of one module input or output.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One named parameter in the canonical layout of `params.bin`.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Offset in f32 elements into params.bin.
+    pub offset: usize,
+}
+
+fn bad(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError::Io(format!("bad manifest.json: {}", msg.into()))
+}
+
+fn parse_tensor_spec(v: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: v.get("name").and_then(Json::as_str).ok_or_else(|| bad("spec missing name"))?.to_string(),
+        shape: v
+            .get("shape")
+            .and_then(Json::as_usize_vec)
+            .ok_or_else(|| bad("spec missing shape"))?,
+        dtype: v.get("dtype").and_then(Json::as_str).unwrap_or("f32").to_string(),
+    })
+}
+
+/// Lazily-compiling registry of AOT artifacts.
+pub struct ArtifactRegistry {
+    runtime: XlaRuntime,
+    dir: PathBuf,
+    modules: HashMap<String, ModuleSpec>,
+    params: HashMap<String, Vec<ParamSpec>>,
+    config: Json,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open `dir/manifest.json` and prepare a CPU PJRT runtime.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            RuntimeError::Io(format!(
+                "cannot read {} ({e}) — run `make artifacts`",
+                manifest_path.display()
+            ))
+        })?;
+        let root = Json::parse(&text).map_err(|e| bad(e.to_string()))?;
+
+        let mut modules = HashMap::new();
+        for m in root.get("modules").and_then(Json::as_arr).ok_or_else(|| bad("no modules"))? {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("module missing name"))?
+                .to_string();
+            let file = m
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("module missing file"))?
+                .to_string();
+            let inputs = m
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad("module missing inputs"))?
+                .iter()
+                .map(parse_tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = m
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| bad("module missing outputs"))?
+                .iter()
+                .map(parse_tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            modules.insert(name.clone(), ModuleSpec { name, file, inputs, outputs });
+        }
+
+        let mut params = HashMap::new();
+        if let Some(Json::Obj(pm)) = root.get("params") {
+            for (model, list) in pm {
+                let specs = list
+                    .as_arr()
+                    .ok_or_else(|| bad("params entry not an array"))?
+                    .iter()
+                    .map(|p| {
+                        Ok(ParamSpec {
+                            name: p
+                                .get("name")
+                                .and_then(Json::as_str)
+                                .ok_or_else(|| bad("param missing name"))?
+                                .to_string(),
+                            shape: p
+                                .get("shape")
+                                .and_then(Json::as_usize_vec)
+                                .ok_or_else(|| bad("param missing shape"))?,
+                            offset: p
+                                .get("offset")
+                                .and_then(Json::as_usize)
+                                .ok_or_else(|| bad("param missing offset"))?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                params.insert(model.clone(), specs);
+            }
+        }
+
+        let config = root.get("config").cloned().unwrap_or(Json::Obj(Default::default()));
+        let runtime = XlaRuntime::cpu()?;
+        Ok(Self {
+            runtime,
+            dir: dir.to_path_buf(),
+            modules,
+            params,
+            config,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Manifest `config` section (solver, Nt, batch size, ...).
+    pub fn config(&self) -> &Json {
+        &self.config
+    }
+
+    /// A u64 field from the manifest config, if present.
+    pub fn config_u64(&self, key: &str) -> Option<u64> {
+        self.config.get(key).and_then(Json::as_u64)
+    }
+
+    /// Names of all modules in the manifest (sorted).
+    pub fn module_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.modules.keys().map(|s| s.as_str()).collect();
+        names.sort();
+        names
+    }
+
+    /// Does the manifest contain this module?
+    pub fn has_module(&self, name: &str) -> bool {
+        self.modules.contains_key(name)
+    }
+
+    /// Spec for one module.
+    pub fn module_spec(&self, name: &str) -> Result<&ModuleSpec> {
+        self.modules
+            .get(name)
+            .ok_or_else(|| RuntimeError::Io(format!("module {name} not in manifest")))
+    }
+
+    /// Canonical parameter layout for a model (e.g. "resnet", "sqnxt").
+    pub fn param_layout(&self, model: &str) -> Result<&[ParamSpec]> {
+        self.params
+            .get(model)
+            .map(|v| v.as_slice())
+            .ok_or_else(|| RuntimeError::Io(format!("no param layout for model {model}")))
+    }
+
+    /// Load the initial parameters for `model` from params.bin (f32 LE),
+    /// in canonical order.
+    pub fn load_params(&self, model: &str) -> Result<Vec<Tensor>> {
+        let layout = self.param_layout(model)?.to_vec();
+        let path = self.dir.join("params.bin");
+        let bytes = std::fs::read(&path)
+            .map_err(|e| RuntimeError::Io(format!("cannot read {}: {e}", path.display())))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        layout
+            .iter()
+            .map(|p| {
+                let n: usize = p.shape.iter().product();
+                let end = p.offset + n;
+                if end > floats.len() {
+                    return Err(RuntimeError::Io(format!(
+                        "params.bin too short for {} (needs {} floats, file has {})",
+                        p.name,
+                        end,
+                        floats.len()
+                    )));
+                }
+                Tensor::from_vec(p.shape.clone(), floats[p.offset..end].to_vec())
+                    .map_err(|e| RuntimeError::Shape(e.to_string()))
+            })
+            .collect()
+    }
+
+    /// Get (compiling lazily) the executable for `name`.
+    pub fn get(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.module_spec(name)?;
+        let path = self.dir.join(&spec.file);
+        let exe = Rc::new(self.runtime.compile_hlo_text(name, &path)?);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a module, validating input shapes against the manifest.
+    pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.module_spec(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(RuntimeError::Shape(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, s) in inputs.iter().zip(spec.inputs.iter()) {
+            if t.shape() != s.shape.as_slice() {
+                return Err(RuntimeError::Shape(format!(
+                    "{name}: input {} shape {:?} != manifest {:?}",
+                    s.name,
+                    t.shape(),
+                    s.shape
+                )));
+            }
+        }
+        let exe = self.get(name)?;
+        let outs = exe.call(inputs)?;
+        if outs.len() != spec.outputs.len() {
+            return Err(RuntimeError::Shape(format!(
+                "{name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                outs.len()
+            )));
+        }
+        Ok(outs)
+    }
+
+    /// Number of compiled (cached) executables — used by tests/perf logs.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,256 @@
+//! Host-side dense f32 tensors.
+//!
+//! The coordinator stages all activations/parameters/gradients as plain
+//! row-major f32 buffers; the runtime converts them to PJRT literals at the
+//! call boundary. Deliberately minimal — shape bookkeeping and a few
+//! elementwise helpers the optimizer and metrics need, nothing more.
+
+mod shape;
+
+pub use shape::{broadcastable, elem_count, Shape};
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+/// Error for shape/data mismatches.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorError(pub String);
+
+impl std::fmt::Display for TensorError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "tensor error: {}", self.0)
+    }
+}
+impl std::error::Error for TensorError {}
+
+impl Tensor {
+    /// Build from shape + data; validates element count.
+    pub fn from_vec(shape: Vec<usize>, data: Vec<f32>) -> Result<Self, TensorError> {
+        let n = elem_count(&shape);
+        if n != data.len() {
+            return Err(TensorError(format!(
+                "shape {:?} wants {} elems, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Self { shape, data })
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; elem_count(shape)] }
+    }
+
+    /// All-`v` tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; elem_count(shape)] }
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Rank (number of dims).
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Size in bytes (f32).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Borrow the flat data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutably borrow the flat data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the flat data.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Scalar value of a rank-0 / single-element tensor.
+    pub fn item(&self) -> Result<f32, TensorError> {
+        if self.data.len() == 1 {
+            Ok(self.data[0])
+        } else {
+            Err(TensorError(format!("item() on tensor with {} elems", self.data.len())))
+        }
+    }
+
+    /// Reshape without copying; element count must match.
+    pub fn reshape(mut self, shape: Vec<usize>) -> Result<Self, TensorError> {
+        if elem_count(&shape) != self.data.len() {
+            return Err(TensorError(format!(
+                "cannot reshape {:?} ({} elems) to {:?}",
+                self.shape,
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    /// Elementwise a += alpha * b (axpy). Shapes must match exactly.
+    pub fn axpy(&mut self, alpha: f32, b: &Tensor) -> Result<(), TensorError> {
+        if self.shape != b.shape {
+            return Err(TensorError(format!("axpy shape {:?} vs {:?}", self.shape, b.shape)));
+        }
+        for (x, y) in self.data.iter_mut().zip(b.data.iter()) {
+            *x += alpha * y;
+        }
+        Ok(())
+    }
+
+    /// Elementwise scale in place.
+    pub fn scale(&mut self, alpha: f32) {
+        for x in self.data.iter_mut() {
+            *x *= alpha;
+        }
+    }
+
+    /// L2 norm of the flattened tensor.
+    pub fn norm2(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Max |x|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Mean of elements.
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        (self.data.iter().map(|&x| x as f64).sum::<f64>() / self.data.len() as f64) as f32
+    }
+
+    /// Relative L2 error vs a reference: ‖a-b‖₂/‖b‖₂ (Eq. 6 metric ρ).
+    pub fn rel_err(&self, reference: &Tensor) -> Result<f32, TensorError> {
+        if self.shape != reference.shape {
+            return Err(TensorError(format!(
+                "rel_err shape {:?} vs {:?}",
+                self.shape, reference.shape
+            )));
+        }
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(reference.data.iter()) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        Ok(if den == 0.0 { num.sqrt() as f32 } else { (num.sqrt() / den.sqrt()) as f32 })
+    }
+
+    /// True if all elements are finite.
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(Tensor::from_vec(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::from_vec(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn zeros_full_scalar() {
+        let z = Tensor::zeros(&[2, 2]);
+        assert_eq!(z.data(), &[0.0; 4]);
+        let f = Tensor::full(&[3], 2.5);
+        assert_eq!(f.data(), &[2.5, 2.5, 2.5]);
+        let s = Tensor::scalar(7.0);
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.item().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn item_rejects_multi() {
+        assert!(Tensor::zeros(&[2]).item().is_err());
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.clone().reshape(vec![6]).unwrap().shape(), &[6]);
+        assert!(t.reshape(vec![7]).is_err());
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::full(&[4], 1.0);
+        let b = Tensor::full(&[4], 2.0);
+        a.axpy(0.5, &b).unwrap();
+        assert_eq!(a.data(), &[2.0; 4]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[4.0; 4]);
+        let c = Tensor::full(&[5], 1.0);
+        assert!(a.axpy(1.0, &c).is_err());
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::from_vec(vec![2], vec![3.0, 4.0]).unwrap();
+        assert!((t.norm2() - 5.0).abs() < 1e-6);
+        assert_eq!(t.max_abs(), 4.0);
+        assert!((t.mean() - 3.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rel_err_metric() {
+        let a = Tensor::from_vec(vec![2], vec![1.0, 0.0]).unwrap();
+        let b = Tensor::from_vec(vec![2], vec![0.0, 1.0]).unwrap();
+        let e = a.rel_err(&b).unwrap();
+        assert!((e - (2.0f32).sqrt()).abs() < 1e-6);
+        assert_eq!(a.rel_err(&a).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn finite_check() {
+        let mut t = Tensor::zeros(&[2]);
+        assert!(t.all_finite());
+        t.data_mut()[0] = f32::NAN;
+        assert!(!t.all_finite());
+    }
+
+    #[test]
+    fn byte_size() {
+        assert_eq!(Tensor::zeros(&[2, 2]).byte_size(), 16);
+    }
+}

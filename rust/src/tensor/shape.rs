@@ -1,0 +1,33 @@
+//! Shape utilities shared across modules.
+
+/// Element count of a shape (empty shape = scalar = 1).
+pub fn elem_count(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Convenience alias used in manifests and specs.
+pub type Shape = Vec<usize>;
+
+/// True if `a` and `b` are identical shapes (we do not support implicit
+/// broadcasting on the host side; the check exists to give good errors).
+pub fn broadcastable(a: &[usize], b: &[usize]) -> bool {
+    a == b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elem_count_scalar_is_one() {
+        assert_eq!(elem_count(&[]), 1);
+        assert_eq!(elem_count(&[2, 3, 4]), 24);
+        assert_eq!(elem_count(&[0, 5]), 0);
+    }
+
+    #[test]
+    fn broadcastable_is_strict_equality() {
+        assert!(broadcastable(&[2, 3], &[2, 3]));
+        assert!(!broadcastable(&[2, 3], &[3, 2]));
+    }
+}

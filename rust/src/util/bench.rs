@@ -1,0 +1,84 @@
+//! Micro-benchmark timing harness (criterion replacement for the offline
+//! image). Benches are built with `harness = false` and use [`BenchTimer`]
+//! to run warmups + timed iterations and report mean/median/p95.
+
+use std::time::{Duration, Instant};
+
+/// Statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub p95: Duration,
+}
+
+impl BenchStats {
+    /// One-line report in criterion-like format.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<4} mean={:>12?} median={:>12?} min={:>12?} p95={:>12?}",
+            self.name, self.iters, self.mean, self.median, self.min, self.p95
+        )
+    }
+}
+
+/// Run `f` with `warmup` unrecorded calls then `iters` timed calls.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let n = samples.len();
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean: total / n as u32,
+        median: samples[n / 2],
+        min: samples[0],
+        p95: samples[(n * 95 / 100).min(n - 1)],
+    }
+}
+
+/// Time a single closure run.
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Prevent the optimizer from discarding a value (std::hint-based).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench("noop", 2, 16, || {
+            black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 16);
+        assert!(s.min <= s.median);
+        assert!(s.median <= s.p95);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() < 1_000_000_000);
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny CLI argument parser (`--flag`, `--key value`, positionals).
+//! Replaces clap, which is unavailable in the offline image.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    opts: HashMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (no program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.opts.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Parsed numeric option with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.opts.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_opts() {
+        let a = parse("train --arch resnet --steps 100 --verbose");
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.get("arch"), Some("resnet"));
+        assert_eq!(a.get_parse_or("steps", 0usize), 100);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--lr=0.1 --solver=rk2");
+        assert_eq!(a.get_parse_or("lr", 0.0f64), 0.1);
+        assert_eq!(a.get("solver"), Some("rk2"));
+    }
+
+    #[test]
+    fn flag_before_positional_not_consumed_as_value() {
+        // `--verbose train`: "train" does not start with --, so it is taken
+        // as the value; callers should use --verbose=true before positionals.
+        let a = parse("--steps 5 train");
+        assert_eq!(a.get("steps"), Some("5"));
+        assert_eq!(a.positional, vec!["train"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("arch", "resnet"), "resnet");
+        assert_eq!(a.get_parse_or("nt", 5usize), 5);
+    }
+}

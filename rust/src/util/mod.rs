@@ -1,0 +1,7 @@
+//! In-tree utilities that replace external crates unavailable in the
+//! offline build image: a JSON parser/writer ([`json`]), a tiny CLI argument
+//! parser ([`cli`]), and a micro-benchmark timer ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;

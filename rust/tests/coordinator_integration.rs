@@ -1,0 +1,217 @@
+//! Integration tests over the full stack: artifacts → runtime → coordinator
+//! → trainer. Requires `make artifacts`; each test skips gracefully if the
+//! artifacts are missing.
+
+use std::path::Path;
+
+use anode::coordinator::{make_eval_batches, Coordinator, TrainOptions, Trainer};
+use anode::data::{Batcher, SyntheticCifar};
+use anode::memory::{Category, MemoryLedger};
+use anode::models::{Arch, GradMethod, ModelConfig, Solver};
+use anode::optim::LrSchedule;
+use anode::runtime::ArtifactRegistry;
+use anode::tensor::Tensor;
+
+fn registry() -> Option<ArtifactRegistry> {
+    let p = Path::new("artifacts");
+    if !p.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(ArtifactRegistry::open(p).unwrap())
+}
+
+fn small_data(ncls: usize, n: usize, batch: usize) -> (Batcher, Vec<(Tensor, Tensor)>) {
+    let ds = SyntheticCifar::new(ncls, 11, 0.1);
+    let (imgs, labels) = ds.generate(n, 1);
+    let (timgs, tlabels) = ds.generate(batch * 2, 2);
+    let eval = make_eval_batches(&timgs, &tlabels, batch, 2);
+    (Batcher::new(imgs, labels, batch, false, 3), eval)
+}
+
+#[test]
+fn forward_shapes_and_memory_accounting() {
+    let Some(reg) = registry() else { return };
+    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
+    let batch = cfg.batch;
+    let co = Coordinator::new(&reg, cfg, Solver::Euler, GradMethod::Anode).unwrap();
+    let params = co.load_params().unwrap();
+
+    let ds = SyntheticCifar::new(10, 5, 0.1);
+    let (imgs, _) = ds.generate(batch, 0);
+    let mut ledger = MemoryLedger::new();
+    let state = co.forward(&imgs, &params, &mut ledger).unwrap();
+
+    assert_eq!(state.block_inputs.len(), 3);
+    assert_eq!(state.block_inputs[0].len(), 2);
+    assert_eq!(state.block_inputs[0][0].shape(), &[batch, 32, 32, 16]);
+    assert_eq!(state.block_inputs[2][0].shape(), &[batch, 8, 8, 64]);
+    assert_eq!(state.z_final.shape(), &[batch, 8, 8, 64]);
+    assert!(state.z_final.all_finite());
+    // O(L) accounting: x + 6 block inputs + 2 transition inputs tracked.
+    assert!(ledger.peak_of(Category::BlockInput) > 0);
+    assert_eq!(ledger.peak_of(Category::StepState), 0);
+}
+
+#[test]
+fn grads_flow_and_are_finite_for_all_methods() {
+    let Some(reg) = registry() else { return };
+    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
+    let batch = cfg.batch;
+    let ds = SyntheticCifar::new(10, 6, 0.1);
+    let (imgs, labels) = ds.generate(batch, 0);
+    let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+
+    for method in [
+        GradMethod::Anode,
+        GradMethod::Otd,
+        GradMethod::Node,
+        GradMethod::AnodeRevolve(2),
+        GradMethod::AnodeEquispaced(2),
+    ] {
+        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
+        let params = co.load_params().unwrap();
+        let mut ledger = MemoryLedger::new();
+        let (loss, correct, grads) =
+            co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "{method:?}: loss {loss}");
+        assert!((0.0..=batch as f32).contains(&correct));
+        assert_eq!(grads.len(), params.len());
+        let gnorm: f32 = grads.iter().map(|g| g.norm2()).sum();
+        assert!(gnorm.is_finite() && gnorm > 0.0, "{method:?}: grad norm {gnorm}");
+        // All stored activations released after the step.
+        assert_eq!(ledger.current_of(Category::BlockInput), 0, "{method:?}");
+        assert_eq!(ledger.current_of(Category::StepState), 0, "{method:?}");
+    }
+}
+
+#[test]
+fn anode_and_revolve_gradients_agree_exactly() {
+    // Revolve recomputes the same discrete states, so its gradient must
+    // match the fused DTO VJP to float tolerance — THE correctness claim
+    // for the checkpointed coordinator.
+    let Some(reg) = registry() else { return };
+    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
+    let batch = cfg.batch;
+    let ds = SyntheticCifar::new(10, 7, 0.1);
+    let (imgs, labels) = ds.generate(batch, 0);
+    let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+
+    let run = |method| {
+        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
+        let params = co.load_params().unwrap();
+        let mut ledger = MemoryLedger::new();
+        co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap()
+    };
+    let (l_a, _, g_a) = run(GradMethod::Anode);
+    let (l_r, _, g_r) = run(GradMethod::AnodeRevolve(2));
+    let (l_e, _, g_e) = run(GradMethod::AnodeEquispaced(3));
+    assert!((l_a - l_r).abs() < 1e-5);
+    assert!((l_a - l_e).abs() < 1e-5);
+    for ((a, r), e) in g_a.iter().zip(&g_r).zip(&g_e) {
+        let da = a.rel_err(r).unwrap();
+        let de = a.rel_err(e).unwrap();
+        assert!(da < 2e-4, "revolve grad mismatch {da}");
+        assert!(de < 2e-4, "equispaced grad mismatch {de}");
+    }
+}
+
+#[test]
+fn node_gradient_differs_from_anode() {
+    // §III: the [8] gradient is corrupted for generic blocks — it must NOT
+    // agree with DTO (if it did, the paper would have no point).
+    let Some(reg) = registry() else { return };
+    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
+    let batch = cfg.batch;
+    let ds = SyntheticCifar::new(10, 8, 0.1);
+    let (imgs, labels) = ds.generate(batch, 0);
+    let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+
+    let run = |method| {
+        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
+        let params = co.load_params().unwrap();
+        let mut ledger = MemoryLedger::new();
+        co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap()
+    };
+    let (_, _, g_a) = run(GradMethod::Anode);
+    let (_, _, g_n) = run(GradMethod::Node);
+    let total_rel: f32 = g_a
+        .iter()
+        .zip(&g_n)
+        .map(|(a, n)| a.rel_err(n).unwrap_or(0.0))
+        .sum::<f32>()
+        / g_a.len() as f32;
+    assert!(total_rel > 1e-3, "node gradient suspiciously equal to DTO: {total_rel}");
+}
+
+#[test]
+fn short_training_decreases_loss() {
+    let Some(reg) = registry() else { return };
+    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
+    let batch = cfg.batch;
+    let co = Coordinator::new(&reg, cfg, Solver::Euler, GradMethod::Anode).unwrap();
+    let (mut train, eval) = small_data(10, batch * 8, batch);
+    let opts = TrainOptions {
+        steps: 16,
+        eval_every: 8,
+        lr: LrSchedule::Constant(0.05),
+        verbose: false,
+        ..Default::default()
+    };
+    let res = Trainer::new(&co, opts).train(&mut train, &eval, "itest").unwrap();
+    assert!(!res.diverged);
+    assert_eq!(res.steps_run, 16);
+    let first = res.curve.points.first().unwrap().train_loss;
+    let last = res.curve.points.last().unwrap().train_loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(res.peak_activation_bytes > 0);
+}
+
+#[test]
+fn sqnxt_arch_works_with_rk2() {
+    let Some(reg) = registry() else { return };
+    let cfg = ModelConfig::from_registry(&reg, Arch::Sqnxt, 10).unwrap();
+    let batch = cfg.batch;
+    let co = Coordinator::new(&reg, cfg, Solver::Rk2, GradMethod::Anode).unwrap();
+    let params = co.load_params().unwrap();
+    let ds = SyntheticCifar::new(10, 9, 0.1);
+    let (imgs, labels) = ds.generate(batch, 0);
+    let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+    let mut ledger = MemoryLedger::new();
+    let (loss, _, grads) = co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap();
+    assert!(loss.is_finite());
+    assert!(grads.iter().all(|g| g.all_finite()));
+}
+
+#[test]
+fn cifar100_head_works() {
+    let Some(reg) = registry() else { return };
+    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 100).unwrap();
+    let batch = cfg.batch;
+    let co = Coordinator::new(&reg, cfg, Solver::Euler, GradMethod::Anode).unwrap();
+    let params = co.load_params().unwrap();
+    let ds = SyntheticCifar::new(100, 10, 0.1);
+    let (imgs, labels) = ds.generate(batch, 0);
+    let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+    let mut ledger = MemoryLedger::new();
+    let (loss, _, _) = co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap();
+    // ln(100) ≈ 4.6 at init.
+    assert!((loss - 4.6).abs() < 0.8, "cifar100 init loss {loss}");
+}
+
+#[test]
+fn gradcheck_harness_reproduces_sec4_shape() {
+    let Some(reg) = registry() else { return };
+    let rows = anode::harness::gradient_consistency(&reg, 5).unwrap();
+    assert!(rows.len() >= 4);
+    // OTD error decreases as dt shrinks...
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    assert!(last.otd_rel_err < first.otd_rel_err * 0.5);
+    // ...DTO matches finite differences throughout...
+    for r in &rows {
+        assert!(r.dto_fd_err < 0.05, "nt={}: fd err {}", r.nt, r.dto_fd_err);
+    }
+    // ...and the [8] reconstruction error stays O(1)-large at coarse dt.
+    assert!(first.node_recon_err > 0.5);
+}

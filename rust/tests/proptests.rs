@@ -1,0 +1,172 @@
+//! Property-based tests over coordinator invariants (hand-rolled generator
+//! loop — the offline image has no proptest crate; `anode::rng` provides
+//! the deterministic entropy and failures print the seed for replay).
+
+use anode::checkpoint::{min_recomputations, plan, run_backward, Strategy};
+use anode::data::{Batcher, SyntheticCifar};
+use anode::memory::{Category, MemoryLedger};
+use anode::rng::Rng;
+use anode::tensor::Tensor;
+
+/// Run `f` over `n` random cases, reporting the failing seed.
+fn forall(name: &str, n: u64, mut f: impl FnMut(&mut Rng)) {
+    for seed in 0..n {
+        let mut rng = Rng::new(0x5EED_0000 ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property {name} failed at seed {seed}: {e:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_all_schedules_valid_and_within_budget() {
+    forall("schedule_validity", 200, |rng| {
+        let nt = 1 + rng.below(40);
+        let m = 1 + rng.below(10);
+        let strategy = match rng.below(4) {
+            0 => Strategy::StoreAll,
+            1 => Strategy::MinMemory,
+            2 => Strategy::Equispaced(m),
+            _ => Strategy::Revolve(m),
+        };
+        let s = plan(strategy, nt);
+        let errs = s.validate();
+        assert!(errs.is_empty(), "nt={nt} {strategy:?}: {errs:?}");
+        assert!(s.peak_slots() <= strategy.slots(nt), "slots exceeded: nt={nt} {strategy:?}");
+        // Every step's VJP runs exactly once: validate() checks ordering,
+        // forward_evals sanity-checks the cost model.
+        assert!(s.forward_evals() >= nt.min(s.nt));
+    });
+}
+
+#[test]
+fn prop_revolve_gradient_exact_for_random_affine_dynamics() {
+    forall("revolve_exactness", 60, |rng| {
+        let nt = 1 + rng.below(24);
+        let m = 1 + rng.below(6);
+        // Random affine map per run: z' = a z + b (same every step).
+        let a = (0.8 + rng.uniform() * 0.4) as f64;
+        let b = rng.normal() as f64 * 0.1;
+        let z0 = rng.normal() as f64;
+        let step = |z: &f64| a * z + b;
+        let dstep = |_z: &f64, adj: &f64| a * adj;
+        let g_rev =
+            run_backward(&plan(Strategy::Revolve(m), nt), &z0, 1.0, step, dstep, |_| {}).unwrap();
+        let g_all =
+            run_backward(&plan(Strategy::StoreAll, nt), &z0, 1.0, step, dstep, |_| {}).unwrap();
+        assert!((g_rev - g_all).abs() < 1e-12, "nt={nt} m={m}: {g_rev} vs {g_all}");
+        // Analytic: d z_nt / d z_0 = a^nt.
+        assert!((g_rev - a.powi(nt as i32)).abs() < 1e-9 * a.powi(nt as i32).abs());
+    });
+}
+
+#[test]
+fn prop_revolve_cost_optimal_and_monotone() {
+    forall("revolve_cost", 100, |rng| {
+        let nt = 2 + rng.below(40);
+        let m = 1 + rng.below(8);
+        let c_m = min_recomputations(nt, m);
+        let c_m1 = min_recomputations(nt, m + 1);
+        assert!(c_m1 <= c_m, "more memory must not cost more: nt={nt} m={m}");
+        // Bounds: never better than one taped pass, never worse than O(nt²).
+        assert!(c_m >= nt as u64);
+        assert!(c_m <= (nt * (nt + 1) / 2) as u64);
+        // Plan cost == DP cost.
+        assert_eq!(plan(Strategy::Revolve(m), nt).forward_evals() as u64, c_m);
+    });
+}
+
+#[test]
+fn prop_batcher_partitions_dataset() {
+    forall("batcher_partition", 30, |rng| {
+        let n = 8 + rng.below(64);
+        let bsz = 1 + rng.below(n.min(16));
+        // Identifiable "images": value = index.
+        let mut data = vec![0.0f32; n];
+        for (i, d) in data.iter_mut().enumerate() {
+            *d = i as f32;
+        }
+        let imgs = Tensor::from_vec(vec![n, 1, 1, 1], data).unwrap();
+        let labels: Vec<usize> = (0..n).map(|i| i % 5).collect();
+        let mut b = Batcher::new(imgs, labels, bsz, false, rng.next_u64());
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..(n / bsz) {
+            let batch = b.next_batch();
+            for k in 0..bsz {
+                let idx = batch.images.data()[k] as usize;
+                assert!(seen.insert(idx), "index {idx} repeated within epoch");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_ledger_peak_monotone_and_exact() {
+    forall("ledger", 50, |rng| {
+        let mut led = MemoryLedger::new();
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        let mut cur = 0usize;
+        let mut peak = 0usize;
+        for _ in 0..200 {
+            if live.is_empty() || rng.uniform() < 0.6 {
+                let bytes = 1 + rng.below(1000);
+                let id = led.alloc(bytes, Category::StepState);
+                live.push((id, bytes));
+                cur += bytes;
+                peak = peak.max(cur);
+            } else {
+                let k = rng.below(live.len());
+                let (id, bytes) = live.swap_remove(k);
+                led.free(id);
+                cur -= bytes;
+            }
+            assert_eq!(led.current_bytes(), cur);
+            assert_eq!(led.peak_bytes(), peak);
+        }
+    });
+}
+
+#[test]
+fn prop_synthetic_cifar_deterministic_and_finite() {
+    forall("cifar", 10, |rng| {
+        let ncls = [10, 100][rng.below(2)];
+        let seed = rng.next_u64();
+        let ds1 = SyntheticCifar::new(ncls, seed, 0.1);
+        let ds2 = SyntheticCifar::new(ncls, seed, 0.1);
+        let (a, la) = ds1.generate(32, 1);
+        let (b, lb) = ds2.generate(32, 1);
+        assert_eq!(a.data(), b.data());
+        assert_eq!(la, lb);
+        assert!(a.all_finite());
+        assert!(la.iter().all(|&l| l < ncls));
+    });
+}
+
+#[test]
+fn prop_equispaced_never_beats_revolve() {
+    forall("equispaced_vs_revolve", 80, |rng| {
+        let nt = 2 + rng.below(40);
+        let m = 1 + rng.below(8);
+        let e = plan(Strategy::Equispaced(m), nt).forward_evals();
+        let r = plan(Strategy::Revolve(m), nt).forward_evals();
+        assert!(r <= e, "nt={nt} m={m}: revolve {r} > equispaced {e}");
+    });
+}
+
+#[test]
+fn prop_tensor_axpy_matches_reference() {
+    forall("axpy", 40, |rng| {
+        let n = 1 + rng.below(100);
+        let a = rng.normal();
+        let xv = rng.normal_vec(n);
+        let yv = rng.normal_vec(n);
+        let x = Tensor::from_vec(vec![n], xv.clone()).unwrap();
+        let mut y = Tensor::from_vec(vec![n], yv.clone()).unwrap();
+        y.axpy(a, &x).unwrap();
+        for i in 0..n {
+            let expect = yv[i] + a * xv[i];
+            assert!((y.data()[i] - expect).abs() <= 1e-5 * (1.0 + expect.abs()));
+        }
+    });
+}

@@ -1,0 +1,94 @@
+//! Integration: manifest-driven registry loads, compiles and runs real
+//! AOT artifacts (requires `make artifacts` to have run).
+
+use std::path::Path;
+
+use anode::runtime::ArtifactRegistry;
+use anode::tensor::Tensor;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ not built");
+        None
+    }
+}
+
+#[test]
+fn loads_manifest_and_runs_tiny_block() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::open(dir).unwrap();
+    assert!(reg.module_names().len() > 50);
+    assert!(reg.has_module("tiny_euler_nt4_fwd"));
+
+    let spec = reg.module_spec("tiny_euler_nt4_fwd").unwrap().clone();
+    let inputs: Vec<Tensor> =
+        spec.inputs.iter().map(|s| Tensor::full(&s.shape, 0.1)).collect();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let out = reg.call("tiny_euler_nt4_fwd", &refs).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape(), spec.outputs[0].shape.as_slice());
+    assert!(out[0].all_finite());
+    assert_eq!(reg.compiled_count(), 1);
+}
+
+#[test]
+fn vjp_matches_finite_difference_on_tiny_block() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::open(dir).unwrap();
+    let name_fwd = "tiny_euler_nt4_fwd";
+    let name_vjp = "tiny_euler_nt4_vjp";
+    let spec = reg.module_spec(name_fwd).unwrap().clone();
+
+    // Small deterministic inputs.
+    let mut rng = anode::rng::Rng::new(9);
+    let inputs: Vec<Tensor> = spec
+        .inputs
+        .iter()
+        .map(|s| {
+            let n: usize = s.shape.iter().product();
+            Tensor::from_vec(s.shape.clone(), rng.normal_vec(n).iter().map(|x| 0.2 * x).collect())
+                .unwrap()
+        })
+        .collect();
+    let g = Tensor::full(&spec.outputs[0].shape, 1.0); // dL/dz1 = 1 => L = sum(z1)
+
+    let mut vjp_in: Vec<&Tensor> = inputs.iter().collect();
+    vjp_in.push(&g);
+    let grads = reg.call(name_vjp, &vjp_in).unwrap();
+    let gz = &grads[0];
+
+    // Finite-difference check on a few coordinates of z.
+    let sum = |t: &Tensor| t.data().iter().map(|&x| x as f64).sum::<f64>();
+    let eps = 1e-3f32;
+    for &idx in &[0usize, 17, 101] {
+        let mut plus = inputs.clone();
+        plus[0].data_mut()[idx] += eps;
+        let mut minus = inputs.clone();
+        minus[0].data_mut()[idx] -= eps;
+        let fp = sum(&reg.call(name_fwd, &plus.iter().collect::<Vec<_>>()).unwrap()[0]);
+        let fm = sum(&reg.call(name_fwd, &minus.iter().collect::<Vec<_>>()).unwrap()[0]);
+        let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
+        let ad = gz.data()[idx];
+        assert!(
+            (fd - ad).abs() < 1e-2 * (1.0 + ad.abs()),
+            "fd {fd} vs ad {ad} at {idx}"
+        );
+    }
+}
+
+#[test]
+fn params_bin_loads_for_all_models() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::open(dir).unwrap();
+    for model in ["resnet10", "resnet100", "sqnxt10", "sqnxt100"] {
+        let params = reg.load_params(model).unwrap();
+        assert!(params.len() > 20, "{model}: {}", params.len());
+        assert!(params.iter().all(|p| p.all_finite()));
+        // He-init weights are non-degenerate.
+        let total_norm: f32 = params.iter().map(|p| p.norm2()).sum();
+        assert!(total_norm > 1.0);
+    }
+}
