@@ -6,15 +6,16 @@
 //!
 //!     make artifacts && cargo run --release --example gradient_consistency
 
+use anode::api::open_artifacts;
 use anode::harness::{format_gradcheck, gradient_consistency};
-use anode::runtime::ArtifactRegistry;
 use anode::util::cli::Args;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
-    let reg =
-        ArtifactRegistry::open(std::path::Path::new(&args.get_or("artifacts", "artifacts")))?;
-    let rows = gradient_consistency(&reg, args.get_parse_or("seed", 5))?;
+    let reg = open_artifacts(args.get_or("artifacts", "artifacts"))?;
+    let seed = args.get_parse_or("seed", 5);
+    args.warn_unknown();
+    let rows = gradient_consistency(&reg, seed)?;
     println!("§IV — gradient consistency on the tiny ODE block (Euler, dt = 1/Nt)\n");
     println!("{}", format_gradcheck(&rows));
 

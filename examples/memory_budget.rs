@@ -3,19 +3,20 @@
 //! revolve(m) for shrinking m, and the O(1) extreme — and verify the
 //! gradients agree bit-for-bit while memory drops and recompute rises.
 //!
+//! Each budget is one `anode::api` Session; all sessions share one Engine
+//! (and its compiled-module cache) and load identical initial parameters.
+//!
 //!     make artifacts && cargo run --release --example memory_budget
 
+use anode::api::{Engine, SessionConfig};
 use anode::checkpoint::{min_recomputations, plan, Strategy};
-use anode::coordinator::Coordinator;
 use anode::data::SyntheticCifar;
-use anode::memory::{human_bytes, MemoryLedger};
-use anode::models::{Arch, GradMethod, ModelConfig, Solver};
-use anode::runtime::ArtifactRegistry;
+use anode::memory::{human_bytes, Category};
 use anode::tensor::Tensor;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let reg = ArtifactRegistry::open(std::path::Path::new("artifacts"))?;
-    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10)?;
+    let engine = Engine::builder().artifacts("artifacts").build()?;
+    let cfg = engine.config().clone();
     let nt = cfg.nt;
     let batch = cfg.batch;
 
@@ -30,24 +31,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     let mut reference: Option<Vec<Tensor>> = None;
-    let methods = [
-        (GradMethod::Anode, nt as u64),
-        (GradMethod::AnodeRevolve(3), min_recomputations(nt, 3)),
-        (GradMethod::AnodeRevolve(2), min_recomputations(nt, 2)),
-        (GradMethod::AnodeRevolve(1), min_recomputations(nt, 1)),
-        (GradMethod::AnodeEquispaced(2), plan(Strategy::Equispaced(2), nt).forward_evals() as u64),
+    let methods: [(&str, u64); 5] = [
+        ("anode", nt as u64),
+        ("anode-revolve3", min_recomputations(nt, 3)),
+        ("anode-revolve2", min_recomputations(nt, 2)),
+        ("anode-revolve1", min_recomputations(nt, 1)),
+        ("anode-equispaced2", plan(Strategy::Equispaced(2), nt).forward_evals() as u64),
     ];
     for (method, evals) in methods {
-        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method)?;
-        let params = co.load_params()?;
-        let mut ledger = MemoryLedger::new();
-        let (_, _, grads) = co.loss_and_grad(&imgs, &y, &params, &mut ledger)?;
+        let mut session = engine.session(SessionConfig::with_method(method))?;
+        let (_, _, grads) = session.loss_and_grad(&imgs, &y)?;
         let gnorm: f32 = grads.iter().map(|g| g.norm2()).sum();
         println!(
             "{:<22} {:>16} {:>16} {:>14} {:>12.5}",
-            method.name(),
-            human_bytes(ledger.peak_of(anode::memory::Category::BlockInput)),
-            human_bytes(ledger.peak_of(anode::memory::Category::StepState)),
+            method,
+            human_bytes(session.memory().peak_of(Category::BlockInput)),
+            human_bytes(session.memory().peak_of(Category::StepState)),
             evals,
             gnorm
         );
@@ -61,8 +60,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     .fold(0.0f32, f32::max);
                 assert!(
                     max_rel < 2e-4,
-                    "{}: gradient deviates from ANODE by {max_rel}",
-                    method.name()
+                    "{method}: gradient deviates from ANODE by {max_rel}"
                 );
             }
         }

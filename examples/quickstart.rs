@@ -1,63 +1,85 @@
-//! Quickstart: load the AOT artifacts, run one ODE block forward, compute
-//! its ANODE (DTO) gradient, and cross-check against finite differences.
+//! Quickstart for the `anode::api` façade: build an Engine over the AOT
+//! artifacts, open a Session, then train → evaluate → predict — the whole
+//! lifecycle in one session, no raw registry or coordinator in sight.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
-use anode::rng::Rng;
-use anode::runtime::ArtifactRegistry;
-use anode::tensor::Tensor;
+use anode::api::{make_eval_batches, Engine, SessionConfig};
+use anode::data::{Batcher, SyntheticCifar};
+use anode::util::cli::Args;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let reg = ArtifactRegistry::open(std::path::Path::new("artifacts"))?;
-    println!("manifest: {} modules", reg.module_names().len());
+    let args = Args::from_env();
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let steps: usize = args.get_parse_or("steps", 8);
+    args.warn_unknown();
 
-    // 1. Run the tiny ODE block forward: z(1) = z(0) + ∫ f(z, θ) dt.
-    let fwd = "tiny_euler_nt4_fwd";
-    let spec = reg.module_spec(fwd)?.clone();
-    let mut rng = Rng::new(7);
-    let inputs: Vec<Tensor> = spec
-        .inputs
-        .iter()
-        .map(|s| {
-            let n: usize = s.shape.iter().product();
-            Tensor::from_vec(s.shape.clone(), rng.normal_vec(n).iter().map(|x| x * 0.2).collect())
-                .unwrap()
-        })
-        .collect();
-    let refs: Vec<&Tensor> = inputs.iter().collect();
-    let z1 = reg.call(fwd, &refs)?.remove(0);
+    // 1. Engine: opens the registry once, validates the manifest eagerly,
+    //    and resolves every module into typed handles.
+    let engine = Engine::builder().artifacts(&artifacts).build()?;
+    let cfg = engine.config().clone();
     println!(
-        "forward:  z0 {:?} -> z1 {:?}  (norm {:.4})",
-        inputs[0].shape(),
-        z1.shape(),
-        z1.norm2()
+        "engine: arch={} classes={} batch={} nt={} ({} typed module handles)",
+        cfg.arch.name(),
+        cfg.num_classes,
+        cfg.batch,
+        cfg.nt,
+        engine.modules().handle_count()
     );
 
-    // 2. ANODE gradient: reverse-mode through the discrete solver (DTO).
-    let g = Tensor::full(z1.shape(), 1.0); // dL/dz1 for L = sum(z1)
-    let mut vjp_in = refs.clone();
-    vjp_in.push(&g);
-    let grads = reg.call("tiny_euler_nt4_vjp", &vjp_in)?;
+    // 2. Session: owns parameters + optimizer; the gradient method is a
+    //    strategy object resolved by name from the engine's registry.
+    let mut session = engine.session(SessionConfig::with_method("anode"))?;
+    println!("session: method={} (registered: {})", session.method_name(),
+             engine.strategies().names().join(", "));
+
+    // 3. Train a few steps on synthetic CIFAR.
+    let ds = SyntheticCifar::new(cfg.num_classes, 7, 0.12);
+    let (train_imgs, train_labels) = ds.generate(cfg.batch * 4, 1);
+    let (test_imgs, test_labels) = ds.generate(cfg.batch * 2, 2);
+    let mut train = Batcher::new(train_imgs, train_labels, cfg.batch, true, 3);
+    let eval = make_eval_batches(&test_imgs, &test_labels, cfg.batch, 2);
+
+    for _ in 0..steps {
+        let batch = train.next_batch();
+        let s = session.step(&batch.images, &batch.labels)?;
+        println!(
+            "step {:>3}: loss {:.4} acc {:>5.1}% |g| {:.3} ({:.0} ms)",
+            s.step,
+            s.loss,
+            s.batch_accuracy * 100.0,
+            s.grad_norm,
+            s.seconds * 1e3
+        );
+    }
+
+    // 4. Evaluate over the held-out batches (inference path — no gradient
+    //    bookkeeping).
+    let e = session.evaluate(&eval)?;
     println!(
-        "backward: dL/dz0 norm {:.4}, {} parameter grads",
-        grads[0].norm2(),
-        grads.len() - 1
+        "eval: loss {:.4} acc {:>5.1}% over {} batches ({:.0} ms)",
+        e.loss,
+        e.accuracy * 100.0,
+        e.batches,
+        e.seconds * 1e3
     );
 
-    // 3. Finite-difference check on one coordinate.
-    let idx = 42;
-    let eps = 1e-3f32;
-    let sum = |t: &Tensor| t.data().iter().map(|&x| x as f64).sum::<f64>();
-    let mut plus = inputs.clone();
-    plus[0].data_mut()[idx] += eps;
-    let mut minus = inputs.clone();
-    minus[0].data_mut()[idx] -= eps;
-    let fp = sum(&reg.call(fwd, &plus.iter().collect::<Vec<_>>())?[0]);
-    let fm = sum(&reg.call(fwd, &minus.iter().collect::<Vec<_>>())?[0]);
-    let fd = ((fp - fm) / (2.0 * eps as f64)) as f32;
-    let ad = grads[0].data()[idx];
-    println!("fd check: finite-diff {fd:.5} vs adjoint {ad:.5} (|Δ| {:.2e})", (fd - ad).abs());
-    assert!((fd - ad).abs() < 1e-2 * (1.0 + ad.abs()));
+    // 5. Predict: the batched serving path, with per-call stats.
+    let (x, y) = &eval[0];
+    let p = session.predict(x)?;
+    let truth: Vec<usize> = y.data().iter().map(|&v| v as usize).collect();
+    let agree = p.classes.iter().zip(&truth).filter(|(a, b)| a == b).count();
+    println!(
+        "predict: batch={} latency {:.1} ms ({:.0} ex/s, peak act {}B) — {}/{} match labels",
+        p.stats.batch,
+        p.stats.seconds * 1e3,
+        p.stats.examples_per_sec,
+        p.stats.peak_activation_bytes,
+        agree,
+        truth.len()
+    );
+    println!("logits shape {:?}; first row: {:?}", p.logits.shape(),
+             &p.logits.data()[..cfg.num_classes.min(10)]);
     println!("quickstart OK");
     Ok(())
 }

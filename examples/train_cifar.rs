@@ -1,8 +1,8 @@
 //! End-to-end training driver (the EXPERIMENTS.md validation run): train an
-//! ODE-ResNet on synthetic CIFAR-10 for a few hundred steps with the ANODE
-//! coordinator and log the loss curve. All three layers compose here:
-//! Pallas conv kernels (L1) inside AOT-lowered JAX ODE blocks (L2) driven
-//! by the Rust checkpointing coordinator (L3).
+//! ODE-ResNet on synthetic CIFAR-10 for a few hundred steps through the
+//! `anode::api` façade and log the loss curve. All three layers compose
+//! here: Pallas conv kernels (L1) inside AOT-lowered JAX ODE blocks (L2)
+//! driven by the Rust Engine/Session checkpointing stack (L3).
 //!
 //!     make artifacts && cargo run --release --example train_cifar -- \
 //!         --steps 300 --method anode
@@ -10,21 +10,20 @@
 //! Options: --arch resnet|sqnxt --solver euler|rk2 --method anode|node|otd|
 //!          anode-revolve<m> --steps N --classes 10|100 --csv PATH
 
+use anode::api::open_artifacts;
 use anode::harness::{train_figure, TrainFigOptions};
 use anode::memory::human_bytes;
 use anode::metrics::{format_table, write_csv};
 use anode::models::{Arch, GradMethod, Solver};
-use anode::runtime::ArtifactRegistry;
 use anode::util::cli::Args;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args = Args::from_env();
-    let reg =
-        ArtifactRegistry::open(std::path::Path::new(&args.get_or("artifacts", "artifacts")))?;
+    let reg = open_artifacts(args.get_or("artifacts", "artifacts"))?;
     let opts = TrainFigOptions {
-        arch: Arch::parse(&args.get_or("arch", "resnet")).expect("bad --arch"),
-        solver: Solver::parse(&args.get_or("solver", "euler")).expect("bad --solver"),
-        method: GradMethod::parse(&args.get_or("method", "anode")).expect("bad --method"),
+        arch: Arch::parse(&args.get_or("arch", "resnet")).ok_or("bad --arch")?,
+        solver: Solver::parse(&args.get_or("solver", "euler")).ok_or("bad --solver")?,
+        method: GradMethod::parse(&args.get_or("method", "anode")).ok_or("bad --method")?,
         num_classes: args.get_parse_or("classes", 10),
         train_size: args.get_parse_or("train-size", 2048),
         test_size: args.get_parse_or("test-size", 512),
@@ -34,6 +33,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         seed: args.get_parse_or("seed", 0),
         verbose: true,
     };
+    let csv = args.get("csv").map(|s| s.to_string());
+    args.warn_unknown();
     println!(
         "training {} / {} / {} on synthetic CIFAR-{} ({} examples, {} steps)",
         opts.arch.name(),
@@ -52,8 +53,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         run.sec_per_step,
         human_bytes(run.peak_activation_bytes)
     );
-    if let Some(csv) = args.get("csv") {
-        write_csv(std::path::Path::new(csv), &[run.curve])?;
+    if let Some(csv) = csv {
+        write_csv(std::path::Path::new(&csv), &[run.curve])?;
         println!("curve written to {csv}");
     }
     Ok(())

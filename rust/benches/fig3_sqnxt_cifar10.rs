@@ -7,10 +7,10 @@
 use anode::harness::{train_figure, TrainFigOptions};
 use anode::metrics::format_table;
 use anode::models::{Arch, GradMethod, Solver};
-use anode::runtime::ArtifactRegistry;
+use anode::api::open_artifacts;
 
 fn main() {
-    let Ok(reg) = ArtifactRegistry::open(std::path::Path::new("artifacts")) else {
+    let Ok(reg) = open_artifacts("artifacts") else {
         eprintln!("artifacts/ missing — run `make artifacts`");
         return;
     };

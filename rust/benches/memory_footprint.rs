@@ -1,13 +1,12 @@
 //! Bench + regeneration of the §V memory table: modeled peaks over (L, Nt)
-//! plus LIVE ledger measurements from real coordinator backward passes.
+//! plus LIVE ledger measurements from real backward passes through the
+//! `anode::api` façade.
 //! Requires `make artifacts`. `cargo bench --bench memory_footprint`
 
-use anode::coordinator::Coordinator;
+use anode::api::{Engine, SessionConfig};
 use anode::data::SyntheticCifar;
 use anode::harness::{format_memtable, memory_table};
-use anode::memory::{human_bytes, Category, MemoryLedger};
-use anode::models::{Arch, GradMethod, ModelConfig, Solver};
-use anode::runtime::ArtifactRegistry;
+use anode::memory::{human_bytes, Category};
 use anode::tensor::Tensor;
 
 fn main() {
@@ -16,13 +15,12 @@ fn main() {
     let rows = memory_table(&[6, 8, 16], &[5, 16, 32], &[2, 4], act);
     println!("{}", format_memtable(&rows));
 
-    let Ok(reg) = ArtifactRegistry::open(std::path::Path::new("artifacts")) else {
+    let Ok(engine) = Engine::builder().artifacts("artifacts").build() else {
         eprintln!("artifacts/ missing — skipping live measurement");
         return;
     };
     println!("=== live ledger measurement (ResNet, Euler, one batch) ===\n");
-    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
-    let batch = cfg.batch;
+    let batch = engine.config().batch;
     let ds = SyntheticCifar::new(10, 3, 0.1);
     let (imgs, labels) = ds.generate(batch, 0);
     let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
@@ -31,22 +29,15 @@ fn main() {
         "{:<22} {:>16} {:>16} {:>12}",
         "method", "block_input peak", "step_state peak", "wall"
     );
-    for method in [
-        GradMethod::Anode,
-        GradMethod::AnodeRevolve(3),
-        GradMethod::AnodeRevolve(1),
-        GradMethod::Node,
-    ] {
-        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
-        let params = co.load_params().unwrap();
-        let mut ledger = MemoryLedger::new();
+    for method in ["anode", "anode-revolve3", "anode-revolve1", "node"] {
+        let mut session = engine.session(SessionConfig::with_method(method)).unwrap();
         let t0 = std::time::Instant::now();
-        co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap();
+        session.loss_and_grad(&imgs, &y).unwrap();
         println!(
             "{:<22} {:>16} {:>16} {:>12.2?}",
-            method.name(),
-            human_bytes(ledger.peak_of(Category::BlockInput)),
-            human_bytes(ledger.peak_of(Category::StepState)),
+            method,
+            human_bytes(session.memory().peak_of(Category::BlockInput)),
+            human_bytes(session.memory().peak_of(Category::StepState)),
             t0.elapsed()
         );
     }

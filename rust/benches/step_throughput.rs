@@ -1,23 +1,21 @@
 //! §V compute-cost claim: "ANODE has the same computational cost as the
-//! neural ODE of [8]" — wall-clock per gradient computation, per method.
+//! neural ODE of [8]" — wall-clock per gradient computation, per method,
+//! through the `anode::api` façade. Also times the batched inference path
+//! (`Session::predict`), the serving-side number.
 //! Requires `make artifacts`. `cargo bench --bench step_throughput`
 
-use anode::coordinator::Coordinator;
+use anode::api::{Engine, SessionConfig};
 use anode::data::SyntheticCifar;
-use anode::memory::MemoryLedger;
-use anode::models::{Arch, GradMethod, ModelConfig, Solver};
-use anode::runtime::ArtifactRegistry;
 use anode::tensor::Tensor;
 use anode::util::bench::bench;
 
 fn main() {
-    let Ok(reg) = ArtifactRegistry::open(std::path::Path::new("artifacts")) else {
+    let Ok(engine) = Engine::builder().artifacts("artifacts").build() else {
         eprintln!("artifacts/ missing — run `make artifacts`");
         return;
     };
     println!("=== §V — per-step gradient cost by method (ResNet, Euler, B=32) ===\n");
-    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
-    let batch = cfg.batch;
+    let batch = engine.config().batch;
     let ds = SyntheticCifar::new(10, 3, 0.1);
     let (imgs, labels) = ds.generate(batch, 0);
     let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
@@ -25,25 +23,21 @@ fn main() {
     let mut anode_time = None;
     let mut node_time = None;
     for method in [
-        GradMethod::Anode,
-        GradMethod::Node,
-        GradMethod::Otd,
-        GradMethod::AnodeRevolve(3),
-        GradMethod::AnodeRevolve(1),
-        GradMethod::AnodeEquispaced(2),
+        "anode",
+        "node",
+        "otd",
+        "anode-revolve3",
+        "anode-revolve1",
+        "anode-equispaced2",
     ] {
-        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
-        let params = co.load_params().unwrap();
-        let stats = bench(&format!("loss_and_grad[{}]", method.name()), 1, 3, || {
-            let mut ledger = MemoryLedger::new();
-            anode::util::bench::black_box(
-                co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap(),
-            );
+        let mut session = engine.session(SessionConfig::with_method(method)).unwrap();
+        let stats = bench(&format!("loss_and_grad[{method}]"), 1, 3, || {
+            anode::util::bench::black_box(session.loss_and_grad(&imgs, &y).unwrap());
         });
         println!("{}", stats.report());
         match method {
-            GradMethod::Anode => anode_time = Some(stats.median),
-            GradMethod::Node => node_time = Some(stats.median),
+            "anode" => anode_time = Some(stats.median),
+            "node" => node_time = Some(stats.median),
             _ => {}
         }
     }
@@ -54,12 +48,16 @@ fn main() {
         );
     }
 
-    // Forward-only throughput for context.
-    let co = Coordinator::new(&reg, cfg, Solver::Euler, GradMethod::Anode).unwrap();
-    let params = co.load_params().unwrap();
-    let stats = bench("forward_only", 1, 3, || {
-        let mut ledger = MemoryLedger::new();
-        anode::util::bench::black_box(co.forward(&imgs, &params, &mut ledger).unwrap());
+    // Serving-side numbers: inference forward and the predict path.
+    let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let stats = bench("predict(batched inference)", 1, 3, || {
+        anode::util::bench::black_box(session.predict(&imgs).unwrap());
     });
     println!("{}", stats.report());
+    if let Ok(p) = session.predict(&imgs) {
+        println!(
+            "predict: {:.0} examples/s, peak rolling activation {}B",
+            p.stats.examples_per_sec, p.stats.peak_activation_bytes
+        );
+    }
 }

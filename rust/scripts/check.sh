@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 gate for the Rust workspace: formatting, lints, tests.
+#
+#   bash rust/scripts/check.sh          # from the repo root
+#
+# Mirrors what CI runs (and what ROADMAP.md documents as the tier-1
+# verify). Artifacts are NOT required: integration tests skip gracefully
+# when artifacts/manifest.json is absent, and the offline build links the
+# vendored xla stub (rust/vendor/xla-stub).
+
+set -euo pipefail
+
+cd "$(dirname "$0")/../.."   # repo root (holds the workspace Cargo.toml)
+
+echo "== cargo fmt --check =="
+cargo fmt --all --check
+
+echo "== cargo clippy -D warnings =="
+cargo clippy --workspace --all-targets -- -D warnings
+
+echo "== cargo test -q =="
+cargo test -q --workspace
+
+echo "== OK: fmt + clippy + tests clean =="

@@ -1,0 +1,216 @@
+//! # `anode::api` — the crate's public surface
+//!
+//! A typed Engine/Session façade over the artifact registry and the
+//! checkpointing coordinator:
+//!
+//! ```text
+//! EngineBuilder ──build()──▶ Engine ──session(cfg)──▶ Session
+//!   artifacts dir             owns ArtifactRegistry     owns params + SGD
+//!   arch/classes/solver       eager manifest check      step / fit / evaluate
+//!                             typed ModuleHandles       predict / gradcheck
+//!                             StrategyRegistry
+//! ```
+//!
+//! * **Eager validation** — `EngineBuilder::build` opens the manifest once
+//!   and resolves every module the configuration can touch into typed
+//!   [`ModuleHandle`]s. A missing artifact is a build-time error naming the
+//!   module, not a mid-training lookup failure.
+//! * **Pluggable gradients** — the adjoint method is a
+//!   [`GradientStrategy`] object resolved by name through the engine's
+//!   [`StrategyRegistry`]. The five paper methods (`anode`,
+//!   `anode-revolve<m>`, `anode-equispaced<m>`, `node`, `otd`) are built
+//!   in; new methods register a factory and require no coordinator edits.
+//! * **Serving path** — [`Session::predict`] runs batched inference over
+//!   pre-batched tensors with per-call latency/memory stats, via an
+//!   inference-only forward that pays zero gradient bookkeeping.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use anode::api::{Engine, SessionConfig};
+//!
+//! let engine = Engine::builder().artifacts("artifacts").build()?;
+//! let mut session = engine.session(SessionConfig::with_method("anode"))?;
+//! // session.step(&images, &labels)?;     // train
+//! // session.evaluate(&eval_batches)?;    // measure
+//! // session.predict(&images)?;           // serve
+//! # Ok::<(), anode::runtime::RuntimeError>(())
+//! ```
+
+pub mod modules;
+pub mod session;
+pub mod strategy;
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use crate::models::{ModelConfig, ParamIndex};
+use crate::runtime::ArtifactRegistry;
+
+pub use crate::data::make_eval_batches;
+pub use crate::models::{Arch, GradMethod, Solver};
+pub use crate::optim::LrSchedule;
+pub use crate::runtime::{Result, RuntimeError};
+pub use modules::{ModuleHandle, ModuleSet, StageModules};
+pub use session::{
+    argmax_rows, head_logits, EvalStats, FitOptions, FitReport, GradCheckReport, PredictStats,
+    Prediction, Session, SessionConfig, StepStats,
+};
+pub use strategy::{BlockContext, GradientStrategy, ModuleExec, StrategyRegistry};
+
+/// Open an artifact registry for sharing across several engines (the
+/// compiled-module cache is per-registry, so multi-config drivers should
+/// open once and pass the handle to each [`EngineBuilder::registry`]).
+pub fn open_artifacts(dir: impl AsRef<Path>) -> Result<Rc<ArtifactRegistry>> {
+    Ok(Rc::new(ArtifactRegistry::open(dir.as_ref())?))
+}
+
+/// Builder for [`Engine`]: where the artifacts live and which model
+/// configuration to validate against.
+pub struct EngineBuilder {
+    artifacts: PathBuf,
+    registry: Option<Rc<ArtifactRegistry>>,
+    arch: Arch,
+    num_classes: usize,
+    solver: Solver,
+    strategies: StrategyRegistry,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self {
+            artifacts: PathBuf::from("artifacts"),
+            registry: None,
+            arch: Arch::Resnet,
+            num_classes: 10,
+            solver: Solver::Euler,
+            strategies: StrategyRegistry::builtin(),
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Directory holding `manifest.json`, `params.bin` and the HLO
+    /// artifacts (default: `artifacts`). Ignored if
+    /// [`EngineBuilder::registry`] supplies an open registry.
+    pub fn artifacts(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Share an already-open registry (and its compiled-module cache)
+    /// instead of opening `artifacts` again.
+    pub fn registry(mut self, reg: Rc<ArtifactRegistry>) -> Self {
+        self.registry = Some(reg);
+        self
+    }
+
+    /// Architecture family (default: ResNet-like).
+    pub fn arch(mut self, arch: Arch) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// Classifier width (default: 10).
+    pub fn classes(mut self, num_classes: usize) -> Self {
+        self.num_classes = num_classes;
+        self
+    }
+
+    /// ODE solver baked into the block artifacts (default: Euler).
+    pub fn solver(mut self, solver: Solver) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    /// Replace the strategy registry (e.g. to add custom gradient
+    /// methods before any session exists).
+    pub fn strategies(mut self, strategies: StrategyRegistry) -> Self {
+        self.strategies = strategies;
+        self
+    }
+
+    /// Open (or adopt) the registry, validate the manifest against the
+    /// requested configuration, and resolve every module name into typed
+    /// handles. All validation is eager: a broken or incomplete artifact
+    /// set fails here, with the offending module/param named.
+    pub fn build(self) -> Result<Engine> {
+        let reg = match self.registry {
+            Some(r) => r,
+            None => Rc::new(ArtifactRegistry::open(&self.artifacts)?),
+        };
+        let cfg = ModelConfig::from_registry(&reg, self.arch, self.num_classes)?;
+        // Params: key exists and its layout matches the model structure.
+        let layout = reg.param_layout(&cfg.params_key())?;
+        let _ = ParamIndex::from_layout(layout, &cfg)?;
+        // Modules: every reachable name resolves, with arity captured.
+        let modules = ModuleSet::resolve(&reg, &cfg, self.solver)?;
+        Ok(Engine { reg, cfg, solver: self.solver, modules, strategies: self.strategies })
+    }
+}
+
+/// A validated, ready-to-serve model configuration: the open artifact
+/// registry, the resolved module handles, and the gradient-strategy
+/// registry. Sessions borrow the engine, so one engine can back many
+/// concurrent sessions sharing one compiled-module cache.
+pub struct Engine {
+    reg: Rc<ArtifactRegistry>,
+    cfg: ModelConfig,
+    solver: Solver,
+    modules: ModuleSet,
+    strategies: StrategyRegistry,
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Open a training/inference session with its own parameters and
+    /// optimizer state. Fails fast if the manifest lacks the block-module
+    /// kinds the configured gradient strategy needs.
+    pub fn session(&self, config: SessionConfig) -> Result<Session<'_>> {
+        Session::new(self, config)
+    }
+
+    /// Model shape (read from the manifest at build time).
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// The ODE solver this engine's block artifacts were lowered with.
+    pub fn solver(&self) -> Solver {
+        self.solver
+    }
+
+    /// Resolved module handles.
+    pub fn modules(&self) -> &ModuleSet {
+        &self.modules
+    }
+
+    /// The gradient-strategy registry.
+    pub fn strategies(&self) -> &StrategyRegistry {
+        &self.strategies
+    }
+
+    /// Mutable registry access, to plug in strategies after build.
+    pub fn strategies_mut(&mut self) -> &mut StrategyRegistry {
+        &mut self.strategies
+    }
+
+    /// Borrow the underlying artifact registry (advanced: direct module
+    /// calls outside the model structure, e.g. the tiny gradcheck blocks).
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.reg
+    }
+
+    /// Share the registry with another engine builder.
+    pub fn shared_registry(&self) -> Rc<ArtifactRegistry> {
+        self.reg.clone()
+    }
+}

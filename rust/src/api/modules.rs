@@ -1,0 +1,169 @@
+//! Typed module resolution — the `api` layer that replaces the seed's
+//! scattered `format!("trans{s}_fwd")` string lookups.
+//!
+//! [`ModuleSet::resolve`] walks the model structure once, at engine build
+//! time, and turns every module the model can ever need into a validated
+//! [`ModuleHandle`]. Anything missing from the manifest is reported
+//! eagerly, with the module name and the config that wanted it, instead of
+//! surfacing as a mid-training lookup failure.
+
+use std::collections::HashMap;
+
+use crate::models::{ModelConfig, Solver};
+use crate::runtime::{ArtifactRegistry, Result, RuntimeError};
+
+/// A module name that has been checked against the artifact manifest.
+///
+/// Holding a `ModuleHandle` is proof that the module exists and records its
+/// manifest arity, so call sites get typed errors instead of stringly-typed
+/// lookups.
+#[derive(Debug, Clone)]
+pub struct ModuleHandle {
+    name: String,
+    n_inputs: usize,
+    n_outputs: usize,
+}
+
+impl ModuleHandle {
+    /// Resolve `name` against the manifest, capturing its arity.
+    pub fn resolve(reg: &ArtifactRegistry, name: &str) -> Result<Self> {
+        let spec = reg.module_spec(name).map_err(|_| {
+            RuntimeError::Io(format!(
+                "manifest has no module `{name}` — re-run `make artifacts`"
+            ))
+        })?;
+        Ok(Self {
+            name: name.to_string(),
+            n_inputs: spec.inputs.len(),
+            n_outputs: spec.outputs.len(),
+        })
+    }
+
+    /// The manifest module name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of inputs the manifest declares.
+    pub fn n_inputs(&self) -> usize {
+        self.n_inputs
+    }
+
+    /// Number of outputs the manifest declares.
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+}
+
+/// The block-module kinds a gradient strategy can ask for.
+///
+/// `fwd` is required of every config; the rest are resolved when present
+/// and demanded lazily by [`StageModules::require`].
+pub const BLOCK_KINDS: [&str; 6] = ["fwd", "vjp", "step_fwd", "step_vjp", "node", "otd"];
+
+/// Resolved ODE-block modules for one stage, keyed by kind.
+#[derive(Debug, Clone)]
+pub struct StageModules {
+    stage: usize,
+    kinds: HashMap<&'static str, ModuleHandle>,
+}
+
+impl StageModules {
+    /// Handle for `kind` if the manifest provides it.
+    pub fn get(&self, kind: &str) -> Option<&ModuleHandle> {
+        self.kinds.get(kind)
+    }
+
+    /// Handle for `kind`, or a typed error naming the stage and kind —
+    /// raised when a gradient strategy demands artifacts the manifest
+    /// was not built with.
+    pub fn require(&self, kind: &str) -> Result<&ModuleHandle> {
+        self.kinds.get(kind).ok_or_else(|| {
+            RuntimeError::Io(format!(
+                "stage {}: no `{kind}` block module in manifest — \
+                 re-run `make artifacts` with this kind enabled",
+                self.stage
+            ))
+        })
+    }
+
+    /// Kinds the manifest provides for this stage (sorted).
+    pub fn available_kinds(&self) -> Vec<&'static str> {
+        let mut v: Vec<&'static str> = self.kinds.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Transition modules between two stages.
+#[derive(Debug, Clone)]
+pub struct TransModules {
+    pub fwd: ModuleHandle,
+    pub vjp: ModuleHandle,
+}
+
+/// Every module a `(arch, solver, num_classes)` configuration can touch,
+/// resolved and arity-checked against the manifest in one eager pass.
+#[derive(Debug, Clone)]
+pub struct ModuleSet {
+    pub stem_fwd: ModuleHandle,
+    pub stem_vjp: ModuleHandle,
+    /// trans[s] sits between stage s and s+1.
+    pub trans: Vec<TransModules>,
+    pub head_loss_grad: ModuleHandle,
+    pub head_eval: ModuleHandle,
+    /// stages[s] = the ODE-block modules of stage s, by kind.
+    pub stages: Vec<StageModules>,
+}
+
+impl ModuleSet {
+    /// Resolve the full module surface for `cfg` under `solver`.
+    ///
+    /// Required: stem fwd/vjp, every transition fwd/vjp, both head modules
+    /// and each stage's `fwd` block. Optional kinds (`vjp`, `step_fwd`,
+    /// `step_vjp`, `node`, `otd`) are resolved when present; gradient
+    /// strategies demand them at session creation via
+    /// [`StageModules::require`].
+    pub fn resolve(reg: &ArtifactRegistry, cfg: &ModelConfig, solver: Solver) -> Result<Self> {
+        let stem_fwd = ModuleHandle::resolve(reg, "stem_fwd")?;
+        let stem_vjp = ModuleHandle::resolve(reg, "stem_vjp")?;
+
+        let mut trans = Vec::new();
+        for s in 0..cfg.stages().saturating_sub(1) {
+            trans.push(TransModules {
+                fwd: ModuleHandle::resolve(reg, &format!("trans{s}_fwd"))?,
+                vjp: ModuleHandle::resolve(reg, &format!("trans{s}_vjp"))?,
+            });
+        }
+
+        let head_loss_grad =
+            ModuleHandle::resolve(reg, &format!("head{}_loss_grad", cfg.num_classes))?;
+        let head_eval = ModuleHandle::resolve(reg, &format!("head{}_eval", cfg.num_classes))?;
+
+        let mut stages = Vec::new();
+        for s in 0..cfg.stages() {
+            let mut kinds = HashMap::new();
+            for kind in BLOCK_KINDS {
+                let name = cfg.block_module(s, solver, kind);
+                if reg.has_module(&name) {
+                    kinds.insert(kind, ModuleHandle::resolve(reg, &name)?);
+                } else if kind == "fwd" {
+                    return Err(RuntimeError::Io(format!(
+                        "manifest has no module `{name}` (required forward block for \
+                         arch={} solver={} stage={s}) — re-run `make artifacts`",
+                        cfg.arch.name(),
+                        solver.name()
+                    )));
+                }
+            }
+            stages.push(StageModules { stage: s, kinds });
+        }
+
+        Ok(Self { stem_fwd, stem_vjp, trans, head_loss_grad, head_eval, stages })
+    }
+
+    /// Total number of resolved handles (diagnostics).
+    pub fn handle_count(&self) -> usize {
+        4 + 2 * self.trans.len() + self.stages.iter().map(|s| s.kinds.len()).sum::<usize>()
+    }
+}

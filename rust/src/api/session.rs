@@ -1,0 +1,541 @@
+//! Sessions — stateful handles over an [`Engine`](super::Engine) that own
+//! parameters and optimizer state, and expose training (`step`, `fit`,
+//! `evaluate`), gradient validation (`gradcheck`) and the batched
+//! inference path (`predict`) with per-call latency/memory stats.
+
+use std::time::Instant;
+
+use crate::coordinator::Coordinator;
+use crate::data::Batcher;
+use crate::memory::{Category, MemoryLedger};
+use crate::metrics::{Curve, CurvePoint, Mean};
+use crate::optim::{LrSchedule, Sgd};
+use crate::runtime::{Result, RuntimeError};
+use crate::tensor::Tensor;
+
+use super::Engine;
+
+/// Per-session configuration: which gradient strategy backs `step`, and the
+/// optimizer hyperparameters.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Gradient-strategy spec resolved through the engine's
+    /// [`StrategyRegistry`](super::strategy::StrategyRegistry), e.g.
+    /// `"anode"`, `"anode-revolve3"`, `"node"`.
+    pub method: String,
+    pub lr: LrSchedule,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// Global gradient-norm clip; `None` disables clipping.
+    pub clip_norm: Option<f32>,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            method: "anode".into(),
+            lr: LrSchedule::Constant(0.02),
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            clip_norm: Some(5.0),
+        }
+    }
+}
+
+impl SessionConfig {
+    /// Default hyperparameters with the given gradient method.
+    pub fn with_method(method: impl Into<String>) -> Self {
+        Self { method: method.into(), ..Self::default() }
+    }
+}
+
+/// Outcome of one optimizer step.
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    /// 1-based step index after this call.
+    pub step: usize,
+    pub loss: f32,
+    /// Fraction of the batch classified correctly (pre-update parameters).
+    pub batch_accuracy: f32,
+    /// Pre-clip global gradient norm (0 when the step was skipped).
+    pub grad_norm: f32,
+    pub lr: f32,
+    pub seconds: f64,
+    /// False when loss/grads were non-finite; the update was skipped.
+    pub finite: bool,
+}
+
+/// Outcome of an evaluation sweep.
+#[derive(Debug, Clone)]
+pub struct EvalStats {
+    /// Mean per-batch loss.
+    pub loss: f32,
+    pub accuracy: f32,
+    pub batches: usize,
+    pub seconds: f64,
+}
+
+/// Per-call serving stats for [`Session::predict`].
+#[derive(Debug, Clone)]
+pub struct PredictStats {
+    /// Examples in the batch.
+    pub batch: usize,
+    pub seconds: f64,
+    pub examples_per_sec: f64,
+    /// Modeled peak of the rolling activation (max stage activation from
+    /// the manifest shapes) — a closed-form bound, not a per-call
+    /// measurement; `seconds`/`examples_per_sec` are the measured fields.
+    pub peak_activation_bytes: usize,
+}
+
+/// Result of one batched inference call.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// Predicted class per example.
+    pub classes: Vec<usize>,
+    /// Raw logits, shape (batch, num_classes).
+    pub logits: Tensor,
+    pub stats: PredictStats,
+}
+
+/// Result of [`Session::gradcheck`]: this session's gradient vs the fused
+/// DTO reference on one batch.
+#[derive(Debug, Clone)]
+pub struct GradCheckReport {
+    /// Strategy under test.
+    pub method: String,
+    /// Reference strategy (the fused `anode` DTO VJP).
+    pub reference: String,
+    /// |loss − loss_ref|.
+    pub loss_gap: f32,
+    /// Max over parameter tensors of ‖g − g_ref‖/‖g_ref‖.
+    pub max_rel_err: f32,
+    /// Mean over parameter tensors of the same.
+    pub mean_rel_err: f32,
+}
+
+/// Options for one [`Session::fit`] run.
+#[derive(Debug, Clone)]
+pub struct FitOptions {
+    pub steps: usize,
+    pub eval_every: usize,
+    /// Stop as soon as the loss goes non-finite (records the divergence).
+    pub stop_on_divergence: bool,
+    pub verbose: bool,
+}
+
+impl Default for FitOptions {
+    fn default() -> Self {
+        Self { steps: 200, eval_every: 25, stop_on_divergence: true, verbose: true }
+    }
+}
+
+/// Outcome of a [`Session::fit`] run.
+pub struct FitReport {
+    pub curve: Curve,
+    pub diverged: bool,
+    pub steps_run: usize,
+    pub wall_seconds: f64,
+    /// Peak activation bytes observed by the ledger.
+    pub peak_activation_bytes: usize,
+    pub peak_block_input_bytes: usize,
+    pub peak_step_state_bytes: usize,
+    /// Mean seconds per training step.
+    pub sec_per_step: f64,
+}
+
+/// A stateful training/inference handle over an [`Engine`].
+///
+/// Owns the parameter vector, optimizer state and memory ledger; borrows
+/// the engine (and through it the artifact registry and compiled-module
+/// cache), so many sessions can share one engine.
+pub struct Session<'e> {
+    engine: &'e Engine,
+    co: Coordinator<'e>,
+    config: SessionConfig,
+    params: Vec<Tensor>,
+    opt: Sgd,
+    ledger: MemoryLedger,
+    step_idx: usize,
+}
+
+impl<'e> Session<'e> {
+    /// Create a session: resolve the strategy, validate its module needs
+    /// against the manifest, load initial parameters.
+    pub(super) fn new(engine: &'e Engine, config: SessionConfig) -> Result<Self> {
+        let strategy = engine.strategies().create(&config.method)?;
+        let co = Coordinator::with_strategy(
+            engine.registry(),
+            engine.config().clone(),
+            engine.solver(),
+            engine.modules().clone(),
+            strategy,
+        )?;
+        let params = co.load_params()?;
+        let opt = Sgd::new(&params, config.lr.at(0), config.momentum, config.weight_decay);
+        let mut ledger = MemoryLedger::new();
+        // Params + optimizer state are persistent allocations.
+        let pbytes: usize = params.iter().map(|p| p.byte_size()).sum();
+        ledger.alloc(pbytes, Category::Param);
+        ledger.alloc(opt.state_bytes(), Category::OptState);
+        Ok(Self { engine, co, config, params, opt, ledger, step_idx: 0 })
+    }
+
+    /// The engine this session runs on.
+    pub fn engine(&self) -> &'e Engine {
+        self.engine
+    }
+
+    /// Canonical name of the configured gradient method.
+    pub fn method_name(&self) -> String {
+        self.co.method_name()
+    }
+
+    /// Session configuration.
+    pub fn config(&self) -> &SessionConfig {
+        &self.config
+    }
+
+    /// Current parameters (canonical order).
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    /// Mutable parameters (e.g. to load a checkpoint).
+    pub fn params_mut(&mut self) -> &mut [Tensor] {
+        &mut self.params
+    }
+
+    /// Optimizer steps taken so far.
+    pub fn steps_taken(&self) -> usize {
+        self.step_idx
+    }
+
+    /// The session's memory ledger (peaks, live bytes).
+    pub fn memory(&self) -> &MemoryLedger {
+        &self.ledger
+    }
+
+    /// Total module executions so far (perf accounting).
+    pub fn module_calls(&self) -> usize {
+        self.co.call_count.get()
+    }
+
+    /// Validate an input batch against the model's compiled shape.
+    fn check_batch(&self, images: &Tensor) -> Result<()> {
+        let cfg = &self.co.cfg;
+        let want = [cfg.batch, cfg.image, cfg.image, 3];
+        if images.shape() != &want[..] {
+            return Err(RuntimeError::Shape(format!(
+                "input batch shape {:?} does not match the compiled model \
+                 (batch, H, W, C) = {want:?} — artifacts are AOT-compiled for a \
+                 fixed batch; re-batch the input or rebuild artifacts",
+                images.shape()
+            )));
+        }
+        Ok(())
+    }
+
+    fn check_labels(&self, labels: &Tensor) -> Result<()> {
+        let want = [self.co.cfg.batch];
+        if labels.shape() != &want[..] {
+            return Err(RuntimeError::Shape(format!(
+                "label shape {:?} does not match {want:?} (f32 class indices)",
+                labels.shape()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Loss + gradients for one batch without applying an update (the
+    /// building block behind `step`, exposed for analysis workloads).
+    pub fn loss_and_grad(
+        &mut self,
+        images: &Tensor,
+        labels: &Tensor,
+    ) -> Result<(f32, f32, Vec<Tensor>)> {
+        self.check_batch(images)?;
+        self.check_labels(labels)?;
+        self.co.loss_and_grad(images, labels, &self.params, &mut self.ledger)
+    }
+
+    /// One training step: forward, strategy backward, clip, SGD update.
+    /// Non-finite losses/gradients skip the update and report
+    /// `finite: false` instead of corrupting the parameters.
+    pub fn step(&mut self, images: &Tensor, labels: &Tensor) -> Result<StepStats> {
+        self.check_batch(images)?;
+        self.check_labels(labels)?;
+        let t0 = Instant::now();
+        let lr = self.config.lr.at(self.step_idx);
+        self.opt.lr = lr;
+        let (loss, correct, mut grads) =
+            self.co.loss_and_grad(images, labels, &self.params, &mut self.ledger)?;
+        let finite = loss.is_finite() && grads.iter().all(|g| g.all_finite());
+        let mut grad_norm = 0.0;
+        if finite {
+            grad_norm = Sgd::clip_grads(&mut grads, self.config.clip_norm.unwrap_or(f32::INFINITY));
+            self.opt.step(&mut self.params, &grads);
+        }
+        self.step_idx += 1;
+        Ok(StepStats {
+            step: self.step_idx,
+            loss,
+            batch_accuracy: correct / self.co.cfg.batch.max(1) as f32,
+            grad_norm,
+            lr,
+            seconds: t0.elapsed().as_secs_f64(),
+            finite,
+        })
+    }
+
+    /// Evaluate over pre-batched data via the inference path (no gradient
+    /// bookkeeping, no ledger traffic).
+    pub fn evaluate(&self, batches: &[(Tensor, Tensor)]) -> Result<EvalStats> {
+        let t0 = Instant::now();
+        let (loss, accuracy) = self.co.evaluate(batches, &self.params)?;
+        Ok(EvalStats { loss, accuracy, batches: batches.len(), seconds: t0.elapsed().as_secs_f64() })
+    }
+
+    /// Batched inference: one pre-batched image tensor in, per-example
+    /// class predictions and logits out, with per-call latency and memory
+    /// stats — the serving-shaped path.
+    pub fn predict(&self, images: &Tensor) -> Result<Prediction> {
+        self.check_batch(images)?;
+        let cfg = &self.co.cfg;
+        let t0 = Instant::now();
+        let z = self.co.forward_infer(images, &self.params)?;
+        let (hw, hb) = self.co.index.head;
+        let logits = head_logits(&z, &self.params[hw], &self.params[hb])?;
+        let classes = argmax_rows(&logits);
+        let seconds = t0.elapsed().as_secs_f64();
+        // Inference holds one rolling activation; peak is the largest stage.
+        let peak_activation_bytes =
+            (0..cfg.stages()).map(|s| cfg.stage_act_bytes(s)).max().unwrap_or(0);
+        Ok(Prediction {
+            classes,
+            logits,
+            stats: PredictStats {
+                batch: cfg.batch,
+                seconds,
+                examples_per_sec: cfg.batch as f64 / seconds.max(1e-12),
+                peak_activation_bytes,
+            },
+        })
+    }
+
+    /// Compare this session's gradient against the fused DTO reference
+    /// (`anode`) on one batch — the §IV consistency check as a serving API.
+    pub fn gradcheck(&mut self, images: &Tensor, labels: &Tensor) -> Result<GradCheckReport> {
+        self.check_batch(images)?;
+        self.check_labels(labels)?;
+        let reference = "anode";
+        let ref_strategy = self.engine.strategies().create(reference)?;
+        let ref_co = Coordinator::with_strategy(
+            self.engine.registry(),
+            self.co.cfg.clone(),
+            self.co.solver,
+            self.engine.modules().clone(),
+            ref_strategy,
+        )?;
+        let mut scratch = MemoryLedger::new();
+        let (loss_ref, _, g_ref) =
+            ref_co.loss_and_grad(images, labels, &self.params, &mut scratch)?;
+        let (loss, _, g) =
+            self.co.loss_and_grad(images, labels, &self.params, &mut self.ledger)?;
+        let mut max_rel = 0.0f32;
+        let mut sum_rel = 0.0f64;
+        for (a, b) in g.iter().zip(&g_ref) {
+            let e = a.rel_err(b).unwrap_or(f32::INFINITY);
+            max_rel = max_rel.max(e);
+            sum_rel += e as f64;
+        }
+        Ok(GradCheckReport {
+            method: self.method_name(),
+            reference: reference.into(),
+            loss_gap: (loss - loss_ref).abs(),
+            max_rel_err: max_rel,
+            mean_rel_err: (sum_rel / g.len().max(1) as f64) as f32,
+        })
+    }
+
+    /// Run the full training loop: `opts.steps` optimizer steps with
+    /// periodic evaluation, divergence detection and curve recording.
+    pub fn fit(
+        &mut self,
+        train: &mut Batcher,
+        eval_batches: &[(Tensor, Tensor)],
+        opts: &FitOptions,
+        series_name: &str,
+    ) -> Result<FitReport> {
+        self.ledger.reset_peaks();
+        let mut curve = Curve::new(series_name);
+        let mut train_loss = Mean::default();
+        let mut diverged = false;
+        let t0 = Instant::now();
+        let mut steps_run = 0;
+        let batches_per_epoch = train.batches_per_epoch().max(1);
+
+        for step in 0..opts.steps {
+            let batch = train.next_batch();
+            let stats = self.step(&batch.images, &batch.labels)?;
+            steps_run = step + 1;
+            train_loss.add(stats.loss);
+            if !stats.finite {
+                diverged = true;
+            }
+
+            let at_eval = (step + 1) % opts.eval_every.max(1) == 0 || step + 1 == opts.steps;
+            if at_eval || diverged {
+                let (tl, ta) = if diverged {
+                    (f32::NAN, curve.points.last().map(|p| p.test_acc).unwrap_or(0.0))
+                } else {
+                    let e = self.evaluate(eval_batches)?;
+                    (e.loss, e.accuracy)
+                };
+                let point = CurvePoint {
+                    step: step + 1,
+                    epoch: (step + 1) as f32 / batches_per_epoch as f32,
+                    train_loss: if diverged { f32::NAN } else { train_loss.value() },
+                    test_loss: tl,
+                    test_acc: ta,
+                };
+                if opts.verbose {
+                    eprintln!(
+                        "[{series_name}] step {:>5} epoch {:>5.2} train_loss {:>9.4} test_loss {:>9.4} test_acc {:>6.2}%{}",
+                        point.step,
+                        point.epoch,
+                        point.train_loss,
+                        point.test_loss,
+                        point.test_acc * 100.0,
+                        if diverged { "  << DIVERGED" } else { "" }
+                    );
+                }
+                curve.push(point);
+                train_loss.reset();
+                if diverged && opts.stop_on_divergence {
+                    break;
+                }
+            }
+        }
+
+        let wall = t0.elapsed().as_secs_f64();
+        Ok(FitReport {
+            diverged: diverged || curve.diverged(),
+            curve,
+            steps_run,
+            wall_seconds: wall,
+            peak_activation_bytes: self.ledger.peak_of(Category::BlockInput)
+                + self.ledger.peak_of(Category::StepState),
+            peak_block_input_bytes: self.ledger.peak_of(Category::BlockInput),
+            peak_step_state_bytes: self.ledger.peak_of(Category::StepState),
+            sec_per_step: wall / steps_run.max(1) as f64,
+        })
+    }
+}
+
+/// Host-side classifier head: global-average-pool `z` (B,H,W,C), then the
+/// dense layer `feat · w + b` (w: (C,K), b: (K)). Mirrors `_head_loss` in
+/// python/compile/model.py, minus the loss — serving needs logits, and
+/// this keeps the AOT surface unchanged.
+pub fn head_logits(z: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if z.rank() != 4 {
+        return Err(RuntimeError::Shape(format!(
+            "head_logits wants rank-4 activations, got {:?}",
+            z.shape()
+        )));
+    }
+    let (bsz, h, wd, c) = (z.shape()[0], z.shape()[1], z.shape()[2], z.shape()[3]);
+    if w.rank() != 2 || w.shape()[0] != c {
+        return Err(RuntimeError::Shape(format!(
+            "head weight {:?} does not match activation channels {c}",
+            w.shape()
+        )));
+    }
+    let k = w.shape()[1];
+    if b.shape() != &[k][..] {
+        return Err(RuntimeError::Shape(format!(
+            "head bias {:?} does not match {k} classes",
+            b.shape()
+        )));
+    }
+
+    let zd = z.data();
+    let wdat = w.data();
+    let bdat = b.data();
+    let hw = (h * wd) as f64;
+    let mut out = vec![0.0f32; bsz * k];
+    let mut feat = vec![0.0f64; c];
+    for bi in 0..bsz {
+        feat.iter_mut().for_each(|f| *f = 0.0);
+        let base = bi * h * wd * c;
+        for px in 0..h * wd {
+            let off = base + px * c;
+            for (ch, f) in feat.iter_mut().enumerate() {
+                *f += zd[off + ch] as f64;
+            }
+        }
+        for f in feat.iter_mut() {
+            *f /= hw;
+        }
+        for j in 0..k {
+            let mut acc = bdat[j] as f64;
+            for (ch, f) in feat.iter().enumerate() {
+                acc += *f * wdat[ch * k + j] as f64;
+            }
+            out[bi * k + j] = acc as f32;
+        }
+    }
+    Tensor::from_vec(vec![bsz, k], out).map_err(|e| RuntimeError::Shape(e.to_string()))
+}
+
+/// Row-wise argmax over a (B, K) tensor.
+pub fn argmax_rows(logits: &Tensor) -> Vec<usize> {
+    let k = *logits.shape().last().unwrap_or(&1);
+    logits
+        .data()
+        .chunks(k.max(1))
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_logits_matches_hand_computation() {
+        // z: (1, 1, 2, 2) -> feat = mean over the 2 pixels per channel.
+        let z = Tensor::from_vec(vec![1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        // feat = [(1+3)/2, (2+4)/2] = [2, 3]
+        let w = Tensor::from_vec(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+        let b = Tensor::from_vec(vec![2], vec![0.5, -0.5]).unwrap();
+        let logits = head_logits(&z, &w, &b).unwrap();
+        assert_eq!(logits.shape(), &[1, 2]);
+        assert!((logits.data()[0] - 2.5).abs() < 1e-6);
+        assert!((logits.data()[1] - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn head_logits_rejects_bad_shapes() {
+        let z = Tensor::zeros(&[2, 4, 4, 8]);
+        let w_bad = Tensor::zeros(&[7, 10]);
+        let b = Tensor::zeros(&[10]);
+        assert!(head_logits(&z, &w_bad, &b).is_err());
+        let w = Tensor::zeros(&[8, 10]);
+        let b_bad = Tensor::zeros(&[9]);
+        assert!(head_logits(&z, &w, &b_bad).is_err());
+        assert!(head_logits(&Tensor::zeros(&[2, 4]), &w, &b).is_err());
+    }
+
+    #[test]
+    fn argmax_rows_picks_max_per_row() {
+        let t = Tensor::from_vec(vec![2, 3], vec![0.1, 0.9, 0.5, 2.0, -1.0, 0.0]).unwrap();
+        assert_eq!(argmax_rows(&t), vec![1, 0]);
+    }
+}

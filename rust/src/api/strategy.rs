@@ -1,0 +1,513 @@
+//! Pluggable gradient strategies — the open axis that replaces the seed's
+//! closed `GradMethod` match in `coordinator/backward.rs`.
+//!
+//! Each adjoint method of the paper is one [`GradientStrategy`] object:
+//!
+//! * `anode` — fused DTO VJP per block (O(Nt) inside the call);
+//! * `anode-revolve<m>` / `anode-equispaced<m>` — step-level artifacts
+//!   driven through a [`crate::checkpoint`] schedule under an m-slot budget;
+//! * `node` — the [8] reverse-time augmented solve;
+//! * `otd` — the inconsistent optimize-then-discretize adjoint (§IV).
+//!
+//! Strategies are constructed by name through a [`StrategyRegistry`], so new
+//! adjoint methods (symplectic adjoints, interpolation schemes, ...) plug in
+//! by registering a factory — no coordinator edits required.
+
+use crate::checkpoint::{plan, run_backward, Strategy as CheckpointStrategy};
+use crate::memory::{Category, MemoryLedger};
+use crate::models::{parse_budget, GradMethod};
+use crate::runtime::{Result, RuntimeError};
+use crate::tensor::Tensor;
+
+use super::modules::{ModuleHandle, StageModules};
+
+/// Executes resolved modules. Implemented by the coordinator; the
+/// indirection keeps strategies independent of coordinator internals.
+pub trait ModuleExec {
+    fn call_module(&self, handle: &ModuleHandle, inputs: &[&Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// Everything a strategy needs to backpropagate through one ODE block.
+pub struct BlockContext<'a> {
+    /// Module executor (the coordinator).
+    pub exec: &'a dyn ModuleExec,
+    /// Resolved block modules of this stage, by kind.
+    pub modules: &'a StageModules,
+    /// Discrete time steps per block.
+    pub nt: usize,
+    /// Block input activation z(0) (stored by the forward pass).
+    pub z_in: &'a Tensor,
+    /// Block output activation z(1) (used by `node` only).
+    pub z_out: &'a Tensor,
+    /// This block's parameter tensors, in artifact order.
+    pub theta: &'a [&'a Tensor],
+    /// Canonical parameter indices matching `theta` (into `grads`).
+    pub pidx: &'a [usize],
+}
+
+/// One adjoint method, dispatched per ODE block in reverse network order.
+pub trait GradientStrategy {
+    /// Canonical spec name (`anode-revolve3`, ...) — round-trips through
+    /// [`StrategyRegistry::create`].
+    fn name(&self) -> String;
+
+    /// Block-module kinds this strategy calls; validated against the
+    /// manifest when a session is created (fail-fast, not mid-backward).
+    fn required_kinds(&self) -> &'static [&'static str];
+
+    /// Backward through one ODE block: consume dL/d(z_out), write this
+    /// block's parameter gradients into `grads[ctx.pidx]`, return
+    /// dL/d(z_in).
+    fn block_backward(
+        &self,
+        ctx: &BlockContext<'_>,
+        gz: Tensor,
+        grads: &mut [Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<Tensor>;
+}
+
+/// Split a VJP output list (gz, gθ...) into the returned gz and the block's
+/// parameter gradients. Arity must match exactly.
+fn distribute(outs: Vec<Tensor>, pidx: &[usize], grads: &mut [Tensor]) -> Result<Tensor> {
+    if outs.len() != pidx.len() + 1 {
+        return Err(RuntimeError::Shape(format!(
+            "vjp output arity mismatch: got {} outputs, expected {} (gz + {} param grads)",
+            outs.len(),
+            pidx.len() + 1,
+            pidx.len()
+        )));
+    }
+    let mut it = outs.into_iter();
+    let gz = it.next().ok_or_else(|| RuntimeError::Shape("vjp returned nothing".into()))?;
+    for &i in pidx {
+        let g = it
+            .next()
+            .ok_or_else(|| RuntimeError::Shape("vjp output arity mismatch".into()))?;
+        grads[i] = g;
+    }
+    Ok(gz)
+}
+
+/// ANODE (the paper): fused DTO VJP, the O(Nt) trajectory lives in the
+/// executable's working set for the duration of the call.
+pub struct AnodeStrategy;
+
+impl GradientStrategy for AnodeStrategy {
+    fn name(&self) -> String {
+        "anode".into()
+    }
+
+    fn required_kinds(&self) -> &'static [&'static str] {
+        &["vjp"]
+    }
+
+    fn block_backward(
+        &self,
+        ctx: &BlockContext<'_>,
+        gz: Tensor,
+        grads: &mut [Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<Tensor> {
+        fused_backward(ctx, "vjp", gz, grads, ledger)
+    }
+}
+
+/// Optimize-then-discretize adjoint (§IV) — same call shape as `anode`,
+/// inconsistent gradient (O(dt) error).
+pub struct OtdStrategy;
+
+impl GradientStrategy for OtdStrategy {
+    fn name(&self) -> String {
+        "otd".into()
+    }
+
+    fn required_kinds(&self) -> &'static [&'static str] {
+        &["otd"]
+    }
+
+    fn block_backward(
+        &self,
+        ctx: &BlockContext<'_>,
+        gz: Tensor,
+        grads: &mut [Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<Tensor> {
+        fused_backward(ctx, "otd", gz, grads, ledger)
+    }
+}
+
+/// Shared body of the fused strategies: one artifact call whose working set
+/// the ledger models as StepState held for the duration.
+fn fused_backward(
+    ctx: &BlockContext<'_>,
+    kind: &str,
+    gz: Tensor,
+    grads: &mut [Tensor],
+    ledger: &mut MemoryLedger,
+) -> Result<Tensor> {
+    let handle = ctx.modules.require(kind)?;
+    let nt_cost = ctx.nt * ctx.z_in.byte_size();
+    let tid = ledger.alloc(nt_cost, Category::StepState);
+    let mut args: Vec<&Tensor> = vec![ctx.z_in];
+    args.extend(ctx.theta.iter().copied());
+    args.push(&gz);
+    let outs = ctx.exec.call_module(handle, &args);
+    // Free before propagating: the session's ledger outlives this call, so
+    // an error must not leak a phantom StepState allocation.
+    ledger.free(tid);
+    distribute(outs?, ctx.pidx, grads)
+}
+
+/// Neural-ODE [8]: start from the block OUTPUT and reconstruct backwards.
+/// No trajectory storage at all — that is its selling point, and its
+/// failure mode (§III).
+pub struct NodeStrategy;
+
+impl GradientStrategy for NodeStrategy {
+    fn name(&self) -> String {
+        "node".into()
+    }
+
+    fn required_kinds(&self) -> &'static [&'static str] {
+        &["node"]
+    }
+
+    fn block_backward(
+        &self,
+        ctx: &BlockContext<'_>,
+        gz: Tensor,
+        grads: &mut [Tensor],
+        _ledger: &mut MemoryLedger,
+    ) -> Result<Tensor> {
+        let handle = ctx.modules.require("node")?;
+        let mut args: Vec<&Tensor> = vec![ctx.z_out];
+        args.extend(ctx.theta.iter().copied());
+        args.push(&gz);
+        let mut outs = ctx.exec.call_module(handle, &args)?;
+        if outs.len() != ctx.pidx.len() + 2 {
+            return Err(RuntimeError::Shape(format!(
+                "{}: returned {} outputs, expected {} (gz + {} param grads + z0_rec)",
+                handle.name(),
+                outs.len(),
+                ctx.pidx.len() + 2,
+                ctx.pidx.len()
+            )));
+        }
+        // Last output is z0_rec (the reconstruction); analysis harnesses
+        // inspect its error explicitly, the training path drops it.
+        outs.truncate(outs.len() - 1);
+        distribute(outs, ctx.pidx, grads)
+    }
+}
+
+/// ANODE with an in-block checkpoint schedule: `step_fwd` / `step_vjp`
+/// artifacts driven by the revolve executor under an m-slot budget.
+pub struct CheckpointedStrategy {
+    schedule: CheckpointStrategy,
+    m: usize,
+}
+
+impl CheckpointedStrategy {
+    /// Griewank–Walther revolve under an m-slot budget.
+    pub fn revolve(m: usize) -> Result<Self> {
+        Self::new(CheckpointStrategy::Revolve(m), m)
+    }
+
+    /// Equispaced checkpoints under an m-slot budget.
+    pub fn equispaced(m: usize) -> Result<Self> {
+        Self::new(CheckpointStrategy::Equispaced(m), m)
+    }
+
+    fn new(schedule: CheckpointStrategy, m: usize) -> Result<Self> {
+        if m < 1 {
+            return Err(RuntimeError::Io(format!(
+                "checkpoint budget must be >= 1 slot, got m={m}"
+            )));
+        }
+        Ok(Self { schedule, m })
+    }
+}
+
+impl GradientStrategy for CheckpointedStrategy {
+    fn name(&self) -> String {
+        match self.schedule {
+            CheckpointStrategy::Revolve(m) => format!("anode-revolve{m}"),
+            CheckpointStrategy::Equispaced(m) => format!("anode-equispaced{m}"),
+            _ => format!("anode-checkpointed{}", self.m),
+        }
+    }
+
+    fn required_kinds(&self) -> &'static [&'static str] {
+        &["step_fwd", "step_vjp"]
+    }
+
+    fn block_backward(
+        &self,
+        ctx: &BlockContext<'_>,
+        gz: Tensor,
+        grads: &mut [Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<Tensor> {
+        let schedule = plan(self.schedule, ctx.nt);
+        let errs = schedule.validate();
+        if !errs.is_empty() {
+            return Err(RuntimeError::Io(format!("invalid schedule: {}", errs.join("; "))));
+        }
+
+        let fwd = ctx.modules.require("step_fwd")?;
+        let vjp = ctx.modules.require("step_vjp")?;
+        let theta_grads: std::cell::RefCell<Vec<Tensor>> = std::cell::RefCell::new(
+            ctx.pidx.iter().map(|&i| Tensor::zeros(grads[i].shape())).collect(),
+        );
+        // The revolve executor's callbacks are infallible; the first module
+        // error is parked here and re-raised after the sweep.
+        let call_err: std::cell::RefCell<Option<RuntimeError>> = std::cell::RefCell::new(None);
+        let record = |e: RuntimeError| {
+            let mut slot = call_err.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(e);
+            }
+        };
+
+        // Ledger: model peak as (m slots + 1 tape) states of this block's size.
+        let act = ctx.z_in.byte_size();
+        let tid = ledger.alloc((self.m + 1) * act, Category::StepState);
+
+        let step = |z: &Tensor| -> Tensor {
+            let mut args: Vec<&Tensor> = vec![z];
+            args.extend(ctx.theta.iter().copied());
+            match ctx.exec.call_module(fwd, &args) {
+                Ok(mut o) => o.remove(0),
+                Err(e) => {
+                    record(e);
+                    Tensor::zeros(z.shape())
+                }
+            }
+        };
+
+        let step_grad = |z: &Tensor, a: &Tensor| -> Tensor {
+            let mut args: Vec<&Tensor> = vec![z];
+            args.extend(ctx.theta.iter().copied());
+            args.push(a);
+            match ctx.exec.call_module(vjp, &args) {
+                Ok(mut outs) => {
+                    if outs.len() != ctx.pidx.len() + 1 {
+                        record(RuntimeError::Shape(format!(
+                            "{}: returned {} outputs, expected {} (gz + {} param grads)",
+                            vjp.name(),
+                            outs.len(),
+                            ctx.pidx.len() + 1,
+                            ctx.pidx.len()
+                        )));
+                        return Tensor::zeros(z.shape());
+                    }
+                    let gz_step = outs.remove(0);
+                    let mut tg = theta_grads.borrow_mut();
+                    for (acc, g) in tg.iter_mut().zip(outs.into_iter()) {
+                        if let Err(e) = acc.axpy(1.0, &g) {
+                            record(RuntimeError::Shape(format!("{}: {e}", vjp.name())));
+                        }
+                    }
+                    gz_step
+                }
+                Err(e) => {
+                    record(e);
+                    Tensor::zeros(z.shape())
+                }
+            }
+        };
+
+        let swept =
+            run_backward(&schedule, ctx.z_in, gz, step, step_grad, |_| {}).map_err(RuntimeError::Io);
+        // Free before propagating: the session's ledger outlives this call.
+        ledger.free(tid);
+
+        if let Some(e) = call_err.into_inner() {
+            return Err(e);
+        }
+        let g_in = swept?;
+        for (&i, tg) in ctx.pidx.iter().zip(theta_grads.into_inner().into_iter()) {
+            grads[i] = tg;
+        }
+        Ok(g_in)
+    }
+}
+
+/// A factory tries to construct a strategy from a spec string. `None`
+/// means "not my pattern"; `Some(Err)` means "my pattern, invalid value"
+/// (e.g. a zero checkpoint budget).
+type Factory = Box<dyn Fn(&str) -> Option<Result<Box<dyn GradientStrategy>>>>;
+
+/// Name-indexed registry of gradient-strategy factories.
+pub struct StrategyRegistry {
+    factories: Vec<(String, Factory)>,
+}
+
+impl StrategyRegistry {
+    /// Empty registry (no built-ins).
+    pub fn empty() -> Self {
+        Self { factories: Vec::new() }
+    }
+
+    /// Registry with the paper's five built-in methods.
+    pub fn builtin() -> Self {
+        let mut reg = Self::empty();
+        reg.register("anode", |spec| {
+            (spec == "anode").then(|| Ok(Box::new(AnodeStrategy) as Box<dyn GradientStrategy>))
+        });
+        reg.register("node", |spec| {
+            (spec == "node").then(|| Ok(Box::new(NodeStrategy) as Box<dyn GradientStrategy>))
+        });
+        reg.register("otd", |spec| {
+            (spec == "otd").then(|| Ok(Box::new(OtdStrategy) as Box<dyn GradientStrategy>))
+        });
+        reg.register("anode-revolve<m>", |spec| {
+            parse_budget(spec, "anode-revolve").map(|m| {
+                m.and_then(|m| {
+                    CheckpointedStrategy::revolve(m)
+                        .map(|s| Box::new(s) as Box<dyn GradientStrategy>)
+                })
+            })
+        });
+        reg.register("anode-equispaced<m>", |spec| {
+            parse_budget(spec, "anode-equispaced").map(|m| {
+                m.and_then(|m| {
+                    CheckpointedStrategy::equispaced(m)
+                        .map(|s| Box::new(s) as Box<dyn GradientStrategy>)
+                })
+            })
+        });
+        reg
+    }
+
+    /// Register a factory under a human-readable pattern name. Later
+    /// registrations are tried first, so callers can shadow built-ins.
+    pub fn register(
+        &mut self,
+        pattern: &str,
+        factory: impl Fn(&str) -> Option<Result<Box<dyn GradientStrategy>>> + 'static,
+    ) {
+        self.factories.insert(0, (pattern.to_string(), Box::new(factory)));
+    }
+
+    /// Human-readable pattern names, in lookup order.
+    pub fn names(&self) -> Vec<&str> {
+        self.factories.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    /// Construct the strategy named by `spec` (e.g. `"anode-revolve3"`).
+    pub fn create(&self, spec: &str) -> Result<Box<dyn GradientStrategy>> {
+        for (_, factory) in &self.factories {
+            if let Some(result) = factory(spec) {
+                return result;
+            }
+        }
+        Err(RuntimeError::Io(format!(
+            "unknown gradient method `{spec}` — registered: {}",
+            self.names().join(", ")
+        )))
+    }
+
+    /// Construct from a parsed [`GradMethod`] (the CLI enum).
+    pub fn create_from_method(&self, method: GradMethod) -> Result<Box<dyn GradientStrategy>> {
+        self.create(&method.name())
+    }
+}
+
+impl Default for StrategyRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_round_trip_all_five() {
+        let reg = StrategyRegistry::builtin();
+        for spec in ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"] {
+            let s = reg.create(spec).unwrap();
+            assert_eq!(s.name(), spec, "round-trip failed for {spec}");
+        }
+    }
+
+    #[test]
+    fn create_from_method_matches_enum_name() {
+        let reg = StrategyRegistry::builtin();
+        for m in [
+            GradMethod::Anode,
+            GradMethod::Node,
+            GradMethod::Otd,
+            GradMethod::AnodeRevolve(4),
+            GradMethod::AnodeEquispaced(5),
+        ] {
+            assert_eq!(reg.create_from_method(m).unwrap().name(), m.name());
+        }
+    }
+
+    #[test]
+    fn degenerate_budgets_rejected() {
+        let reg = StrategyRegistry::builtin();
+        for spec in ["anode-revolve0", "anode-equispaced0"] {
+            let err = reg.create(spec).unwrap_err();
+            assert!(err.to_string().contains(">= 1"), "{spec}: {err}");
+        }
+        assert!(CheckpointedStrategy::revolve(0).is_err());
+        assert!(CheckpointedStrategy::equispaced(0).is_err());
+        assert!(CheckpointedStrategy::revolve(1).is_ok());
+    }
+
+    #[test]
+    fn unknown_spec_lists_registered() {
+        let reg = StrategyRegistry::builtin();
+        let err = reg.create("bogus").unwrap_err().to_string();
+        assert!(err.contains("unknown gradient method"), "{err}");
+        assert!(err.contains("anode-revolve<m>"), "{err}");
+        // Non-numeric budget suffixes are unknown, not degenerate.
+        assert!(reg.create("anode-revolveX").is_err());
+    }
+
+    #[test]
+    fn custom_strategy_plugs_in_without_dispatch_edits() {
+        struct Custom;
+        impl GradientStrategy for Custom {
+            fn name(&self) -> String {
+                "custom".into()
+            }
+            fn required_kinds(&self) -> &'static [&'static str] {
+                &["vjp"]
+            }
+            fn block_backward(
+                &self,
+                _ctx: &BlockContext<'_>,
+                gz: Tensor,
+                _grads: &mut [Tensor],
+                _ledger: &mut MemoryLedger,
+            ) -> Result<Tensor> {
+                Ok(gz)
+            }
+        }
+        let mut reg = StrategyRegistry::builtin();
+        reg.register("custom", |spec| {
+            (spec == "custom").then(|| Ok(Box::new(Custom) as Box<dyn GradientStrategy>))
+        });
+        assert_eq!(reg.create("custom").unwrap().name(), "custom");
+        // Built-ins still resolve.
+        assert_eq!(reg.create("anode").unwrap().name(), "anode");
+    }
+
+    #[test]
+    fn required_kinds_per_strategy() {
+        let reg = StrategyRegistry::builtin();
+        assert_eq!(reg.create("anode").unwrap().required_kinds(), &["vjp"]);
+        assert_eq!(reg.create("node").unwrap().required_kinds(), &["node"]);
+        assert_eq!(reg.create("otd").unwrap().required_kinds(), &["otd"]);
+        assert_eq!(
+            reg.create("anode-revolve2").unwrap().required_kinds(),
+            &["step_fwd", "step_vjp"]
+        );
+    }
+}

@@ -1,23 +1,17 @@
-//! Backward-pass dispatch: the three gradient methods of the paper plus the
-//! checkpointed variants, composed per-block in reverse network order.
+//! Backward traversal: shared chain-rule plumbing over transitions and the
+//! stem, with every ODE block delegated to the session's pluggable
+//! [`GradientStrategy`] object.
+//!
+//! This file contains no per-method dispatch — adding a gradient method
+//! means registering a new strategy in [`crate::api::strategy`], not
+//! editing this traversal.
 
-use crate::checkpoint::{plan, run_backward, Strategy};
-use crate::memory::{Category, MemoryLedger};
-use crate::models::GradMethod;
+use crate::api::strategy::BlockContext;
+use crate::memory::MemoryLedger;
 use crate::runtime::{Result, RuntimeError};
 use crate::tensor::Tensor;
 
 use super::{Coordinator, ForwardState};
-
-/// The block-module kind a method needs (used for fail-fast probing).
-pub(crate) fn primary_kind(method: GradMethod) -> &'static str {
-    match method {
-        GradMethod::Anode => "vjp",
-        GradMethod::AnodeRevolve(_) | GradMethod::AnodeEquispaced(_) => "step_vjp",
-        GradMethod::Node => "node",
-        GradMethod::Otd => "otd",
-    }
-}
 
 /// Backpropagate `gz` (dL/d z_final) through transitions and ODE blocks,
 /// accumulating parameter gradients into `grads` (canonical order).
@@ -34,170 +28,36 @@ pub(crate) fn backward(
         if s + 1 < co.cfg.stages() {
             let (tw, tb) = co.index.trans[s];
             let tin = &state.trans_inputs[s];
-            let outs =
-                co.call(&format!("trans{s}_vjp"), &[tin, &params[tw], &params[tb], &gz])?;
+            let outs = co.call(
+                &co.modules.trans[s].vjp,
+                &[tin, &params[tw], &params[tb], &gz],
+            )?;
             let mut it = outs.into_iter();
             gz = it.next().ok_or_else(|| RuntimeError::Shape("trans_vjp arity".into()))?;
             grads[tw] = it.next().ok_or_else(|| RuntimeError::Shape("trans_vjp arity".into()))?;
             grads[tb] = it.next().ok_or_else(|| RuntimeError::Shape("trans_vjp arity".into()))?;
         }
         for b in (0..co.cfg.blocks_per_stage).rev() {
-            gz = block_backward(co, state, s, b, gz, params, grads, ledger)?;
+            let pidx = &co.index.blocks[s][b];
+            let theta: Vec<&Tensor> = pidx.iter().map(|&i| &params[i]).collect();
+            let ctx = BlockContext {
+                exec: co,
+                modules: &co.modules.stages[s],
+                nt: co.cfg.nt,
+                z_in: &state.block_inputs[s][b],
+                z_out: &state.block_outputs[s][b],
+                theta: &theta,
+                pidx,
+            };
+            gz = co.strategy.block_backward(&ctx, gz, grads, ledger)?;
         }
     }
 
     // Stem VJP (input-image gradient not needed).
     let (sw, sb) = co.index.stem;
-    let outs = co.call("stem_vjp", &[&state.x, &params[sw], &params[sb], &gz])?;
+    let outs = co.call(&co.modules.stem_vjp, &[&state.x, &params[sw], &params[sb], &gz])?;
     let mut it = outs.into_iter();
     grads[sw] = it.next().ok_or_else(|| RuntimeError::Shape("stem_vjp arity".into()))?;
     grads[sb] = it.next().ok_or_else(|| RuntimeError::Shape("stem_vjp arity".into()))?;
     Ok(())
-}
-
-/// Backward through one ODE block; returns dL/d(block input).
-#[allow(clippy::too_many_arguments)]
-fn block_backward(
-    co: &Coordinator,
-    state: &ForwardState,
-    s: usize,
-    b: usize,
-    gz: Tensor,
-    params: &[Tensor],
-    grads: &mut [Tensor],
-    ledger: &mut MemoryLedger,
-) -> Result<Tensor> {
-    let z_in = &state.block_inputs[s][b];
-    let z_out = &state.block_outputs[s][b];
-    let pidx = &co.index.blocks[s][b];
-    let theta: Vec<&Tensor> = pidx.iter().map(|&i| &params[i]).collect();
-
-    match co.method {
-        GradMethod::Anode | GradMethod::Otd => {
-            // Fused DTO VJP (or OTD adjoint): the O(Nt) trajectory lives in
-            // the executable's working set; ledger models it as StepState
-            // held for the duration of the call.
-            let kind = if co.method == GradMethod::Anode { "vjp" } else { "otd" };
-            let nt_cost = co.cfg.nt * z_in.byte_size();
-            let tid = ledger.alloc(nt_cost, Category::StepState);
-            let name = co.cfg.block_module(s, co.solver, kind);
-            let mut args: Vec<&Tensor> = vec![z_in];
-            args.extend(theta.iter().copied());
-            args.push(&gz);
-            let outs = co.call(&name, &args)?;
-            ledger.free(tid);
-            distribute(outs, pidx, grads)
-        }
-        GradMethod::Node => {
-            // [8]: start from the block OUTPUT, reconstruct backwards.
-            // No trajectory storage at all (that is its selling point — and
-            // its failure mode, §III).
-            let name = co.cfg.block_module(s, co.solver, "node");
-            let mut args: Vec<&Tensor> = vec![z_out];
-            args.extend(theta.iter().copied());
-            args.push(&gz);
-            let mut outs = co.call(&name, &args)?;
-            // Last output is z0_rec (reconstruction); expose its error for
-            // diagnostics by storing nothing — callers can call
-            // reconstruction_error() explicitly in analysis harnesses.
-            outs.truncate(outs.len() - 1);
-            distribute(outs, pidx, grads)
-        }
-        GradMethod::AnodeRevolve(m) | GradMethod::AnodeEquispaced(m) => {
-            let strategy = match co.method {
-                GradMethod::AnodeRevolve(m) => Strategy::Revolve(m),
-                _ => Strategy::Equispaced(m),
-            };
-            step_backward(co, s, z_in, gz, &theta, pidx, grads, strategy, m, ledger)
-        }
-    }
-}
-
-/// Checkpointed backward over step-level artifacts: the revolve executor
-/// drives `step_fwd` / `step_vjp`, accumulating parameter gradients.
-#[allow(clippy::too_many_arguments)]
-fn step_backward(
-    co: &Coordinator,
-    s: usize,
-    z_in: &Tensor,
-    gz: Tensor,
-    theta: &[&Tensor],
-    pidx: &[usize],
-    grads: &mut [Tensor],
-    strategy: Strategy,
-    m: usize,
-    ledger: &mut MemoryLedger,
-) -> Result<Tensor> {
-    let nt = co.cfg.nt;
-    let schedule = plan(strategy, nt);
-    let errs = schedule.validate();
-    if !errs.is_empty() {
-        return Err(RuntimeError::Io(format!("invalid schedule: {}", errs.join("; "))));
-    }
-
-    let fwd_name = co.cfg.block_module(s, co.solver, "step_fwd");
-    let vjp_name = co.cfg.block_module(s, co.solver, "step_vjp");
-    let mut theta_grads: Vec<Tensor> = pidx.iter().map(|&i| Tensor::zeros(grads[i].shape())).collect();
-    let mut call_err: Option<RuntimeError> = None;
-
-    // Ledger: model peak as (m slots + 1 tape) states of this block's size.
-    let act = z_in.byte_size();
-    let tid = ledger.alloc((m + 1) * act, Category::StepState);
-
-    let step = |z: &Tensor| -> Tensor {
-        let mut args: Vec<&Tensor> = vec![z];
-        args.extend(theta.iter().copied());
-        match co.call(&fwd_name, &args) {
-            Ok(mut o) => o.remove(0),
-            Err(_) => Tensor::zeros(z.shape()), // surfaced via call_err below
-        }
-    };
-
-    let theta_grads_cell = std::cell::RefCell::new(&mut theta_grads);
-    let call_err_cell = std::cell::RefCell::new(&mut call_err);
-    let step_grad = |z: &Tensor, a: &Tensor| -> Tensor {
-        let mut args: Vec<&Tensor> = vec![z];
-        args.extend(theta.iter().copied());
-        args.push(a);
-        match co.call(&vjp_name, &args) {
-            Ok(mut outs) => {
-                let gz_step = outs.remove(0);
-                let mut tg = theta_grads_cell.borrow_mut();
-                for (acc, g) in tg.iter_mut().zip(outs.into_iter()) {
-                    let _ = acc.axpy(1.0, &g);
-                }
-                gz_step
-            }
-            Err(e) => {
-                **call_err_cell.borrow_mut() = Some(e);
-                Tensor::zeros(z.shape())
-            }
-        }
-    };
-
-    let g_in = run_backward(&schedule, z_in, gz, step, step_grad, |_| {})
-        .map_err(RuntimeError::Io)?;
-    ledger.free(tid);
-
-    if let Some(e) = call_err {
-        return Err(e);
-    }
-    for (&i, tg) in pidx.iter().zip(theta_grads.into_iter()) {
-        grads[i] = tg;
-    }
-    Ok(g_in)
-}
-
-/// Split a VJP output list (gz, gθ...) into the return gz and accumulated
-/// parameter gradients.
-fn distribute(outs: Vec<Tensor>, pidx: &[usize], grads: &mut [Tensor]) -> Result<Tensor> {
-    let mut it = outs.into_iter();
-    let gz = it.next().ok_or_else(|| RuntimeError::Shape("vjp returned nothing".into()))?;
-    for &i in pidx {
-        let g = it
-            .next()
-            .ok_or_else(|| RuntimeError::Shape("vjp output arity mismatch".into()))?;
-        grads[i] = g;
-    }
-    Ok(gz)
 }

@@ -1,28 +1,31 @@
 //! The ANODE training coordinator — the paper's §V contribution as a
 //! runtime system.
 //!
+//! **Internal layer.** Application code should go through [`crate::api`]
+//! (`Engine` → `Session`); the coordinator is the implementation detail
+//! behind it, kept public for white-box integration tests and benches.
+//!
 //! Responsibilities:
 //! - **Forward pass** over stem → (ODE blocks, transitions) → head, storing
 //!   only the O(L) block-boundary activations ([`Coordinator::forward`]).
-//! - **Multi-stage backward** ([`Coordinator::backward`]): per ODE block,
-//!   dispatch the configured gradient method:
-//!   `anode` re-runs the block's discrete forward inside the fused DTO-VJP
-//!   artifact (O(Nt) inside the call, freed on return); `anode-revolve(m)` /
-//!   `anode-equispaced(m)` drive step-level artifacts through a
-//!   [`crate::checkpoint`] schedule under an m-slot budget; `node` performs
-//!   the [8] reverse-time augmented solve; `otd` the inconsistent
-//!   optimize-then-discretize adjoint (§IV).
+//! - **Inference pass** ([`Coordinator::forward_infer`]): the same network
+//!   without gradient bookkeeping — no ledger traffic, no stored
+//!   activations — used by evaluation and the serving path.
+//! - **Multi-stage backward** ([`backward`]): per ODE block, delegate to the
+//!   session's pluggable [`GradientStrategy`] object; transitions and the
+//!   stem are shared chain-rule plumbing.
 //! - **Memory accounting**: every stored activation goes through the
 //!   [`crate::memory::MemoryLedger`], so the O(L·Nt) → O(L)+O(Nt) claim is
 //!   measured, not asserted.
-//! - **Training loop** with SGD+momentum, LR schedule, eval, divergence
-//!   detection ([`Trainer`]).
+//!
+//! All module references are typed [`ModuleHandle`]s resolved eagerly by
+//! the [`crate::api`] layer — the coordinator never constructs a module
+//! name from strings.
 
 mod backward;
-mod trainer;
 
-pub use trainer::{make_eval_batches, TrainOptions, TrainResult, Trainer};
-
+use crate::api::modules::{ModuleHandle, ModuleSet};
+use crate::api::strategy::{GradientStrategy, ModuleExec, StrategyRegistry};
 use crate::memory::{Category, MemoryLedger};
 use crate::models::{GradMethod, ModelConfig, ParamIndex, Solver};
 use crate::runtime::{ArtifactRegistry, Result, RuntimeError};
@@ -46,36 +49,70 @@ pub struct ForwardState {
     ledger_ids: Vec<u64>,
 }
 
-/// The coordinator: owns the artifact registry handle, model structure and
-/// gradient-method dispatch for a single (arch, solver, method) config.
+/// The coordinator: owns the model structure, the resolved module handles
+/// and the gradient-strategy object for a single (arch, solver, method)
+/// config.
 pub struct Coordinator<'r> {
     pub reg: &'r ArtifactRegistry,
     pub cfg: ModelConfig,
     pub index: ParamIndex,
     pub solver: Solver,
-    pub method: GradMethod,
+    pub modules: ModuleSet,
+    pub strategy: Box<dyn GradientStrategy>,
     /// Calls made to each module (perf accounting).
     pub call_count: std::cell::Cell<usize>,
 }
 
 impl<'r> Coordinator<'r> {
+    /// Back-compat constructor from a parsed [`GradMethod`]: resolves the
+    /// module set and builds the strategy through the built-in registry.
     pub fn new(
         reg: &'r ArtifactRegistry,
         cfg: ModelConfig,
         solver: Solver,
         method: GradMethod,
     ) -> Result<Self> {
+        let modules = ModuleSet::resolve(reg, &cfg, solver)?;
+        let strategy = StrategyRegistry::builtin().create_from_method(method)?;
+        Self::with_strategy(reg, cfg, solver, modules, strategy)
+    }
+
+    /// Construct with a pre-resolved module set and strategy object (the
+    /// [`crate::api::Engine`] path). Fails fast if the manifest lacks a
+    /// block-module kind the strategy needs.
+    pub fn with_strategy(
+        reg: &'r ArtifactRegistry,
+        cfg: ModelConfig,
+        solver: Solver,
+        modules: ModuleSet,
+        strategy: Box<dyn GradientStrategy>,
+    ) -> Result<Self> {
         let layout = reg.param_layout(&cfg.params_key())?;
         let index = ParamIndex::from_layout(layout, &cfg)?;
-        // Fail fast if the manifest lacks the modules this config needs.
-        let probe = cfg.block_module(0, solver, backward::primary_kind(method));
-        if !reg.has_module(&probe) {
-            return Err(RuntimeError::Io(format!(
-                "manifest has no module {probe} for method {} — re-run `make artifacts`",
-                method.name()
-            )));
+        for stage in &modules.stages {
+            for kind in strategy.required_kinds() {
+                stage.require(kind).map_err(|e| {
+                    RuntimeError::Io(format!(
+                        "gradient method `{}` unavailable: {e}",
+                        strategy.name()
+                    ))
+                })?;
+            }
         }
-        Ok(Self { reg, cfg, index, solver, method, call_count: std::cell::Cell::new(0) })
+        Ok(Self {
+            reg,
+            cfg,
+            index,
+            solver,
+            modules,
+            strategy,
+            call_count: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Canonical name of the configured gradient method.
+    pub fn method_name(&self) -> String {
+        self.strategy.name()
     }
 
     /// Initial parameters from params.bin (canonical order).
@@ -83,9 +120,10 @@ impl<'r> Coordinator<'r> {
         self.reg.load_params(&self.cfg.params_key())
     }
 
-    pub(crate) fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+    /// Execute a resolved module.
+    pub(crate) fn call(&self, handle: &ModuleHandle, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         self.call_count.set(self.call_count.get() + 1);
-        self.reg.call(name, inputs)
+        self.reg.call(handle.name(), inputs)
     }
 
     /// Gather a block's parameter tensors in artifact order.
@@ -107,7 +145,7 @@ impl<'r> Coordinator<'r> {
         };
 
         let (sw, sb) = (&params[self.index.stem.0], &params[self.index.stem.1]);
-        let mut z = self.call("stem_fwd", &[x, sw, sb])?.remove(0);
+        let mut z = self.call(&self.modules.stem_fwd, &[x, sw, sb])?.remove(0);
         track(x, ledger, &mut ledger_ids);
 
         let mut block_inputs = Vec::new();
@@ -116,11 +154,11 @@ impl<'r> Coordinator<'r> {
         for s in 0..self.cfg.stages() {
             let mut ins = Vec::new();
             let mut outs = Vec::new();
-            let fwd_name = self.cfg.block_module(s, self.solver, "fwd");
+            let fwd = self.modules.stages[s].require("fwd")?;
             for b in 0..self.cfg.blocks_per_stage {
                 let mut args: Vec<&Tensor> = vec![&z];
                 args.extend(self.block_params(params, s, b));
-                let z1 = self.call(&fwd_name, &args)?.remove(0);
+                let z1 = self.call(fwd, &args)?.remove(0);
                 track(&z, ledger, &mut ledger_ids);
                 ins.push(z.clone());
                 // Output is the next block's input; stored once (the clone
@@ -135,7 +173,7 @@ impl<'r> Coordinator<'r> {
                 track(&z, ledger, &mut ledger_ids);
                 trans_inputs.push(z.clone());
                 z = self
-                    .call(&format!("trans{s}_fwd"), &[&z, &params[tw], &params[tb]])?
+                    .call(&self.modules.trans[s].fwd, &[&z, &params[tw], &params[tb]])?
                     .remove(0);
             }
         }
@@ -150,6 +188,30 @@ impl<'r> Coordinator<'r> {
         })
     }
 
+    /// Inference-only forward: rolls a single activation through the
+    /// network and returns the head input. No activations are stored and
+    /// no ledger traffic is generated — evaluation and serving pay zero
+    /// gradient-bookkeeping overhead.
+    pub fn forward_infer(&self, x: &Tensor, params: &[Tensor]) -> Result<Tensor> {
+        let (sw, sb) = (&params[self.index.stem.0], &params[self.index.stem.1]);
+        let mut z = self.call(&self.modules.stem_fwd, &[x, sw, sb])?.remove(0);
+        for s in 0..self.cfg.stages() {
+            let fwd = self.modules.stages[s].require("fwd")?;
+            for b in 0..self.cfg.blocks_per_stage {
+                let mut args: Vec<&Tensor> = vec![&z];
+                args.extend(self.block_params(params, s, b));
+                z = self.call(fwd, &args)?.remove(0);
+            }
+            if s + 1 < self.cfg.stages() {
+                let (tw, tb) = self.index.trans[s];
+                z = self
+                    .call(&self.modules.trans[s].fwd, &[&z, &params[tw], &params[tb]])?
+                    .remove(0);
+            }
+        }
+        Ok(z)
+    }
+
     /// Loss + gradients for one batch. Returns (loss, correct, grads).
     pub fn loss_and_grad(
         &self,
@@ -159,10 +221,30 @@ impl<'r> Coordinator<'r> {
         ledger: &mut MemoryLedger,
     ) -> Result<(f32, f32, Vec<Tensor>)> {
         let state = self.forward(x, params, ledger)?;
+        let outcome = self.head_and_backward(&state, labels, params, ledger);
+        // Release the O(L) stored activations on success AND error: the
+        // caller's ledger outlives this step, so an error must not leak
+        // phantom BlockInput allocations.
+        for id in &state.ledger_ids {
+            ledger.free(*id);
+        }
+        outcome
+    }
+
+    /// Head loss/grad call plus the full backward sweep (split out so
+    /// `loss_and_grad` can release stored activations on every exit path).
+    fn head_and_backward(
+        &self,
+        state: &ForwardState,
+        labels: &Tensor,
+        params: &[Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<(f32, f32, Vec<Tensor>)> {
         let (hw, hb) = self.index.head;
-        let head_name = format!("head{}_loss_grad", self.cfg.num_classes);
-        let mut outs =
-            self.call(&head_name, &[&state.z_final, &params[hw], &params[hb], labels])?;
+        let mut outs = self.call(
+            &self.modules.head_loss_grad,
+            &[&state.z_final, &params[hw], &params[hb], labels],
+        )?;
         let loss = outs[0].item().map_err(|e| RuntimeError::Shape(e.to_string()))?;
         let correct = outs[1].item().map_err(|e| RuntimeError::Shape(e.to_string()))?;
         let gz = outs.remove(2);
@@ -172,34 +254,36 @@ impl<'r> Coordinator<'r> {
         let mut grads = ParamIndex::zero_grads(params);
         grads[hw] = ghw;
         grads[hb] = ghb;
-        backward::backward(self, &state, gz, params, &mut grads, ledger)?;
-
-        // Release the O(L) stored activations.
-        for id in &state.ledger_ids {
-            ledger.free(*id);
-        }
+        backward::backward(self, state, gz, params, &mut grads, ledger)?;
         Ok((loss, correct, grads))
     }
 
     /// Evaluation over pre-batched data: returns (mean loss, accuracy).
+    ///
+    /// Routed through [`Coordinator::forward_infer`] — no checkpoint
+    /// tracking, no ledger allocs/frees — since no backward follows.
     pub fn evaluate(&self, batches: &[(Tensor, Tensor)], params: &[Tensor]) -> Result<(f32, f32)> {
         let (hw, hb) = self.index.head;
-        let head_name = format!("head{}_eval", self.cfg.num_classes);
-        let mut ledger = MemoryLedger::new();
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         let mut n = 0usize;
         for (x, labels) in batches {
-            let state = self.forward(x, params, &mut ledger)?;
-            let outs = self.call(&head_name, &[&state.z_final, &params[hw], &params[hb], labels])?;
+            let z = self.forward_infer(x, params)?;
+            let outs = self.call(
+                &self.modules.head_eval,
+                &[&z, &params[hw], &params[hb], labels],
+            )?;
             loss_sum += outs[0].item().map_err(|e| RuntimeError::Shape(e.to_string()))? as f64;
             correct += outs[1].item().map_err(|e| RuntimeError::Shape(e.to_string()))? as f64;
             n += self.cfg.batch;
-            for id in &state.ledger_ids {
-                ledger.free(*id);
-            }
         }
         let batches_n = batches.len().max(1) as f64;
         Ok(((loss_sum / batches_n) as f32, (correct / n.max(1) as f64) as f32))
+    }
+}
+
+impl ModuleExec for Coordinator<'_> {
+    fn call_module(&self, handle: &ModuleHandle, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.call(handle, inputs)
     }
 }

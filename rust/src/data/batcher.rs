@@ -80,6 +80,33 @@ impl Batcher {
     }
 }
 
+/// Build eval batches (fixed, unaugmented) from a dataset tensor.
+pub fn make_eval_batches(
+    images: &Tensor,
+    labels: &[usize],
+    batch: usize,
+    max_batches: usize,
+) -> Vec<(Tensor, Tensor)> {
+    let n = labels.len();
+    let per: usize = images.shape()[1..].iter().product();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + batch <= n && out.len() < max_batches {
+        let data = images.data()[i * per..(i + batch) * per].to_vec();
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&images.shape()[1..]);
+        let x = Tensor::from_vec(shape, data).unwrap();
+        let y = Tensor::from_vec(
+            vec![batch],
+            labels[i..i + batch].iter().map(|&l| l as f32).collect(),
+        )
+        .unwrap();
+        out.push((x, y));
+        i += batch;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -10,6 +10,6 @@ mod batcher;
 mod cifar;
 mod mnist_like;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{make_eval_batches, Batch, Batcher};
 pub use cifar::{SyntheticCifar, CIFAR_HW};
 pub use mnist_like::render_digit;

@@ -1,11 +1,17 @@
 //! Figs. 3/4/5 runner: train one (arch, solver, method) configuration on
 //! synthetic CIFAR-10/100 and return its curve — the paper's training-loss /
 //! test-accuracy comparison between ANODE and neural-ODE [8].
+//!
+//! Built on the [`crate::api`] façade: each run is one `Engine` (sharing
+//! the caller's artifact registry and compiled-module cache) driving one
+//! `Session::fit`.
 
-use crate::coordinator::{make_eval_batches, Coordinator, TrainOptions, Trainer};
-use crate::data::{Batcher, SyntheticCifar};
+use std::rc::Rc;
+
+use crate::api::{Engine, FitOptions, SessionConfig};
+use crate::data::{make_eval_batches, Batcher, SyntheticCifar};
 use crate::metrics::Curve;
-use crate::models::{Arch, GradMethod, ModelConfig, Solver};
+use crate::models::{Arch, GradMethod, Solver};
 use crate::optim::LrSchedule;
 use crate::runtime::{ArtifactRegistry, Result};
 
@@ -53,11 +59,27 @@ pub struct TrainFigRun {
     pub series: String,
 }
 
-/// Train one configuration and return its series.
-pub fn train_figure(reg: &ArtifactRegistry, o: &TrainFigOptions) -> Result<TrainFigRun> {
-    let cfg = ModelConfig::from_registry(reg, o.arch, o.num_classes)?;
-    let batch = cfg.batch;
-    let co = Coordinator::new(reg, cfg, o.solver, o.method)?;
+/// Train one configuration and return its series. The registry handle is
+/// shared so multi-series figures reuse one compiled-module cache.
+pub fn train_figure(reg: &Rc<ArtifactRegistry>, o: &TrainFigOptions) -> Result<TrainFigRun> {
+    let engine = Engine::builder()
+        .registry(reg.clone())
+        .arch(o.arch)
+        .classes(o.num_classes)
+        .solver(o.solver)
+        .build()?;
+    let batch = engine.config().batch;
+
+    let session_cfg = SessionConfig {
+        method: o.method.name(),
+        lr: LrSchedule::Step {
+            base: o.lr,
+            gamma: 0.3,
+            milestones: vec![o.steps / 2, o.steps * 4 / 5],
+        },
+        ..SessionConfig::default()
+    };
+    let mut session = engine.session(session_cfg)?;
 
     let ds = SyntheticCifar::new(o.num_classes, o.seed ^ 0xDA7A, 0.12);
     let (train_imgs, train_labels) = ds.generate(o.train_size, o.seed + 1);
@@ -72,19 +94,13 @@ pub fn train_figure(reg: &ArtifactRegistry, o: &TrainFigOptions) -> Result<Train
         o.solver.name(),
         o.num_classes
     );
-    let opts = TrainOptions {
+    let opts = FitOptions {
         steps: o.steps,
         eval_every: o.eval_every,
-        lr: LrSchedule::Step {
-            base: o.lr,
-            gamma: 0.3,
-            milestones: vec![o.steps / 2, o.steps * 4 / 5],
-        },
         verbose: o.verbose,
         ..Default::default()
     };
-    let trainer = Trainer::new(&co, opts);
-    let res = trainer.train(&mut train, &eval, &series)?;
+    let res = session.fit(&mut train, &eval, &opts, &series)?;
     Ok(TrainFigRun {
         diverged: res.diverged,
         wall_seconds: res.wall_seconds,

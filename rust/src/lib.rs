@@ -4,17 +4,33 @@
 //! Memory-Efficient Gradients for Neural ODEs* (Gholami, Keutzer, Biros —
 //! IJCAI 2019).
 //!
+//! **Start at [`api`]** — the typed Engine/Session façade is the crate's
+//! public surface:
+//!
+//! ```no_run
+//! use anode::api::{Engine, SessionConfig};
+//!
+//! let engine = Engine::builder().artifacts("artifacts").build()?;
+//! let mut session = engine.session(SessionConfig::with_method("anode"))?;
+//! // session.step(&images, &labels)?   — train
+//! // session.evaluate(&eval_batches)?  — measure
+//! // session.predict(&images)?         — serve (batched inference + stats)
+//! # Ok::<(), anode::runtime::RuntimeError>(())
+//! ```
+//!
 //! Architecture (see DESIGN.md):
-//! - **L3 (this crate)** — the checkpointing training coordinator: stores
-//!   only ODE-block *input* activations (O(L)), re-runs each block forward
-//!   during backprop (O(Nt)) and backpropagates through the discrete time
-//!   stepper (Discretize-Then-Optimize), with optional Griewank–Walther
-//!   revolve schedules for tighter memory budgets.
+//! - **L3 (this crate)** — [`api`] on top of the checkpointing training
+//!   coordinator: stores only ODE-block *input* activations (O(L)), re-runs
+//!   each block forward during backprop (O(Nt)) and backpropagates through
+//!   the discrete time stepper (Discretize-Then-Optimize), with optional
+//!   Griewank–Walther revolve schedules for tighter memory budgets. The
+//!   adjoint method is a pluggable [`api::GradientStrategy`].
 //! - **L2 (python/compile, build time)** — JAX ODE-block graphs AOT-lowered
 //!   to HLO text, executed here via PJRT ([`runtime`]).
 //! - **L1 (python/compile/kernels)** — Pallas conv kernels inside the block
 //!   RHS, interpret-mode lowered into the same HLO.
 
+pub mod api;
 pub mod checkpoint;
 pub mod coordinator;
 pub mod data;

@@ -12,9 +12,13 @@
 //!   anode train --arch sqnxt --solver euler --method anode --steps 200
 //!   anode figures --fig fig1
 //!   anode gradcheck --artifacts artifacts
+//!
+//! All heavy lifting goes through the `anode::api` façade (Engine/Session);
+//! see `rust/DESIGN.md` §6.
 
-use std::path::PathBuf;
+use std::rc::Rc;
 
+use anode::api::open_artifacts;
 use anode::harness;
 use anode::metrics::{format_table, write_csv};
 use anode::models::{Arch, GradMethod, Solver};
@@ -23,6 +27,11 @@ use anode::util::cli::Args;
 
 fn main() {
     let args = Args::from_env();
+    // --artifacts is honored by every subcommand (open_registry), so it
+    // must never trip the unknown-option warning. --csv is deliberately
+    // NOT pre-marked: commands that don't write a CSV should warn rather
+    // than silently swallow it.
+    let _ = args.get("artifacts");
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "train" => cmd_train(&args),
@@ -48,13 +57,35 @@ fn print_help() {
          \u{20}          --classes 10|100 --steps N --lr F --train-size N --seed N\n\
          figures:   --fig fig1|fig7|sec3|fig3|fig4|fig5|memory|gradcheck [--fast]\n\
          gradcheck: --seed N\n\
-         common:    --artifacts DIR (default: artifacts) --csv PATH"
+         common:    --artifacts DIR (default: artifacts)\n\
+         \u{20}          --csv PATH (train and fig3|fig4|fig5 only)\n\
+         \n\
+         Malformed option values are hard errors; unknown options warn.\n\
+         \n\
+         library quickstart (the same façade this CLI uses):\n\
+         \u{20}   use anode::api::{{Engine, SessionConfig}};\n\
+         \u{20}   let engine = Engine::builder().artifacts(\"artifacts\").build()?;\n\
+         \u{20}   let mut s = engine.session(SessionConfig::with_method(\"anode\"))?;\n\
+         \u{20}   s.step(&images, &labels)?;   // train\n\
+         \u{20}   s.evaluate(&eval_batches)?;  // measure\n\
+         \u{20}   s.predict(&images)?;         // serve"
     );
 }
 
-fn open_registry(args: &Args) -> Result<ArtifactRegistry, i32> {
-    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    ArtifactRegistry::open(&dir).map_err(|e| {
+/// Parse a named enum option or exit with a clear message.
+fn parse_opt<T>(kind: &str, value: &str, parse: impl Fn(&str) -> Option<T>) -> T {
+    match parse(value) {
+        Some(v) => v,
+        None => {
+            eprintln!("error: invalid value `{value}` for --{kind}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn open_registry(args: &Args) -> Result<Rc<ArtifactRegistry>, i32> {
+    let dir = args.get_or("artifacts", "artifacts");
+    open_artifacts(&dir).map_err(|e| {
         eprintln!("error: {e}");
         2
     })
@@ -66,9 +97,9 @@ fn cmd_train(args: &Args) -> i32 {
         Err(c) => return c,
     };
     let opts = harness::TrainFigOptions {
-        arch: Arch::parse(&args.get_or("arch", "resnet")).expect("bad --arch"),
-        solver: Solver::parse(&args.get_or("solver", "euler")).expect("bad --solver"),
-        method: GradMethod::parse(&args.get_or("method", "anode")).expect("bad --method"),
+        arch: parse_opt("arch", &args.get_or("arch", "resnet"), Arch::parse),
+        solver: parse_opt("solver", &args.get_or("solver", "euler"), Solver::parse),
+        method: parse_opt("method", &args.get_or("method", "anode"), GradMethod::parse),
         num_classes: args.get_parse_or("classes", 10),
         train_size: args.get_parse_or("train-size", 2048),
         test_size: args.get_parse_or("test-size", 512),
@@ -78,6 +109,8 @@ fn cmd_train(args: &Args) -> i32 {
         seed: args.get_parse_or("seed", 0),
         verbose: true,
     };
+    let csv = args.get("csv").map(|s| s.to_string());
+    args.warn_unknown();
     match harness::train_figure(&reg, &opts) {
         Ok(run) => {
             println!("{}", format_table(std::slice::from_ref(&run.curve)));
@@ -88,8 +121,8 @@ fn cmd_train(args: &Args) -> i32 {
                 run.sec_per_step,
                 anode::memory::human_bytes(run.peak_activation_bytes)
             );
-            if let Some(csv) = args.get("csv") {
-                write_csv(std::path::Path::new(csv), &[run.curve]).expect("csv write");
+            if let Some(csv) = csv {
+                write_csv(std::path::Path::new(&csv), &[run.curve]).expect("csv write");
             }
             0
         }
@@ -110,12 +143,14 @@ fn cmd_figures(args: &Args) -> i32 {
                 args.get_parse_or("kernel-std", 3.0),
                 args.get_parse_or("nt", 8),
             );
+            args.warn_unknown();
             println!("Fig. 1/7 — reversibility of a random-Gaussian conv residual block");
             println!("{}", harness::format_fig1(&rows));
             0
         }
         "sec3" => {
             let rows = harness::sec3_scalar_studies(args.get_parse_or("seed", 0));
+            args.warn_unknown();
             println!("§III — scalar/matrix reversibility studies");
             println!("{}", harness::format_sec3(&rows));
             0
@@ -169,13 +204,15 @@ fn cmd_figures(args: &Args) -> i32 {
                 lr: args.get_parse_or("lr", 0.02),
                 verbose: true,
             };
+            let csv = args.get("csv").map(|s| s.to_string());
+            args.warn_unknown();
             match harness::train_figure(&reg, &o) {
                 Ok(run) => curves.push(run.curve),
                 Err(e) => eprintln!("node-rk45 series failed: {e}"),
             }
             println!("{}", format_table(&curves));
-            if let Some(csv) = args.get("csv") {
-                write_csv(std::path::Path::new(csv), &curves).expect("csv write");
+            if let Some(csv) = csv {
+                write_csv(std::path::Path::new(&csv), &curves).expect("csv write");
             }
             0
         }
@@ -188,6 +225,7 @@ fn cmd_figures(args: &Args) -> i32 {
 
 fn cmd_memory(args: &Args) -> i32 {
     let act = args.get_parse_or("act-bytes", 32 * 32 * 32 * 16 * 4usize);
+    args.warn_unknown();
     let rows = harness::memory_table(
         &[2, 4, 6, 8, 16],
         &[2, 5, 8, 16, 32],
@@ -204,7 +242,9 @@ fn cmd_gradcheck(args: &Args) -> i32 {
         Ok(r) => r,
         Err(c) => return c,
     };
-    match harness::gradient_consistency(&reg, args.get_parse_or("seed", 5)) {
+    let seed = args.get_parse_or("seed", 5);
+    args.warn_unknown();
+    match harness::gradient_consistency(&reg, seed) {
         Ok(rows) => {
             println!("§IV — gradient consistency (tiny block, Euler, dt sweep)");
             println!("{}", harness::format_gradcheck(&rows));
@@ -222,6 +262,7 @@ fn cmd_modules(args: &Args) -> i32 {
         Ok(r) => r,
         Err(c) => return c,
     };
+    args.warn_unknown();
     for name in reg.module_names() {
         println!("{name}");
     }

@@ -83,6 +83,10 @@ impl GradMethod {
         }
     }
 
+    /// Parse a method spec. Checkpointed variants validate their budget:
+    /// `anode-revolve0` is rejected (a zero-slot schedule cannot hold the
+    /// block input), matching the constructors in
+    /// [`crate::api::strategy::CheckpointedStrategy`].
     pub fn parse(s: &str) -> Option<GradMethod> {
         if s == "anode" {
             return Some(GradMethod::Anode);
@@ -93,13 +97,39 @@ impl GradMethod {
         if s == "otd" {
             return Some(GradMethod::Otd);
         }
-        if let Some(m) = s.strip_prefix("anode-revolve") {
-            return m.parse().ok().map(GradMethod::AnodeRevolve);
+        // Budget syntax + validation live in parse_budget (shared with the
+        // api strategy registry); a Some(Err) — pattern matched, degenerate
+        // budget — parses to None.
+        if let Some(m) = parse_budget(s, "anode-revolve") {
+            return m.ok().map(GradMethod::AnodeRevolve);
         }
-        if let Some(m) = s.strip_prefix("anode-equispaced") {
-            return m.parse().ok().map(GradMethod::AnodeEquispaced);
+        if let Some(m) = parse_budget(s, "anode-equispaced") {
+            return m.ok().map(GradMethod::AnodeEquispaced);
         }
         None
+    }
+}
+
+/// Parse `"<prefix><m>"` checkpoint-budget specs. `None` if `spec` is not
+/// this pattern; `Some(Err)` if it is but the budget is degenerate
+/// (m < 1). The single source of truth for budget syntax — both
+/// [`GradMethod::parse`] and the `api::strategy` registry delegate here.
+pub(crate) fn parse_budget(
+    spec: &str,
+    prefix: &str,
+) -> Option<Result<usize, RuntimeError>> {
+    let rest = spec.strip_prefix(prefix)?;
+    // Digits only: `usize::from_str` would accept a leading '+', breaking
+    // the spec-name round-trip ("anode-revolve+3" -> "anode-revolve3").
+    if rest.is_empty() || !rest.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    match rest.parse::<usize>() {
+        Ok(m) if m >= 1 => Some(Ok(m)),
+        Ok(m) => Some(Err(RuntimeError::Io(format!(
+            "{prefix}{m}: checkpoint budget must be >= 1 slot"
+        )))),
+        Err(_) => None,
     }
 }
 
@@ -318,5 +348,29 @@ mod tests {
         assert_eq!(GradMethod::parse("node"), Some(GradMethod::Node));
         assert_eq!(GradMethod::parse("bogus"), None);
         assert_eq!(GradMethod::AnodeEquispaced(2).name(), "anode-equispaced2");
+    }
+
+    #[test]
+    fn parse_accepts_valid_checkpoint_budgets() {
+        assert_eq!(GradMethod::parse("anode-revolve1"), Some(GradMethod::AnodeRevolve(1)));
+        assert_eq!(GradMethod::parse("anode-revolve16"), Some(GradMethod::AnodeRevolve(16)));
+        assert_eq!(
+            GradMethod::parse("anode-equispaced1"),
+            Some(GradMethod::AnodeEquispaced(1))
+        );
+        assert_eq!(
+            GradMethod::parse("anode-equispaced8"),
+            Some(GradMethod::AnodeEquispaced(8))
+        );
+    }
+
+    #[test]
+    fn parse_rejects_degenerate_checkpoint_budgets() {
+        assert_eq!(GradMethod::parse("anode-revolve0"), None);
+        assert_eq!(GradMethod::parse("anode-equispaced0"), None);
+        assert_eq!(GradMethod::parse("anode-revolve"), None);
+        assert_eq!(GradMethod::parse("anode-equispaced"), None);
+        assert_eq!(GradMethod::parse("anode-revolve-3"), None);
+        assert_eq!(GradMethod::parse("anode-revolveX"), None);
     }
 }

@@ -5,7 +5,7 @@
 //! layout matching `artifacts/params.bin`. The registry parses the manifest,
 //! compiles modules lazily on first use, and caches executables.
 
-use std::cell::RefCell;
+use std::cell::{OnceCell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
@@ -57,7 +57,10 @@ fn parse_tensor_spec(v: &Json) -> Result<TensorSpec> {
 
 /// Lazily-compiling registry of AOT artifacts.
 pub struct ArtifactRegistry {
-    runtime: XlaRuntime,
+    /// Created on first executable compile, so manifest parsing and
+    /// validation (the `api::EngineBuilder` path) work without a live
+    /// PJRT backend.
+    runtime: OnceCell<XlaRuntime>,
     dir: PathBuf,
     modules: HashMap<String, ModuleSpec>,
     params: HashMap<String, Vec<ParamSpec>>,
@@ -136,15 +139,23 @@ impl ArtifactRegistry {
         }
 
         let config = root.get("config").cloned().unwrap_or(Json::Obj(Default::default()));
-        let runtime = XlaRuntime::cpu()?;
         Ok(Self {
-            runtime,
+            runtime: OnceCell::new(),
             dir: dir.to_path_buf(),
             modules,
             params,
             config,
             cache: RefCell::new(HashMap::new()),
         })
+    }
+
+    /// The PJRT runtime, created on first use.
+    fn runtime(&self) -> Result<&XlaRuntime> {
+        if self.runtime.get().is_none() {
+            let rt = XlaRuntime::cpu()?;
+            let _ = self.runtime.set(rt);
+        }
+        Ok(self.runtime.get().expect("runtime just initialized"))
     }
 
     /// Manifest `config` section (solver, Nt, batch size, ...).
@@ -221,7 +232,7 @@ impl ArtifactRegistry {
         }
         let spec = self.module_spec(name)?;
         let path = self.dir.join(&spec.file);
-        let exe = Rc::new(self.runtime.compile_hlo_text(name, &path)?);
+        let exe = Rc::new(self.runtime()?.compile_hlo_text(name, &path)?);
         self.cache.borrow_mut().insert(name.to_string(), exe.clone());
         Ok(exe)
     }

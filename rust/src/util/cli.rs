@@ -1,7 +1,13 @@
 //! Tiny CLI argument parser (`--flag`, `--key value`, positionals).
 //! Replaces clap, which is unavailable in the offline image.
+//!
+//! Malformed option values are **hard errors**: `--steps abc` terminates
+//! the process with a clear message instead of silently falling back to a
+//! default. Options that were parsed but never consumed by the command can
+//! be reported via [`Args::warn_unknown`].
 
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
 
 /// Parsed command-line arguments.
 #[derive(Debug, Default, Clone)]
@@ -12,6 +18,8 @@ pub struct Args {
     opts: HashMap<String, String>,
     /// Bare `--flag`s.
     flags: Vec<String>,
+    /// Keys the command actually consumed (for unknown-option warnings).
+    consumed: RefCell<HashSet<String>>,
 }
 
 impl Args {
@@ -41,8 +49,13 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().insert(key.to_string());
+    }
+
     /// String option.
     pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
         self.opts.get(key).map(|s| s.as_str())
     }
 
@@ -51,14 +64,63 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    /// Parsed numeric option with default.
+    /// Parsed numeric option: `Ok(None)` if absent, `Err` with a clear
+    /// message if present but unparseable.
+    pub fn try_get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>, String> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| {
+                format!(
+                    "invalid value `{v}` for --{key} (expected {})",
+                    std::any::type_name::<T>()
+                )
+            }),
+        }
+    }
+
+    /// Parsed numeric option with default. A present-but-malformed value
+    /// is a **hard error** (exit 2) — silently training for 200 steps
+    /// because `--steps abc` failed to parse is worse than stopping.
     pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        match self.try_get_parse(key) {
+            Ok(Some(v)) => v,
+            Ok(None) => default,
+            Err(msg) => {
+                eprintln!("error: {msg}");
+                std::process::exit(2);
+            }
+        }
     }
 
     /// Is a bare flag present?
     pub fn has_flag(&self, key: &str) -> bool {
-        self.flags.iter().any(|f| f == key) || self.opts.get(key).map(|v| v == "true").unwrap_or(false)
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+            || self.opts.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Options and flags that were supplied but never consumed by the
+    /// command — almost always typos (`--step` for `--steps`).
+    pub fn unknown_options(&self) -> Vec<String> {
+        let consumed = self.consumed.borrow();
+        let mut unknown: Vec<String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(*k))
+            .cloned()
+            .collect();
+        unknown.sort();
+        unknown.dedup();
+        unknown
+    }
+
+    /// Warn (stderr) about supplied-but-unconsumed options. Call after the
+    /// command has read everything it understands.
+    pub fn warn_unknown(&self) {
+        for k in self.unknown_options() {
+            eprintln!("warning: unknown option --{k} (ignored — see `--help` for valid options)");
+        }
     }
 }
 
@@ -101,5 +163,29 @@ mod tests {
         let a = parse("");
         assert_eq!(a.get_or("arch", "resnet"), "resnet");
         assert_eq!(a.get_parse_or("nt", 5usize), 5);
+    }
+
+    #[test]
+    fn malformed_value_is_error_not_default() {
+        let a = parse("--steps abc");
+        let err = a.try_get_parse::<usize>("steps").unwrap_err();
+        assert!(err.contains("abc"), "{err}");
+        assert!(err.contains("--steps"), "{err}");
+        // Absent key parses to None; well-formed parses to Some.
+        assert_eq!(a.try_get_parse::<usize>("missing").unwrap(), None);
+        let b = parse("--steps 7");
+        assert_eq!(b.try_get_parse::<usize>("steps").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn unknown_options_are_reported() {
+        let a = parse("train --arch resnet --stepz 100 --fastt");
+        let _ = a.get("arch");
+        let unknown = a.unknown_options();
+        assert_eq!(unknown, vec!["fastt".to_string(), "stepz".to_string()]);
+        // Consuming clears the report.
+        let _ = a.get("stepz");
+        assert!(a.has_flag("fastt") || !a.unknown_options().contains(&"fastt".to_string()));
+        assert!(a.unknown_options().is_empty());
     }
 }

@@ -1,0 +1,290 @@
+//! Tests for the `anode::api` façade.
+//!
+//! Builder-validation tests run against synthetic manifests in a temp dir —
+//! no compiled artifacts or PJRT backend needed (manifest validation is
+//! eager, runtime creation is lazy). The serving-path tests require `make
+//! artifacts` and skip gracefully when it hasn't run.
+
+use std::path::{Path, PathBuf};
+
+use anode::api::{make_eval_batches, Engine, SessionConfig, StrategyRegistry};
+use anode::data::SyntheticCifar;
+use anode::models::GradMethod;
+use anode::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Strategy registry (pure)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn strategy_registry_round_trips_all_five_builtins() {
+    let reg = StrategyRegistry::builtin();
+    for spec in ["anode", "node", "otd", "anode-revolve4", "anode-equispaced2"] {
+        let strategy = reg.create(spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert_eq!(strategy.name(), spec, "name round-trip failed for {spec}");
+    }
+    // The CLI enum and the registry agree on naming.
+    for method in [
+        GradMethod::Anode,
+        GradMethod::Node,
+        GradMethod::Otd,
+        GradMethod::AnodeRevolve(7),
+        GradMethod::AnodeEquispaced(3),
+    ] {
+        assert_eq!(reg.create_from_method(method).unwrap().name(), method.name());
+    }
+}
+
+#[test]
+fn strategy_registry_rejects_degenerate_and_unknown() {
+    let reg = StrategyRegistry::builtin();
+    assert!(reg.create("anode-revolve0").is_err());
+    assert!(reg.create("anode-equispaced0").is_err());
+    let err = reg.create("no-such-method").unwrap_err().to_string();
+    assert!(err.contains("unknown gradient method"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Builder validation against synthetic manifests
+// ---------------------------------------------------------------------------
+
+/// Write a manifest with a full resnet10 param layout, a valid config
+/// section, and the given modules JSON fragment. Returns the temp dir.
+fn fake_manifest_dir(tag: &str, modules_json: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("anode_api_test_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut params = String::new();
+    let mut push = |name: &str| {
+        if !params.is_empty() {
+            params.push(',');
+        }
+        params.push_str(&format!(r#"{{"name":"{name}","shape":[1],"offset":0}}"#));
+    };
+    push("stem.w");
+    push("stem.b");
+    for s in 0..3 {
+        for b in 0..2 {
+            for leaf in ["w1", "b1", "w2", "b2"] {
+                push(&format!("s{s}.b{b}.{leaf}"));
+            }
+        }
+        if s < 2 {
+            push(&format!("trans{s}.w"));
+            push(&format!("trans{s}.b"));
+        }
+    }
+    push("head.w");
+    push("head.b");
+
+    let manifest = format!(
+        r#"{{
+  "modules": [{modules_json}],
+  "params": {{"resnet10": [{params}]}},
+  "config": {{"batch": 32, "image": 32, "blocks_per_stage": 2, "nt": 4,
+              "channels": [16, 32, 64]}}
+}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    dir
+}
+
+#[test]
+fn builder_reports_missing_module_eagerly() {
+    let dir = fake_manifest_dir("missing_module", "");
+    let err = Engine::builder().artifacts(&dir).build().unwrap_err().to_string();
+    assert!(err.contains("stem_fwd"), "error should name the missing module: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn builder_reports_missing_params_key() {
+    let dir = fake_manifest_dir("bad_params_key", "");
+    // Manifest only carries resnet10 params; ask for 100 classes.
+    let err = Engine::builder()
+        .artifacts(&dir)
+        .classes(100)
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("resnet100"), "error should name the params key: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn builder_reports_unreadable_manifest() {
+    let err = Engine::builder()
+        .artifacts("/nonexistent/anode-test-dir")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("manifest.json"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// Serving path (requires `make artifacts`)
+// ---------------------------------------------------------------------------
+
+fn real_engine() -> Option<Engine> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::builder().artifacts("artifacts").build().unwrap())
+}
+
+#[test]
+fn predict_checks_batch_shape() {
+    let Some(engine) = real_engine() else { return };
+    let session = engine.session(SessionConfig::default()).unwrap();
+    let cfg = engine.config().clone();
+
+    // Wrong batch dimension: typed error before any module executes.
+    let bad = Tensor::zeros(&[cfg.batch + 1, cfg.image, cfg.image, 3]);
+    let err = session.predict(&bad).unwrap_err().to_string();
+    assert!(err.contains("does not match"), "{err}");
+
+    // Wrong rank.
+    let bad2 = Tensor::zeros(&[cfg.batch, cfg.image * cfg.image * 3]);
+    assert!(session.predict(&bad2).is_err());
+
+    // Correct shape: classes + logits + stats come back.
+    let ds = SyntheticCifar::new(cfg.num_classes, 42, 0.1);
+    let (imgs, _) = ds.generate(cfg.batch, 0);
+    let p = session.predict(&imgs).unwrap();
+    assert_eq!(p.classes.len(), cfg.batch);
+    assert_eq!(p.logits.shape(), &[cfg.batch, cfg.num_classes]);
+    assert!(p.classes.iter().all(|&c| c < cfg.num_classes));
+    assert!(p.logits.all_finite());
+    assert!(p.stats.seconds > 0.0);
+    assert!(p.stats.peak_activation_bytes > 0);
+}
+
+#[test]
+fn session_trains_evaluates_and_serves() {
+    let Some(engine) = real_engine() else { return };
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let cfg = engine.config().clone();
+
+    let ds = SyntheticCifar::new(cfg.num_classes, 11, 0.1);
+    let (imgs, labels) = ds.generate(cfg.batch, 0);
+    let y = Tensor::from_vec(vec![cfg.batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+
+    let s = session.step(&imgs, &y).unwrap();
+    assert!(s.finite && s.loss.is_finite() && s.grad_norm > 0.0);
+    assert_eq!(session.steps_taken(), 1);
+
+    let (timgs, tlabels) = ds.generate(cfg.batch * 2, 1);
+    let eval = make_eval_batches(&timgs, &tlabels, cfg.batch, 2);
+    let e = session.evaluate(&eval).unwrap();
+    assert!(e.loss.is_finite() && (0.0..=1.0).contains(&e.accuracy));
+
+    let p = session.predict(&imgs).unwrap();
+    assert_eq!(p.classes.len(), cfg.batch);
+}
+
+#[test]
+fn gradcheck_confirms_checkpointed_strategies_match_dto() {
+    let Some(engine) = real_engine() else { return };
+    let cfg = engine.config().clone();
+    let ds = SyntheticCifar::new(cfg.num_classes, 13, 0.1);
+    let (imgs, labels) = ds.generate(cfg.batch, 0);
+    let y = Tensor::from_vec(vec![cfg.batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+
+    let mut session = engine.session(SessionConfig::with_method("anode-revolve2")).unwrap();
+    let report = session.gradcheck(&imgs, &y).unwrap();
+    assert_eq!(report.method, "anode-revolve2");
+    assert_eq!(report.reference, "anode");
+    assert!(report.loss_gap < 1e-5, "loss gap {}", report.loss_gap);
+    assert!(report.max_rel_err < 2e-4, "revolve deviates: {}", report.max_rel_err);
+
+    // The [8] method must NOT match DTO (§III) — gradcheck detects it.
+    let mut node_session = engine.session(SessionConfig::with_method("node")).unwrap();
+    let node_report = node_session.gradcheck(&imgs, &y).unwrap();
+    assert!(
+        node_report.max_rel_err > 1e-3,
+        "node gradient suspiciously equal to DTO: {}",
+        node_report.max_rel_err
+    );
+}
+
+#[test]
+fn session_fails_fast_when_strategy_kind_missing_from_manifest() {
+    // A manifest with the full forward surface but no vjp/step/node/otd
+    // artifacts: the engine builds, but any gradient strategy demanding a
+    // missing kind must fail at session creation with a typed error.
+    let mut modules = String::new();
+    for name in [
+        "stem_fwd",
+        "stem_vjp",
+        "trans0_fwd",
+        "trans0_vjp",
+        "trans1_fwd",
+        "trans1_vjp",
+        "head10_loss_grad",
+        "head10_eval",
+        "block_resnet_s0_euler_fwd",
+        "block_resnet_s1_euler_fwd",
+        "block_resnet_s2_euler_fwd",
+    ] {
+        if !modules.is_empty() {
+            modules.push(',');
+        }
+        modules.push_str(&format!(
+            r#"{{"name":"{name}","file":"{name}.hlo.txt","inputs":[],"outputs":[]}}"#
+        ));
+    }
+    let dir = fake_manifest_dir("missing_kind", &modules);
+    let engine = Engine::builder().artifacts(&dir).build().unwrap();
+
+    let err = engine
+        .session(SessionConfig::with_method("anode-revolve2"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("anode-revolve2"), "error should name the method: {err}");
+    assert!(
+        err.contains("step_fwd") || err.contains("step_vjp"),
+        "error should name the missing kind: {err}"
+    );
+    // The fused and baseline methods are equally unavailable here.
+    assert!(engine.session(SessionConfig::with_method("anode")).is_err());
+    assert!(engine.session(SessionConfig::with_method("node")).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn custom_strategy_registers_against_real_manifest() {
+    let Some(engine) = real_engine() else { return };
+    // A custom strategy demanding a module kind the manifest never ships.
+    struct Hungry;
+    impl anode::api::GradientStrategy for Hungry {
+        fn name(&self) -> String {
+            "hungry".into()
+        }
+        fn required_kinds(&self) -> &'static [&'static str] {
+            &["vjp", "step_fwd", "step_vjp", "node", "otd"]
+        }
+        fn block_backward(
+            &self,
+            _ctx: &anode::api::BlockContext<'_>,
+            gz: Tensor,
+            _grads: &mut [Tensor],
+            _ledger: &mut anode::memory::MemoryLedger,
+        ) -> anode::api::Result<Tensor> {
+            Ok(gz)
+        }
+    }
+    let mut engine = engine;
+    engine.strategies_mut().register("hungry", |spec| {
+        (spec == "hungry").then(|| Ok(Box::new(Hungry) as Box<dyn anode::api::GradientStrategy>))
+    });
+    // All five kinds exist in the real manifest, so this succeeds...
+    assert!(engine.session(SessionConfig::with_method("hungry")).is_ok());
+    // ...and unknown methods still fail with the registry's name list.
+    let err = engine
+        .session(SessionConfig::with_method("missing"))
+        .err()
+        .map(|e| e.to_string())
+        .unwrap_or_default();
+    assert!(err.contains("unknown gradient method"), "{err}");
+}

@@ -1,14 +1,14 @@
 //! Integration tests over the full stack: artifacts → runtime → coordinator
-//! → trainer. Requires `make artifacts`; each test skips gracefully if the
-//! artifacts are missing.
+//! → api session. Requires `make artifacts`; each test skips gracefully if
+//! the artifacts are missing.
 
 use std::path::Path;
 
-use anode::coordinator::{make_eval_batches, Coordinator, TrainOptions, Trainer};
-use anode::data::{Batcher, SyntheticCifar};
+use anode::api::{Engine, FitOptions, LrSchedule, SessionConfig};
+use anode::coordinator::Coordinator;
+use anode::data::{make_eval_batches, Batcher, SyntheticCifar};
 use anode::memory::{Category, MemoryLedger};
 use anode::models::{Arch, GradMethod, ModelConfig, Solver};
-use anode::optim::LrSchedule;
 use anode::runtime::ArtifactRegistry;
 use anode::tensor::Tensor;
 
@@ -147,20 +147,20 @@ fn node_gradient_differs_from_anode() {
 #[test]
 fn short_training_decreases_loss() {
     let Some(reg) = registry() else { return };
-    let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
-    let batch = cfg.batch;
-    let co = Coordinator::new(&reg, cfg, Solver::Euler, GradMethod::Anode).unwrap();
-    let (mut train, eval) = small_data(10, batch * 8, batch);
-    let opts = TrainOptions {
-        steps: 16,
-        eval_every: 8,
+    let engine = Engine::builder().registry(std::rc::Rc::new(reg)).build().unwrap();
+    let batch = engine.config().batch;
+    let session_cfg = SessionConfig {
+        method: "anode".into(),
         lr: LrSchedule::Constant(0.05),
-        verbose: false,
         ..Default::default()
     };
-    let res = Trainer::new(&co, opts).train(&mut train, &eval, "itest").unwrap();
+    let mut session = engine.session(session_cfg).unwrap();
+    let (mut train, eval) = small_data(10, batch * 8, batch);
+    let opts = FitOptions { steps: 16, eval_every: 8, verbose: false, ..Default::default() };
+    let res = session.fit(&mut train, &eval, &opts, "itest").unwrap();
     assert!(!res.diverged);
     assert_eq!(res.steps_run, 16);
+    assert_eq!(session.steps_taken(), 16);
     let first = res.curve.points.first().unwrap().train_loss;
     let last = res.curve.points.last().unwrap().train_loss;
     assert!(last < first, "loss did not decrease: {first} -> {last}");

@@ -1,0 +1,190 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) API surface that `anode`
+//! uses. The build image has no network access and no prebuilt
+//! xla_extension, so this crate keeps the whole workspace compiling and
+//! the host-side test suite green; every operation that would need a real
+//! backend returns a descriptive [`Error`] instead.
+//!
+//! To execute AOT artifacts for real, point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual xla-rs crate (same API surface — this
+//! stub mirrors the subset `anode::runtime::client` calls; see
+//! rust/DESIGN.md §5).
+
+/// Error type mirroring `xla::Error` as a plain message.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what} requires a real XLA/PJRT backend — this build links the offline \
+         `xla` stub (rust/vendor/xla-stub); point the `xla` dependency in \
+         rust/Cargo.toml at xla-rs to execute artifacts"
+    )))
+}
+
+/// Element types a [`Literal`] can hold / convert to. The stub only ships
+/// f32, the sole dtype anode's artifact I/O uses.
+pub trait NativeType: Sized + Copy {
+    fn from_f32(v: f32) -> Self;
+    fn to_f32(self) -> f32;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+    fn to_f32(self) -> f32 {
+        self
+    }
+}
+
+/// Host-side PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Stub client creation succeeds, so manifest-only workflows (engine
+    /// build, validation, listing) run anywhere; execution fails later
+    /// with a clear message.
+    pub fn cpu() -> Result<Self> {
+        Ok(Self { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("compiling an HLO module")
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("parsing HLO text")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _private: () }
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("executing a module")
+    }
+}
+
+/// A device buffer produced by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("device-to-host transfer")
+    }
+}
+
+/// Dims of an array-shaped literal.
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host literal: shape + f32 data. Enough to stage inputs; outputs only
+/// ever come from [`PjRtBuffer::to_literal_sync`], which the stub refuses.
+pub struct Literal {
+    shape: Vec<i64>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            shape: vec![data.len() as i64],
+            data: data.iter().map(|&v| v.to_f32()).collect(),
+        }
+    }
+
+    /// Reshape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape to {:?} wants {} elements, literal has {}",
+                dims,
+                want,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { shape: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.shape.clone() })
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("tuple decomposition")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[5]).is_err());
+    }
+
+    #[test]
+    fn backend_operations_error_clearly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub");
+        let err = HloModuleProto::from_text_file("/tmp/x.hlo").unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+}
