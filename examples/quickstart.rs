@@ -37,7 +37,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let ds = SyntheticCifar::new(cfg.num_classes, 7, 0.12);
     let (train_imgs, train_labels) = ds.generate(cfg.batch * 4, 1);
     let (test_imgs, test_labels) = ds.generate(cfg.batch * 2, 2);
-    let mut train = Batcher::new(train_imgs, train_labels, cfg.batch, true, 3);
+    let mut train = Batcher::new(train_imgs, train_labels, cfg.batch, true, 3)?;
     let eval = make_eval_batches(&test_imgs, &test_labels, cfg.batch, 2);
 
     for _ in 0..steps {

@@ -32,6 +32,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         lr: args.get_parse_or("lr", 0.02),
         seed: args.get_parse_or("seed", 0),
         verbose: true,
+        workers: args.get_parse_or("workers", 1),
     };
     let csv = args.get("csv").map(|s| s.to_string());
     args.warn_unknown();

@@ -31,6 +31,7 @@ fn main() {
                 lr: 0.02,
                 seed: 0,
                 verbose: false,
+                workers: 1,
             };
             match train_figure(&reg, &o) {
                 Ok(run) => {
@@ -54,6 +55,7 @@ fn main() {
         lr: 0.02,
         seed: 0,
         verbose: false,
+        workers: 1,
     };
     if let Ok(run) = train_figure(&reg, &o) {
         summary.push((run.series.clone(), run.curve.final_acc(), run.diverged, run.sec_per_step));

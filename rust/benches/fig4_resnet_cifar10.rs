@@ -31,6 +31,7 @@ fn main() {
             lr: 0.02,
             seed: 0,
             verbose: false,
+            workers: 1,
         };
         match train_figure(&reg, &o) {
             Ok(run) => {

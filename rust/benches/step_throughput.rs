@@ -1,19 +1,29 @@
 //! §V compute-cost claim: "ANODE has the same computational cost as the
 //! neural ODE of [8]" — wall-clock per gradient computation, per method,
 //! through the `anode::api` façade. Also times the batched inference path
-//! (`Session::predict`), the serving-side number.
-//! Requires `make artifacts`. `cargo bench --bench step_throughput`
+//! (`Session::predict`), the serving-side number, and the parallel
+//! `predict_throughput` fan-out (serial vs `--workers 4`), emitting
+//! `BENCH_predict.json` to seed the perf trajectory.
+//! `cargo bench --bench step_throughput` (method timings need
+//! `make artifacts`; `predict_throughput` also runs on the offline stub,
+//! where it times the host-side serving tail through the same worker pool).
 
-use anode::api::{Engine, SessionConfig};
+use anode::api::{head_logits, Engine, SessionConfig};
 use anode::data::SyntheticCifar;
 use anode::tensor::Tensor;
-use anode::util::bench::bench;
+use anode::util::bench::{bench, black_box};
+use anode::util::pool::parallel_map;
 
 fn main() {
-    let Ok(engine) = Engine::builder().artifacts("artifacts").build() else {
-        eprintln!("artifacts/ missing — run `make artifacts`");
-        return;
-    };
+    let engine = Engine::builder().artifacts("artifacts").build();
+    match &engine {
+        Ok(engine) => method_timings(engine),
+        Err(_) => eprintln!("artifacts/ missing — skipping per-method gradient timings"),
+    }
+    predict_throughput(engine.as_ref().ok());
+}
+
+fn method_timings(engine: &Engine) {
     println!("=== §V — per-step gradient cost by method (ResNet, Euler, B=32) ===\n");
     let batch = engine.config().batch;
     let ds = SyntheticCifar::new(10, 3, 0.1);
@@ -32,7 +42,7 @@ fn main() {
     ] {
         let mut session = engine.session(SessionConfig::with_method(method)).unwrap();
         let stats = bench(&format!("loss_and_grad[{method}]"), 1, 3, || {
-            anode::util::bench::black_box(session.loss_and_grad(&imgs, &y).unwrap());
+            black_box(session.loss_and_grad(&imgs, &y).unwrap());
         });
         println!("{}", stats.report());
         match method {
@@ -51,7 +61,7 @@ fn main() {
     // Serving-side numbers: inference forward and the predict path.
     let session = engine.session(SessionConfig::with_method("anode")).unwrap();
     let stats = bench("predict(batched inference)", 1, 3, || {
-        anode::util::bench::black_box(session.predict(&imgs).unwrap());
+        black_box(session.predict(&imgs).unwrap());
     });
     println!("{}", stats.report());
     if let Ok(p) = session.predict(&imgs) {
@@ -59,5 +69,86 @@ fn main() {
             "predict: {:.0} examples/s, peak rolling activation {}B",
             p.stats.examples_per_sec, p.stats.peak_activation_bytes
         );
+    }
+}
+
+/// Serial vs 4-worker predict throughput. With real artifacts this times
+/// `Session::predict_batches` end to end; on the offline stub it times the
+/// host-side serving tail (global-average-pool + dense head over synthetic
+/// activations) through the same `util::pool` worker pool, so the
+/// parallel-speedup number exists on every build.
+fn predict_throughput(engine: Option<&Engine>) {
+    println!("\n=== predict_throughput — serial vs 4 workers ===\n");
+    const WORKERS: usize = 4;
+
+    let (mode, batch, n_batches, serial, par) = match engine {
+        Some(engine) => {
+            let cfg = engine.config().clone();
+            let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+            let ds = SyntheticCifar::new(cfg.num_classes, 7, 0.1);
+            let batches: Vec<Tensor> =
+                (0..16).map(|k| ds.generate(cfg.batch, k as u64).0).collect();
+            let serial = bench("predict_batches[workers=1]", 1, 3, || {
+                black_box(session.predict_batches_with_workers(&batches, 1).unwrap());
+            });
+            let par = bench(&format!("predict_batches[workers={WORKERS}]"), 1, 3, || {
+                black_box(session.predict_batches_with_workers(&batches, WORKERS).unwrap());
+            });
+            // Ledger-merge sanity for the printed numbers: same traffic.
+            let s = session.predict_batches_with_workers(&batches, 1).unwrap();
+            let p = session.predict_batches_with_workers(&batches, WORKERS).unwrap();
+            println!(
+                "ledger: serial traffic {}B, merged {}-worker traffic {}B (must match)",
+                s.memory.total_traffic(),
+                p.workers,
+                p.memory.total_traffic()
+            );
+            ("session", cfg.batch, batches.len(), serial, par)
+        }
+        None => {
+            // Host-side tail: (B, 16, 16, 64) activations through the
+            // 10-class head — the post-XLA portion of every predict call.
+            let (b, h, c, k) = (32usize, 16usize, 64usize, 10usize);
+            let zs: Vec<Tensor> = (0..48)
+                .map(|i| Tensor::full(&[b, h, h, c], 0.01 * (i + 1) as f32))
+                .collect();
+            let w = Tensor::full(&[c, k], 0.05);
+            let bias = Tensor::full(&[k], 0.1);
+            let serial = bench("predict_tail[workers=1]", 1, 5, || {
+                for z in &zs {
+                    black_box(head_logits(z, &w, &bias).unwrap());
+                }
+            });
+            let par = bench(&format!("predict_tail[workers={WORKERS}]"), 1, 5, || {
+                black_box(parallel_map(&zs, WORKERS, |_, z| head_logits(z, &w, &bias).unwrap()));
+            });
+            ("stub-tail", b, zs.len(), serial, par)
+        }
+    };
+
+    println!("{}", serial.report());
+    println!("{}", par.report());
+    let s_secs = serial.median.as_secs_f64();
+    let p_secs = par.median.as_secs_f64();
+    let examples = (batch * n_batches) as f64;
+    let speedup = s_secs / p_secs.max(1e-12);
+    println!(
+        "speedup x{speedup:.2}  ({:.0} -> {:.0} examples/s)",
+        examples / s_secs.max(1e-12),
+        examples / p_secs.max(1e-12)
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"predict_throughput\",\n  \"mode\": \"{mode}\",\n  \
+         \"batch\": {batch},\n  \"batches\": {n_batches},\n  \"workers\": {WORKERS},\n  \
+         \"serial_median_secs\": {s_secs:.6},\n  \"workers{WORKERS}_median_secs\": {p_secs:.6},\n  \
+         \"serial_examples_per_sec\": {:.1},\n  \"workers{WORKERS}_examples_per_sec\": {:.1},\n  \
+         \"speedup\": {speedup:.3}\n}}\n",
+        examples / s_secs.max(1e-12),
+        examples / p_secs.max(1e-12),
+    );
+    match std::fs::write("BENCH_predict.json", &json) {
+        Ok(()) => println!("wrote BENCH_predict.json"),
+        Err(e) => eprintln!("could not write BENCH_predict.json: {e}"),
     }
 }

@@ -23,6 +23,10 @@
 //! * **Serving path** — [`Session::predict`] runs batched inference over
 //!   pre-batched tensors with per-call latency/memory stats, via an
 //!   inference-only forward that pays zero gradient bookkeeping.
+//!   [`Session::predict_batches`] and [`Session::evaluate`] fan
+//!   micro-batches across a small worker pool (`SessionConfig::workers`),
+//!   each worker metering its own [`crate::memory::MemoryLedger`], merged
+//!   afterward into aggregate peak/traffic stats.
 //!
 //! ## Quickstart
 //!
@@ -42,7 +46,7 @@ pub mod session;
 pub mod strategy;
 
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::models::{ModelConfig, ParamIndex};
 use crate::runtime::ArtifactRegistry;
@@ -53,23 +57,24 @@ pub use crate::optim::LrSchedule;
 pub use crate::runtime::{Result, RuntimeError};
 pub use modules::{ModuleHandle, ModuleSet, StageModules};
 pub use session::{
-    argmax_rows, head_logits, EvalStats, FitOptions, FitReport, GradCheckReport, PredictStats,
-    Prediction, Session, SessionConfig, StepStats,
+    argmax_rows, head_logits, BatchPredictReport, EvalStats, FitOptions, FitReport,
+    GradCheckReport, PredictStats, Prediction, Session, SessionConfig, StepStats,
 };
 pub use strategy::{BlockContext, GradientStrategy, ModuleExec, StrategyRegistry};
 
-/// Open an artifact registry for sharing across several engines (the
+/// Open an artifact registry for sharing across several engines — and,
+/// since the registry is `Send + Sync`, across threads (the
 /// compiled-module cache is per-registry, so multi-config drivers should
 /// open once and pass the handle to each [`EngineBuilder::registry`]).
-pub fn open_artifacts(dir: impl AsRef<Path>) -> Result<Rc<ArtifactRegistry>> {
-    Ok(Rc::new(ArtifactRegistry::open(dir.as_ref())?))
+pub fn open_artifacts(dir: impl AsRef<Path>) -> Result<Arc<ArtifactRegistry>> {
+    Ok(Arc::new(ArtifactRegistry::open(dir.as_ref())?))
 }
 
 /// Builder for [`Engine`]: where the artifacts live and which model
 /// configuration to validate against.
 pub struct EngineBuilder {
     artifacts: PathBuf,
-    registry: Option<Rc<ArtifactRegistry>>,
+    registry: Option<Arc<ArtifactRegistry>>,
     arch: Arch,
     num_classes: usize,
     solver: Solver,
@@ -104,7 +109,7 @@ impl EngineBuilder {
 
     /// Share an already-open registry (and its compiled-module cache)
     /// instead of opening `artifacts` again.
-    pub fn registry(mut self, reg: Rc<ArtifactRegistry>) -> Self {
+    pub fn registry(mut self, reg: Arc<ArtifactRegistry>) -> Self {
         self.registry = Some(reg);
         self
     }
@@ -141,7 +146,7 @@ impl EngineBuilder {
     pub fn build(self) -> Result<Engine> {
         let reg = match self.registry {
             Some(r) => r,
-            None => Rc::new(ArtifactRegistry::open(&self.artifacts)?),
+            None => Arc::new(ArtifactRegistry::open(&self.artifacts)?),
         };
         let cfg = ModelConfig::from_registry(&reg, self.arch, self.num_classes)?;
         // Params: key exists and its layout matches the model structure.
@@ -156,9 +161,11 @@ impl EngineBuilder {
 /// A validated, ready-to-serve model configuration: the open artifact
 /// registry, the resolved module handles, and the gradient-strategy
 /// registry. Sessions borrow the engine, so one engine can back many
-/// concurrent sessions sharing one compiled-module cache.
+/// concurrent sessions sharing one compiled-module cache — and since the
+/// engine is `Sync`, those sessions can live on different threads (see the
+/// "Concurrency model" section of rust/DESIGN.md).
 pub struct Engine {
-    reg: Rc<ArtifactRegistry>,
+    reg: Arc<ArtifactRegistry>,
     cfg: ModelConfig,
     solver: Solver,
     modules: ModuleSet,
@@ -209,8 +216,15 @@ impl Engine {
         &self.reg
     }
 
-    /// Share the registry with another engine builder.
-    pub fn shared_registry(&self) -> Rc<ArtifactRegistry> {
+    /// Share the registry with another engine builder (or another thread).
+    pub fn shared_registry(&self) -> Arc<ArtifactRegistry> {
         self.reg.clone()
     }
 }
+
+// Sessions on worker threads hold `&Engine`; losing Sync here would
+// silently serialize the whole serving path, so assert it at compile time.
+const _: () = {
+    const fn assert_sync<T: Sync>() {}
+    assert_sync::<Engine>();
+};

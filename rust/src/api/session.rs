@@ -1,22 +1,33 @@
 //! Sessions — stateful handles over an [`Engine`](super::Engine) that own
 //! parameters and optimizer state, and expose training (`step`, `fit`,
 //! `evaluate`), gradient validation (`gradcheck`) and the batched
-//! inference path (`predict`) with per-call latency/memory stats.
+//! inference paths (`predict`, `predict_batches`) with per-call
+//! latency/memory stats.
+//!
+//! A session splits into the shared-immutable [`ExecutionCore`] (config,
+//! module handles, strategy — behind an `Arc`, safe to fan across worker
+//! threads) and the per-session mutable state it owns (parameters, SGD
+//! momentum, the memory ledger). `evaluate` and `predict_batches` exploit
+//! the split: micro-batches fan out over a small thread pool
+//! ([`SessionConfig::workers`]), each worker metering its own
+//! [`MemoryLedger`], merged afterward into aggregate stats.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::ExecutionCore;
 use crate::data::Batcher;
 use crate::memory::{Category, MemoryLedger};
 use crate::metrics::{Curve, CurvePoint, Mean};
 use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{Result, RuntimeError};
 use crate::tensor::Tensor;
+use crate::util::pool;
 
 use super::Engine;
 
-/// Per-session configuration: which gradient strategy backs `step`, and the
-/// optimizer hyperparameters.
+/// Per-session configuration: which gradient strategy backs `step`, the
+/// optimizer hyperparameters, and the serving-path worker count.
 #[derive(Debug, Clone)]
 pub struct SessionConfig {
     /// Gradient-strategy spec resolved through the engine's
@@ -28,6 +39,11 @@ pub struct SessionConfig {
     pub weight_decay: f32,
     /// Global gradient-norm clip; `None` disables clipping.
     pub clip_norm: Option<f32>,
+    /// Worker threads for the data-parallel serving paths
+    /// ([`Session::evaluate`], [`Session::predict_batches`]). `1` (the
+    /// default) runs inline on the caller's thread; results are
+    /// bit-identical for every worker count.
+    pub workers: usize,
 }
 
 impl Default for SessionConfig {
@@ -38,6 +54,7 @@ impl Default for SessionConfig {
             momentum: 0.9,
             weight_decay: 5e-4,
             clip_norm: Some(5.0),
+            workers: 1,
         }
     }
 }
@@ -98,6 +115,24 @@ pub struct Prediction {
     pub stats: PredictStats,
 }
 
+/// Aggregate outcome of a [`Session::predict_batches`] fan-out: per-batch
+/// predictions (input order), wall-clock throughput, and the merged
+/// per-worker memory ledger.
+#[derive(Debug)]
+pub struct BatchPredictReport {
+    /// One prediction per input batch, in input order.
+    pub predictions: Vec<Prediction>,
+    /// Worker threads actually used.
+    pub workers: usize,
+    /// Wall-clock for the whole fan-out.
+    pub seconds: f64,
+    pub examples_per_sec: f64,
+    /// Per-worker ledgers folded with [`MemoryLedger::merge`]: traffic is
+    /// additive (equal to the serial run over the same batches), peaks sum
+    /// across concurrent workers.
+    pub memory: MemoryLedger,
+}
+
 /// Result of [`Session::gradcheck`]: this session's gradient vs the fused
 /// DTO reference on one batch.
 #[derive(Debug, Clone)]
@@ -146,12 +181,15 @@ pub struct FitReport {
 
 /// A stateful training/inference handle over an [`Engine`].
 ///
-/// Owns the parameter vector, optimizer state and memory ledger; borrows
-/// the engine (and through it the artifact registry and compiled-module
-/// cache), so many sessions can share one engine.
+/// Owns the per-session mutable state — parameter vector, optimizer state,
+/// memory ledger — over a shared [`ExecutionCore`] (`Arc`'d: config,
+/// module handles, strategy). Borrows the engine (and through it the
+/// artifact registry and compiled-module cache), so many sessions can
+/// share one engine; the engine is `Sync`, so those sessions can train on
+/// separate threads concurrently.
 pub struct Session<'e> {
     engine: &'e Engine,
-    co: Coordinator<'e>,
+    core: Arc<ExecutionCore>,
     config: SessionConfig,
     params: Vec<Tensor>,
     opt: Sgd,
@@ -164,21 +202,21 @@ impl<'e> Session<'e> {
     /// against the manifest, load initial parameters.
     pub(super) fn new(engine: &'e Engine, config: SessionConfig) -> Result<Self> {
         let strategy = engine.strategies().create(&config.method)?;
-        let co = Coordinator::with_strategy(
-            engine.registry(),
+        let core = Arc::new(ExecutionCore::with_strategy(
+            engine.shared_registry(),
             engine.config().clone(),
             engine.solver(),
             engine.modules().clone(),
             strategy,
-        )?;
-        let params = co.load_params()?;
+        )?);
+        let params = core.load_params()?;
         let opt = Sgd::new(&params, config.lr.at(0), config.momentum, config.weight_decay);
         let mut ledger = MemoryLedger::new();
         // Params + optimizer state are persistent allocations.
         let pbytes: usize = params.iter().map(|p| p.byte_size()).sum();
         ledger.alloc(pbytes, Category::Param);
         ledger.alloc(opt.state_bytes(), Category::OptState);
-        Ok(Self { engine, co, config, params, opt, ledger, step_idx: 0 })
+        Ok(Self { engine, core, config, params, opt, ledger, step_idx: 0 })
     }
 
     /// The engine this session runs on.
@@ -188,7 +226,13 @@ impl<'e> Session<'e> {
 
     /// Canonical name of the configured gradient method.
     pub fn method_name(&self) -> String {
-        self.co.method_name()
+        self.core.method_name()
+    }
+
+    /// The shared execution core (advanced: fan it to custom worker
+    /// threads; it is `Send + Sync` and holds no mutable state).
+    pub fn core(&self) -> &Arc<ExecutionCore> {
+        &self.core
     }
 
     /// Session configuration.
@@ -218,12 +262,12 @@ impl<'e> Session<'e> {
 
     /// Total module executions so far (perf accounting).
     pub fn module_calls(&self) -> usize {
-        self.co.call_count.get()
+        self.core.calls_made()
     }
 
     /// Validate an input batch against the model's compiled shape.
     fn check_batch(&self, images: &Tensor) -> Result<()> {
-        let cfg = &self.co.cfg;
+        let cfg = &self.core.cfg;
         let want = [cfg.batch, cfg.image, cfg.image, 3];
         if images.shape() != &want[..] {
             return Err(RuntimeError::Shape(format!(
@@ -237,7 +281,7 @@ impl<'e> Session<'e> {
     }
 
     fn check_labels(&self, labels: &Tensor) -> Result<()> {
-        let want = [self.co.cfg.batch];
+        let want = [self.core.cfg.batch];
         if labels.shape() != &want[..] {
             return Err(RuntimeError::Shape(format!(
                 "label shape {:?} does not match {want:?} (f32 class indices)",
@@ -256,7 +300,7 @@ impl<'e> Session<'e> {
     ) -> Result<(f32, f32, Vec<Tensor>)> {
         self.check_batch(images)?;
         self.check_labels(labels)?;
-        self.co.loss_and_grad(images, labels, &self.params, &mut self.ledger)
+        self.core.loss_and_grad(images, labels, &self.params, &mut self.ledger)
     }
 
     /// One training step: forward, strategy backward, clip, SGD update.
@@ -269,7 +313,7 @@ impl<'e> Session<'e> {
         let lr = self.config.lr.at(self.step_idx);
         self.opt.lr = lr;
         let (loss, correct, mut grads) =
-            self.co.loss_and_grad(images, labels, &self.params, &mut self.ledger)?;
+            self.core.loss_and_grad(images, labels, &self.params, &mut self.ledger)?;
         let finite = loss.is_finite() && grads.iter().all(|g| g.all_finite());
         let mut grad_norm = 0.0;
         if finite {
@@ -280,7 +324,7 @@ impl<'e> Session<'e> {
         Ok(StepStats {
             step: self.step_idx,
             loss,
-            batch_accuracy: correct / self.co.cfg.batch.max(1) as f32,
+            batch_accuracy: correct / self.core.cfg.batch.max(1) as f32,
             grad_norm,
             lr,
             seconds: t0.elapsed().as_secs_f64(),
@@ -289,10 +333,30 @@ impl<'e> Session<'e> {
     }
 
     /// Evaluate over pre-batched data via the inference path (no gradient
-    /// bookkeeping, no ledger traffic).
+    /// bookkeeping, no ledger traffic). Fans batches across
+    /// [`SessionConfig::workers`] threads; the reduction runs in batch
+    /// order on the calling thread, so the result is bit-identical to the
+    /// serial sweep for every worker count.
     pub fn evaluate(&self, batches: &[(Tensor, Tensor)]) -> Result<EvalStats> {
+        self.evaluate_with_workers(batches, self.config.workers)
+    }
+
+    /// [`Session::evaluate`] with an explicit worker count (serving drivers
+    /// and benches sweep this without rebuilding the session).
+    pub fn evaluate_with_workers(
+        &self,
+        batches: &[(Tensor, Tensor)],
+        workers: usize,
+    ) -> Result<EvalStats> {
         let t0 = Instant::now();
-        let (loss, accuracy) = self.co.evaluate(batches, &self.params)?;
+        let core = &self.core;
+        let params = &self.params;
+        let per_batch = pool::parallel_map(batches, workers, |_i, xy: &(Tensor, Tensor)| {
+            core.eval_batch(&xy.0, &xy.1, params)
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>>>()?;
+        let (loss, accuracy) = ExecutionCore::reduce_eval(&per_batch, core.cfg.batch);
         Ok(EvalStats { loss, accuracy, batches: batches.len(), seconds: t0.elapsed().as_secs_f64() })
     }
 
@@ -301,16 +365,15 @@ impl<'e> Session<'e> {
     /// stats — the serving-shaped path.
     pub fn predict(&self, images: &Tensor) -> Result<Prediction> {
         self.check_batch(images)?;
-        let cfg = &self.co.cfg;
+        let cfg = &self.core.cfg;
         let t0 = Instant::now();
-        let z = self.co.forward_infer(images, &self.params)?;
-        let (hw, hb) = self.co.index.head;
+        let z = self.core.forward_infer(images, &self.params)?;
+        let (hw, hb) = self.core.index.head;
         let logits = head_logits(&z, &self.params[hw], &self.params[hb])?;
         let classes = argmax_rows(&logits);
         let seconds = t0.elapsed().as_secs_f64();
         // Inference holds one rolling activation; peak is the largest stage.
-        let peak_activation_bytes =
-            (0..cfg.stages()).map(|s| cfg.stage_act_bytes(s)).max().unwrap_or(0);
+        let peak_activation_bytes = cfg.rolling_act_bytes();
         Ok(Prediction {
             classes,
             logits,
@@ -323,6 +386,75 @@ impl<'e> Session<'e> {
         })
     }
 
+    /// Many-batch inference: fan pre-batched image tensors across
+    /// [`SessionConfig::workers`] threads. Each worker meters its rolling
+    /// activation on a **private** [`MemoryLedger`]; the report carries the
+    /// merged aggregate (traffic additive — equal to the serial run —
+    /// peaks summed across concurrent workers), so the paper's O-bounds
+    /// stay measurable per worker.
+    pub fn predict_batches(&self, batches: &[Tensor]) -> Result<BatchPredictReport> {
+        self.predict_batches_with_workers(batches, self.config.workers)
+    }
+
+    /// [`Session::predict_batches`] with an explicit worker count.
+    pub fn predict_batches_with_workers(
+        &self,
+        batches: &[Tensor],
+        workers: usize,
+    ) -> Result<BatchPredictReport> {
+        for images in batches {
+            self.check_batch(images)?;
+        }
+        let t0 = Instant::now();
+        let core = &self.core;
+        let params = &self.params;
+        let cfg = &core.cfg;
+        let (hw, hb) = core.index.head;
+        // Inference rolls one activation through the stages; its peak is
+        // metered per batch on the worker's own ledger.
+        let rolling = cfg.rolling_act_bytes();
+        let (results, ledgers) = pool::parallel_map_with(
+            batches,
+            workers,
+            MemoryLedger::new,
+            |ledger: &mut MemoryLedger, _i, images: &Tensor| -> Result<Prediction> {
+                let id = ledger.alloc(rolling, Category::Transient);
+                let t = Instant::now();
+                let out = core
+                    .forward_infer(images, params)
+                    .and_then(|z| head_logits(&z, &params[hw], &params[hb]));
+                ledger.free(id);
+                let logits = out?;
+                let classes = argmax_rows(&logits);
+                let seconds = t.elapsed().as_secs_f64();
+                Ok(Prediction {
+                    classes,
+                    logits,
+                    stats: PredictStats {
+                        batch: cfg.batch,
+                        seconds,
+                        examples_per_sec: cfg.batch as f64 / seconds.max(1e-12),
+                        peak_activation_bytes: rolling,
+                    },
+                })
+            },
+        );
+        let mut memory = MemoryLedger::new();
+        for ledger in &ledgers {
+            memory.merge(ledger);
+        }
+        let predictions = results.into_iter().collect::<Result<Vec<_>>>()?;
+        let seconds = t0.elapsed().as_secs_f64();
+        let examples = predictions.len() * cfg.batch;
+        Ok(BatchPredictReport {
+            predictions,
+            workers: ledgers.len(),
+            seconds,
+            examples_per_sec: examples as f64 / seconds.max(1e-12),
+            memory,
+        })
+    }
+
     /// Compare this session's gradient against the fused DTO reference
     /// (`anode`) on one batch — the §IV consistency check as a serving API.
     pub fn gradcheck(&mut self, images: &Tensor, labels: &Tensor) -> Result<GradCheckReport> {
@@ -330,18 +462,18 @@ impl<'e> Session<'e> {
         self.check_labels(labels)?;
         let reference = "anode";
         let ref_strategy = self.engine.strategies().create(reference)?;
-        let ref_co = Coordinator::with_strategy(
-            self.engine.registry(),
-            self.co.cfg.clone(),
-            self.co.solver,
+        let ref_core = ExecutionCore::with_strategy(
+            self.engine.shared_registry(),
+            self.core.cfg.clone(),
+            self.core.solver,
             self.engine.modules().clone(),
             ref_strategy,
         )?;
         let mut scratch = MemoryLedger::new();
         let (loss_ref, _, g_ref) =
-            ref_co.loss_and_grad(images, labels, &self.params, &mut scratch)?;
+            ref_core.loss_and_grad(images, labels, &self.params, &mut scratch)?;
         let (loss, _, g) =
-            self.co.loss_and_grad(images, labels, &self.params, &mut self.ledger)?;
+            self.core.loss_and_grad(images, labels, &self.params, &mut self.ledger)?;
         let mut max_rel = 0.0f32;
         let mut sum_rel = 0.0f64;
         for (a, b) in g.iter().zip(&g_ref) {

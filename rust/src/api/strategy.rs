@@ -12,6 +12,11 @@
 //! Strategies are constructed by name through a [`StrategyRegistry`], so new
 //! adjoint methods (symplectic adjoints, interpolation schemes, ...) plug in
 //! by registering a factory — no coordinator edits required.
+//!
+//! Strategies and factories are `Send + Sync`: one strategy object lives in
+//! the shared [`crate::coordinator::ExecutionCore`] and is invoked from
+//! whichever thread runs the backward pass, so all per-call scratch state
+//! stays on the stack of `block_backward`.
 
 use crate::checkpoint::{plan, run_backward, Strategy as CheckpointStrategy};
 use crate::memory::{Category, MemoryLedger};
@@ -46,7 +51,11 @@ pub struct BlockContext<'a> {
 }
 
 /// One adjoint method, dispatched per ODE block in reverse network order.
-pub trait GradientStrategy {
+///
+/// `Send + Sync` is part of the contract: the strategy object is owned by
+/// the shared execution core and may be called from any worker thread, so
+/// implementations must keep per-call state local to `block_backward`.
+pub trait GradientStrategy: Send + Sync {
     /// Canonical spec name (`anode-revolve3`, ...) — round-trips through
     /// [`StrategyRegistry::create`].
     fn name(&self) -> String;
@@ -257,17 +266,15 @@ impl GradientStrategy for CheckpointedStrategy {
 
         let fwd = ctx.modules.require("step_fwd")?;
         let vjp = ctx.modules.require("step_vjp")?;
-        let theta_grads: std::cell::RefCell<Vec<Tensor>> = std::cell::RefCell::new(
-            ctx.pidx.iter().map(|&i| Tensor::zeros(grads[i].shape())).collect(),
-        );
+        let mut theta_grads: Vec<Tensor> =
+            ctx.pidx.iter().map(|&i| Tensor::zeros(grads[i].shape())).collect();
         // The revolve executor's callbacks are infallible; the first module
-        // error is parked here and re-raised after the sweep.
-        let call_err: std::cell::RefCell<Option<RuntimeError>> = std::cell::RefCell::new(None);
+        // error is parked here and re-raised after the sweep. Call-local
+        // state, so it has no bearing on the strategy object's Sync-ness;
+        // a OnceCell keeps exactly the first error with no locking.
+        let call_err: std::cell::OnceCell<RuntimeError> = std::cell::OnceCell::new();
         let record = |e: RuntimeError| {
-            let mut slot = call_err.borrow_mut();
-            if slot.is_none() {
-                *slot = Some(e);
-            }
+            let _ = call_err.set(e);
         };
 
         // Ledger: model peak as (m slots + 1 tape) states of this block's size.
@@ -303,8 +310,7 @@ impl GradientStrategy for CheckpointedStrategy {
                         return Tensor::zeros(z.shape());
                     }
                     let gz_step = outs.remove(0);
-                    let mut tg = theta_grads.borrow_mut();
-                    for (acc, g) in tg.iter_mut().zip(outs.into_iter()) {
+                    for (acc, g) in theta_grads.iter_mut().zip(outs.into_iter()) {
                         if let Err(e) = acc.axpy(1.0, &g) {
                             record(RuntimeError::Shape(format!("{}: {e}", vjp.name())));
                         }
@@ -327,7 +333,7 @@ impl GradientStrategy for CheckpointedStrategy {
             return Err(e);
         }
         let g_in = swept?;
-        for (&i, tg) in ctx.pidx.iter().zip(theta_grads.into_inner().into_iter()) {
+        for (&i, tg) in ctx.pidx.iter().zip(theta_grads.into_iter()) {
             grads[i] = tg;
         }
         Ok(g_in)
@@ -336,8 +342,9 @@ impl GradientStrategy for CheckpointedStrategy {
 
 /// A factory tries to construct a strategy from a spec string. `None`
 /// means "not my pattern"; `Some(Err)` means "my pattern, invalid value"
-/// (e.g. a zero checkpoint budget).
-type Factory = Box<dyn Fn(&str) -> Option<Result<Box<dyn GradientStrategy>>>>;
+/// (e.g. a zero checkpoint budget). Factories are `Send + Sync` so one
+/// engine (and its registry) can serve sessions on many threads.
+type Factory = Box<dyn Fn(&str) -> Option<Result<Box<dyn GradientStrategy>>> + Send + Sync>;
 
 /// Name-indexed registry of gradient-strategy factories.
 pub struct StrategyRegistry {
@@ -386,7 +393,7 @@ impl StrategyRegistry {
     pub fn register(
         &mut self,
         pattern: &str,
-        factory: impl Fn(&str) -> Option<Result<Box<dyn GradientStrategy>>> + 'static,
+        factory: impl Fn(&str) -> Option<Result<Box<dyn GradientStrategy>>> + Send + Sync + 'static,
     ) {
         self.factories.insert(0, (pattern.to_string(), Box::new(factory)));
     }

@@ -286,6 +286,45 @@ mod tests {
         }
     }
 
+    /// Grid sweep (nt, m) ∈ {8,16,32,64} × {2,3,4,8}: the emitted revolve
+    /// plan must (a) be a valid schedule within its slot budget, (b) attain
+    /// the DP optimum exactly, and (c) respect Griewank's binomial
+    /// reachability bound expressed through `binomial_eta` — with the
+    /// minimal sweep count r such that β(m−1, r) ≥ nt, reversal costs at
+    /// most (r+1)·nt forward evaluations and at least the mandatory nt.
+    #[test]
+    fn revolve_grid_matches_optimum_and_binomial_bound() {
+        // Spot values independently cross-checked against the recurrence
+        // (taped forward counted per VJP, replay-from-start base case).
+        let expected: &[(usize, usize, u64)] =
+            &[(8, 2, 22), (16, 3, 49), (32, 4, 107), (64, 8, 201)];
+        for &(nt, m, cost) in expected {
+            assert_eq!(min_recomputations(nt, m), cost, "nt={nt} m={m}");
+        }
+
+        for nt in [8usize, 16, 32, 64] {
+            for m in [2usize, 3, 4, 8] {
+                let sched = plan(Strategy::Revolve(m), nt);
+                let errs = sched.validate();
+                assert!(errs.is_empty(), "nt={nt} m={m}: {errs:?}");
+                assert!(sched.peak_slots() <= m, "nt={nt} m={m}");
+
+                let cost = sched.forward_evals() as u64;
+                assert_eq!(cost, min_recomputations(nt, m), "nt={nt} m={m}: plan not optimal");
+
+                let mut r = 0usize;
+                while binomial_eta(m - 1, r) < nt as u64 {
+                    r += 1;
+                }
+                assert!(
+                    cost <= ((r + 1) as u64) * nt as u64,
+                    "nt={nt} m={m}: cost {cost} above binomial bound with r={r}"
+                );
+                assert!(cost >= nt as u64, "nt={nt} m={m}: fewer forwards than steps");
+            }
+        }
+    }
+
     #[test]
     fn schedule_peak_states_is_m_plus_tape() {
         let s: Schedule = plan(Strategy::Revolve(3), 16);

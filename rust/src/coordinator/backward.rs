@@ -11,12 +11,16 @@ use crate::memory::MemoryLedger;
 use crate::runtime::{Result, RuntimeError};
 use crate::tensor::Tensor;
 
-use super::{Coordinator, ForwardState};
+use super::{ExecutionCore, ForwardState};
 
 /// Backpropagate `gz` (dL/d z_final) through transitions and ODE blocks,
 /// accumulating parameter gradients into `grads` (canonical order).
+///
+/// Takes the shared core by `&` plus the caller's per-call state
+/// (`ForwardState`, `grads`, ledger) — nothing here mutates the core, so
+/// concurrent backward passes over one core are safe.
 pub(crate) fn backward(
-    co: &Coordinator,
+    co: &ExecutionCore,
     state: &ForwardState,
     mut gz: Tensor,
     params: &[Tensor],

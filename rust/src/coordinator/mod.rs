@@ -1,14 +1,15 @@
-//! The ANODE training coordinator — the paper's §V contribution as a
-//! runtime system.
+//! The ANODE execution core — the paper's §V contribution as a runtime
+//! system, split into a **shared-immutable core** and per-call mutable
+//! state so one core can serve many threads.
 //!
 //! **Internal layer.** Application code should go through [`crate::api`]
-//! (`Engine` → `Session`); the coordinator is the implementation detail
+//! (`Engine` → `Session`); the execution core is the implementation detail
 //! behind it, kept public for white-box integration tests and benches.
 //!
 //! Responsibilities:
 //! - **Forward pass** over stem → (ODE blocks, transitions) → head, storing
-//!   only the O(L) block-boundary activations ([`Coordinator::forward`]).
-//! - **Inference pass** ([`Coordinator::forward_infer`]): the same network
+//!   only the O(L) block-boundary activations ([`ExecutionCore::forward`]).
+//! - **Inference pass** ([`ExecutionCore::forward_infer`]): the same network
 //!   without gradient bookkeeping — no ledger traffic, no stored
 //!   activations — used by evaluation and the serving path.
 //! - **Multi-stage backward** ([`backward`]): per ODE block, delegate to the
@@ -18,11 +19,21 @@
 //!   [`crate::memory::MemoryLedger`], so the O(L·Nt) → O(L)+O(Nt) claim is
 //!   measured, not asserted.
 //!
+//! Thread-safety contract: the core holds only immutable model structure
+//! (config, param index, typed module handles, the strategy object) plus
+//! the `Arc`'d registry; everything mutable — [`ForwardState`], SGD state,
+//! the [`crate::memory::MemoryLedger`] — lives per session or per call and
+//! is passed in by the caller. `&ExecutionCore` methods are safe to call
+//! from any number of threads concurrently.
+//!
 //! All module references are typed [`ModuleHandle`]s resolved eagerly by
-//! the [`crate::api`] layer — the coordinator never constructs a module
-//! name from strings.
+//! the [`crate::api`] layer — the core never constructs a module name from
+//! strings.
 
 mod backward;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::api::modules::{ModuleHandle, ModuleSet};
 use crate::api::strategy::{GradientStrategy, ModuleExec, StrategyRegistry};
@@ -30,6 +41,10 @@ use crate::memory::{Category, MemoryLedger};
 use crate::models::{GradMethod, ModelConfig, ParamIndex, Solver};
 use crate::runtime::{ArtifactRegistry, Result, RuntimeError};
 use crate::tensor::Tensor;
+
+/// Back-compat name for the shared core ([`ExecutionCore`] since the
+/// thread-safety refactor; older tests and docs say "coordinator").
+pub type Coordinator = ExecutionCore;
 
 /// Activations stored by the forward pass (the O(L) term): inputs to every
 /// ODE block and transition, plus each block's output (needed by the [8]
@@ -49,30 +64,33 @@ pub struct ForwardState {
     ledger_ids: Vec<u64>,
 }
 
-/// The coordinator: owns the model structure, the resolved module handles
-/// and the gradient-strategy object for a single (arch, solver, method)
-/// config.
-pub struct Coordinator<'r> {
-    pub reg: &'r ArtifactRegistry,
+/// The shared-immutable execution core: model structure, resolved module
+/// handles and the gradient-strategy object for a single (arch, solver,
+/// method) config. `Send + Sync`; wrap in an `Arc` to fan it across worker
+/// threads — all mutable state (parameters, ledgers, optimizer) stays with
+/// the caller.
+pub struct ExecutionCore {
+    pub reg: Arc<ArtifactRegistry>,
     pub cfg: ModelConfig,
     pub index: ParamIndex,
     pub solver: Solver,
     pub modules: ModuleSet,
     pub strategy: Box<dyn GradientStrategy>,
-    /// Calls made to each module (perf accounting).
-    pub call_count: std::cell::Cell<usize>,
+    /// Calls made to each module (perf accounting; relaxed — a counter,
+    /// not a synchronization point).
+    pub call_count: AtomicUsize,
 }
 
-impl<'r> Coordinator<'r> {
+impl ExecutionCore {
     /// Back-compat constructor from a parsed [`GradMethod`]: resolves the
     /// module set and builds the strategy through the built-in registry.
     pub fn new(
-        reg: &'r ArtifactRegistry,
+        reg: Arc<ArtifactRegistry>,
         cfg: ModelConfig,
         solver: Solver,
         method: GradMethod,
     ) -> Result<Self> {
-        let modules = ModuleSet::resolve(reg, &cfg, solver)?;
+        let modules = ModuleSet::resolve(&reg, &cfg, solver)?;
         let strategy = StrategyRegistry::builtin().create_from_method(method)?;
         Self::with_strategy(reg, cfg, solver, modules, strategy)
     }
@@ -81,7 +99,7 @@ impl<'r> Coordinator<'r> {
     /// [`crate::api::Engine`] path). Fails fast if the manifest lacks a
     /// block-module kind the strategy needs.
     pub fn with_strategy(
-        reg: &'r ArtifactRegistry,
+        reg: Arc<ArtifactRegistry>,
         cfg: ModelConfig,
         solver: Solver,
         modules: ModuleSet,
@@ -106,13 +124,18 @@ impl<'r> Coordinator<'r> {
             solver,
             modules,
             strategy,
-            call_count: std::cell::Cell::new(0),
+            call_count: AtomicUsize::new(0),
         })
     }
 
     /// Canonical name of the configured gradient method.
     pub fn method_name(&self) -> String {
         self.strategy.name()
+    }
+
+    /// Module executions so far (perf accounting).
+    pub fn calls_made(&self) -> usize {
+        self.call_count.load(Ordering::Relaxed)
     }
 
     /// Initial parameters from params.bin (canonical order).
@@ -122,7 +145,7 @@ impl<'r> Coordinator<'r> {
 
     /// Execute a resolved module.
     pub(crate) fn call(&self, handle: &ModuleHandle, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        self.call_count.set(self.call_count.get() + 1);
+        self.call_count.fetch_add(1, Ordering::Relaxed);
         self.reg.call(handle.name(), inputs)
     }
 
@@ -258,32 +281,56 @@ impl<'r> Coordinator<'r> {
         Ok((loss, correct, grads))
     }
 
+    /// Loss + correct-count for one pre-batched eval pair, via the
+    /// inference forward. The per-batch unit behind [`Self::evaluate`] and
+    /// the parallel evaluation path — independent across batches.
+    pub fn eval_batch(&self, x: &Tensor, labels: &Tensor, params: &[Tensor]) -> Result<(f32, f32)> {
+        let (hw, hb) = self.index.head;
+        let z = self.forward_infer(x, params)?;
+        let outs = self.call(&self.modules.head_eval, &[&z, &params[hw], &params[hb], labels])?;
+        let loss = outs[0].item().map_err(|e| RuntimeError::Shape(e.to_string()))?;
+        let correct = outs[1].item().map_err(|e| RuntimeError::Shape(e.to_string()))?;
+        Ok((loss, correct))
+    }
+
     /// Evaluation over pre-batched data: returns (mean loss, accuracy).
     ///
-    /// Routed through [`Coordinator::forward_infer`] — no checkpoint
+    /// Routed through [`ExecutionCore::forward_infer`] — no checkpoint
     /// tracking, no ledger allocs/frees — since no backward follows.
     pub fn evaluate(&self, batches: &[(Tensor, Tensor)], params: &[Tensor]) -> Result<(f32, f32)> {
-        let (hw, hb) = self.index.head;
+        let per_batch = batches
+            .iter()
+            .map(|(x, y)| self.eval_batch(x, y, params))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self::reduce_eval(&per_batch, self.cfg.batch))
+    }
+
+    /// Fold per-batch (loss, correct) pairs into (mean loss, accuracy), in
+    /// index order — the single reduction used by both the serial and the
+    /// parallel evaluation paths, so their results are bit-identical.
+    pub fn reduce_eval(per_batch: &[(f32, f32)], batch_size: usize) -> (f32, f32) {
         let mut loss_sum = 0.0f64;
         let mut correct = 0.0f64;
         let mut n = 0usize;
-        for (x, labels) in batches {
-            let z = self.forward_infer(x, params)?;
-            let outs = self.call(
-                &self.modules.head_eval,
-                &[&z, &params[hw], &params[hb], labels],
-            )?;
-            loss_sum += outs[0].item().map_err(|e| RuntimeError::Shape(e.to_string()))? as f64;
-            correct += outs[1].item().map_err(|e| RuntimeError::Shape(e.to_string()))? as f64;
-            n += self.cfg.batch;
+        for &(loss, c) in per_batch {
+            loss_sum += loss as f64;
+            correct += c as f64;
+            n += batch_size;
         }
-        let batches_n = batches.len().max(1) as f64;
-        Ok(((loss_sum / batches_n) as f32, (correct / n.max(1) as f64) as f32))
+        let batches_n = per_batch.len().max(1) as f64;
+        ((loss_sum / batches_n) as f32, (correct / n.max(1) as f64) as f32)
     }
 }
 
-impl ModuleExec for Coordinator<'_> {
+impl ModuleExec for ExecutionCore {
     fn call_module(&self, handle: &ModuleHandle, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         self.call(handle, inputs)
     }
 }
+
+// The core is the unit shared across session/worker threads; a regression
+// to non-Sync internals must fail the build here.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ExecutionCore>();
+};

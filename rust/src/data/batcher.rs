@@ -1,6 +1,7 @@
 //! Mini-batch iteration with per-epoch shuffling and optional augmentation.
 
 use crate::rng::Rng;
+use crate::runtime::{Result, RuntimeError};
 use crate::tensor::Tensor;
 
 use super::cifar::{SyntheticCifar, CIFAR_HW};
@@ -26,12 +27,34 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    pub fn new(images: Tensor, labels: Vec<usize>, batch_size: usize, augment: bool, seed: u64) -> Self {
-        assert_eq!(images.shape()[0], labels.len());
-        assert!(batch_size > 0 && batch_size <= labels.len());
+    /// Build a batcher over an in-memory dataset. Mismatched image/label
+    /// counts and degenerate batch sizes are typed errors (like the rest
+    /// of the API surface), not panics — callers such as `Session::fit`
+    /// drivers propagate them to the user with context.
+    pub fn new(
+        images: Tensor,
+        labels: Vec<usize>,
+        batch_size: usize,
+        augment: bool,
+        seed: u64,
+    ) -> Result<Self> {
+        let n = images.shape().first().copied().unwrap_or(0);
+        if n != labels.len() {
+            return Err(RuntimeError::Shape(format!(
+                "batcher: {} images but {} labels",
+                n,
+                labels.len()
+            )));
+        }
+        if batch_size == 0 || batch_size > labels.len() {
+            return Err(RuntimeError::Shape(format!(
+                "batcher: batch size {batch_size} not in 1..={} (dataset size)",
+                labels.len()
+            )));
+        }
         let mut rng = Rng::new(seed);
         let order = rng.permutation(labels.len());
-        Self { images, labels, batch_size, augment, rng, order, cursor: 0, epoch: 0 }
+        Ok(Self { images, labels, batch_size, augment, rng, order, cursor: 0, epoch: 0 })
     }
 
     /// Number of full batches per epoch (remainder dropped, standard practice).
@@ -123,16 +146,34 @@ mod tests {
     #[test]
     fn batches_have_right_shape() {
         let (imgs, labels) = toy(10);
-        let mut b = Batcher::new(imgs, labels, 4, false, 0);
+        let mut b = Batcher::new(imgs, labels, 4, false, 0).unwrap();
         let batch = b.next_batch();
         assert_eq!(batch.images.shape(), &[4, 2, 2, 1]);
         assert_eq!(batch.labels.shape(), &[4]);
     }
 
     #[test]
+    fn degenerate_configs_are_typed_errors() {
+        let (imgs, labels) = toy(10);
+        // Zero batch and batch > dataset.
+        let err = Batcher::new(imgs.clone(), labels.clone(), 0, false, 0)
+            .err()
+            .expect("zero batch must fail")
+            .to_string();
+        assert!(err.contains("batch size 0"), "{err}");
+        assert!(Batcher::new(imgs.clone(), labels.clone(), 11, false, 0).is_err());
+        // Image/label count mismatch.
+        let err = Batcher::new(imgs, labels[..9].to_vec(), 2, false, 0)
+            .err()
+            .expect("count mismatch must fail")
+            .to_string();
+        assert!(err.contains("10 images but 9 labels"), "{err}");
+    }
+
+    #[test]
     fn epoch_covers_every_example_once() {
         let (imgs, labels) = toy(12);
-        let mut b = Batcher::new(imgs, labels, 4, false, 1);
+        let mut b = Batcher::new(imgs, labels, 4, false, 1).unwrap();
         let mut seen = std::collections::HashSet::new();
         for _ in 0..3 {
             let batch = b.next_batch();
@@ -149,8 +190,8 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let (imgs, labels) = toy(12);
-        let mut b1 = Batcher::new(imgs.clone(), labels.clone(), 4, false, 5);
-        let mut b2 = Batcher::new(imgs, labels, 4, false, 5);
+        let mut b1 = Batcher::new(imgs.clone(), labels.clone(), 4, false, 5).unwrap();
+        let mut b2 = Batcher::new(imgs, labels, 4, false, 5).unwrap();
         for _ in 0..6 {
             assert_eq!(b1.next_batch().images.data(), b2.next_batch().images.data());
         }
@@ -160,7 +201,7 @@ mod tests {
     fn labels_match_images() {
         let (imgs, labels) = toy(9);
         let expect = labels.clone();
-        let mut b = Batcher::new(imgs, labels, 3, false, 2);
+        let mut b = Batcher::new(imgs, labels, 3, false, 2).unwrap();
         for _ in 0..3 {
             let batch = b.next_batch();
             for k in 0..3 {

@@ -6,7 +6,7 @@
 //! the caller's artifact registry and compiled-module cache) driving one
 //! `Session::fit`.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::api::{Engine, FitOptions, SessionConfig};
 use crate::data::{make_eval_batches, Batcher, SyntheticCifar};
@@ -29,6 +29,8 @@ pub struct TrainFigOptions {
     pub lr: f32,
     pub seed: u64,
     pub verbose: bool,
+    /// Worker threads for the periodic evaluation sweeps (`--workers`).
+    pub workers: usize,
 }
 
 impl Default for TrainFigOptions {
@@ -45,6 +47,7 @@ impl Default for TrainFigOptions {
             lr: 0.02,
             seed: 0,
             verbose: true,
+            workers: 1,
         }
     }
 }
@@ -60,8 +63,9 @@ pub struct TrainFigRun {
 }
 
 /// Train one configuration and return its series. The registry handle is
-/// shared so multi-series figures reuse one compiled-module cache.
-pub fn train_figure(reg: &Rc<ArtifactRegistry>, o: &TrainFigOptions) -> Result<TrainFigRun> {
+/// shared so multi-series figures reuse one compiled-module cache (and,
+/// being `Arc`, series can run on separate threads).
+pub fn train_figure(reg: &Arc<ArtifactRegistry>, o: &TrainFigOptions) -> Result<TrainFigRun> {
     let engine = Engine::builder()
         .registry(reg.clone())
         .arch(o.arch)
@@ -77,6 +81,7 @@ pub fn train_figure(reg: &Rc<ArtifactRegistry>, o: &TrainFigOptions) -> Result<T
             gamma: 0.3,
             milestones: vec![o.steps / 2, o.steps * 4 / 5],
         },
+        workers: o.workers,
         ..SessionConfig::default()
     };
     let mut session = engine.session(session_cfg)?;
@@ -84,7 +89,7 @@ pub fn train_figure(reg: &Rc<ArtifactRegistry>, o: &TrainFigOptions) -> Result<T
     let ds = SyntheticCifar::new(o.num_classes, o.seed ^ 0xDA7A, 0.12);
     let (train_imgs, train_labels) = ds.generate(o.train_size, o.seed + 1);
     let (test_imgs, test_labels) = ds.generate(o.test_size, o.seed + 2);
-    let mut train = Batcher::new(train_imgs, train_labels, batch, true, o.seed + 3);
+    let mut train = Batcher::new(train_imgs, train_labels, batch, true, o.seed + 3)?;
     let eval = make_eval_batches(&test_imgs, &test_labels, batch, o.test_size / batch);
 
     let series = format!(

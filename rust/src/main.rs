@@ -16,7 +16,7 @@
 //! All heavy lifting goes through the `anode::api` façade (Engine/Session);
 //! see `rust/DESIGN.md` §6.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anode::api::open_artifacts;
 use anode::harness;
@@ -55,6 +55,7 @@ fn print_help() {
          train:     --arch resnet|sqnxt  --solver euler|rk2|rk45\n\
          \u{20}          --method anode|node|otd|anode-revolve<m>|anode-equispaced<m>\n\
          \u{20}          --classes 10|100 --steps N --lr F --train-size N --seed N\n\
+         \u{20}          --workers N (parallel evaluation sweeps; default 1)\n\
          figures:   --fig fig1|fig7|sec3|fig3|fig4|fig5|memory|gradcheck [--fast]\n\
          gradcheck: --seed N\n\
          common:    --artifacts DIR (default: artifacts)\n\
@@ -83,7 +84,7 @@ fn parse_opt<T>(kind: &str, value: &str, parse: impl Fn(&str) -> Option<T>) -> T
     }
 }
 
-fn open_registry(args: &Args) -> Result<Rc<ArtifactRegistry>, i32> {
+fn open_registry(args: &Args) -> Result<Arc<ArtifactRegistry>, i32> {
     let dir = args.get_or("artifacts", "artifacts");
     open_artifacts(&dir).map_err(|e| {
         eprintln!("error: {e}");
@@ -108,6 +109,7 @@ fn cmd_train(args: &Args) -> i32 {
         lr: args.get_parse_or("lr", 0.02),
         seed: args.get_parse_or("seed", 0),
         verbose: true,
+        workers: args.get_parse_or("workers", 1),
     };
     let csv = args.get("csv").map(|s| s.to_string());
     args.warn_unknown();
@@ -183,6 +185,7 @@ fn cmd_figures(args: &Args) -> i32 {
                         seed: args.get_parse_or("seed", 0),
                         lr: args.get_parse_or("lr", 0.02),
                         verbose: true,
+                        workers: args.get_parse_or("workers", 1),
                     };
                     match harness::train_figure(&reg, &o) {
                         Ok(run) => curves.push(run.curve),
@@ -203,6 +206,7 @@ fn cmd_figures(args: &Args) -> i32 {
                 seed: args.get_parse_or("seed", 0),
                 lr: args.get_parse_or("lr", 0.02),
                 verbose: true,
+                workers: args.get_parse_or("workers", 1),
             };
             let csv = args.get("csv").map(|s| s.to_string());
             args.warn_unknown();

@@ -45,6 +45,10 @@ struct Alloc {
 }
 
 /// Activation-memory ledger with current/peak tracking.
+///
+/// Per-thread by design: each session (and each worker in the parallel
+/// predict/evaluate paths) owns its own ledger; worker ledgers are folded
+/// into an aggregate afterward with [`MemoryLedger::merge`].
 #[derive(Debug, Default)]
 pub struct MemoryLedger {
     live: HashMap<u64, Alloc>,
@@ -55,6 +59,11 @@ pub struct MemoryLedger {
     current_by_cat: HashMap<Category, usize>,
     /// Cumulative bytes ever allocated (traffic measure).
     total_allocated: u64,
+    /// `free` calls whose handle was not live — double frees or frees of
+    /// foreign/merged handles. A nonzero count means the accounting (and
+    /// therefore the paper's measured memory claim) is suspect, so it is
+    /// surfaced in [`MemoryLedger::summary`] instead of silently dropped.
+    unknown_frees: u64,
 }
 
 impl MemoryLedger {
@@ -77,13 +86,17 @@ impl MemoryLedger {
         id
     }
 
-    /// Release an allocation.
+    /// Release an allocation. Unknown handles (double frees, stale ids)
+    /// are counted in [`MemoryLedger::unknown_frees`] rather than ignored.
     pub fn free(&mut self, id: u64) {
-        if let Some(a) = self.live.remove(&id) {
-            self.current -= a.bytes;
-            if let Some(c) = self.current_by_cat.get_mut(&a.category) {
-                *c -= a.bytes;
+        match self.live.remove(&id) {
+            Some(a) => {
+                self.current -= a.bytes;
+                if let Some(c) = self.current_by_cat.get_mut(&a.category) {
+                    *c -= a.bytes;
+                }
             }
+            None => self.unknown_frees += 1,
         }
     }
 
@@ -121,13 +134,46 @@ impl MemoryLedger {
         self.total_allocated
     }
 
+    /// Count of `free` calls whose handle was not live (double/unknown
+    /// frees). Zero in a correct run.
+    pub fn unknown_frees(&self) -> u64 {
+        self.unknown_frees
+    }
+
+    /// Fold another ledger's *statistics* into this one — the aggregation
+    /// step after a parallel worker fan-out, where each worker metered its
+    /// own ledger.
+    ///
+    /// Semantics (documented in rust/DESIGN.md "Concurrency model"):
+    /// - `total_traffic` and `unknown_frees` are additive;
+    /// - `current` and the peaks are **summed**, because the workers ran
+    ///   concurrently: the sum of per-worker peaks is the upper bound on
+    ///   the aggregate working set (per-worker peaks stay available on the
+    ///   workers' own ledgers for the O(L)+O(Nt) per-worker claim);
+    /// - live allocation *handles* are not transferred — ids are
+    ///   per-ledger, so freeing `other`'s allocations through `self` would
+    ///   miscount. The merged ledger is a stats aggregate, not an arena.
+    pub fn merge(&mut self, other: &MemoryLedger) {
+        self.current += other.current;
+        self.peak += other.peak;
+        for (cat, bytes) in &other.peak_by_cat {
+            *self.peak_by_cat.entry(*cat).or_default() += *bytes;
+        }
+        for (cat, bytes) in &other.current_by_cat {
+            *self.current_by_cat.entry(*cat).or_default() += *bytes;
+        }
+        self.total_allocated += other.total_allocated;
+        self.unknown_frees += other.unknown_frees;
+    }
+
     /// Reset peaks (keep live allocations) — used between measurement phases.
     pub fn reset_peaks(&mut self) {
         self.peak = self.current;
         self.peak_by_cat = self.current_by_cat.clone();
     }
 
-    /// Human-readable summary line.
+    /// Human-readable summary line. Accounting anomalies (double/unknown
+    /// frees) are appended so they cannot pass unnoticed in logs.
     pub fn summary(&self) -> String {
         let mut cats: Vec<_> = self.peak_by_cat.iter().collect();
         cats.sort_by_key(|(c, _)| c.name());
@@ -136,7 +182,11 @@ impl MemoryLedger {
             .map(|(c, b)| format!("{}={}", c.name(), human_bytes(**b)))
             .collect::<Vec<_>>()
             .join(" ");
-        format!("peak={} ({per})", human_bytes(self.peak))
+        let mut line = format!("peak={} ({per})", human_bytes(self.peak));
+        if self.unknown_frees > 0 {
+            line.push_str(&format!(" unknown_frees={}", self.unknown_frees));
+        }
+        line
     }
 }
 
@@ -216,12 +266,42 @@ mod tests {
     }
 
     #[test]
-    fn double_free_is_noop() {
+    fn double_free_keeps_counts_but_is_surfaced() {
         let mut led = MemoryLedger::new();
         let a = led.alloc(10, Category::Param);
         led.free(a);
-        led.free(a);
+        assert_eq!(led.unknown_frees(), 0);
+        led.free(a); // double free
+        led.free(9999); // never-allocated handle
         assert_eq!(led.current_bytes(), 0);
+        assert_eq!(led.unknown_frees(), 2);
+        assert!(led.summary().contains("unknown_frees=2"), "{}", led.summary());
+        // A clean ledger keeps its summary free of the anomaly marker.
+        let clean = MemoryLedger::new();
+        assert!(!clean.summary().contains("unknown_frees"), "{}", clean.summary());
+    }
+
+    #[test]
+    fn merge_adds_traffic_and_sums_concurrent_peaks() {
+        let mut a = MemoryLedger::new();
+        let ia = a.alloc(100, Category::BlockInput);
+        a.free(ia);
+        let mut b = MemoryLedger::new();
+        let ib = b.alloc(40, Category::StepState);
+        b.free(ib);
+        b.free(ib); // one anomaly on worker b
+
+        let mut agg = MemoryLedger::new();
+        agg.merge(&a);
+        agg.merge(&b);
+        // Traffic is additive and matches what one serial ledger would see.
+        assert_eq!(agg.total_traffic(), 140);
+        // Concurrent workers: aggregate peak is the sum of worker peaks.
+        assert_eq!(agg.peak_bytes(), 140);
+        assert_eq!(agg.peak_of(Category::BlockInput), 100);
+        assert_eq!(agg.peak_of(Category::StepState), 40);
+        assert_eq!(agg.current_bytes(), 0);
+        assert_eq!(agg.unknown_frees(), 1);
     }
 
     #[test]

@@ -198,6 +198,13 @@ impl ModelConfig {
         self.stage_act_shape(s).iter().product::<usize>() * 4
     }
 
+    /// Peak bytes of the single rolling activation held by an inference
+    /// forward — the largest stage activation. The memory model shared by
+    /// `Session::predict` and `Session::predict_batches`.
+    pub fn rolling_act_bytes(&self) -> usize {
+        (0..self.stages()).map(|s| self.stage_act_bytes(s)).max().unwrap_or(0)
+    }
+
     /// Artifact name of a block module for this config.
     pub fn block_module(&self, stage: usize, solver: Solver, kind: &str) -> String {
         format!("block_{}_s{}_{}_{}", self.arch.name(), stage, solver.name(), kind)
@@ -335,6 +342,8 @@ mod tests {
         assert_eq!(c.stage_hw(2), 8);
         assert_eq!(c.stage_act_shape(1), vec![32, 16, 16, 32]);
         assert_eq!(c.stage_act_bytes(2), 32 * 8 * 8 * 64 * 4);
+        // Rolling inference activation = the largest stage (stage 0 here).
+        assert_eq!(c.rolling_act_bytes(), c.stage_act_bytes(0));
         assert_eq!(c.block_module(1, Solver::Euler, "vjp"), "block_resnet_s1_euler_vjp");
         assert_eq!(c.params_key(), "resnet10");
     }

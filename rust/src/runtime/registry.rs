@@ -4,11 +4,16 @@
 //! lowered module (input/output tensor specs) plus the canonical parameter
 //! layout matching `artifacts/params.bin`. The registry parses the manifest,
 //! compiles modules lazily on first use, and caches executables.
+//!
+//! The registry is `Send + Sync`: the manifest tables are immutable after
+//! `open`, the executable cache sits behind an `RwLock` (reads on the hot
+//! path take the shared lock only), and PJRT client creation is a lazy
+//! `OnceLock`. One registry can back many engines/sessions across threads,
+//! all sharing one compiled-module cache.
 
-use std::cell::{OnceCell, RefCell};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, OnceLock, RwLock};
 
 use super::client::{Executable, Result, RuntimeError, XlaRuntime};
 use crate::tensor::Tensor;
@@ -60,12 +65,12 @@ pub struct ArtifactRegistry {
     /// Created on first executable compile, so manifest parsing and
     /// validation (the `api::EngineBuilder` path) work without a live
     /// PJRT backend.
-    runtime: OnceCell<XlaRuntime>,
+    runtime: OnceLock<XlaRuntime>,
     dir: PathBuf,
     modules: HashMap<String, ModuleSpec>,
     params: HashMap<String, Vec<ParamSpec>>,
     config: Json,
-    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    cache: RwLock<HashMap<String, Arc<Executable>>>,
 }
 
 impl ArtifactRegistry {
@@ -140,16 +145,18 @@ impl ArtifactRegistry {
 
         let config = root.get("config").cloned().unwrap_or(Json::Obj(Default::default()));
         Ok(Self {
-            runtime: OnceCell::new(),
+            runtime: OnceLock::new(),
             dir: dir.to_path_buf(),
             modules,
             params,
             config,
-            cache: RefCell::new(HashMap::new()),
+            cache: RwLock::new(HashMap::new()),
         })
     }
 
-    /// The PJRT runtime, created on first use.
+    /// The PJRT runtime, created on first use. Two threads racing here both
+    /// build a client; the first `set` wins and the loser is dropped —
+    /// client creation is idempotent, so this needs no extra locking.
     fn runtime(&self) -> Result<&XlaRuntime> {
         if self.runtime.get().is_none() {
             let rt = XlaRuntime::cpu()?;
@@ -226,15 +233,19 @@ impl ArtifactRegistry {
     }
 
     /// Get (compiling lazily) the executable for `name`.
-    pub fn get(&self, name: &str) -> Result<Rc<Executable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
+    ///
+    /// Hot path takes the read lock only. On a miss the compile happens
+    /// outside any lock; if two threads race, the first insert wins and the
+    /// duplicate executable is dropped (compilation is idempotent).
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.read().expect("executable cache poisoned").get(name) {
             return Ok(exe.clone());
         }
         let spec = self.module_spec(name)?;
         let path = self.dir.join(&spec.file);
-        let exe = Rc::new(self.runtime()?.compile_hlo_text(name, &path)?);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
+        let exe = Arc::new(self.runtime()?.compile_hlo_text(name, &path)?);
+        let mut cache = self.cache.write().expect("executable cache poisoned");
+        Ok(cache.entry(name.to_string()).or_insert(exe).clone())
     }
 
     /// Execute a module, validating input shapes against the manifest.
@@ -271,6 +282,16 @@ impl ArtifactRegistry {
 
     /// Number of compiled (cached) executables — used by tests/perf logs.
     pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.read().expect("executable cache poisoned").len()
     }
 }
+
+// The whole execution stack shares one registry across worker threads, so
+// a non-Send backend type must fail the build here rather than at a distant
+// use site. (The vendored xla stub is trivially thread-safe; a real
+// PJRT-backed `xla` crate must keep its client/executable handles
+// `Send + Sync` — PJRT itself is thread-safe.)
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ArtifactRegistry>();
+};

@@ -1,7 +1,9 @@
 //! In-tree utilities that replace external crates unavailable in the
 //! offline build image: a JSON parser/writer ([`json`]), a tiny CLI argument
-//! parser ([`cli`]), and a micro-benchmark timer ([`bench`]).
+//! parser ([`cli`]), a micro-benchmark timer ([`bench`]), and a scoped
+//! worker pool for the parallel serving paths ([`pool`]).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;

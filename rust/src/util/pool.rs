@@ -1,0 +1,125 @@
+//! A tiny scoped worker pool for data-parallel fan-out.
+//!
+//! The serving paths (`Session::predict_batches`, `Session::evaluate`)
+//! split pre-batched work across a handful of std threads. Work is divided
+//! into **contiguous chunks**, one per worker, and results come back in
+//! input order — so reductions over the output see exactly the serial
+//! ordering and parallel runs stay bit-identical to `workers = 1`.
+//!
+//! No queues, no channels, no unsafe: `std::thread::scope` lets workers
+//! borrow the shared read-only state (`&ExecutionCore`, `&[Tensor]`)
+//! directly, and each worker owns its mutable state (e.g. a
+//! [`crate::memory::MemoryLedger`]) for the duration of its chunk.
+
+/// Map `f(index, item)` over `items` on up to `workers` threads,
+/// preserving input order in the output.
+///
+/// `workers <= 1` (or a single item) runs inline on the caller's thread —
+/// the serial path is the parallel path with the pool turned off, not a
+/// separate code path.
+pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let (results, _) = parallel_map_with(items, workers, || (), move |_state, i, t| f(i, t));
+    results
+}
+
+/// Like [`parallel_map`], but each worker thread carries private mutable
+/// state created by `init` (one per worker, on the worker's own thread).
+/// Returns the in-order results plus the per-worker states for the caller
+/// to aggregate (e.g. merging worker memory ledgers).
+pub fn parallel_map_with<S, T, R, FI, F>(
+    items: &[T],
+    workers: usize,
+    init: FI,
+    f: F,
+) -> (Vec<R>, Vec<S>)
+where
+    S: Send,
+    T: Sync,
+    R: Send,
+    FI: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let w = workers.max(1).min(n.max(1));
+    if w <= 1 {
+        let mut state = init();
+        let results = items.iter().enumerate().map(|(i, t)| f(&mut state, i, t)).collect();
+        return (results, vec![state]);
+    }
+
+    let chunk = n.div_ceil(w);
+    let mut results = Vec::with_capacity(n);
+    let mut states = Vec::with_capacity(w);
+    std::thread::scope(|scope| {
+        let init = &init;
+        let f = &f;
+        let mut handles = Vec::with_capacity(w);
+        for (ci, chunk_items) in items.chunks(chunk).enumerate() {
+            let base = ci * chunk;
+            handles.push(scope.spawn(move || {
+                let mut state = init();
+                let out: Vec<R> = chunk_items
+                    .iter()
+                    .enumerate()
+                    .map(|(j, t)| f(&mut state, base + j, t))
+                    .collect();
+                (out, state)
+            }));
+        }
+        // Chunks are contiguous and joined in spawn order, so extending
+        // reconstitutes the input order exactly.
+        for h in handles {
+            let (out, state) = h.join().expect("pool worker panicked");
+            results.extend(out);
+            states.push(state);
+        }
+    });
+    (results, states)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order_for_any_worker_count() {
+        let items: Vec<usize> = (0..97).collect();
+        let serial: Vec<usize> = items.iter().map(|&x| x * 3).collect();
+        for workers in [1, 2, 3, 4, 8, 97, 200] {
+            let par = parallel_map(&items, workers, |i, &x| {
+                assert_eq!(i, x, "index must match the item's input position");
+                x * 3
+            });
+            assert_eq!(par, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn per_worker_state_counts_partition_the_items() {
+        let items: Vec<u32> = (0..40).collect();
+        let count_and_copy = |count: &mut usize, _i: usize, x: &u32| {
+            *count += 1;
+            *x
+        };
+        for workers in [1, 3, 4, 7] {
+            let (results, states) = parallel_map_with(&items, workers, || 0usize, count_and_copy);
+            assert_eq!(results, items, "workers={workers}");
+            assert!(states.len() <= workers.max(1));
+            assert_eq!(states.iter().sum::<usize>(), items.len(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let empty: Vec<u8> = Vec::new();
+        let (results, states) = parallel_map_with(&empty, 4, || 0u8, |_, _, &x| x);
+        assert!(results.is_empty());
+        assert_eq!(states.len(), 1);
+        assert_eq!(parallel_map(&[5u8], 4, |_, &x| x + 1), vec![6]);
+    }
+}

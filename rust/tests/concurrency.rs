@@ -1,0 +1,256 @@
+//! Concurrency tests for the thread-safe execution core.
+//!
+//! Stub-safe tests (synthetic manifest, no compiled artifacts) prove the
+//! shared layers are `Send + Sync` and survive concurrent use; the
+//! artifact-gated tests prove the strong property: parallel execution is
+//! **bit-identical** to serial, and per-worker ledger merges account for
+//! exactly the serial traffic.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anode::api::{make_eval_batches, Engine, SessionConfig};
+use anode::coordinator::ExecutionCore;
+use anode::data::SyntheticCifar;
+use anode::memory::MemoryLedger;
+use anode::runtime::ArtifactRegistry;
+use anode::tensor::Tensor;
+
+// ---------------------------------------------------------------------------
+// Compile-time + stub-safe checks (run anywhere)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn execution_stack_is_send_and_sync() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ArtifactRegistry>();
+    assert_send_sync::<ExecutionCore>();
+    assert_send_sync::<Engine>();
+    assert_send_sync::<MemoryLedger>();
+}
+
+/// Write a synthetic manifest + params.bin good enough to build an engine
+/// and create sessions (module *execution* still needs a real backend).
+fn fake_artifacts_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("anode_conc_test_{}_{tag}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut modules = String::new();
+    let mut add = |name: &str| {
+        if !modules.is_empty() {
+            modules.push(',');
+        }
+        modules.push_str(&format!(
+            r#"{{"name":"{name}","file":"{name}.hlo.txt","inputs":[],"outputs":[]}}"#
+        ));
+    };
+    for name in [
+        "stem_fwd",
+        "stem_vjp",
+        "trans0_fwd",
+        "trans0_vjp",
+        "trans1_fwd",
+        "trans1_vjp",
+        "head10_loss_grad",
+        "head10_eval",
+    ] {
+        add(name);
+    }
+    for s in 0..3 {
+        for kind in ["fwd", "vjp", "node"] {
+            add(&format!("block_resnet_s{s}_euler_{kind}"));
+        }
+    }
+
+    let mut params = String::new();
+    let mut push = |name: &str| {
+        if !params.is_empty() {
+            params.push(',');
+        }
+        params.push_str(&format!(r#"{{"name":"{name}","shape":[1],"offset":0}}"#));
+    };
+    push("stem.w");
+    push("stem.b");
+    for s in 0..3 {
+        for b in 0..2 {
+            for leaf in ["w1", "b1", "w2", "b2"] {
+                push(&format!("s{s}.b{b}.{leaf}"));
+            }
+        }
+        if s < 2 {
+            push(&format!("trans{s}.w"));
+            push(&format!("trans{s}.b"));
+        }
+    }
+    push("head.w");
+    push("head.b");
+
+    let manifest = format!(
+        r#"{{
+  "modules": [{modules}],
+  "params": {{"resnet10": [{params}]}},
+  "config": {{"batch": 32, "image": 32, "blocks_per_stage": 2, "nt": 4,
+              "channels": [16, 32, 64]}}
+}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    // One f32 — every synthetic param is shape [1] at offset 0.
+    std::fs::write(dir.join("params.bin"), 0f32.to_le_bytes()).unwrap();
+    dir
+}
+
+#[test]
+fn one_engine_serves_sessions_on_many_threads() {
+    let dir = fake_artifacts_dir("sessions");
+    let engine = Engine::builder().artifacts(&dir).build().unwrap();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let engine = &engine;
+            handles.push(scope.spawn(move || {
+                let method = if t % 2 == 0 { "anode" } else { "node" };
+                let session = engine.session(SessionConfig::with_method(method)).unwrap();
+                assert_eq!(session.method_name(), method);
+                assert_eq!(session.steps_taken(), 0);
+                // Params + optimizer state are on the session's own ledger.
+                assert!(session.memory().peak_bytes() > 0);
+                // Registry-level reads race freely.
+                assert!(engine.registry().has_module("stem_fwd"));
+                method.len()
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_compile_misses_fail_cleanly_on_stub() {
+    // The synthetic manifest has no .hlo.txt files (and the offline stub
+    // could not compile them anyway): racing executable lookups must all
+    // surface typed errors without poisoning the shared cache.
+    let dir = fake_artifacts_dir("compile_race");
+    let reg = Arc::new(ArtifactRegistry::open(&dir).unwrap());
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let reg = reg.clone();
+            handles.push(scope.spawn(move || {
+                for _ in 0..8 {
+                    let err = reg.get("stem_fwd").err().expect("stub compile must fail");
+                    let msg = err.to_string();
+                    assert!(
+                        msg.contains("stem_fwd") || msg.contains("stub"),
+                        "unexpected error: {msg}"
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    // The cache stayed usable (and empty) after the failed races.
+    assert_eq!(reg.compiled_count(), 0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Artifact-gated: bit-identical parallel execution
+// ---------------------------------------------------------------------------
+
+fn real_engine() -> Option<Engine> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::builder().artifacts("artifacts").build().unwrap())
+}
+
+/// Train `steps` optimizer steps from a fresh session and return every
+/// loss as raw bits (bitwise comparison — no tolerance).
+fn train_losses(engine: &Engine, seed: u64, steps: usize) -> Vec<u32> {
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let cfg = engine.config().clone();
+    let ds = SyntheticCifar::new(cfg.num_classes, seed, 0.1);
+    let mut losses = Vec::with_capacity(steps);
+    for k in 0..steps {
+        let (imgs, labels) = ds.generate(cfg.batch, k as u64);
+        let y =
+            Tensor::from_vec(vec![cfg.batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
+        let stats = session.step(&imgs, &y).unwrap();
+        losses.push(stats.loss.to_bits());
+    }
+    losses
+}
+
+#[test]
+fn two_threaded_sessions_match_serial_training_bitwise() {
+    let Some(engine) = real_engine() else { return };
+    let steps = 4;
+
+    // Serial reference: two independent sessions, one after the other.
+    let serial_a = train_losses(&engine, 101, steps);
+    let serial_b = train_losses(&engine, 202, steps);
+    assert_ne!(serial_a, serial_b, "distinct seeds must differ");
+
+    // Same two sessions, concurrently, over the same shared engine (and
+    // compiled-module cache).
+    let (thread_a, thread_b) = std::thread::scope(|scope| {
+        let ha = scope.spawn(|| train_losses(&engine, 101, steps));
+        let hb = scope.spawn(|| train_losses(&engine, 202, steps));
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+
+    assert_eq!(serial_a, thread_a, "session A diverged under concurrency");
+    assert_eq!(serial_b, thread_b, "session B diverged under concurrency");
+}
+
+#[test]
+fn parallel_evaluate_is_bit_identical_to_serial() {
+    let Some(engine) = real_engine() else { return };
+    let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let cfg = engine.config().clone();
+    let ds = SyntheticCifar::new(cfg.num_classes, 33, 0.1);
+    let (imgs, labels) = ds.generate(cfg.batch * 6, 0);
+    let eval = make_eval_batches(&imgs, &labels, cfg.batch, 6);
+
+    let serial = session.evaluate_with_workers(&eval, 1).unwrap();
+    for workers in [2, 3, 4, 8] {
+        let par = session.evaluate_with_workers(&eval, workers).unwrap();
+        assert_eq!(serial.loss.to_bits(), par.loss.to_bits(), "workers={workers}");
+        assert_eq!(serial.accuracy.to_bits(), par.accuracy.to_bits(), "workers={workers}");
+        assert_eq!(par.batches, 6);
+    }
+}
+
+#[test]
+fn parallel_predict_matches_serial_and_merges_ledgers() {
+    let Some(engine) = real_engine() else { return };
+    let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let cfg = engine.config().clone();
+    let ds = SyntheticCifar::new(cfg.num_classes, 44, 0.1);
+    let batches: Vec<Tensor> = (0..8).map(|k| ds.generate(cfg.batch, k as u64).0).collect();
+
+    let serial = session.predict_batches_with_workers(&batches, 1).unwrap();
+    let par = session.predict_batches_with_workers(&batches, 4).unwrap();
+
+    assert_eq!(serial.predictions.len(), 8);
+    assert_eq!(par.predictions.len(), 8);
+    for (s, p) in serial.predictions.iter().zip(&par.predictions) {
+        assert_eq!(s.classes, p.classes);
+        assert_eq!(s.logits.data(), p.logits.data(), "logits must be bit-identical");
+    }
+    // Ledger-merge accounting: the aggregate of the 4 worker ledgers sees
+    // exactly the traffic of the serial sweep, with no double/unknown
+    // frees on any worker.
+    assert_eq!(par.memory.total_traffic(), serial.memory.total_traffic());
+    assert_eq!(par.memory.unknown_frees(), 0);
+    assert!(par.workers > 1);
+    // Concurrent workers may hold more peak bytes in aggregate, never less.
+    assert!(par.memory.peak_bytes() >= serial.memory.peak_bytes());
+}

@@ -1,8 +1,9 @@
-//! Integration tests over the full stack: artifacts → runtime → coordinator
-//! → api session. Requires `make artifacts`; each test skips gracefully if
-//! the artifacts are missing.
+//! Integration tests over the full stack: artifacts → runtime → execution
+//! core → api session. Requires `make artifacts`; each test skips
+//! gracefully if the artifacts are missing.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anode::api::{Engine, FitOptions, LrSchedule, SessionConfig};
 use anode::coordinator::Coordinator;
@@ -12,13 +13,13 @@ use anode::models::{Arch, GradMethod, ModelConfig, Solver};
 use anode::runtime::ArtifactRegistry;
 use anode::tensor::Tensor;
 
-fn registry() -> Option<ArtifactRegistry> {
+fn registry() -> Option<Arc<ArtifactRegistry>> {
     let p = Path::new("artifacts");
     if !p.join("manifest.json").exists() {
         eprintln!("skipping: artifacts/ not built");
         return None;
     }
-    Some(ArtifactRegistry::open(p).unwrap())
+    Some(Arc::new(ArtifactRegistry::open(p).unwrap()))
 }
 
 fn small_data(ncls: usize, n: usize, batch: usize) -> (Batcher, Vec<(Tensor, Tensor)>) {
@@ -26,7 +27,7 @@ fn small_data(ncls: usize, n: usize, batch: usize) -> (Batcher, Vec<(Tensor, Ten
     let (imgs, labels) = ds.generate(n, 1);
     let (timgs, tlabels) = ds.generate(batch * 2, 2);
     let eval = make_eval_batches(&timgs, &tlabels, batch, 2);
-    (Batcher::new(imgs, labels, batch, false, 3), eval)
+    (Batcher::new(imgs, labels, batch, false, 3).unwrap(), eval)
 }
 
 #[test]
@@ -34,7 +35,7 @@ fn forward_shapes_and_memory_accounting() {
     let Some(reg) = registry() else { return };
     let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 10).unwrap();
     let batch = cfg.batch;
-    let co = Coordinator::new(&reg, cfg, Solver::Euler, GradMethod::Anode).unwrap();
+    let co = Coordinator::new(reg.clone(), cfg, Solver::Euler, GradMethod::Anode).unwrap();
     let params = co.load_params().unwrap();
 
     let ds = SyntheticCifar::new(10, 5, 0.1);
@@ -69,7 +70,7 @@ fn grads_flow_and_are_finite_for_all_methods() {
         GradMethod::AnodeRevolve(2),
         GradMethod::AnodeEquispaced(2),
     ] {
-        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
+        let co = Coordinator::new(reg.clone(), cfg.clone(), Solver::Euler, method).unwrap();
         let params = co.load_params().unwrap();
         let mut ledger = MemoryLedger::new();
         let (loss, correct, grads) =
@@ -98,7 +99,7 @@ fn anode_and_revolve_gradients_agree_exactly() {
     let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
 
     let run = |method| {
-        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
+        let co = Coordinator::new(reg.clone(), cfg.clone(), Solver::Euler, method).unwrap();
         let params = co.load_params().unwrap();
         let mut ledger = MemoryLedger::new();
         co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap()
@@ -128,7 +129,7 @@ fn node_gradient_differs_from_anode() {
     let y = Tensor::from_vec(vec![batch], labels.iter().map(|&l| l as f32).collect()).unwrap();
 
     let run = |method| {
-        let co = Coordinator::new(&reg, cfg.clone(), Solver::Euler, method).unwrap();
+        let co = Coordinator::new(reg.clone(), cfg.clone(), Solver::Euler, method).unwrap();
         let params = co.load_params().unwrap();
         let mut ledger = MemoryLedger::new();
         co.loss_and_grad(&imgs, &y, &params, &mut ledger).unwrap()
@@ -147,7 +148,7 @@ fn node_gradient_differs_from_anode() {
 #[test]
 fn short_training_decreases_loss() {
     let Some(reg) = registry() else { return };
-    let engine = Engine::builder().registry(std::rc::Rc::new(reg)).build().unwrap();
+    let engine = Engine::builder().registry(reg.clone()).build().unwrap();
     let batch = engine.config().batch;
     let session_cfg = SessionConfig {
         method: "anode".into(),
@@ -172,7 +173,7 @@ fn sqnxt_arch_works_with_rk2() {
     let Some(reg) = registry() else { return };
     let cfg = ModelConfig::from_registry(&reg, Arch::Sqnxt, 10).unwrap();
     let batch = cfg.batch;
-    let co = Coordinator::new(&reg, cfg, Solver::Rk2, GradMethod::Anode).unwrap();
+    let co = Coordinator::new(reg.clone(), cfg, Solver::Rk2, GradMethod::Anode).unwrap();
     let params = co.load_params().unwrap();
     let ds = SyntheticCifar::new(10, 9, 0.1);
     let (imgs, labels) = ds.generate(batch, 0);
@@ -188,7 +189,7 @@ fn cifar100_head_works() {
     let Some(reg) = registry() else { return };
     let cfg = ModelConfig::from_registry(&reg, Arch::Resnet, 100).unwrap();
     let batch = cfg.batch;
-    let co = Coordinator::new(&reg, cfg, Solver::Euler, GradMethod::Anode).unwrap();
+    let co = Coordinator::new(reg.clone(), cfg, Solver::Euler, GradMethod::Anode).unwrap();
     let params = co.load_params().unwrap();
     let ds = SyntheticCifar::new(100, 10, 0.1);
     let (imgs, labels) = ds.generate(batch, 0);

@@ -89,7 +89,7 @@ fn prop_batcher_partitions_dataset() {
         }
         let imgs = Tensor::from_vec(vec![n, 1, 1, 1], data).unwrap();
         let labels: Vec<usize> = (0..n).map(|i| i % 5).collect();
-        let mut b = Batcher::new(imgs, labels, bsz, false, rng.next_u64());
+        let mut b = Batcher::new(imgs, labels, bsz, false, rng.next_u64()).unwrap();
         let mut seen = std::collections::HashSet::new();
         for _ in 0..(n / bsz) {
             let batch = b.next_batch();
