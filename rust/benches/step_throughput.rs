@@ -1,18 +1,29 @@
 //! §V compute-cost claim: "ANODE has the same computational cost as the
 //! neural ODE of [8]" — wall-clock per gradient computation, per method,
 //! through the `anode::api` façade. Also times the batched inference path
-//! (`Session::predict`), the serving-side number, and the parallel
-//! `predict_throughput` fan-out (serial vs `--workers 4`), emitting
-//! `BENCH_predict.json` to seed the perf trajectory.
+//! (`Session::predict`), the parallel `predict_throughput` fan-out
+//! (serial vs 4 workers, emitting `BENCH_predict.json`), and the
+//! `serve_throughput` scenario: single requests through the
+//! `anode::serve` deadline-batched admission queue vs the pre-batched
+//! path, with a p50/p95/p99 per-request latency report emitted to
+//! `BENCH_serve.json`.
+//!
 //! `cargo bench --bench step_throughput` (method timings need
-//! `make artifacts`; `predict_throughput` also runs on the offline stub,
-//! where it times the host-side serving tail through the same worker pool).
+//! `make artifacts`; `predict_throughput` and `serve_throughput` also run
+//! on the offline stub, where they time the host-side serving tail).
+//! `ANODE_BENCH_QUICK=1` shrinks iteration/request counts for the CI
+//! bench-smoke job while still writing both `BENCH_*.json` artifacts.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anode::api::{head_logits, Engine, SessionConfig};
 use anode::data::SyntheticCifar;
+use anode::memory::MemoryLedger;
+use anode::serve::{split_examples, BatchRunner, HostTailRunner, ServeConfig, ServeHandle};
 use anode::tensor::Tensor;
-use anode::util::bench::{bench, black_box};
-use anode::util::pool::parallel_map;
+use anode::util::bench::{bench, black_box, percentile, quick_mode};
+use anode::util::pool::{parallel_map, parallel_map_with};
 
 fn main() {
     let engine = Engine::builder().artifacts("artifacts").build();
@@ -21,10 +32,12 @@ fn main() {
         Err(_) => eprintln!("artifacts/ missing — skipping per-method gradient timings"),
     }
     predict_throughput(engine.as_ref().ok());
+    serve_throughput(engine.as_ref().ok());
 }
 
 fn method_timings(engine: &Engine) {
     println!("=== §V — per-step gradient cost by method (ResNet, Euler, B=32) ===\n");
+    let iters = if quick_mode() { 1 } else { 3 };
     let batch = engine.config().batch;
     let ds = SyntheticCifar::new(10, 3, 0.1);
     let (imgs, labels) = ds.generate(batch, 0);
@@ -41,7 +54,7 @@ fn method_timings(engine: &Engine) {
         "anode-equispaced2",
     ] {
         let mut session = engine.session(SessionConfig::with_method(method)).unwrap();
-        let stats = bench(&format!("loss_and_grad[{method}]"), 1, 3, || {
+        let stats = bench(&format!("loss_and_grad[{method}]"), 1, iters, || {
             black_box(session.loss_and_grad(&imgs, &y).unwrap());
         });
         println!("{}", stats.report());
@@ -60,7 +73,7 @@ fn method_timings(engine: &Engine) {
 
     // Serving-side numbers: inference forward and the predict path.
     let session = engine.session(SessionConfig::with_method("anode")).unwrap();
-    let stats = bench("predict(batched inference)", 1, 3, || {
+    let stats = bench("predict(batched inference)", 1, iters, || {
         black_box(session.predict(&imgs).unwrap());
     });
     println!("{}", stats.report());
@@ -80,18 +93,21 @@ fn method_timings(engine: &Engine) {
 fn predict_throughput(engine: Option<&Engine>) {
     println!("\n=== predict_throughput — serial vs 4 workers ===\n");
     const WORKERS: usize = 4;
+    let quick = quick_mode();
 
     let (mode, batch, n_batches, serial, par) = match engine {
         Some(engine) => {
             let cfg = engine.config().clone();
             let session = engine.session(SessionConfig::with_method("anode")).unwrap();
             let ds = SyntheticCifar::new(cfg.num_classes, 7, 0.1);
+            let count = if quick { 4 } else { 16 };
             let batches: Vec<Tensor> =
-                (0..16).map(|k| ds.generate(cfg.batch, k as u64).0).collect();
-            let serial = bench("predict_batches[workers=1]", 1, 3, || {
+                (0..count).map(|k| ds.generate(cfg.batch, k as u64).0).collect();
+            let iters = if quick { 1 } else { 3 };
+            let serial = bench("predict_batches[workers=1]", 1, iters, || {
                 black_box(session.predict_batches_with_workers(&batches, 1).unwrap());
             });
-            let par = bench(&format!("predict_batches[workers={WORKERS}]"), 1, 3, || {
+            let par = bench(&format!("predict_batches[workers={WORKERS}]"), 1, iters, || {
                 black_box(session.predict_batches_with_workers(&batches, WORKERS).unwrap());
             });
             // Ledger-merge sanity for the printed numbers: same traffic.
@@ -109,17 +125,19 @@ fn predict_throughput(engine: Option<&Engine>) {
             // Host-side tail: (B, 16, 16, 64) activations through the
             // 10-class head — the post-XLA portion of every predict call.
             let (b, h, c, k) = (32usize, 16usize, 64usize, 10usize);
-            let zs: Vec<Tensor> = (0..48)
+            let count = if quick { 8 } else { 48 };
+            let zs: Vec<Tensor> = (0..count)
                 .map(|i| Tensor::full(&[b, h, h, c], 0.01 * (i + 1) as f32))
                 .collect();
             let w = Tensor::full(&[c, k], 0.05);
             let bias = Tensor::full(&[k], 0.1);
-            let serial = bench("predict_tail[workers=1]", 1, 5, || {
+            let iters = if quick { 2 } else { 5 };
+            let serial = bench("predict_tail[workers=1]", 1, iters, || {
                 for z in &zs {
                     black_box(head_logits(z, &w, &bias).unwrap());
                 }
             });
-            let par = bench(&format!("predict_tail[workers={WORKERS}]"), 1, 5, || {
+            let par = bench(&format!("predict_tail[workers={WORKERS}]"), 1, iters, || {
                 black_box(parallel_map(&zs, WORKERS, |_, z| head_logits(z, &w, &bias).unwrap()));
             });
             ("stub-tail", b, zs.len(), serial, par)
@@ -150,5 +168,166 @@ fn predict_throughput(engine: Option<&Engine>) {
     match std::fs::write("BENCH_predict.json", &json) {
         Ok(()) => println!("wrote BENCH_predict.json"),
         Err(e) => eprintln!("could not write BENCH_predict.json: {e}"),
+    }
+}
+
+/// Single-request serving through the `anode::serve` admission queue vs
+/// the pre-batched predict path: p50/p95/p99 per-request latency plus
+/// throughput, emitted to `BENCH_serve.json`. Replies are checked
+/// bit-identical against the pre-batched run row by row. Works on the
+/// offline stub via the `HostTailRunner` demo model.
+fn serve_throughput(engine: Option<&Engine>) {
+    println!("\n=== serve_throughput — deadline-batched queue vs pre-batched ===\n");
+    const WORKERS: usize = 4;
+    let quick = quick_mode();
+    let max_delay = Duration::from_millis(2);
+    let n_batches = if quick { 4 } else { 16 };
+
+    match engine {
+        Some(engine) => {
+            let cfg = engine.config().clone();
+            let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+            let ds = SyntheticCifar::new(cfg.num_classes, 7, 0.1);
+            let stacked: Vec<Tensor> =
+                (0..n_batches).map(|k| ds.generate(cfg.batch, k as u64).0).collect();
+            let t0 = Instant::now();
+            let base = session.predict_batches_with_workers(&stacked, WORKERS).unwrap();
+            let prebatched_eps =
+                (n_batches * cfg.batch) as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+            let expected = expected_rows(base.predictions.iter().map(|p| (&p.classes, &p.logits)));
+            let config = ServeConfig { max_delay, workers: WORKERS, queue_cap: 2 * cfg.batch };
+            let handle = session.serve(config).unwrap();
+            let args = ServeBenchArgs {
+                mode: "session",
+                batch: cfg.batch,
+                max_delay,
+                prebatched_eps,
+            };
+            run_serve_bench(args, handle, &stacked, &expected);
+        }
+        None => {
+            let (b, h, c, k) = (32usize, 16usize, 64usize, 10usize);
+            let runner = HostTailRunner::new(b, h, c, k);
+            let ex_len = h * h * c;
+            let stacked: Vec<Tensor> = (0..n_batches)
+                .map(|i| {
+                    let data = (0..b * ex_len)
+                        .map(|j| (((i * 131 + j) % 977) as f32) * 0.001 - 0.3)
+                        .collect();
+                    Tensor::from_vec(vec![b, h, h, c], data).unwrap()
+                })
+                .collect();
+            let t0 = Instant::now();
+            let (base, _ledgers) =
+                parallel_map_with(&stacked, WORKERS, MemoryLedger::new, |ledger, _i, z| {
+                    runner.run(z, ledger).unwrap()
+                });
+            let prebatched_eps = (n_batches * b) as f64 / t0.elapsed().as_secs_f64().max(1e-12);
+            let expected = expected_rows(base.iter().map(|p| (&p.classes, &p.logits)));
+            let config = ServeConfig { max_delay, workers: WORKERS, queue_cap: 2 * b };
+            let handle = ServeHandle::spawn(Arc::new(runner), config).unwrap();
+            let args = ServeBenchArgs { mode: "stub-tail", batch: b, max_delay, prebatched_eps };
+            run_serve_bench(args, handle, &stacked, &expected);
+        }
+    }
+}
+
+/// Flatten per-batch predictions into per-request (class, logits-row)
+/// pairs in row order — the reference for the serve identity check.
+fn expected_rows<'a, I>(predictions: I) -> Vec<(usize, Vec<f32>)>
+where
+    I: Iterator<Item = (&'a Vec<usize>, &'a Tensor)>,
+{
+    let mut rows = Vec::new();
+    for (classes, logits) in predictions {
+        let k = *logits.shape().last().unwrap_or(&1);
+        for (r, &class) in classes.iter().enumerate() {
+            rows.push((class, logits.data()[r * k..(r + 1) * k].to_vec()));
+        }
+    }
+    rows
+}
+
+struct ServeBenchArgs {
+    mode: &'static str,
+    batch: usize,
+    max_delay: Duration,
+    prebatched_eps: f64,
+}
+
+fn run_serve_bench(
+    args: ServeBenchArgs,
+    handle: ServeHandle,
+    stacked: &[Tensor],
+    expected: &[(usize, Vec<f32>)],
+) {
+    let ServeBenchArgs { mode, batch, max_delay, prebatched_eps } = args;
+    let max_delay_ms = max_delay.as_secs_f64() * 1e3;
+    let examples: Vec<Tensor> = stacked.iter().flat_map(|b| split_examples(b).unwrap()).collect();
+    let t0 = Instant::now();
+    let pendings: Vec<_> = examples.iter().map(|ex| handle.submit(ex.clone()).unwrap()).collect();
+    let mut latencies = Vec::with_capacity(pendings.len());
+    let mut mismatches = 0usize;
+    for (i, pending) in pendings.into_iter().enumerate() {
+        let reply = pending.wait().unwrap();
+        let (class, logits) = &expected[i];
+        if reply.class != *class || reply.logits.data() != logits.as_slice() {
+            mismatches += 1;
+        }
+        latencies.push(reply.stats.total());
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = handle.shutdown().unwrap();
+    latencies.sort();
+    let n = latencies.len();
+    let serve_eps = n as f64 / wall.max(1e-12);
+    let p50 = percentile(&latencies, 50.0);
+    let p95 = percentile(&latencies, 95.0);
+    let p99 = percentile(&latencies, 99.0);
+
+    println!(
+        "mode={mode} requests={n} batch={batch} workers={} max_delay={max_delay:?}",
+        report.workers
+    );
+    println!("latency p50={p50:?} p95={p95:?} p99={p99:?}");
+    println!(
+        "throughput: serve {serve_eps:.0} examples/s vs pre-batched {prebatched_eps:.0} examples/s"
+    );
+    println!(
+        "flushes: full={} deadline={} drain={}  memory: {}",
+        report.full_flushes,
+        report.deadline_flushes,
+        report.drain_flushes,
+        report.memory.summary()
+    );
+    println!(
+        "bit-identity vs pre-batched path: {}",
+        if mismatches == 0 { "OK" } else { "MISMATCH" }
+    );
+    if mismatches > 0 {
+        eprintln!("WARNING: {mismatches} served replies diverged from the pre-batched path");
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"serve_throughput\",\n  \"mode\": \"{mode}\",\n  \
+         \"batch\": {batch},\n  \"requests\": {n},\n  \"workers\": {},\n  \
+         \"max_delay_ms\": {max_delay_ms:.3},\n  \
+         \"p50_ms\": {:.4},\n  \"p95_ms\": {:.4},\n  \"p99_ms\": {:.4},\n  \
+         \"serve_examples_per_sec\": {serve_eps:.1},\n  \
+         \"prebatched_examples_per_sec\": {prebatched_eps:.1},\n  \
+         \"full_flushes\": {},\n  \"deadline_flushes\": {},\n  \"drain_flushes\": {},\n  \
+         \"bit_identical\": {}\n}}\n",
+        report.workers,
+        p50.as_secs_f64() * 1e3,
+        p95.as_secs_f64() * 1e3,
+        p99.as_secs_f64() * 1e3,
+        report.full_flushes,
+        report.deadline_flushes,
+        report.drain_flushes,
+        mismatches == 0,
+    );
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
     }
 }

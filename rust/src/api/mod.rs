@@ -26,7 +26,11 @@
 //!   [`Session::predict_batches`] and [`Session::evaluate`] fan
 //!   micro-batches across a small worker pool (`SessionConfig::workers`),
 //!   each worker metering its own [`crate::memory::MemoryLedger`], merged
-//!   afterward into aggregate peak/traffic stats.
+//!   afterward into aggregate peak/traffic stats. For *single-request*
+//!   traffic, [`Session::serve`] starts the [`crate::serve`] front end: a
+//!   deadline-batched admission queue coalescing requests into the AOT
+//!   batch size on a persistent worker pool, with per-request latency
+//!   stats and bit-identical values to the pre-batched path.
 //!
 //! ## Quickstart
 //!

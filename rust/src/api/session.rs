@@ -1,8 +1,9 @@
 //! Sessions — stateful handles over an [`Engine`](super::Engine) that own
 //! parameters and optimizer state, and expose training (`step`, `fit`,
-//! `evaluate`), gradient validation (`gradcheck`) and the batched
+//! `evaluate`), gradient validation (`gradcheck`), the batched
 //! inference paths (`predict`, `predict_batches`) with per-call
-//! latency/memory stats.
+//! latency/memory stats, and the single-request serving front end
+//! ([`Session::serve`] → [`crate::serve`]).
 //!
 //! A session splits into the shared-immutable [`ExecutionCore`] (config,
 //! module handles, strategy — behind an `Arc`, safe to fan across worker
@@ -21,6 +22,7 @@ use crate::memory::{Category, MemoryLedger};
 use crate::metrics::{Curve, CurvePoint, Mean};
 use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{Result, RuntimeError};
+use crate::serve::{ServeConfig, ServeHandle, SessionRunner};
 use crate::tensor::Tensor;
 use crate::util::pool;
 
@@ -409,34 +411,12 @@ impl<'e> Session<'e> {
         let core = &self.core;
         let params = &self.params;
         let cfg = &core.cfg;
-        let (hw, hb) = core.index.head;
-        // Inference rolls one activation through the stages; its peak is
-        // metered per batch on the worker's own ledger.
-        let rolling = cfg.rolling_act_bytes();
         let (results, ledgers) = pool::parallel_map_with(
             batches,
             workers,
             MemoryLedger::new,
-            |ledger: &mut MemoryLedger, _i, images: &Tensor| -> Result<Prediction> {
-                let id = ledger.alloc(rolling, Category::Transient);
-                let t = Instant::now();
-                let out = core
-                    .forward_infer(images, params)
-                    .and_then(|z| head_logits(&z, &params[hw], &params[hb]));
-                ledger.free(id);
-                let logits = out?;
-                let classes = argmax_rows(&logits);
-                let seconds = t.elapsed().as_secs_f64();
-                Ok(Prediction {
-                    classes,
-                    logits,
-                    stats: PredictStats {
-                        batch: cfg.batch,
-                        seconds,
-                        examples_per_sec: cfg.batch as f64 / seconds.max(1e-12),
-                        peak_activation_bytes: rolling,
-                    },
-                })
+            |ledger: &mut MemoryLedger, _i, images: &Tensor| {
+                infer_batch(core, params, images, ledger)
             },
         );
         let mut memory = MemoryLedger::new();
@@ -453,6 +433,22 @@ impl<'e> Session<'e> {
             examples_per_sec: examples as f64 / seconds.max(1e-12),
             memory,
         })
+    }
+
+    /// Start the single-request serving front end over this session's
+    /// model: a deadline-batched admission queue (requests coalesce into
+    /// the AOT batch size, flushing when full or when the oldest request
+    /// has waited `config.max_delay`) feeding a persistent worker pool.
+    ///
+    /// The returned [`ServeHandle`] is cloneable and independent of this
+    /// session's lifetime — it snapshots the current parameters over the
+    /// shared execution core, so later `step`s do not affect a running
+    /// pipeline (serve again after training to pick up new weights).
+    /// Served values are bit-identical to [`Session::predict_batches`]
+    /// over the same examples. See `anode::serve` and rust/DESIGN.md §6b.
+    pub fn serve(&self, config: ServeConfig) -> Result<ServeHandle> {
+        let runner = SessionRunner::new(self.core.clone(), self.params.clone());
+        ServeHandle::spawn(Arc::new(runner), config)
     }
 
     /// Compare this session's gradient against the fused DTO reference
@@ -563,6 +559,44 @@ impl<'e> Session<'e> {
             sec_per_step: wall / steps_run.max(1) as f64,
         })
     }
+}
+
+/// One pre-batched tensor through the inference path with the rolling
+/// activation metered transiently on `ledger` — the per-batch unit shared
+/// by [`Session::predict_batches`] and the serve path's
+/// [`crate::serve::SessionRunner`]. Keeping this in one place is what
+/// makes the serve path's bit-identity guarantee structural rather than a
+/// convention two copies would have to maintain.
+pub(crate) fn infer_batch(
+    core: &ExecutionCore,
+    params: &[Tensor],
+    images: &Tensor,
+    ledger: &mut MemoryLedger,
+) -> Result<Prediction> {
+    let cfg = &core.cfg;
+    let (hw, hb) = core.index.head;
+    // Inference rolls one activation through the stages; its peak is the
+    // largest stage activation.
+    let rolling = cfg.rolling_act_bytes();
+    let id = ledger.alloc(rolling, Category::Transient);
+    let t = Instant::now();
+    let out = core
+        .forward_infer(images, params)
+        .and_then(|z| head_logits(&z, &params[hw], &params[hb]));
+    ledger.free(id);
+    let logits = out?;
+    let classes = argmax_rows(&logits);
+    let seconds = t.elapsed().as_secs_f64();
+    Ok(Prediction {
+        classes,
+        logits,
+        stats: PredictStats {
+            batch: cfg.batch,
+            seconds,
+            examples_per_sec: cfg.batch as f64 / seconds.max(1e-12),
+            peak_activation_bytes: rolling,
+        },
+    })
 }
 
 /// Host-side classifier head: global-average-pool `z` (B,H,W,C), then the

@@ -9,7 +9,7 @@
 //! This module provides:
 //! - [`Strategy`]: store-all / equispaced(m) / revolve(m) / O(1),
 //! - [`plan`]: turn a strategy into an explicit [`Schedule`] of actions,
-//! - [`ScheduleExecutor`]: replay a schedule against any step function while
+//! - [`run_backward`]: replay a schedule against any step function while
 //!   enforcing the memory budget (used by the coordinator and the tests),
 //! - [`binomial_eta`]: Griewank's η(m, r) optimality bound used to *prove*
 //!   (in tests) the revolve plan achieves the theoretical minimum.

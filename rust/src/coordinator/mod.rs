@@ -12,7 +12,8 @@
 //! - **Inference pass** ([`ExecutionCore::forward_infer`]): the same network
 //!   without gradient bookkeeping — no ledger traffic, no stored
 //!   activations — used by evaluation and the serving path.
-//! - **Multi-stage backward** ([`backward`]): per ODE block, delegate to the
+//! - **Multi-stage backward** (the private `backward` module): per ODE
+//!   block, delegate to the
 //!   session's pluggable [`GradientStrategy`] object; transitions and the
 //!   stem are shared chain-rule plumbing.
 //! - **Memory accounting**: every stored activation goes through the

@@ -15,8 +15,14 @@
 //! // session.step(&images, &labels)?   — train
 //! // session.evaluate(&eval_batches)?  — measure
 //! // session.predict(&images)?         — serve (batched inference + stats)
+//! // session.serve(Default::default())? — single-request serving front end
 //! # Ok::<(), anode::runtime::RuntimeError>(())
 //! ```
+//!
+//! For production-style traffic, [`serve`] adds a deadline-batched
+//! admission queue over a persistent worker pool: single requests are
+//! coalesced into the AOT batch size and demultiplexed back with
+//! per-request latency stats (see rust/DESIGN.md §6b).
 //!
 //! Architecture (see DESIGN.md):
 //! - **L3 (this crate)** — [`api`] on top of the checkpointing training
@@ -42,5 +48,6 @@ pub mod ode;
 pub mod optim;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -7,22 +7,30 @@
 //!   memory      print the §V memory-footprint table
 //!   gradcheck   DTO vs OTD vs [8] gradient-consistency sweep (§IV)
 //!   modules     list AOT modules in the artifact manifest
+//!   serve       single-request serving demo: deadline-batched admission
+//!               queue on the persistent worker pool, p50/p95/p99 report
 //!
 //! Examples:
 //!   anode train --arch sqnxt --solver euler --method anode --steps 200
 //!   anode figures --fig fig1
 //!   anode gradcheck --artifacts artifacts
+//!   anode serve --requests 512 --max-delay-ms 5 --workers 4 --queue-cap 256
 //!
 //! All heavy lifting goes through the `anode::api` façade (Engine/Session);
 //! see `rust/DESIGN.md` §6.
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use anode::api::open_artifacts;
+use anode::api::{open_artifacts, Engine, SessionConfig};
+use anode::data::{SyntheticCifar, CIFAR_HW};
 use anode::harness;
 use anode::metrics::{format_table, write_csv};
 use anode::models::{Arch, GradMethod, Solver};
 use anode::runtime::ArtifactRegistry;
+use anode::serve::{HostTailRunner, ServeConfig, ServeHandle};
+use anode::tensor::Tensor;
+use anode::util::bench::percentile;
 use anode::util::cli::Args;
 
 fn main() {
@@ -39,6 +47,7 @@ fn main() {
         "memory" => cmd_memory(&args),
         "gradcheck" => cmd_gradcheck(&args),
         "modules" => cmd_modules(&args),
+        "serve" => cmd_serve(&args),
         _ => {
             print_help();
             0
@@ -58,6 +67,9 @@ fn print_help() {
          \u{20}          --workers N (parallel evaluation sweeps; default 1)\n\
          figures:   --fig fig1|fig7|sec3|fig3|fig4|fig5|memory|gradcheck [--fast]\n\
          gradcheck: --seed N\n\
+         serve:     --requests N --clients N --max-delay-ms MS --workers N\n\
+         \u{20}          --queue-cap N --method M (falls back to a host-side demo\n\
+         \u{20}          model when artifacts/ is absent)\n\
          common:    --artifacts DIR (default: artifacts)\n\
          \u{20}          --csv PATH (train and fig3|fig4|fig5 only)\n\
          \n\
@@ -258,6 +270,153 @@ fn cmd_gradcheck(args: &Args) -> i32 {
             eprintln!("gradcheck failed: {e}");
             1
         }
+    }
+}
+
+/// Single-request serving demo: start the `anode::serve` pipeline, fire
+/// `--requests` synthetic examples from `--clients` threads, and report
+/// per-request latency percentiles plus flush/memory accounting. Uses the
+/// engine when artifacts are present, the host-side demo model otherwise
+/// (so the serving path is demonstrable on the offline stub).
+fn cmd_serve(args: &Args) -> i32 {
+    let requests: usize = args.get_parse_or("requests", 256);
+    let clients: usize = args.get_parse_or("clients", 4usize).max(1);
+    let serve_cfg = ServeConfig {
+        max_delay: Duration::from_millis(args.get_parse_or("max-delay-ms", 5u64)),
+        workers: args.get_parse_or("workers", 2),
+        queue_cap: args.get_parse_or("queue-cap", 256),
+    };
+    let method = args.get_or("method", "anode");
+    let dir = args.get_or("artifacts", "artifacts");
+    args.warn_unknown();
+    println!(
+        "serve: {} requests, {} clients, max_delay={:?}, workers={}, queue_cap={}",
+        requests,
+        clients,
+        serve_cfg.max_delay,
+        serve_cfg.workers,
+        serve_cfg.queue_cap
+    );
+    match Engine::builder().artifacts(&dir).build() {
+        Ok(engine) => {
+            let session = match engine.session(SessionConfig::with_method(method.as_str())) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let handle = match session.serve(serve_cfg) {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let cfg = engine.config().clone();
+            if cfg.image != CIFAR_HW {
+                eprintln!(
+                    "error: artifact image size {} is unsupported by the synthetic CIFAR \
+                     request generator (renders {CIFAR_HW}x{CIFAR_HW})",
+                    cfg.image
+                );
+                return 2;
+            }
+            println!(
+                "model: engine-backed `{method}` ({0}x{0} images, batch {1})",
+                cfg.image, cfg.batch
+            );
+            let ds = SyntheticCifar::new(cfg.num_classes, 3, 0.1);
+            let make = move |i: usize| {
+                let (imgs, _) = ds.generate(1, i as u64);
+                imgs.reshape(vec![cfg.image, cfg.image, 3]).expect("example reshape")
+            };
+            drive_serve(&handle, requests, clients, &make)
+        }
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); serving the synthetic host-tail demo model");
+            let runner = HostTailRunner::new(32, 16, 64, 10);
+            let shape = runner.example_shape();
+            let handle = match ServeHandle::spawn(Arc::new(runner), serve_cfg) {
+                Ok(h) => h,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return 2;
+                }
+            };
+            let make = move |i: usize| Tensor::full(&shape, 0.01 * (i % 97) as f32);
+            drive_serve(&handle, requests, clients, &make)
+        }
+    }
+}
+
+/// Pipelined client drive: each client submits its share of requests
+/// (interleaved round-robin), then waits all replies; latencies are
+/// aggregated across clients for the percentile report.
+fn drive_serve<F>(handle: &ServeHandle, requests: usize, clients: usize, make: &F) -> i32
+where
+    F: Fn(usize) -> Tensor + Sync,
+{
+    let t0 = Instant::now();
+    let mut latencies: Vec<Duration> = std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let handle = handle.clone();
+            joins.push(scope.spawn(move || {
+                let mut pendings = Vec::new();
+                for i in (c..requests).step_by(clients) {
+                    match handle.submit(make(i)) {
+                        Ok(pending) => pendings.push((i, pending)),
+                        Err(e) => eprintln!("submit {i} failed: {e}"),
+                    }
+                }
+                let mut latencies = Vec::with_capacity(pendings.len());
+                for (i, pending) in pendings {
+                    match pending.wait() {
+                        Ok(reply) => latencies.push(reply.stats.total()),
+                        Err(e) => eprintln!("request {i} failed: {e}"),
+                    }
+                }
+                latencies
+            }));
+        }
+        joins.into_iter().flat_map(|j| j.join().expect("serve client thread")).collect()
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let report = match handle.shutdown() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("shutdown failed: {e}");
+            return 1;
+        }
+    };
+    latencies.sort();
+    println!(
+        "served {}/{} requests in {:.3}s  ({:.0} req/s across {clients} clients)",
+        latencies.len(),
+        requests,
+        wall,
+        latencies.len() as f64 / wall.max(1e-12)
+    );
+    println!(
+        "latency p50={:?} p95={:?} p99={:?}",
+        percentile(&latencies, 50.0),
+        percentile(&latencies, 95.0),
+        percentile(&latencies, 99.0)
+    );
+    println!(
+        "batches={} (full={} deadline={} drain={})  workers={}",
+        report.batches,
+        report.full_flushes,
+        report.deadline_flushes,
+        report.drain_flushes,
+        report.workers
+    );
+    println!("memory: {}", report.memory.summary());
+    if latencies.len() == requests {
+        0
+    } else {
+        1
     }
 }
 

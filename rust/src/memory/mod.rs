@@ -49,7 +49,7 @@ struct Alloc {
 /// Per-thread by design: each session (and each worker in the parallel
 /// predict/evaluate paths) owns its own ledger; worker ledgers are folded
 /// into an aggregate afterward with [`MemoryLedger::merge`].
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct MemoryLedger {
     live: HashMap<u64, Alloc>,
     next_id: u64,

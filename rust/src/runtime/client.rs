@@ -8,8 +8,9 @@ use std::path::Path;
 
 use crate::tensor::Tensor;
 
-/// Errors surfaced by the runtime layer.
-#[derive(Debug)]
+/// Errors surfaced by the runtime layer. `Clone` because the serving
+/// path fans one batch-level failure out to every request in the batch.
+#[derive(Debug, Clone)]
 pub enum RuntimeError {
     /// Underlying xla crate error (PJRT, compilation, execution).
     Xla(String),

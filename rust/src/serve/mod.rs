@@ -1,0 +1,677 @@
+//! # `anode::serve` — deadline-batched single-request serving
+//!
+//! The serving front end over the inference path: callers submit *single*
+//! examples; the runtime coalesces them into the AOT-compiled batch size,
+//! executes filled batches on a **persistent** worker pool, and
+//! demultiplexes per-request replies back to each caller with per-request
+//! latency (queue wait + execute) layered on the per-batch stats.
+//!
+//! ```text
+//! submit(example) ──▶ AdmissionQueue ──▶ batcher ──▶ WorkerPool ──▶ reply
+//!    (bounded, cap)    flush on:          assemble     long-lived     per
+//!    backpressure      batch full OR      (B, ...)     pinned threads request
+//!                      max_delay OR       padded       per-worker     channel
+//!                      shutdown           tensor       MemoryLedger
+//! ```
+//!
+//! * **Deadline flush** — a batch leaves the queue when it fills to the
+//!   AOT batch size *or* when the oldest admitted request has waited
+//!   `max_delay`, whichever comes first; shutdown drains the remainder.
+//!   Partial batches are zero-padded to the compiled shape (per-example
+//!   computation makes row values independent of the padding).
+//! * **Persistent workers** — unlike the scoped per-call threads of
+//!   [`crate::util::pool`], the pool's threads are spawned once and live
+//!   until shutdown, each metering a private
+//!   [`MemoryLedger`](crate::memory::MemoryLedger) for its lifetime; the
+//!   merged aggregate is returned by [`ServeHandle::shutdown`].
+//! * **Backpressure** — the admission queue is bounded at `queue_cap`
+//!   ([`ServeHandle::submit`] blocks, [`ServeHandle::try_submit`] reports
+//!   full) and the pool queues at most one spare batch per worker, so a
+//!   slow model slows admission instead of buffering without bound.
+//! * **Bit-identical values** — the session-backed runner executes exactly
+//!   the per-batch computation of
+//!   [`Session::predict_batches`](crate::api::Session::predict_batches),
+//!   so served logits are bit-identical to the pre-batched path
+//!   (asserted in `rust/tests/serve.rs`).
+//!
+//! Entry points: [`Session::serve`](crate::api::Session::serve) for the
+//! engine-backed path, or [`ServeHandle::spawn`] with a custom
+//! [`BatchRunner`] (the [`HostTailRunner`] demo model works on the
+//! vendored xla stub, so the serving path is exercisable offline).
+//! Semantics are documented in rust/DESIGN.md §6b.
+
+mod pool;
+mod queue;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::api::session::{argmax_rows, head_logits, infer_batch, PredictStats, Prediction};
+use crate::coordinator::ExecutionCore;
+use crate::memory::{Category, MemoryLedger};
+use crate::runtime::{Result, RuntimeError};
+use crate::tensor::Tensor;
+
+use pool::{BatchJob, WorkerPool};
+use queue::{AdmissionQueue, FlushReason, PendingRequest};
+
+/// Executes one assembled batch for the serving pipeline.
+///
+/// Implementations must be thread-safe: the persistent pool calls `run`
+/// from several worker threads concurrently (each with its own ledger).
+/// The session-backed implementation is wired by
+/// [`Session::serve`](crate::api::Session::serve); [`HostTailRunner`] is a
+/// host-only stand-in for offline builds and tests.
+pub trait BatchRunner: Send + Sync + 'static {
+    /// The AOT-compiled batch capacity the queue coalesces toward.
+    fn batch_size(&self) -> usize;
+
+    /// Shape of one example (a single request's tensor, without the
+    /// leading batch dimension).
+    fn example_shape(&self) -> Vec<usize>;
+
+    /// Execute one full `(batch_size, ...)` tensor, metering transient
+    /// working memory on `ledger`. Rows past the real fill are zero
+    /// padding; per-example models may ignore them.
+    fn run(&self, images: &Tensor, ledger: &mut MemoryLedger) -> Result<Prediction>;
+}
+
+/// Configuration for the serving front end.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Deadline for a partial batch: the oldest admitted request waits at
+    /// most this long before a flush (default 5 ms).
+    pub max_delay: Duration,
+    /// Persistent worker threads executing batches (default 2, min 1).
+    pub workers: usize,
+    /// Admission-queue capacity in *requests*; `submit` blocks and
+    /// `try_submit` reports full beyond it (default 256, min 1).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { max_delay: Duration::from_millis(5), workers: 2, queue_cap: 256 }
+    }
+}
+
+impl ServeConfig {
+    /// Set the deadline flush in milliseconds.
+    pub fn max_delay_ms(mut self, ms: u64) -> Self {
+        self.max_delay = Duration::from_millis(ms);
+        self
+    }
+
+    /// Set the persistent worker count.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    /// Set the admission-queue capacity.
+    pub fn queue_cap(mut self, cap: usize) -> Self {
+        self.queue_cap = cap;
+        self
+    }
+}
+
+/// Per-request latency accounting, layered on the per-batch stats.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestStats {
+    /// Admission to execution start: time spent in the admission queue,
+    /// batch assembly, and the pool's job queue.
+    pub queue_wait: Duration,
+    /// Wall-clock of the batch execution this request rode in.
+    pub execute: Duration,
+    /// Real requests in the executed batch (< `batch_size` on a deadline
+    /// or shutdown flush; the rest was zero padding).
+    pub batch_fill: usize,
+    /// AOT-compiled batch capacity.
+    pub batch_size: usize,
+}
+
+impl RequestStats {
+    /// End-to-end latency: queue wait + batch execution.
+    pub fn total(&self) -> Duration {
+        self.queue_wait + self.execute
+    }
+}
+
+/// One served reply: the predicted class, this request's logits row, and
+/// its latency stats.
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    /// Predicted class for the submitted example.
+    pub class: usize,
+    /// Raw logits for this example, shape `(num_classes,)` — the row this
+    /// request occupied in the executed batch.
+    pub logits: Tensor,
+    /// Per-request latency accounting.
+    pub stats: RequestStats,
+}
+
+/// A submitted request's pending reply (one-shot).
+pub struct Pending {
+    rx: mpsc::Receiver<Result<ServeReply>>,
+}
+
+impl Pending {
+    /// Block until the reply arrives (or the pipeline fails the request).
+    pub fn wait(self) -> Result<ServeReply> {
+        match self.rx.recv() {
+            Ok(reply) => reply,
+            Err(_) => Err(dropped_reply()),
+        }
+    }
+
+    /// Block up to `timeout`: `Ok(None)` if no reply arrived in time (the
+    /// request is still in flight and can be waited on again).
+    pub fn wait_timeout(&self, timeout: Duration) -> Result<Option<ServeReply>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => reply.map(Some),
+            Err(mpsc::RecvTimeoutError::Timeout) => Ok(None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(dropped_reply()),
+        }
+    }
+}
+
+fn dropped_reply() -> RuntimeError {
+    RuntimeError::Io("serve: request dropped before a reply was produced".into())
+}
+
+/// Live counters shared by the handle, the batcher, and the pool.
+#[derive(Default)]
+pub(crate) struct Counters {
+    pub submitted: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    pub full_flushes: AtomicU64,
+    pub deadline_flushes: AtomicU64,
+    pub drain_flushes: AtomicU64,
+}
+
+/// Point-in-time serving statistics (see [`ServeHandle::stats`]).
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Requests admitted into the queue.
+    pub submitted: u64,
+    /// `try_submit` calls bounced by a full queue.
+    pub rejected: u64,
+    /// Requests whose reply (success or error) has been sent.
+    pub completed: u64,
+    /// Batches dispatched to the pool.
+    pub batches: u64,
+    /// Batches flushed because they filled to the AOT size.
+    pub full_flushes: u64,
+    /// Partial batches flushed by the `max_delay` deadline.
+    pub deadline_flushes: u64,
+    /// Partial batches flushed by the shutdown drain.
+    pub drain_flushes: u64,
+    /// Requests currently waiting for batch assembly.
+    pub queue_depth: usize,
+    /// Has shutdown been initiated?
+    pub closed: bool,
+}
+
+/// Final report returned by [`ServeHandle::shutdown`].
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Total requests that received a reply.
+    pub requests: u64,
+    /// Total batches executed.
+    pub batches: u64,
+    /// Batches flushed full.
+    pub full_flushes: u64,
+    /// Partial batches flushed by the deadline.
+    pub deadline_flushes: u64,
+    /// Partial batches flushed by the shutdown drain.
+    pub drain_flushes: u64,
+    /// Persistent workers the pool ran.
+    pub workers: usize,
+    /// Per-worker ledgers folded with
+    /// [`MemoryLedger::merge`](crate::memory::MemoryLedger::merge):
+    /// traffic additive (equal to a serial run over the same batches),
+    /// peaks summed across concurrent workers.
+    pub memory: MemoryLedger,
+}
+
+struct Lifecycle {
+    batcher: Option<thread::JoinHandle<()>>,
+    report: Option<ServeReport>,
+}
+
+struct ServeInner {
+    queue: Arc<AdmissionQueue>,
+    pool: Arc<WorkerPool>,
+    counters: Arc<Counters>,
+    example_shape: Vec<usize>,
+    batch: usize,
+    lifecycle: Mutex<Lifecycle>,
+}
+
+impl Drop for ServeInner {
+    fn drop(&mut self) {
+        // Last handle gone without an explicit shutdown: tear the pipeline
+        // down quietly (no panic propagation from a Drop).
+        self.queue.close();
+        let mut lc = match self.lifecycle.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(batcher) = lc.batcher.take() {
+            let _ = batcher.join();
+            self.pool.close();
+            let _ = self.pool.join_collect();
+        }
+    }
+}
+
+/// Cloneable handle to a running serving pipeline.
+///
+/// All clones feed the same admission queue, batcher, and worker pool;
+/// [`ServeHandle::shutdown`] (any clone) stops admission, drains in-flight
+/// requests, joins the threads, and returns the final [`ServeReport`].
+/// Dropping the last clone tears the pipeline down without a report.
+#[derive(Clone)]
+pub struct ServeHandle {
+    inner: Arc<ServeInner>,
+}
+
+impl ServeHandle {
+    /// Start a serving pipeline over a custom [`BatchRunner`]:
+    /// spawn `config.workers` persistent workers plus the batcher thread.
+    ///
+    /// [`Session::serve`](crate::api::Session::serve) is the engine-backed
+    /// entry point; call this directly to serve a different model (or the
+    /// [`HostTailRunner`] demo on artifact-less builds).
+    pub fn spawn(runner: Arc<dyn BatchRunner>, config: ServeConfig) -> Result<ServeHandle> {
+        let batch = runner.batch_size();
+        if batch == 0 {
+            return Err(RuntimeError::Shape("serve: runner batch size must be >= 1".into()));
+        }
+        let example_shape = runner.example_shape();
+        if example_shape.iter().product::<usize>() == 0 {
+            return Err(RuntimeError::Shape(format!(
+                "serve: runner example shape {example_shape:?} has zero elements"
+            )));
+        }
+        let max_delay = config.max_delay;
+        let queue = Arc::new(AdmissionQueue::new(config.queue_cap));
+        let counters = Arc::new(Counters::default());
+        let pool = Arc::new(
+            WorkerPool::new(runner, config.workers, counters.clone())
+                .map_err(|e| RuntimeError::Io(format!("serve: worker spawn failed: {e}")))?,
+        );
+        let spawned = {
+            let queue = queue.clone();
+            let pool = pool.clone();
+            let counters = counters.clone();
+            let example_shape = example_shape.clone();
+            thread::Builder::new().name("anode-serve-batcher".into()).spawn(move || {
+                batcher_loop(&queue, &pool, &counters, batch, &example_shape, max_delay)
+            })
+        };
+        let batcher = match spawned {
+            Ok(handle) => handle,
+            Err(e) => {
+                // Without a batcher the workers would wait forever: tear
+                // the pool down before reporting the failure.
+                pool.close();
+                let _ = pool.join_collect();
+                return Err(RuntimeError::Io(format!("serve: batcher spawn failed: {e}")));
+            }
+        };
+        Ok(ServeHandle {
+            inner: Arc::new(ServeInner {
+                queue,
+                pool,
+                counters,
+                example_shape,
+                batch,
+                lifecycle: Mutex::new(Lifecycle { batcher: Some(batcher), report: None }),
+            }),
+        })
+    }
+
+    /// The AOT batch capacity the queue coalesces toward.
+    pub fn batch_size(&self) -> usize {
+        self.inner.batch
+    }
+
+    /// Shape of one submitted example.
+    pub fn example_shape(&self) -> &[usize] {
+        &self.inner.example_shape
+    }
+
+    fn check_example(&self, image: &Tensor) -> Result<()> {
+        if image.shape() != self.inner.example_shape.as_slice() {
+            return Err(RuntimeError::Shape(format!(
+                "serve: example shape {:?} does not match the model's per-request shape {:?} \
+                 (submit one example, not a batch; `serve::split_examples` splits pre-batched \
+                 tensors)",
+                image.shape(),
+                self.inner.example_shape
+            )));
+        }
+        Ok(())
+    }
+
+    /// Submit one example, blocking while the admission queue is at
+    /// `queue_cap` (backpressure). Errors after shutdown. The `max_delay`
+    /// clock (and `RequestStats::queue_wait`) starts at *admission*, not
+    /// at the start of a blocked `submit` call.
+    pub fn submit(&self, image: Tensor) -> Result<Pending> {
+        self.check_example(&image)?;
+        let (tx, rx) = mpsc::channel();
+        self.inner.queue.push(image, tx)?;
+        self.inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Pending { rx })
+    }
+
+    /// Non-blocking submit: `Ok(None)` when the queue is full (the
+    /// backpressure signal; the caller keeps `image`), `Err` after
+    /// shutdown. The example is cloned only when it is actually admitted —
+    /// a bounced call costs no tensor copy.
+    pub fn try_submit(&self, image: &Tensor) -> Result<Option<Pending>> {
+        self.check_example(image)?;
+        let mut rx_slot = None;
+        let admitted = self.inner.queue.try_push_with(|| {
+            let (tx, rx) = mpsc::channel();
+            rx_slot = Some(rx);
+            PendingRequest { image: image.clone(), enqueued_at: Instant::now(), tx }
+        })?;
+        if admitted {
+            self.inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
+            Ok(rx_slot.map(|rx| Pending { rx }))
+        } else {
+            self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
+            Ok(None)
+        }
+    }
+
+    /// Point-in-time counters (cheap; safe from any thread).
+    pub fn stats(&self) -> ServeStats {
+        let c = &self.inner.counters;
+        ServeStats {
+            submitted: c.submitted.load(Ordering::Relaxed),
+            rejected: c.rejected.load(Ordering::Relaxed),
+            completed: c.completed.load(Ordering::Relaxed),
+            batches: c.batches.load(Ordering::Relaxed),
+            full_flushes: c.full_flushes.load(Ordering::Relaxed),
+            deadline_flushes: c.deadline_flushes.load(Ordering::Relaxed),
+            drain_flushes: c.drain_flushes.load(Ordering::Relaxed),
+            queue_depth: self.inner.queue.depth(),
+            closed: self.inner.queue.is_closed(),
+        }
+    }
+
+    /// Clean shutdown: stop admission (subsequent submits error), flush
+    /// and execute everything already admitted (in-flight requests still
+    /// get replies), join the batcher and the workers, and return the
+    /// final report with the merged per-worker ledger. Subsequent calls
+    /// (from any clone) return the same report.
+    pub fn shutdown(&self) -> Result<ServeReport> {
+        self.inner.queue.close();
+        // Tolerate a poisoned lock: a batcher panic re-raised by another
+        // clone's shutdown poisons the mutex mid-unwind, and this call must
+        // still return a result rather than panic on PoisonError.
+        let mut lc = match self.inner.lifecycle.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some(batcher) = lc.batcher.take() {
+            let batcher_outcome = batcher.join();
+            // The batcher closes the pool on exit; repeat in case it died.
+            self.inner.pool.close();
+            let memory = self.inner.pool.join();
+            if let Err(payload) = batcher_outcome {
+                std::panic::resume_unwind(payload);
+            }
+            let c = &self.inner.counters;
+            lc.report = Some(ServeReport {
+                requests: c.completed.load(Ordering::Relaxed),
+                batches: c.batches.load(Ordering::Relaxed),
+                full_flushes: c.full_flushes.load(Ordering::Relaxed),
+                deadline_flushes: c.deadline_flushes.load(Ordering::Relaxed),
+                drain_flushes: c.drain_flushes.load(Ordering::Relaxed),
+                workers: self.inner.pool.workers(),
+                memory,
+            });
+        }
+        lc.report.clone().ok_or_else(|| {
+            RuntimeError::Io("serve: shutdown produced no report (prior teardown failed?)".into())
+        })
+    }
+}
+
+/// The batcher thread: drain deadline-coalesced request groups, assemble
+/// the padded batch tensor, hand it to the pool; close the pool on exit.
+fn batcher_loop(
+    queue: &AdmissionQueue,
+    pool: &WorkerPool,
+    counters: &Counters,
+    batch: usize,
+    example_shape: &[usize],
+    max_delay: Duration,
+) {
+    while let Some((requests, reason)) = queue.next_batch(batch, max_delay) {
+        debug_assert!(!requests.is_empty(), "queue flushed an empty batch");
+        counters.batches.fetch_add(1, Ordering::Relaxed);
+        let flush_counter = match reason {
+            FlushReason::Full => &counters.full_flushes,
+            FlushReason::Deadline => &counters.deadline_flushes,
+            FlushReason::Drain => &counters.drain_flushes,
+        };
+        flush_counter.fetch_add(1, Ordering::Relaxed);
+        let images = assemble(&requests, batch, example_shape);
+        pool.submit(BatchJob { images, requests });
+    }
+    pool.close();
+}
+
+/// Stack request examples into a zero-padded `(batch, ...)` tensor,
+/// submission order preserved as row order.
+fn assemble(requests: &[PendingRequest], batch: usize, example_shape: &[usize]) -> Tensor {
+    let ex_len: usize = example_shape.iter().product();
+    let mut shape = Vec::with_capacity(example_shape.len() + 1);
+    shape.push(batch);
+    shape.extend_from_slice(example_shape);
+    let mut images = Tensor::zeros(&shape);
+    let data = images.data_mut();
+    for (i, req) in requests.iter().enumerate() {
+        debug_assert_eq!(req.image.data().len(), ex_len, "example validated at submit");
+        data[i * ex_len..(i + 1) * ex_len].copy_from_slice(req.image.data());
+    }
+    images
+}
+
+/// Split a pre-batched `(B, ...)` tensor into its B per-example tensors —
+/// the adapter from the batch-shaped datasets to the single-request
+/// serving API.
+pub fn split_examples(batch: &Tensor) -> Result<Vec<Tensor>> {
+    if batch.rank() < 2 {
+        return Err(RuntimeError::Shape(format!(
+            "split_examples wants a rank >= 2 batch tensor, got {:?}",
+            batch.shape()
+        )));
+    }
+    let ex_shape: Vec<usize> = batch.shape()[1..].to_vec();
+    let ex_len: usize = ex_shape.iter().product::<usize>().max(1);
+    batch
+        .data()
+        .chunks(ex_len)
+        .map(|chunk| {
+            Tensor::from_vec(ex_shape.clone(), chunk.to_vec())
+                .map_err(|e| RuntimeError::Shape(e.to_string()))
+        })
+        .collect()
+}
+
+/// The engine-backed runner behind
+/// [`Session::serve`](crate::api::Session::serve): a snapshot of the
+/// session's parameters over the shared [`ExecutionCore`], executing
+/// exactly the per-batch computation of
+/// [`Session::predict_batches`](crate::api::Session::predict_batches)
+/// (inference forward + host-side head), so served values are
+/// bit-identical to the pre-batched path.
+pub struct SessionRunner {
+    core: Arc<ExecutionCore>,
+    params: Arc<Vec<Tensor>>,
+}
+
+impl SessionRunner {
+    /// Snapshot `params` (serving is read-only; later training steps on
+    /// the originating session do not affect a running pipeline).
+    pub fn new(core: Arc<ExecutionCore>, params: Vec<Tensor>) -> Self {
+        Self { core, params: Arc::new(params) }
+    }
+}
+
+impl BatchRunner for SessionRunner {
+    fn batch_size(&self) -> usize {
+        self.core.cfg.batch
+    }
+
+    fn example_shape(&self) -> Vec<usize> {
+        let cfg = &self.core.cfg;
+        vec![cfg.image, cfg.image, 3]
+    }
+
+    fn run(&self, images: &Tensor, ledger: &mut MemoryLedger) -> Result<Prediction> {
+        // The one shared per-batch inference unit (api::session::infer_batch)
+        // — the bit-identity contract with `predict_batches` is structural,
+        // not a convention kept in sync by hand.
+        infer_batch(&self.core, &self.params, images, ledger)
+    }
+}
+
+/// Host-only demo model: global-average-pool + dense head over activation
+/// shaped inputs — the post-XLA tail of every predict call, with fixed
+/// deterministic weights. Works on the vendored xla stub (no artifacts),
+/// so the serving pipeline, the `serve` CLI subcommand, and the
+/// `serve_throughput` bench are exercisable on every build.
+pub struct HostTailRunner {
+    batch: usize,
+    shape: Vec<usize>,
+    w: Tensor,
+    bias: Tensor,
+}
+
+impl HostTailRunner {
+    /// `batch` examples of shape `(h, h, c)` through a `k`-class head.
+    pub fn new(batch: usize, h: usize, c: usize, k: usize) -> Self {
+        let (batch, h, c, k) = (batch.max(1), h.max(1), c.max(1), k.max(1));
+        // Fixed, deterministic head weights: varied per entry so distinct
+        // activations map to distinct classes.
+        let wdata: Vec<f32> = (0..c * k).map(|i| ((i % 7) as f32 - 3.0) * 0.05).collect();
+        let bdata: Vec<f32> = (0..k).map(|j| j as f32 * 0.01).collect();
+        Self {
+            batch,
+            shape: vec![h, h, c],
+            w: Tensor::from_vec(vec![c, k], wdata).expect("head weight shape"),
+            bias: Tensor::from_vec(vec![k], bdata).expect("head bias shape"),
+        }
+    }
+}
+
+impl BatchRunner for HostTailRunner {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn example_shape(&self) -> Vec<usize> {
+        self.shape.clone()
+    }
+
+    fn run(&self, images: &Tensor, ledger: &mut MemoryLedger) -> Result<Prediction> {
+        let id = ledger.alloc(images.byte_size(), Category::Transient);
+        let t = Instant::now();
+        let out = head_logits(images, &self.w, &self.bias);
+        ledger.free(id);
+        let logits = out?;
+        let classes = argmax_rows(&logits);
+        let seconds = t.elapsed().as_secs_f64();
+        Ok(Prediction {
+            classes,
+            logits,
+            stats: PredictStats {
+                batch: self.batch,
+                seconds,
+                examples_per_sec: self.batch as f64 / seconds.max(1e-12),
+                peak_activation_bytes: images.byte_size(),
+            },
+        })
+    }
+}
+
+// The handle is the unit shared across client threads; a regression to
+// non-Sync internals must fail the build here, not at a call site.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ServeHandle>();
+    assert_send_sync::<ServeReply>();
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_examples_round_trips_rows() {
+        let batch = Tensor::from_vec(vec![3, 2], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let rows = split_examples(&batch).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[1].shape(), &[2]);
+        assert_eq!(rows[2].data(), &[4.0, 5.0]);
+        assert!(split_examples(&Tensor::zeros(&[4])).is_err());
+    }
+
+    #[test]
+    fn host_tail_serve_matches_direct_run() {
+        let runner = HostTailRunner::new(4, 2, 3, 5);
+        let examples: Vec<Tensor> = (0..4)
+            .map(|i| {
+                let len = 2 * 2 * 3;
+                let data = (0..len).map(|j| ((i * 31 + j) as f32) * 0.01).collect();
+                Tensor::from_vec(vec![2, 2, 3], data).unwrap()
+            })
+            .collect();
+        // Direct: stack the 4 examples and run the batch once.
+        let mut stacked = Tensor::zeros(&[4, 2, 2, 3]);
+        for (i, ex) in examples.iter().enumerate() {
+            stacked.data_mut()[i * 12..(i + 1) * 12].copy_from_slice(ex.data());
+        }
+        let mut ledger = MemoryLedger::new();
+        let direct = runner.run(&stacked, &mut ledger).unwrap();
+
+        let runner = Arc::new(HostTailRunner::new(4, 2, 3, 5));
+        let handle = ServeHandle::spawn(runner, ServeConfig::default().workers(2)).unwrap();
+        let pendings: Vec<Pending> =
+            examples.iter().map(|ex| handle.submit(ex.clone()).unwrap()).collect();
+        for (i, pending) in pendings.into_iter().enumerate() {
+            let reply = pending.wait().unwrap();
+            assert_eq!(reply.class, direct.classes[i], "request {i}");
+            assert_eq!(reply.logits.data(), &direct.logits.data()[i * 5..(i + 1) * 5]);
+            assert!((1..=4).contains(&reply.stats.batch_fill));
+            assert_eq!(reply.stats.batch_size, 4);
+        }
+        let report = handle.shutdown().unwrap();
+        assert_eq!(report.requests, 4);
+        assert!(report.batches >= 1);
+    }
+
+    #[test]
+    fn submit_rejects_wrong_shapes_and_post_shutdown() {
+        let runner = Arc::new(HostTailRunner::new(2, 2, 2, 3));
+        let handle = ServeHandle::spawn(runner, ServeConfig::default()).unwrap();
+        assert!(handle.submit(Tensor::zeros(&[3, 3, 3])).is_err());
+        assert!(handle.submit(Tensor::zeros(&[2, 2, 2, 2])).is_err());
+        handle.shutdown().unwrap();
+        assert!(handle.submit(Tensor::zeros(&[2, 2, 2])).is_err());
+        // A second shutdown returns the cached report.
+        assert_eq!(handle.shutdown().unwrap().requests, 0);
+    }
+}

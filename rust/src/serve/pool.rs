@@ -1,0 +1,272 @@
+//! Persistent worker pool for the serving path.
+//!
+//! Unlike [`crate::util::pool`], which spawns scoped threads per call,
+//! these workers are **long-lived**: spawned once when the
+//! [`crate::serve::ServeHandle`] starts, pinned to the pool until
+//! shutdown, each owning a private [`MemoryLedger`] for its whole
+//! lifetime. Assembled batches arrive on a bounded job queue (at most
+//! `workers` jobs waiting beyond those executing — the second stage of the
+//! serve path's end-to-end backpressure), and each worker demultiplexes
+//! its batch's replies back to the per-request channels in submission
+//! order.
+//!
+//! Shutdown protocol: [`WorkerPool::close`] marks the queue closed and
+//! wakes everyone; workers finish the jobs already queued (drain, never
+//! drop), then return their ledgers; [`WorkerPool::join`] collects and
+//! merges them, re-raising any worker panic *after* all remaining workers
+//! have been joined so a panicking batch cannot leak threads.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::memory::{Category, MemoryLedger};
+use crate::runtime::RuntimeError;
+use crate::tensor::Tensor;
+
+use super::queue::PendingRequest;
+use super::{BatchRunner, Counters, RequestStats, ServeReply};
+
+/// One assembled batch: the padded `(B, ...)` tensor plus the admitted
+/// requests occupying its leading rows, in submission order.
+pub(crate) struct BatchJob {
+    pub images: Tensor,
+    pub requests: Vec<PendingRequest>,
+}
+
+struct JobState {
+    queue: VecDeque<BatchJob>,
+    closed: bool,
+}
+
+struct PoolInner {
+    runner: Arc<dyn BatchRunner>,
+    counters: Arc<Counters>,
+    jobs: Mutex<JobState>,
+    job_ready: Condvar,
+    job_space: Condvar,
+    /// Bound on *waiting* jobs (executing jobs are not counted): one spare
+    /// batch per worker keeps workers fed without unbounded buffering.
+    cap: usize,
+}
+
+/// Long-lived worker threads executing [`BatchJob`]s via the shared
+/// [`BatchRunner`].
+pub(crate) struct WorkerPool {
+    inner: Arc<PoolInner>,
+    handles: Mutex<Vec<JoinHandle<MemoryLedger>>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` persistent threads.
+    pub fn new(
+        runner: Arc<dyn BatchRunner>,
+        workers: usize,
+        counters: Arc<Counters>,
+    ) -> std::io::Result<Self> {
+        let workers = workers.max(1);
+        let inner = Arc::new(PoolInner {
+            runner,
+            counters,
+            jobs: Mutex::new(JobState { queue: VecDeque::new(), closed: false }),
+            job_ready: Condvar::new(),
+            job_space: Condvar::new(),
+            cap: workers,
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let worker_inner = inner.clone();
+            let spawned = std::thread::Builder::new()
+                .name(format!("anode-serve-worker-{i}"))
+                .spawn(move || worker_loop(&worker_inner));
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Unwind the partially spawned pool before propagating:
+                    // without a close, the earlier workers would block on
+                    // job_ready forever — a thread leak per failed spawn.
+                    inner.jobs.lock().unwrap().closed = true;
+                    inner.job_ready.notify_all();
+                    inner.job_space.notify_all();
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Self { inner, handles: Mutex::new(handles), workers })
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Hand a job to the pool, blocking while `cap` jobs already wait
+    /// (backpressure toward the batcher and, through the admission queue,
+    /// toward submitters). If the pool is closed the job's requests are
+    /// failed cleanly instead of being dropped silently.
+    pub fn submit(&self, job: BatchJob) {
+        let mut st = self.inner.jobs.lock().unwrap();
+        loop {
+            if st.closed {
+                drop(st);
+                fail_requests(job.requests, "serve: worker pool is shut down");
+                return;
+            }
+            if st.queue.len() < self.inner.cap {
+                st.queue.push_back(job);
+                self.inner.job_ready.notify_one();
+                return;
+            }
+            st = self.inner.job_space.wait(st).unwrap();
+        }
+    }
+
+    /// Close the job queue: workers finish what is queued, then exit.
+    /// Idempotent.
+    pub fn close(&self) {
+        let mut st = self.inner.jobs.lock().unwrap();
+        st.closed = true;
+        self.inner.job_ready.notify_all();
+        self.inner.job_space.notify_all();
+    }
+
+    /// Join every worker and merge their ledgers. Panics from workers are
+    /// re-raised *after* all threads have been joined.
+    pub fn join(&self) -> MemoryLedger {
+        let (merged, panic) = self.join_collect();
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+        merged
+    }
+
+    /// Non-propagating join for teardown paths that must not panic (Drop):
+    /// returns the merged ledger plus the first panic payload, if any.
+    pub fn join_collect(&self) -> (MemoryLedger, Option<Box<dyn std::any::Any + Send>>) {
+        let handles: Vec<JoinHandle<MemoryLedger>> = {
+            let mut guard = match self.handles.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.drain(..).collect()
+        };
+        let mut merged = MemoryLedger::new();
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for h in handles {
+            match h.join() {
+                Ok(ledger) => merged.merge(&ledger),
+                Err(p) => {
+                    if panic.is_none() {
+                        panic = Some(p);
+                    }
+                }
+            }
+        }
+        (merged, panic)
+    }
+}
+
+fn worker_loop(inner: &PoolInner) -> MemoryLedger {
+    let mut ledger = MemoryLedger::new();
+    loop {
+        let job = {
+            let mut st = inner.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = st.queue.pop_front() {
+                    inner.job_space.notify_one();
+                    break job;
+                }
+                if st.closed {
+                    return ledger;
+                }
+                st = inner.job_ready.wait(st).unwrap();
+            }
+        };
+        execute(inner.runner.as_ref(), job, &mut ledger, &inner.counters);
+    }
+}
+
+/// Run one batch and demultiplex per-request replies (submission order)
+/// with queue-wait + execute latency attached. A *panicking* runner is
+/// contained: the panic becomes an error reply for every request in the
+/// batch and the worker stays alive — a dead worker with queued jobs would
+/// stall the whole admission pipeline.
+fn execute(runner: &dyn BatchRunner, job: BatchJob, ledger: &mut MemoryLedger, c: &Counters) {
+    let fill = job.requests.len();
+    let capacity = runner.batch_size();
+    let started = Instant::now();
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        runner.run(&job.images, ledger)
+    }));
+    let execute = started.elapsed();
+    let result = caught.unwrap_or_else(|payload| {
+        // The runner unwound mid-batch, skipping its transient free(s).
+        // Release the leaked live transients so this worker's ledger keeps
+        // accurate current/peak accounting for every later batch (between
+        // batches a healthy worker holds no live transient allocations).
+        ledger.free_category(Category::Transient);
+        Err(RuntimeError::Io(format!(
+            "serve: batch runner panicked: {}",
+            panic_message(payload.as_ref())
+        )))
+    });
+    match result {
+        Ok(pred) => {
+            let k = *pred.logits.shape().last().unwrap_or(&1);
+            let data = pred.logits.data();
+            if pred.classes.len() < fill || data.len() < fill * k.max(1) {
+                let msg = format!(
+                    "serve: runner returned {} classes / {} logit rows for a batch of {fill}",
+                    pred.classes.len(),
+                    data.len() / k.max(1)
+                );
+                c.completed.fetch_add(fill as u64, Ordering::Relaxed);
+                for req in job.requests {
+                    let _ = req.tx.send(Err(RuntimeError::Shape(msg.clone())));
+                }
+                return;
+            }
+            for (i, req) in job.requests.into_iter().enumerate() {
+                let stats = RequestStats {
+                    queue_wait: started.saturating_duration_since(req.enqueued_at),
+                    execute,
+                    batch_fill: fill,
+                    batch_size: capacity,
+                };
+                let reply = Tensor::from_vec(vec![k], data[i * k..(i + 1) * k].to_vec())
+                    .map(|logits| ServeReply { class: pred.classes[i], logits, stats })
+                    .map_err(|e| RuntimeError::Shape(e.to_string()));
+                c.completed.fetch_add(1, Ordering::Relaxed);
+                let _ = req.tx.send(reply);
+            }
+        }
+        Err(e) => {
+            c.completed.fetch_add(fill as u64, Ordering::Relaxed);
+            for req in job.requests {
+                let _ = req.tx.send(Err(e.clone()));
+            }
+        }
+    }
+}
+
+fn fail_requests(requests: Vec<PendingRequest>, msg: &str) {
+    for req in requests {
+        let _ = req.tx.send(Err(RuntimeError::Io(msg.into())));
+    }
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}

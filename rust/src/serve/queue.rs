@@ -1,0 +1,234 @@
+//! Bounded admission queue with deadline-batched draining.
+//!
+//! Single-producer-*many* (any number of [`crate::serve::ServeHandle`]
+//! clones submit), single-consumer (the batcher thread): requests enter
+//! FIFO through [`AdmissionQueue::push`]/[`AdmissionQueue::try_push_with`]
+//! and leave in batches through [`AdmissionQueue::next_batch`], which
+//! flushes on whichever comes first — the batch filling up, the oldest
+//! request reaching `max_delay`, or shutdown (which drains the remainder).
+//!
+//! The queue is bounded at `cap` pending requests: `push` blocks (and
+//! `try_push_with` declines without even constructing the request) while
+//! it is full, which is the backpressure mechanism — a slow pool
+//! propagates to slow admission instead of unbounded buffering.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::runtime::{Result, RuntimeError};
+use crate::tensor::Tensor;
+
+use super::ServeReply;
+
+/// One admitted request waiting for batch assembly: the example tensor,
+/// its admission timestamp (the deadline clock and the queue-wait origin),
+/// and the channel its reply is demultiplexed onto.
+pub(crate) struct PendingRequest {
+    pub image: Tensor,
+    pub enqueued_at: Instant,
+    pub tx: mpsc::Sender<Result<ServeReply>>,
+}
+
+/// Why a batch left the queue (per-flush accounting on the serve handle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum FlushReason {
+    /// The batch filled to the AOT-compiled size.
+    Full,
+    /// The oldest request reached `max_delay`; a partial batch flushed.
+    Deadline,
+    /// Shutdown drained the remaining requests.
+    Drain,
+}
+
+struct QueueState {
+    pending: VecDeque<PendingRequest>,
+    closed: bool,
+}
+
+/// The bounded request queue between submitters and the batcher thread.
+pub(crate) struct AdmissionQueue {
+    cap: usize,
+    state: Mutex<QueueState>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            state: Mutex::new(QueueState { pending: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Admit a request, blocking while the queue is at capacity. Errors if
+    /// the queue has been closed (shutdown), including while blocked.
+    ///
+    /// The request (and its `enqueued_at` deadline anchor) is constructed
+    /// only once capacity is granted: time a caller spends *blocked* here
+    /// must not burn the `max_delay` window, or a saturated pipeline with
+    /// `cap < batch` would degenerate into immediate near-empty deadline
+    /// flushes.
+    pub fn push(&self, image: Tensor, tx: mpsc::Sender<Result<ServeReply>>) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(RuntimeError::Io("serve: handle is shut down".into()));
+            }
+            if st.pending.len() < self.cap {
+                st.pending.push_back(PendingRequest { image, enqueued_at: Instant::now(), tx });
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking admission: `Ok(true)` on success, `Ok(false)` when the
+    /// queue is full (backpressure), `Err` when closed. The request is
+    /// built by `make` only once capacity is confirmed, so a bounced
+    /// submission never pays for constructing (cloning) it.
+    pub fn try_push_with(&self, make: impl FnOnce() -> PendingRequest) -> Result<bool> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(RuntimeError::Io("serve: handle is shut down".into()));
+        }
+        if st.pending.len() >= self.cap {
+            return Ok(false);
+        }
+        st.pending.push_back(make());
+        self.not_empty.notify_one();
+        Ok(true)
+    }
+
+    /// Batcher side: block until a batch is ready and drain it. Returns up
+    /// to `batch` requests in submission order, with the reason the flush
+    /// fired, or `None` once the queue is closed *and* empty (terminate).
+    pub fn next_batch(
+        &self,
+        batch: usize,
+        max_delay: Duration,
+    ) -> Option<(Vec<PendingRequest>, FlushReason)> {
+        let batch = batch.max(1);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            while st.pending.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.not_empty.wait(st).unwrap();
+            }
+            // The deadline is anchored on the *oldest* request: no admitted
+            // request waits in the queue longer than `max_delay`.
+            let deadline = st.pending.front().expect("non-empty queue").enqueued_at + max_delay;
+            loop {
+                if st.pending.len() >= batch {
+                    return Some((self.drain_locked(&mut st, batch), FlushReason::Full));
+                }
+                if st.closed {
+                    return Some((self.drain_locked(&mut st, batch), FlushReason::Drain));
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Some((self.drain_locked(&mut st, batch), FlushReason::Deadline));
+                }
+                let (guard, _) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+                if st.pending.is_empty() {
+                    // Defensive (single consumer): re-anchor the deadline.
+                    break;
+                }
+            }
+        }
+    }
+
+    fn drain_locked(&self, st: &mut QueueState, batch: usize) -> Vec<PendingRequest> {
+        let n = batch.min(st.pending.len());
+        let out: Vec<PendingRequest> = st.pending.drain(..n).collect();
+        // Space freed: wake every blocked submitter (more than one slot may
+        // have opened).
+        self.not_full.notify_all();
+        out
+    }
+
+    /// Close the queue: subsequent `push`/`try_push_with` error, blocked pushers
+    /// wake with an error, and the batcher drains what remains. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Requests currently waiting for batch assembly.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+
+    /// Has [`AdmissionQueue::close`] been called?
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(v: f32) -> (PendingRequest, mpsc::Receiver<Result<ServeReply>>) {
+        let (tx, rx) = mpsc::channel();
+        let image = Tensor::full(&[2], v);
+        (PendingRequest { image, enqueued_at: Instant::now(), tx }, rx)
+    }
+
+    fn push(q: &AdmissionQueue, v: f32) -> Result<()> {
+        let (tx, _rx) = mpsc::channel();
+        q.push(Tensor::full(&[2], v), tx)
+    }
+
+    #[test]
+    fn full_batch_drains_in_fifo_order() {
+        let q = AdmissionQueue::new(8);
+        for v in 0..4 {
+            push(&q, v as f32).unwrap();
+        }
+        let (batch, reason) = q.next_batch(4, Duration::from_secs(10)).unwrap();
+        assert_eq!(reason, FlushReason::Full);
+        let values: Vec<f32> = batch.iter().map(|r| r.image.data()[0]).collect();
+        assert_eq!(values, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let q = AdmissionQueue::new(8);
+        push(&q, 7.0).unwrap();
+        let t0 = Instant::now();
+        let (batch, reason) = q.next_batch(4, Duration::from_millis(30)).unwrap();
+        assert_eq!(reason, FlushReason::Deadline);
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(20), "flushed before the deadline");
+    }
+
+    #[test]
+    fn try_push_reports_full_and_close_drains() {
+        let q = AdmissionQueue::new(2);
+        let (a, _arx) = req(1.0);
+        let (b, _brx) = req(2.0);
+        assert!(q.try_push_with(|| a).unwrap());
+        assert!(q.try_push_with(|| b).unwrap());
+        // Full: the constructor must not even run.
+        let accepted = q.try_push_with(|| unreachable!("constructed despite a full queue"));
+        assert!(!accepted.unwrap());
+        q.close();
+        assert!(push(&q, 4.0).is_err());
+        let (batch, reason) = q.next_batch(4, Duration::from_secs(10)).unwrap();
+        assert_eq!(reason, FlushReason::Drain);
+        assert_eq!(batch.len(), 2);
+        assert!(q.next_batch(4, Duration::from_secs(10)).is_none());
+    }
+}

@@ -1,6 +1,7 @@
 //! Micro-benchmark timing harness (criterion replacement for the offline
-//! image). Benches are built with `harness = false` and use [`BenchTimer`]
-//! to run warmups + timed iterations and report mean/median/p95.
+//! image). Benches are built with `harness = false` and use [`bench`]
+//! to run warmups + timed iterations and report mean/median/p95 as
+//! [`BenchStats`].
 
 use std::time::{Duration, Instant};
 
@@ -61,6 +62,28 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Percentile over an already-sorted sample (`p` in 0..=100) using the
+/// nearest-*index* method — `sorted[round(p/100 · (n−1))]`, numpy's
+/// `interpolation="nearest"` — which differs from classic nearest-rank by
+/// at most one sample. Serving benches use this for p50/p95/p99 latency.
+pub fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Quick-mode switch for CI bench smoke runs: `ANODE_BENCH_QUICK=1` (or
+/// `true`) shrinks iteration/request counts so the benches finish in
+/// seconds while still emitting their `BENCH_*.json` artifacts.
+pub fn quick_mode() -> bool {
+    match std::env::var("ANODE_BENCH_QUICK") {
+        Ok(v) => v == "1" || v.eq_ignore_ascii_case("true"),
+        Err(_) => false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +103,17 @@ mod tests {
         let (v, d) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(d.as_nanos() < 1_000_000_000);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let sorted: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        assert_eq!(percentile(&sorted, 0.0), Duration::from_millis(1));
+        assert_eq!(percentile(&sorted, 50.0), Duration::from_millis(51));
+        assert_eq!(percentile(&sorted, 99.0), Duration::from_millis(99));
+        assert_eq!(percentile(&sorted, 100.0), Duration::from_millis(100));
+        assert_eq!(percentile(&[], 50.0), Duration::ZERO);
+        let one = [Duration::from_secs(2)];
+        assert_eq!(percentile(&one, 99.0), Duration::from_secs(2));
     }
 }

@@ -72,11 +72,26 @@ where
             }));
         }
         // Chunks are contiguous and joined in spawn order, so extending
-        // reconstitutes the input order exactly.
+        // reconstitutes the input order exactly. A panicking worker is
+        // re-raised on the caller's thread, but only after every other
+        // worker has been joined — callers see the original panic payload
+        // and never a deadlock or a process abort.
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
         for h in handles {
-            let (out, state) = h.join().expect("pool worker panicked");
-            results.extend(out);
-            states.push(state);
+            match h.join() {
+                Ok((out, state)) => {
+                    results.extend(out);
+                    states.push(state);
+                }
+                Err(payload) => {
+                    if panic.is_none() {
+                        panic = Some(payload);
+                    }
+                }
+            }
+        }
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
         }
     });
     (results, states)
@@ -112,6 +127,29 @@ mod tests {
             assert!(states.len() <= workers.max(1));
             assert_eq!(states.iter().sum::<usize>(), items.len(), "workers={workers}");
         }
+    }
+
+    #[test]
+    fn worker_panic_propagates_without_deadlock_or_abort() {
+        let items: Vec<usize> = (0..32).collect();
+        // catch_unwind (not #[should_panic]): proves the panic surfaces as
+        // an ordinary unwind on the caller's thread — a worker panic that
+        // aborted the process or deadlocked the join loop would fail here.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            parallel_map(&items, 4, |_, &x| {
+                if x == 13 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        }));
+        let payload = outcome.expect_err("worker panic must propagate");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("boom at 13"), "original payload lost: {msg:?}");
     }
 
     #[test]
