@@ -33,6 +33,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         seed: args.get_parse_or("seed", 0),
         verbose: true,
         workers: args.get_parse_or("workers", 1),
+        grad_accum: args.get_parse_or("grad-accum", 1),
+        grad_workers: args.get_parse_or("grad-workers", 1),
     };
     let csv = args.get("csv").map(|s| s.to_string());
     args.warn_unknown();

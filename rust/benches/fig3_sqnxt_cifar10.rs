@@ -32,6 +32,7 @@ fn main() {
                 seed: 0,
                 verbose: false,
                 workers: 1,
+                ..TrainFigOptions::default()
             };
             match train_figure(&reg, &o) {
                 Ok(run) => {
@@ -56,6 +57,7 @@ fn main() {
         seed: 0,
         verbose: false,
         workers: 1,
+        ..TrainFigOptions::default()
     };
     if let Ok(run) = train_figure(&reg, &o) {
         summary.push((run.series.clone(), run.curve.final_acc(), run.diverged, run.sec_per_step));

@@ -32,6 +32,7 @@ fn main() {
             seed: 0,
             verbose: false,
             workers: 1,
+            ..TrainFigOptions::default()
         };
         match train_figure(&reg, &o) {
             Ok(run) => {

@@ -8,11 +8,18 @@
 //! path, with a p50/p95/p99 per-request latency report emitted to
 //! `BENCH_serve.json`.
 //!
+//! The `train_throughput` scenario times the data-parallel training step
+//! (`Session::step_accumulate`, serial vs multi-worker, with a
+//! bit-identity spot check) and the pool-reuse savings of the migrated
+//! predict path (reused persistent pool vs per-call spawn), emitted to
+//! `BENCH_train.json`.
+//!
 //! `cargo bench --bench step_throughput` (method timings need
-//! `make artifacts`; `predict_throughput` and `serve_throughput` also run
-//! on the offline stub, where they time the host-side serving tail).
-//! `ANODE_BENCH_QUICK=1` shrinks iteration/request counts for the CI
-//! bench-smoke job while still writing both `BENCH_*.json` artifacts.
+//! `make artifacts`; `predict_throughput`, `serve_throughput` and
+//! `train_throughput` also run on the offline stub, where they time the
+//! host-side serving tail). `ANODE_BENCH_QUICK=1` shrinks
+//! iteration/request counts for the CI bench-smoke job while still
+//! writing all three `BENCH_*.json` artifacts.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -23,7 +30,7 @@ use anode::memory::MemoryLedger;
 use anode::serve::{split_examples, BatchRunner, HostTailRunner, ServeConfig, ServeHandle};
 use anode::tensor::Tensor;
 use anode::util::bench::{bench, black_box, percentile, quick_mode};
-use anode::util::pool::{parallel_map, parallel_map_with};
+use anode::util::pool::{parallel_map, parallel_map_with, PersistentPool};
 
 fn main() {
     let engine = Engine::builder().artifacts("artifacts").build();
@@ -33,6 +40,7 @@ fn main() {
     }
     predict_throughput(engine.as_ref().ok());
     serve_throughput(engine.as_ref().ok());
+    train_throughput(engine.as_ref().ok());
 }
 
 fn method_timings(engine: &Engine) {
@@ -329,5 +337,145 @@ fn run_serve_bench(
     match std::fs::write("BENCH_serve.json", &json) {
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}
+
+/// Data-parallel training-step throughput plus pool-reuse accounting,
+/// emitted to `BENCH_train.json`.
+///
+/// Times one optimizer step over `accum` micro-batches serial vs
+/// 4-worker (`Session::step_accumulate_with_workers`, with a bit-identity
+/// spot check), and measures the spawn-overhead savings of the migrated
+/// predict path: the same fan-out through the reused persistent pool vs a
+/// per-call transient pool (what `predict_batches` paid before PR 4 —
+/// compare the reused number against `BENCH_predict.json`, which now
+/// rides the cached pool). On the offline stub the gradient stand-in is
+/// the host-side serving tail run twice per micro-batch (forward +
+/// same-cost pseudo-VJP).
+fn train_throughput(engine: Option<&Engine>) {
+    println!("\n=== train_throughput — data-parallel gradient accumulation ===\n");
+    const WORKERS: usize = 4;
+    let quick = quick_mode();
+    let accum = if quick { 4 } else { 8 };
+    let iters = if quick { 1 } else { 3 };
+
+    let (mode, serial, par, identical, reused, per_call) = match engine {
+        Some(engine) => {
+            let cfg = engine.config().clone();
+            let ds = SyntheticCifar::new(cfg.num_classes, 9, 0.1);
+            let micro: Vec<(Tensor, Tensor)> = (0..accum)
+                .map(|m| {
+                    let (imgs, labels) = ds.generate(cfg.batch, m as u64);
+                    let lf: Vec<f32> = labels.iter().map(|&l| l as f32).collect();
+                    (imgs, Tensor::from_vec(vec![cfg.batch], lf).unwrap())
+                })
+                .collect();
+
+            let mut s1 = engine.session(SessionConfig::with_method("anode")).unwrap();
+            let serial = bench("step_accumulate[workers=1]", 1, iters, || {
+                black_box(s1.step_accumulate_with_workers(&micro, 1).unwrap());
+            });
+            let mut sw = engine.session(SessionConfig::with_method("anode")).unwrap();
+            let par = bench(&format!("step_accumulate[workers={WORKERS}]"), 1, iters, || {
+                black_box(sw.step_accumulate_with_workers(&micro, WORKERS).unwrap());
+            });
+
+            // Bit-identity spot check on fresh sessions (the full grid
+            // lives in rust/tests/concurrency.rs).
+            let run = |workers: usize| {
+                let mut s = engine.session(SessionConfig::with_method("anode")).unwrap();
+                for _ in 0..2 {
+                    s.step_accumulate_with_workers(&micro, workers).unwrap();
+                }
+                s.params().to_vec()
+            };
+            let identical = run(1) == run(WORKERS);
+
+            // Pool reuse vs per-call spawn on the migrated predict path:
+            // the session's cached persistent pool vs a transient pool
+            // stood up per call over the same batches.
+            let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+            let batches: Vec<Tensor> = micro.iter().map(|(imgs, _)| imgs.clone()).collect();
+            let reused = bench("predict_batches[reused pool]", 1, iters, || {
+                black_box(session.predict_batches_with_workers(&batches, WORKERS).unwrap());
+            });
+            let per_call = bench("predict_batches[per-call spawn]", 1, iters, || {
+                black_box(parallel_map(&batches, WORKERS, |_, b| session.predict(b).unwrap()));
+            });
+            ("session", serial, par, identical, reused, per_call)
+        }
+        None => {
+            // Host-side gradient stand-in: the serving tail forward plus a
+            // same-cost pseudo-VJP pass per micro-batch, through the same
+            // pooled fan-out the real step uses.
+            let (b, h, c, k) = (32usize, 16usize, 64usize, 10usize);
+            let zs: Vec<Tensor> = (0..accum)
+                .map(|i| Tensor::full(&[b, h, h, c], 0.01 * (i + 1) as f32))
+                .collect();
+            let w = Tensor::full(&[c, k], 0.05);
+            let bias = Tensor::full(&[k], 0.1);
+            let grad_sim = |z: &Tensor| {
+                let fwd = head_logits(z, &w, &bias).unwrap();
+                let bwd = head_logits(z, &w, &bias).unwrap();
+                (fwd, bwd)
+            };
+            let pool = PersistentPool::new(WORKERS, "bench-train", || ()).unwrap();
+            let serial = bench("train_tail[workers=1]", 1, iters, || {
+                for z in &zs {
+                    black_box(grad_sim(z));
+                }
+            });
+            let par = bench(&format!("train_tail[workers={WORKERS}]"), 1, iters, || {
+                black_box(pool.map(WORKERS, &zs, |_, z| grad_sim(z)));
+            });
+            let mut direct = Vec::with_capacity(zs.len());
+            for z in &zs {
+                direct.push(grad_sim(z));
+            }
+            let pooled = pool.map(WORKERS, &zs, |_, z| grad_sim(z));
+            let identical = direct == pooled;
+            let reused = bench("train_tail[reused pool]", 1, iters, || {
+                black_box(pool.map(WORKERS, &zs, |_, z| grad_sim(z)));
+            });
+            let per_call = bench("train_tail[per-call spawn]", 1, iters, || {
+                black_box(parallel_map(&zs, WORKERS, |_, z| grad_sim(z)));
+            });
+            ("stub-tail", serial, par, identical, reused, per_call)
+        }
+    };
+
+    println!("{}", serial.report());
+    println!("{}", par.report());
+    let s_secs = serial.median.as_secs_f64();
+    let p_secs = par.median.as_secs_f64();
+    let speedup = s_secs / p_secs.max(1e-12);
+    println!("step speedup x{speedup:.2}  bit-identical to serial: {identical}");
+    println!("{}", reused.report());
+    println!("{}", per_call.report());
+    let reused_secs = reused.median.as_secs_f64();
+    let per_call_secs = per_call.median.as_secs_f64();
+    let savings = per_call_secs - reused_secs;
+    println!(
+        "pool reuse saves {:.3} ms/call over per-call spawn ({:.1}% of the spawned call)",
+        savings * 1e3,
+        100.0 * savings / per_call_secs.max(1e-12)
+    );
+    if !identical {
+        eprintln!("WARNING: parallel step diverged bitwise from serial");
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"train_throughput\",\n  \"mode\": \"{mode}\",\n  \
+         \"micro_batches\": {accum},\n  \"workers\": {WORKERS},\n  \
+         \"serial_step_median_secs\": {s_secs:.6},\n  \
+         \"workers{WORKERS}_step_median_secs\": {p_secs:.6},\n  \
+         \"step_speedup\": {speedup:.3},\n  \"bit_identical\": {identical},\n  \
+         \"predict_reused_pool_median_secs\": {reused_secs:.6},\n  \
+         \"predict_per_call_spawn_median_secs\": {per_call_secs:.6},\n  \
+         \"spawn_overhead_savings_secs\": {savings:.6}\n}}\n"
+    );
+    match std::fs::write("BENCH_train.json", &json) {
+        Ok(()) => println!("wrote BENCH_train.json"),
+        Err(e) => eprintln!("could not write BENCH_train.json: {e}"),
     }
 }

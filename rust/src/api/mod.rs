@@ -24,13 +24,21 @@
 //!   pre-batched tensors with per-call latency/memory stats, via an
 //!   inference-only forward that pays zero gradient bookkeeping.
 //!   [`Session::predict_batches`] and [`Session::evaluate`] fan
-//!   micro-batches across a small worker pool (`SessionConfig::workers`),
-//!   each worker metering its own [`crate::memory::MemoryLedger`], merged
-//!   afterward into aggregate peak/traffic stats. For *single-request*
-//!   traffic, [`Session::serve`] starts the [`crate::serve`] front end: a
+//!   micro-batches across a persistent worker pool cached on the session
+//!   (`SessionConfig::workers`; no per-call spawn), each worker metering
+//!   its own [`crate::memory::MemoryLedger`], merged afterward into
+//!   aggregate peak/traffic stats. For *single-request* traffic,
+//!   [`Session::serve`] starts the [`crate::serve`] front end: a
 //!   deadline-batched admission queue coalescing requests into the AOT
 //!   batch size on a persistent worker pool, with per-request latency
-//!   stats and bit-identical values to the pre-batched path.
+//!   stats, bit-identical values to the pre-batched path, and
+//!   [`Session::push_params`] hot-swapping trained weights into the
+//!   running pipeline between batches.
+//! * **Data-parallel training** — [`Session::step_accumulate`] (and
+//!   `fit` with `SessionConfig::grad_accum`/`grad_workers`) accumulates
+//!   gradients over micro-batches across the same pool, reducing in
+//!   fixed micro-batch order so parameters and losses stay bit-identical
+//!   to the serial run for every worker count (rust/DESIGN.md §6c).
 //!
 //! ## Quickstart
 //!

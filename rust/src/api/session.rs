@@ -9,11 +9,16 @@
 //! module handles, strategy — behind an `Arc`, safe to fan across worker
 //! threads) and the per-session mutable state it owns (parameters, SGD
 //! momentum, the memory ledger). `evaluate` and `predict_batches` exploit
-//! the split: micro-batches fan out over a small thread pool
-//! ([`SessionConfig::workers`]), each worker metering its own
-//! [`MemoryLedger`], merged afterward into aggregate stats.
+//! the split: micro-batches fan out over a lazily-created **persistent**
+//! worker pool cached on the session ([`SessionConfig::workers`]; no
+//! per-call thread-spawn tax), each chunk metering its own
+//! [`MemoryLedger`], merged afterward into aggregate stats. Training fans
+//! out the same way: [`Session::step_accumulate`] runs forward + strategy
+//! backward per micro-batch across [`SessionConfig::grad_workers`]
+//! workers and reduces gradients in fixed micro-batch order, so the
+//! update is bit-identical to serial for every worker count.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::ExecutionCore;
@@ -24,7 +29,7 @@ use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{Result, RuntimeError};
 use crate::serve::{ServeConfig, ServeHandle, SessionRunner};
 use crate::tensor::Tensor;
-use crate::util::pool;
+use crate::util::pool::{run_inline, PersistentPool};
 
 use super::Engine;
 
@@ -46,6 +51,15 @@ pub struct SessionConfig {
     /// default) runs inline on the caller's thread; results are
     /// bit-identical for every worker count.
     pub workers: usize,
+    /// Micro-batches accumulated per optimizer step by [`Session::fit`]
+    /// (each micro-batch is one AOT-compiled batch; the gradient is their
+    /// fixed-order mean). `1` (the default) is the classic single-batch
+    /// step.
+    pub grad_accum: usize,
+    /// Worker threads for the data-parallel gradient path
+    /// ([`Session::step_accumulate`]). Parameters and losses are
+    /// bit-identical for every worker count — only wall-clock changes.
+    pub grad_workers: usize,
 }
 
 impl Default for SessionConfig {
@@ -57,6 +71,8 @@ impl Default for SessionConfig {
             weight_decay: 5e-4,
             clip_norm: Some(5.0),
             workers: 1,
+            grad_accum: 1,
+            grad_workers: 1,
         }
     }
 }
@@ -197,6 +213,11 @@ pub struct Session<'e> {
     opt: Sgd,
     ledger: MemoryLedger,
     step_idx: usize,
+    /// Lazily-created persistent worker pool cached across calls — the
+    /// execution substrate for `evaluate`, `predict_batches` and
+    /// `step_accumulate` fan-outs (grown on demand, joined when the
+    /// session drops; `workers <= 1` never creates it).
+    exec_pool: Mutex<Option<Arc<PersistentPool>>>,
 }
 
 impl<'e> Session<'e> {
@@ -218,7 +239,16 @@ impl<'e> Session<'e> {
         let pbytes: usize = params.iter().map(|p| p.byte_size()).sum();
         ledger.alloc(pbytes, Category::Param);
         ledger.alloc(opt.state_bytes(), Category::OptState);
-        Ok(Self { engine, core, config, params, opt, ledger, step_idx: 0 })
+        Ok(Self {
+            engine,
+            core,
+            config,
+            params,
+            opt,
+            ledger,
+            step_idx: 0,
+            exec_pool: Mutex::new(None),
+        })
     }
 
     /// The engine this session runs on.
@@ -319,8 +349,7 @@ impl<'e> Session<'e> {
         let finite = loss.is_finite() && grads.iter().all(|g| g.all_finite());
         let mut grad_norm = 0.0;
         if finite {
-            grad_norm = Sgd::clip_grads(&mut grads, self.config.clip_norm.unwrap_or(f32::INFINITY));
-            self.opt.step(&mut self.params, &grads);
+            grad_norm = self.opt.clipped_step(&mut self.params, &mut grads, self.config.clip_norm);
         }
         self.step_idx += 1;
         Ok(StepStats {
@@ -334,9 +363,82 @@ impl<'e> Session<'e> {
         })
     }
 
+    /// One optimizer step over several micro-batches with **data-parallel
+    /// gradient accumulation**: each of [`SessionConfig::grad_workers`]
+    /// pool workers runs forward + the session's gradient strategy
+    /// backward over a contiguous chunk of `micro_batches` (private
+    /// [`ForwardState`](crate::coordinator::ForwardState) and
+    /// [`MemoryLedger`] per chunk), the per-micro-batch gradients reduce
+    /// in fixed micro-batch order on this thread
+    /// ([`ExecutionCore::reduce_grads`]), and a single clipped SGD update
+    /// applies the mean gradient.
+    ///
+    /// Parameters, loss and gradients are **bit-identical to the serial
+    /// run for every worker count** — the reduction order never depends on
+    /// the chunking — so ANODE's unconditionally-accurate-gradient
+    /// property survives parallelism (asserted across all registered
+    /// strategies in `rust/tests/concurrency.rs`). Every micro-batch must
+    /// have the AOT-compiled batch shape.
+    pub fn step_accumulate(&mut self, micro_batches: &[(Tensor, Tensor)]) -> Result<StepStats> {
+        self.step_accumulate_with_workers(micro_batches, self.config.grad_workers)
+    }
+
+    /// [`Session::step_accumulate`] with an explicit worker count (benches
+    /// and tests sweep this without rebuilding the session).
+    pub fn step_accumulate_with_workers(
+        &mut self,
+        micro_batches: &[(Tensor, Tensor)],
+        workers: usize,
+    ) -> Result<StepStats> {
+        if micro_batches.is_empty() {
+            return Err(RuntimeError::Shape(
+                "step_accumulate needs at least one micro-batch".into(),
+            ));
+        }
+        for (images, labels) in micro_batches {
+            self.check_batch(images)?;
+            self.check_labels(labels)?;
+        }
+        let t0 = Instant::now();
+        let lr = self.config.lr.at(self.step_idx);
+        self.opt.lr = lr;
+        let core = &self.core;
+        let params = &self.params;
+        let (per_micro, ledgers) = pooled_map_with(
+            &self.exec_pool,
+            workers,
+            micro_batches,
+            MemoryLedger::new,
+            |ledger, _i, xy: &(Tensor, Tensor)| core.loss_and_grad(&xy.0, &xy.1, params, ledger),
+        );
+        // Fold the phase into the session ledger before error propagation:
+        // traffic stays additive (equal to the serial run) even when one
+        // micro-batch failed.
+        self.ledger.absorb_parallel(&ledgers);
+        let per_micro = per_micro.into_iter().collect::<Result<Vec<_>>>()?;
+        let (loss, correct, mut grads) = ExecutionCore::reduce_grads(per_micro)?;
+        let finite = loss.is_finite() && grads.iter().all(|g| g.all_finite());
+        let mut grad_norm = 0.0;
+        if finite {
+            grad_norm = self.opt.clipped_step(&mut self.params, &mut grads, self.config.clip_norm);
+        }
+        self.step_idx += 1;
+        let examples = micro_batches.len() * self.core.cfg.batch;
+        Ok(StepStats {
+            step: self.step_idx,
+            loss,
+            batch_accuracy: correct / examples.max(1) as f32,
+            grad_norm,
+            lr,
+            seconds: t0.elapsed().as_secs_f64(),
+            finite,
+        })
+    }
+
     /// Evaluate over pre-batched data via the inference path (no gradient
     /// bookkeeping, no ledger traffic). Fans batches across
-    /// [`SessionConfig::workers`] threads; the reduction runs in batch
+    /// [`SessionConfig::workers`] threads of the session's cached
+    /// persistent pool (no per-call spawn); the reduction runs in batch
     /// order on the calling thread, so the result is bit-identical to the
     /// serial sweep for every worker count.
     pub fn evaluate(&self, batches: &[(Tensor, Tensor)]) -> Result<EvalStats> {
@@ -353,11 +455,14 @@ impl<'e> Session<'e> {
         let t0 = Instant::now();
         let core = &self.core;
         let params = &self.params;
-        let per_batch = pool::parallel_map(batches, workers, |_i, xy: &(Tensor, Tensor)| {
-            core.eval_batch(&xy.0, &xy.1, params)
-        })
-        .into_iter()
-        .collect::<Result<Vec<_>>>()?;
+        let (per_batch, _) = pooled_map_with(
+            &self.exec_pool,
+            workers,
+            batches,
+            || (),
+            |_state, _i, xy: &(Tensor, Tensor)| core.eval_batch(&xy.0, &xy.1, params),
+        );
+        let per_batch = per_batch.into_iter().collect::<Result<Vec<_>>>()?;
         let (loss, accuracy) = ExecutionCore::reduce_eval(&per_batch, core.cfg.batch);
         Ok(EvalStats { loss, accuracy, batches: batches.len(), seconds: t0.elapsed().as_secs_f64() })
     }
@@ -389,11 +494,12 @@ impl<'e> Session<'e> {
     }
 
     /// Many-batch inference: fan pre-batched image tensors across
-    /// [`SessionConfig::workers`] threads. Each worker meters its rolling
-    /// activation on a **private** [`MemoryLedger`]; the report carries the
-    /// merged aggregate (traffic additive — equal to the serial run —
-    /// peaks summed across concurrent workers), so the paper's O-bounds
-    /// stay measurable per worker.
+    /// [`SessionConfig::workers`] threads of the session's cached
+    /// persistent pool. Each worker meters its rolling activation on a
+    /// **private** [`MemoryLedger`]; the report carries the merged
+    /// aggregate (traffic additive — equal to the serial run — peaks
+    /// summed across concurrent workers), so the paper's O-bounds stay
+    /// measurable per worker.
     pub fn predict_batches(&self, batches: &[Tensor]) -> Result<BatchPredictReport> {
         self.predict_batches_with_workers(batches, self.config.workers)
     }
@@ -411,9 +517,10 @@ impl<'e> Session<'e> {
         let core = &self.core;
         let params = &self.params;
         let cfg = &core.cfg;
-        let (results, ledgers) = pool::parallel_map_with(
-            batches,
+        let (results, ledgers) = pooled_map_with(
+            &self.exec_pool,
             workers,
+            batches,
             MemoryLedger::new,
             |ledger: &mut MemoryLedger, _i, images: &Tensor| {
                 infer_batch(core, params, images, ledger)
@@ -443,12 +550,23 @@ impl<'e> Session<'e> {
     /// The returned [`ServeHandle`] is cloneable and independent of this
     /// session's lifetime — it snapshots the current parameters over the
     /// shared execution core, so later `step`s do not affect a running
-    /// pipeline (serve again after training to pick up new weights).
-    /// Served values are bit-identical to [`Session::predict_batches`]
-    /// over the same examples. See `anode::serve` and rust/DESIGN.md §6b.
+    /// pipeline. Roll new weights out with [`Session::push_params`] (an
+    /// atomic between-batches hot-swap; no drain). Served values are
+    /// bit-identical to [`Session::predict_batches`] over the same
+    /// examples. See `anode::serve` and rust/DESIGN.md §6b.
     pub fn serve(&self, config: ServeConfig) -> Result<ServeHandle> {
         let runner = SessionRunner::new(self.core.clone(), self.params.clone());
         ServeHandle::spawn(Arc::new(runner), config)
+    }
+
+    /// Roll this session's *current* parameters out to a running serve
+    /// pipeline: an atomic hot-swap of the weight snapshot, applied
+    /// between batches — a checkpoint trained by [`Session::fit`] reaches
+    /// serving without draining the queue. The handle's runner validates
+    /// tensor count/shapes (so a pipeline over a different model rejects
+    /// the swap).
+    pub fn push_params(&self, handle: &ServeHandle) -> Result<()> {
+        handle.swap_params(self.params.clone())
     }
 
     /// Compare this session's gradient against the fused DTO reference
@@ -488,6 +606,12 @@ impl<'e> Session<'e> {
 
     /// Run the full training loop: `opts.steps` optimizer steps with
     /// periodic evaluation, divergence detection and curve recording.
+    ///
+    /// With [`SessionConfig::grad_accum`] > 1 (or `grad_workers` > 1)
+    /// every optimizer step draws `grad_accum` micro-batches and applies
+    /// their fixed-order mean gradient via [`Session::step_accumulate`] —
+    /// the curve depends on `grad_accum` (data consumed per step) but is
+    /// bit-identical across `grad_workers` counts.
     pub fn fit(
         &mut self,
         train: &mut Batcher,
@@ -502,10 +626,22 @@ impl<'e> Session<'e> {
         let t0 = Instant::now();
         let mut steps_run = 0;
         let batches_per_epoch = train.batches_per_epoch().max(1);
+        let accum = self.config.grad_accum.max(1);
+        let accumulate = accum > 1 || self.config.grad_workers.max(1) > 1;
 
         for step in 0..opts.steps {
-            let batch = train.next_batch();
-            let stats = self.step(&batch.images, &batch.labels)?;
+            let stats = if accumulate {
+                let micro: Vec<(Tensor, Tensor)> = (0..accum)
+                    .map(|_| {
+                        let b = train.next_batch();
+                        (b.images, b.labels)
+                    })
+                    .collect();
+                self.step_accumulate(&micro)?
+            } else {
+                let batch = train.next_batch();
+                self.step(&batch.images, &batch.labels)?
+            };
             steps_run = step + 1;
             train_loss.add(stats.loss);
             if !stats.finite {
@@ -522,7 +658,9 @@ impl<'e> Session<'e> {
                 };
                 let point = CurvePoint {
                     step: step + 1,
-                    epoch: (step + 1) as f32 / batches_per_epoch as f32,
+                    // Epochs measure data consumed: each optimizer step
+                    // draws `accum` micro-batches.
+                    epoch: ((step + 1) * accum) as f32 / batches_per_epoch as f32,
                     train_loss: if diverged { f32::NAN } else { train_loss.value() },
                     test_loss: tl,
                     test_acc: ta,
@@ -558,6 +696,55 @@ impl<'e> Session<'e> {
             peak_step_state_bytes: self.ledger.peak_of(Category::StepState),
             sec_per_step: wall / steps_run.max(1) as f64,
         })
+    }
+}
+
+/// Ordered contiguous-chunk fan-out on the session's cached persistent
+/// pool, lazily creating (or growing) it on first parallel use.
+///
+/// `workers <= 1` runs inline on the caller's thread without touching the
+/// pool, and a failed pool spawn degrades to the same serial path — both
+/// produce bit-identical results to the parallel run by construction
+/// (fixed chunking, in-order reassembly). Replacing a too-small pool is
+/// safe mid-flight: concurrent calls hold their own `Arc`, and the old
+/// pool joins when its last user finishes.
+fn pooled_map_with<T, R, CS>(
+    slot: &Mutex<Option<Arc<PersistentPool>>>,
+    workers: usize,
+    items: &[T],
+    init: impl Fn() -> CS + Sync,
+    f: impl Fn(&mut CS, usize, &T) -> R + Sync,
+) -> (Vec<R>, Vec<CS>)
+where
+    T: Sync,
+    R: Send,
+    CS: Send,
+{
+    let w = workers.max(1).min(items.len().max(1));
+    if w <= 1 {
+        return run_inline(items, &init, &f);
+    }
+    let pool = {
+        let mut slot = slot.lock().unwrap();
+        let cached = match slot.as_ref() {
+            Some(pool) if pool.workers() >= w => Some(pool.clone()),
+            _ => None,
+        };
+        match cached {
+            Some(pool) => Some(pool),
+            None => match PersistentPool::new(w, "anode-session-worker", || ()) {
+                Ok(pool) => {
+                    let pool = Arc::new(pool);
+                    *slot = Some(pool.clone());
+                    Some(pool)
+                }
+                Err(_) => None,
+            },
+        }
+    };
+    match pool {
+        Some(pool) => pool.map_with(w, items, init, f),
+        None => run_inline(items, &init, &f),
     }
 }
 

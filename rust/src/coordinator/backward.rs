@@ -18,7 +18,11 @@ use super::{ExecutionCore, ForwardState};
 ///
 /// Takes the shared core by `&` plus the caller's per-call state
 /// (`ForwardState`, `grads`, ledger) — nothing here mutates the core, so
-/// concurrent backward passes over one core are safe.
+/// concurrent backward passes over one core are safe. The data-parallel
+/// training step exploits this: every pool worker runs this traversal
+/// simultaneously over its own micro-batch's `ForwardState`, writing into
+/// its own `grads` buffer, with the cross-micro-batch reduction deferred
+/// to `ExecutionCore::reduce_grads` on the calling thread.
 pub(crate) fn backward(
     co: &ExecutionCore,
     state: &ForwardState,

@@ -25,7 +25,11 @@
 //! the `Arc`'d registry; everything mutable — [`ForwardState`], SGD state,
 //! the [`crate::memory::MemoryLedger`] — lives per session or per call and
 //! is passed in by the caller. `&ExecutionCore` methods are safe to call
-//! from any number of threads concurrently.
+//! from any number of threads concurrently. The data-parallel training
+//! path leans on exactly this split: each pool worker drives
+//! [`ExecutionCore::loss_and_grad`] over its own micro-batches with a
+//! private `ForwardState` and ledger, and the per-micro gradients reduce
+//! in fixed index order through [`ExecutionCore::reduce_grads`].
 //!
 //! All module references are typed [`ModuleHandle`]s resolved eagerly by
 //! the [`crate::api`] layer — the core never constructs a module name from
@@ -304,6 +308,46 @@ impl ExecutionCore {
             .map(|(x, y)| self.eval_batch(x, y, params))
             .collect::<Result<Vec<_>>>()?;
         Ok(Self::reduce_eval(&per_batch, self.cfg.batch))
+    }
+
+    /// Fold per-micro-batch `(loss, correct, grads)` triples into the mean
+    /// loss, the total correct count and the **mean** gradient, reducing
+    /// strictly in micro-batch index order on the calling thread.
+    ///
+    /// This is the single reduction behind both the serial and the
+    /// data-parallel training paths
+    /// ([`Session::step_accumulate`](crate::api::Session::step_accumulate)):
+    /// workers compute per-micro-batch gradients over private
+    /// [`ForwardState`]s/ledgers and return them *unreduced* in input
+    /// order (contiguous chunks reassembled by worker index), so the
+    /// floating-point accumulation tree here is identical for every worker
+    /// count — the discretize-then-optimize gradient stays bit-identical
+    /// to the serial run, preserving the paper's "unconditionally
+    /// accurate" property under parallelism.
+    pub fn reduce_grads(
+        per_micro: Vec<(f32, f32, Vec<Tensor>)>,
+    ) -> Result<(f32, f32, Vec<Tensor>)> {
+        let k = per_micro.len();
+        let mut iter = per_micro.into_iter();
+        let Some((loss0, correct0, mut grads)) = iter.next() else {
+            return Err(RuntimeError::Shape("gradient reduction over zero micro-batches".into()));
+        };
+        let mut loss_sum = loss0 as f64;
+        let mut correct_sum = correct0 as f64;
+        for (loss, correct, g) in iter {
+            loss_sum += loss as f64;
+            correct_sum += correct as f64;
+            for (ai, gi) in grads.iter_mut().zip(g.iter()) {
+                ai.axpy(1.0, gi).map_err(|e| RuntimeError::Shape(e.to_string()))?;
+            }
+        }
+        if k > 1 {
+            let scale = 1.0 / k as f32;
+            for g in grads.iter_mut() {
+                g.scale(scale);
+            }
+        }
+        Ok(((loss_sum / k as f64) as f32, correct_sum as f32, grads))
     }
 
     /// Fold per-batch (loss, correct) pairs into (mean loss, accuracy), in

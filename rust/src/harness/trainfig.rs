@@ -31,6 +31,13 @@ pub struct TrainFigOptions {
     pub verbose: bool,
     /// Worker threads for the periodic evaluation sweeps (`--workers`).
     pub workers: usize,
+    /// Micro-batches accumulated per optimizer step (`--grad-accum`);
+    /// 1 is the classic single-batch step.
+    pub grad_accum: usize,
+    /// Worker threads for the data-parallel gradient path
+    /// (`--grad-workers`); parameters/losses are bit-identical for every
+    /// count.
+    pub grad_workers: usize,
 }
 
 impl Default for TrainFigOptions {
@@ -48,6 +55,8 @@ impl Default for TrainFigOptions {
             seed: 0,
             verbose: true,
             workers: 1,
+            grad_accum: 1,
+            grad_workers: 1,
         }
     }
 }
@@ -82,6 +91,8 @@ pub fn train_figure(reg: &Arc<ArtifactRegistry>, o: &TrainFigOptions) -> Result<
             milestones: vec![o.steps / 2, o.steps * 4 / 5],
         },
         workers: o.workers,
+        grad_accum: o.grad_accum,
+        grad_workers: o.grad_workers,
         ..SessionConfig::default()
     };
     let mut session = engine.session(session_cfg)?;

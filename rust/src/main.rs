@@ -30,8 +30,9 @@ use anode::models::{Arch, GradMethod, Solver};
 use anode::runtime::ArtifactRegistry;
 use anode::serve::{HostTailRunner, ServeConfig, ServeHandle};
 use anode::tensor::Tensor;
-use anode::util::bench::percentile;
+use anode::util::bench::LatencyPercentiles;
 use anode::util::cli::Args;
+use anode::util::pool::parallel_map;
 
 fn main() {
     let args = Args::from_env();
@@ -65,6 +66,9 @@ fn print_help() {
          \u{20}          --method anode|node|otd|anode-revolve<m>|anode-equispaced<m>\n\
          \u{20}          --classes 10|100 --steps N --lr F --train-size N --seed N\n\
          \u{20}          --workers N (parallel evaluation sweeps; default 1)\n\
+         \u{20}          --grad-accum K (micro-batches per optimizer step)\n\
+         \u{20}          --grad-workers N (data-parallel gradient workers;\n\
+         \u{20}          bit-identical results for every N)\n\
          figures:   --fig fig1|fig7|sec3|fig3|fig4|fig5|memory|gradcheck [--fast]\n\
          gradcheck: --seed N\n\
          serve:     --requests N --clients N --max-delay-ms MS --workers N\n\
@@ -122,6 +126,8 @@ fn cmd_train(args: &Args) -> i32 {
         seed: args.get_parse_or("seed", 0),
         verbose: true,
         workers: args.get_parse_or("workers", 1),
+        grad_accum: args.get_parse_or("grad-accum", 1),
+        grad_workers: args.get_parse_or("grad-workers", 1),
     };
     let csv = args.get("csv").map(|s| s.to_string());
     args.warn_unknown();
@@ -198,6 +204,8 @@ fn cmd_figures(args: &Args) -> i32 {
                         lr: args.get_parse_or("lr", 0.02),
                         verbose: true,
                         workers: args.get_parse_or("workers", 1),
+                        grad_accum: args.get_parse_or("grad-accum", 1),
+                        grad_workers: args.get_parse_or("grad-workers", 1),
                     };
                     match harness::train_figure(&reg, &o) {
                         Ok(run) => curves.push(run.curve),
@@ -219,6 +227,8 @@ fn cmd_figures(args: &Args) -> i32 {
                 lr: args.get_parse_or("lr", 0.02),
                 verbose: true,
                 workers: args.get_parse_or("workers", 1),
+                grad_accum: args.get_parse_or("grad-accum", 1),
+                grad_workers: args.get_parse_or("grad-workers", 1),
             };
             let csv = args.get("csv").map(|s| s.to_string());
             args.warn_unknown();
@@ -350,7 +360,9 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
-/// Pipelined client drive: each client submits its share of requests
+/// Pipelined client drive on the shared worker-pool helper
+/// (`anode::util::pool` — the same substrate the serve workers run on):
+/// each client runs on its own pool worker, submits its share of requests
 /// (interleaved round-robin), then waits all replies; latencies are
 /// aggregated across clients for the percentile report.
 fn drive_serve<F>(handle: &ServeHandle, requests: usize, clients: usize, make: &F) -> i32
@@ -358,30 +370,25 @@ where
     F: Fn(usize) -> Tensor + Sync,
 {
     let t0 = Instant::now();
-    let mut latencies: Vec<Duration> = std::thread::scope(|scope| {
-        let mut joins = Vec::new();
-        for c in 0..clients {
-            let handle = handle.clone();
-            joins.push(scope.spawn(move || {
-                let mut pendings = Vec::new();
-                for i in (c..requests).step_by(clients) {
-                    match handle.submit(make(i)) {
-                        Ok(pending) => pendings.push((i, pending)),
-                        Err(e) => eprintln!("submit {i} failed: {e}"),
-                    }
-                }
-                let mut latencies = Vec::with_capacity(pendings.len());
-                for (i, pending) in pendings {
-                    match pending.wait() {
-                        Ok(reply) => latencies.push(reply.stats.total()),
-                        Err(e) => eprintln!("request {i} failed: {e}"),
-                    }
-                }
-                latencies
-            }));
+    let client_ids: Vec<usize> = (0..clients).collect();
+    let per_client = parallel_map(&client_ids, clients, |_idx, &c| {
+        let mut pendings = Vec::new();
+        for i in (c..requests).step_by(clients) {
+            match handle.submit(make(i)) {
+                Ok(pending) => pendings.push((i, pending)),
+                Err(e) => eprintln!("submit {i} failed: {e}"),
+            }
         }
-        joins.into_iter().flat_map(|j| j.join().expect("serve client thread")).collect()
+        let mut latencies = Vec::with_capacity(pendings.len());
+        for (i, pending) in pendings {
+            match pending.wait() {
+                Ok(reply) => latencies.push(reply.stats.total()),
+                Err(e) => eprintln!("request {i} failed: {e}"),
+            }
+        }
+        latencies
     });
+    let mut latencies: Vec<Duration> = per_client.into_iter().flatten().collect();
     let wall = t0.elapsed().as_secs_f64();
     let report = match handle.shutdown() {
         Ok(r) => r,
@@ -390,7 +397,7 @@ where
             return 1;
         }
     };
-    latencies.sort();
+    let pct = LatencyPercentiles::from_unsorted(&mut latencies);
     println!(
         "served {}/{} requests in {:.3}s  ({:.0} req/s across {clients} clients)",
         latencies.len(),
@@ -398,12 +405,7 @@ where
         wall,
         latencies.len() as f64 / wall.max(1e-12)
     );
-    println!(
-        "latency p50={:?} p95={:?} p99={:?}",
-        percentile(&latencies, 50.0),
-        percentile(&latencies, 95.0),
-        percentile(&latencies, 99.0)
-    );
+    println!("latency {}", pct.report());
     println!(
         "batches={} (full={} deadline={} drain={})  workers={}",
         report.batches,

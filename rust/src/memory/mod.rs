@@ -166,6 +166,34 @@ impl MemoryLedger {
         self.unknown_frees += other.unknown_frees;
     }
 
+    /// Absorb one *parallel phase* (e.g. a data-parallel training step's
+    /// worker ledgers) into this long-lived ledger.
+    ///
+    /// Unlike [`MemoryLedger::merge`] — which sums peaks and is meant for
+    /// one-shot fan-out reports — this models repeated phases against a
+    /// ledger that outlives them: the phase's aggregate working set is
+    /// this ledger's *live* bytes (params, optimizer state) plus the
+    /// concurrent **sum** of the worker peaks, and the all-time peak is
+    /// the **max** over phases of that candidate, not a sum over steps.
+    /// Traffic and `unknown_frees` stay additive, so a multi-step parallel
+    /// training run still accounts exactly the serial run's traffic.
+    pub fn absorb_parallel(&mut self, workers: &[MemoryLedger]) {
+        let phase_peak: usize = workers.iter().map(|w| w.peak).sum();
+        self.peak = self.peak.max(self.current + phase_peak);
+        let cats: std::collections::HashSet<Category> =
+            workers.iter().flat_map(|w| w.peak_by_cat.keys().copied()).collect();
+        for cat in cats {
+            let phase_cat: usize = workers.iter().map(|w| w.peak_of(cat)).sum();
+            let candidate = self.current_of(cat) + phase_cat;
+            let cat_peak = self.peak_by_cat.entry(cat).or_default();
+            *cat_peak = (*cat_peak).max(candidate);
+        }
+        for w in workers {
+            self.total_allocated += w.total_allocated;
+            self.unknown_frees += w.unknown_frees;
+        }
+    }
+
     /// Reset peaks (keep live allocations) — used between measurement phases.
     pub fn reset_peaks(&mut self) {
         self.peak = self.current;
@@ -302,6 +330,39 @@ mod tests {
         assert_eq!(agg.peak_of(Category::StepState), 40);
         assert_eq!(agg.current_bytes(), 0);
         assert_eq!(agg.unknown_frees(), 1);
+    }
+
+    #[test]
+    fn absorb_parallel_maxes_phases_and_adds_traffic() {
+        // A long-lived session ledger holding 100B of params.
+        let mut session = MemoryLedger::new();
+        session.alloc(100, Category::Param);
+
+        // Phase 1: two workers peaking at 40B + 60B of step state.
+        let worker = |bytes: usize| {
+            let mut w = MemoryLedger::new();
+            let id = w.alloc(bytes, Category::StepState);
+            w.free(id);
+            w
+        };
+        session.absorb_parallel(&[worker(40), worker(60)]);
+        assert_eq!(session.peak_bytes(), 200, "live 100 + concurrent 40+60");
+        assert_eq!(session.peak_of(Category::StepState), 100);
+        assert_eq!(session.total_traffic(), 200);
+
+        // Phase 2 is smaller: the all-time peak must NOT grow (max over
+        // phases, not a sum over steps) while traffic keeps adding.
+        session.absorb_parallel(&[worker(30)]);
+        assert_eq!(session.peak_bytes(), 200);
+        assert_eq!(session.peak_of(Category::StepState), 100);
+        assert_eq!(session.total_traffic(), 230);
+
+        // Phase 3 is larger: the peak moves up to the new candidate.
+        session.absorb_parallel(&[worker(80), worker(80)]);
+        assert_eq!(session.peak_bytes(), 260);
+        assert_eq!(session.peak_of(Category::StepState), 160);
+        assert_eq!(session.total_traffic(), 390);
+        assert_eq!(session.unknown_frees(), 0);
     }
 
     #[test]

@@ -39,6 +39,21 @@ impl Sgd {
         }
     }
 
+    /// Clip to `max_norm` (`None` disables clipping) and apply one update
+    /// — the shared tail of `Session::step` and the data-parallel
+    /// `Session::step_accumulate`, so both paths run byte-for-byte the
+    /// same optimizer arithmetic. Returns the pre-clip global norm.
+    pub fn clipped_step(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &mut [Tensor],
+        max_norm: Option<f32>,
+    ) -> f32 {
+        let norm = Self::clip_grads(grads, max_norm.unwrap_or(f32::INFINITY));
+        self.step(params, grads);
+        norm
+    }
+
     /// Global gradient-norm clipping; returns the pre-clip norm.
     pub fn clip_grads(grads: &mut [Tensor], max_norm: f32) -> f32 {
         let norm = {
@@ -134,6 +149,31 @@ mod tests {
         let mut g2 = vec![Tensor::from_vec(vec![2], vec![0.3, 0.4]).unwrap()];
         Sgd::clip_grads(&mut g2, 1.0);
         assert!((g2[0].norm2() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clipped_step_matches_manual_clip_then_step() {
+        let run = |clipped: bool| {
+            let mut params = vec![Tensor::from_vec(vec![2], vec![1.0, -1.0]).unwrap()];
+            let mut opt = Sgd::new(&params, 0.1, 0.9, 0.01);
+            let mut grads = vec![Tensor::from_vec(vec![2], vec![3.0, 4.0]).unwrap()];
+            let norm = if clipped {
+                opt.clipped_step(&mut params, &mut grads, Some(1.0))
+            } else {
+                let n = Sgd::clip_grads(&mut grads, 1.0);
+                opt.step(&mut params, &grads);
+                n
+            };
+            (norm.to_bits(), params[0].data().to_vec())
+        };
+        assert_eq!(run(true), run(false));
+        // None disables clipping entirely.
+        let mut params = vec![Tensor::from_vec(vec![2], vec![0.0, 0.0]).unwrap()];
+        let mut opt = Sgd::new(&params, 1.0, 0.0, 0.0);
+        let mut grads = vec![Tensor::from_vec(vec![2], vec![3.0, 4.0]).unwrap()];
+        let norm = opt.clipped_step(&mut params, &mut grads, None);
+        assert!((norm - 5.0).abs() < 1e-6);
+        assert_eq!(params[0].data(), &[-3.0, -4.0]);
     }
 
     #[test]

@@ -19,11 +19,16 @@
 //!   `max_delay`, whichever comes first; shutdown drains the remainder.
 //!   Partial batches are zero-padded to the compiled shape (per-example
 //!   computation makes row values independent of the padding).
-//! * **Persistent workers** — unlike the scoped per-call threads of
-//!   [`crate::util::pool`], the pool's threads are spawned once and live
+//! * **Persistent workers** — the pool's threads (a serving-flavored
+//!   [`crate::util::pool::PersistentPool`]) are spawned once and live
 //!   until shutdown, each metering a private
 //!   [`MemoryLedger`](crate::memory::MemoryLedger) for its lifetime; the
 //!   merged aggregate is returned by [`ServeHandle::shutdown`].
+//! * **Parameter hot-swap** — [`ServeHandle::swap_params`] atomically
+//!   replaces the runner's weight snapshot between batches, so a
+//!   checkpoint trained elsewhere rolls out with no queue drain and no
+//!   downtime (shape-validated; in-flight batches finish on the old
+//!   snapshot).
 //! * **Backpressure** — the admission queue is bounded at `queue_cap`
 //!   ([`ServeHandle::submit`] blocks, [`ServeHandle::try_submit`] reports
 //!   full) and the pool queues at most one spare batch per worker, so a
@@ -44,7 +49,7 @@ mod pool;
 mod queue;
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -76,6 +81,15 @@ pub trait BatchRunner: Send + Sync + 'static {
     /// working memory on `ledger`. Rows past the real fill are zero
     /// padding; per-example models may ignore them.
     fn run(&self, images: &Tensor, ledger: &mut MemoryLedger) -> Result<Prediction>;
+
+    /// Atomically replace the parameter snapshot used by *subsequent*
+    /// batches (a batch already executing finishes on the snapshot it
+    /// started with). Runners without swappable weights keep this
+    /// default, which reports the capability as unsupported.
+    fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+        let _ = params;
+        Err(RuntimeError::Io("serve: this runner does not support parameter hot-swap".into()))
+    }
 }
 
 /// Configuration for the serving front end.
@@ -246,6 +260,9 @@ struct Lifecycle {
 struct ServeInner {
     queue: Arc<AdmissionQueue>,
     pool: Arc<WorkerPool>,
+    /// Kept on the handle for parameter hot-swap; the pool holds its own
+    /// clone for batch execution.
+    runner: Arc<dyn BatchRunner>,
     counters: Arc<Counters>,
     example_shape: Vec<usize>,
     batch: usize,
@@ -302,7 +319,7 @@ impl ServeHandle {
         let queue = Arc::new(AdmissionQueue::new(config.queue_cap));
         let counters = Arc::new(Counters::default());
         let pool = Arc::new(
-            WorkerPool::new(runner, config.workers, counters.clone())
+            WorkerPool::new(runner.clone(), config.workers, counters.clone())
                 .map_err(|e| RuntimeError::Io(format!("serve: worker spawn failed: {e}")))?,
         );
         let spawned = {
@@ -328,12 +345,25 @@ impl ServeHandle {
             inner: Arc::new(ServeInner {
                 queue,
                 pool,
+                runner,
                 counters,
                 example_shape,
                 batch,
                 lifecycle: Mutex::new(Lifecycle { batcher: Some(batcher), report: None }),
             }),
         })
+    }
+
+    /// Hot-swap the model parameters on the running pipeline: an atomic
+    /// swap of the runner's weight-snapshot `Arc`, applied **between
+    /// batches** — no queue drain, no downtime. Requests already executing
+    /// finish on the old snapshot; every later batch uses the new one.
+    /// The runner validates compatibility (tensor count and shapes) and
+    /// rejects the swap if it does not support one. See
+    /// [`Session::push_params`](crate::api::Session::push_params) for the
+    /// trained-checkpoint rollout path.
+    pub fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+        self.inner.runner.swap_params(params)
     }
 
     /// The AOT batch capacity the queue coalesces toward.
@@ -519,14 +549,26 @@ pub fn split_examples(batch: &Tensor) -> Result<Vec<Tensor>> {
 /// bit-identical to the pre-batched path.
 pub struct SessionRunner {
     core: Arc<ExecutionCore>,
-    params: Arc<Vec<Tensor>>,
+    /// The swappable weight snapshot: readers clone the `Arc` once per
+    /// batch, so a concurrent [`BatchRunner::swap_params`] never tears a
+    /// batch mid-execution and costs no per-batch tensor copies.
+    params: RwLock<Arc<Vec<Tensor>>>,
 }
 
 impl SessionRunner {
     /// Snapshot `params` (serving is read-only; later training steps on
-    /// the originating session do not affect a running pipeline).
+    /// the originating session do not affect a running pipeline unless
+    /// explicitly rolled out via [`ServeHandle::swap_params`]).
     pub fn new(core: Arc<ExecutionCore>, params: Vec<Tensor>) -> Self {
-        Self { core, params: Arc::new(params) }
+        Self { core, params: RwLock::new(Arc::new(params)) }
+    }
+
+    /// The current snapshot (an `Arc` clone; cheap, lock held briefly).
+    fn snapshot(&self) -> Arc<Vec<Tensor>> {
+        match self.params.read() {
+            Ok(guard) => guard.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
     }
 }
 
@@ -541,11 +583,46 @@ impl BatchRunner for SessionRunner {
     }
 
     fn run(&self, images: &Tensor, ledger: &mut MemoryLedger) -> Result<Prediction> {
-        // The one shared per-batch inference unit (api::session::infer_batch)
-        // — the bit-identity contract with `predict_batches` is structural,
-        // not a convention kept in sync by hand.
-        infer_batch(&self.core, &self.params, images, ledger)
+        // One snapshot per batch (hot-swap applies between batches). The
+        // shared per-batch inference unit (api::session::infer_batch)
+        // keeps the bit-identity contract with `predict_batches`
+        // structural, not a convention kept in sync by hand.
+        let params = self.snapshot();
+        infer_batch(&self.core, &params, images, ledger)
     }
+
+    fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+        let current = self.snapshot();
+        check_swap_shapes(&params, &current)?;
+        let mut guard = match self.params.write() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *guard = Arc::new(params);
+        Ok(())
+    }
+}
+
+/// Shared hot-swap validation: the replacement must match the current
+/// snapshot tensor-for-tensor in count and shape.
+fn check_swap_shapes(new: &[Tensor], current: &[Tensor]) -> Result<()> {
+    if new.len() != current.len() {
+        return Err(RuntimeError::Shape(format!(
+            "serve: hot-swap expects {} parameter tensors, got {}",
+            current.len(),
+            new.len()
+        )));
+    }
+    for (i, (n, c)) in new.iter().zip(current.iter()).enumerate() {
+        if n.shape() != c.shape() {
+            return Err(RuntimeError::Shape(format!(
+                "serve: hot-swap parameter {i} has shape {:?}, expected {:?}",
+                n.shape(),
+                c.shape()
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Host-only demo model: global-average-pool + dense head over activation
@@ -556,8 +633,8 @@ impl BatchRunner for SessionRunner {
 pub struct HostTailRunner {
     batch: usize,
     shape: Vec<usize>,
-    w: Tensor,
-    bias: Tensor,
+    /// `(w, bias)` behind one lock so a hot-swap can never tear the pair.
+    head: RwLock<Arc<(Tensor, Tensor)>>,
 }
 
 impl HostTailRunner {
@@ -568,11 +645,15 @@ impl HostTailRunner {
         // activations map to distinct classes.
         let wdata: Vec<f32> = (0..c * k).map(|i| ((i % 7) as f32 - 3.0) * 0.05).collect();
         let bdata: Vec<f32> = (0..k).map(|j| j as f32 * 0.01).collect();
-        Self {
-            batch,
-            shape: vec![h, h, c],
-            w: Tensor::from_vec(vec![c, k], wdata).expect("head weight shape"),
-            bias: Tensor::from_vec(vec![k], bdata).expect("head bias shape"),
+        let w = Tensor::from_vec(vec![c, k], wdata).expect("head weight shape");
+        let bias = Tensor::from_vec(vec![k], bdata).expect("head bias shape");
+        Self { batch, shape: vec![h, h, c], head: RwLock::new(Arc::new((w, bias))) }
+    }
+
+    fn head(&self) -> Arc<(Tensor, Tensor)> {
+        match self.head.read() {
+            Ok(guard) => guard.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
         }
     }
 }
@@ -587,9 +668,10 @@ impl BatchRunner for HostTailRunner {
     }
 
     fn run(&self, images: &Tensor, ledger: &mut MemoryLedger) -> Result<Prediction> {
+        let head = self.head();
         let id = ledger.alloc(images.byte_size(), Category::Transient);
         let t = Instant::now();
-        let out = head_logits(images, &self.w, &self.bias);
+        let out = head_logits(images, &head.0, &head.1);
         ledger.free(id);
         let logits = out?;
         let classes = argmax_rows(&logits);
@@ -604,6 +686,22 @@ impl BatchRunner for HostTailRunner {
                 peak_activation_bytes: images.byte_size(),
             },
         })
+    }
+
+    /// The demo model's swappable state is its head: expects exactly
+    /// `[w (c, k), bias (k)]` matching the current shapes.
+    fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+        let current = self.head();
+        let current_pair = [current.0.clone(), current.1.clone()];
+        check_swap_shapes(&params, &current_pair)?;
+        let mut it = params.into_iter();
+        let (w, bias) = (it.next().expect("checked len"), it.next().expect("checked len"));
+        let mut guard = match self.head.write() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        *guard = Arc::new((w, bias));
+        Ok(())
     }
 }
 

@@ -1,30 +1,28 @@
-//! Persistent worker pool for the serving path.
+//! Persistent worker pool for the serving path — since PR 4 a thin
+//! serving-specific skin over the generalized
+//! [`crate::util::pool::PersistentPool`], which carries the long-lived
+//! pinned threads, the bounded job queue (at most `workers` jobs waiting
+//! beyond those executing — the second stage of the serve path's
+//! end-to-end backpressure), per-worker state and the drain-on-close,
+//! panic-safe join protocol.
 //!
-//! Unlike [`crate::util::pool`], which spawns scoped threads per call,
-//! these workers are **long-lived**: spawned once when the
-//! [`crate::serve::ServeHandle`] starts, pinned to the pool until
-//! shutdown, each owning a private [`MemoryLedger`] for its whole
-//! lifetime. Assembled batches arrive on a bounded job queue (at most
-//! `workers` jobs waiting beyond those executing — the second stage of the
-//! serve path's end-to-end backpressure), and each worker demultiplexes
-//! its batch's replies back to the per-request channels in submission
-//! order.
-//!
-//! Shutdown protocol: [`WorkerPool::close`] marks the queue closed and
-//! wakes everyone; workers finish the jobs already queued (drain, never
-//! drop), then return their ledgers; [`WorkerPool::join`] collects and
-//! merges them, re-raising any worker panic *after* all remaining workers
-//! have been joined so a panicking batch cannot leak threads.
+//! What stays here is the serving semantics: each worker owns a private
+//! [`MemoryLedger`] for its whole lifetime (merged at
+//! [`WorkerPool::join`]), an assembled batch executes through the shared
+//! [`BatchRunner`], and the batch's replies demultiplex back to the
+//! per-request channels in submission order. A *panicking* runner is
+//! contained to error replies for that batch; a job submitted after
+//! shutdown is dropped cleanly, which disconnects its reply channels so
+//! every waiter sees an error instead of a hang.
 
-use std::collections::VecDeque;
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::memory::{Category, MemoryLedger};
 use crate::runtime::RuntimeError;
 use crate::tensor::Tensor;
+use crate::util::pool::{Job, PersistentPool};
 
 use super::queue::PendingRequest;
 use super::{BatchRunner, Counters, RequestStats, ServeReply};
@@ -36,104 +34,48 @@ pub(crate) struct BatchJob {
     pub requests: Vec<PendingRequest>,
 }
 
-struct JobState {
-    queue: VecDeque<BatchJob>,
-    closed: bool,
-}
-
-struct PoolInner {
+/// Long-lived worker threads executing [`BatchJob`]s via the shared
+/// [`BatchRunner`], on the generalized persistent pool with one
+/// [`MemoryLedger`] per worker.
+pub(crate) struct WorkerPool {
+    pool: PersistentPool<MemoryLedger>,
     runner: Arc<dyn BatchRunner>,
     counters: Arc<Counters>,
-    jobs: Mutex<JobState>,
-    job_ready: Condvar,
-    job_space: Condvar,
-    /// Bound on *waiting* jobs (executing jobs are not counted): one spare
-    /// batch per worker keeps workers fed without unbounded buffering.
-    cap: usize,
-}
-
-/// Long-lived worker threads executing [`BatchJob`]s via the shared
-/// [`BatchRunner`].
-pub(crate) struct WorkerPool {
-    inner: Arc<PoolInner>,
-    handles: Mutex<Vec<JoinHandle<MemoryLedger>>>,
-    workers: usize,
 }
 
 impl WorkerPool {
-    /// Spawn `workers` persistent threads.
+    /// Spawn `workers` persistent threads, each owning a fresh ledger.
     pub fn new(
         runner: Arc<dyn BatchRunner>,
         workers: usize,
         counters: Arc<Counters>,
     ) -> std::io::Result<Self> {
-        let workers = workers.max(1);
-        let inner = Arc::new(PoolInner {
-            runner,
-            counters,
-            jobs: Mutex::new(JobState { queue: VecDeque::new(), closed: false }),
-            job_ready: Condvar::new(),
-            job_space: Condvar::new(),
-            cap: workers,
-        });
-        let mut handles = Vec::with_capacity(workers);
-        for i in 0..workers {
-            let worker_inner = inner.clone();
-            let spawned = std::thread::Builder::new()
-                .name(format!("anode-serve-worker-{i}"))
-                .spawn(move || worker_loop(&worker_inner));
-            match spawned {
-                Ok(h) => handles.push(h),
-                Err(e) => {
-                    // Unwind the partially spawned pool before propagating:
-                    // without a close, the earlier workers would block on
-                    // job_ready forever — a thread leak per failed spawn.
-                    inner.jobs.lock().unwrap().closed = true;
-                    inner.job_ready.notify_all();
-                    inner.job_space.notify_all();
-                    for h in handles {
-                        let _ = h.join();
-                    }
-                    return Err(e);
-                }
-            }
-        }
-        Ok(Self { inner, handles: Mutex::new(handles), workers })
+        let pool = PersistentPool::new(workers, "anode-serve-worker", MemoryLedger::new)?;
+        Ok(Self { pool, runner, counters })
     }
 
     /// Worker threads in the pool.
     pub fn workers(&self) -> usize {
-        self.workers
+        self.pool.workers()
     }
 
-    /// Hand a job to the pool, blocking while `cap` jobs already wait
+    /// Hand a job to the pool, blocking while `workers` jobs already wait
     /// (backpressure toward the batcher and, through the admission queue,
-    /// toward submitters). If the pool is closed the job's requests are
-    /// failed cleanly instead of being dropped silently.
+    /// toward submitters). If the pool is already closed the job is
+    /// dropped, which disconnects its per-request reply channels — every
+    /// waiter gets a clean "dropped before a reply" error, never a hang.
     pub fn submit(&self, job: BatchJob) {
-        let mut st = self.inner.jobs.lock().unwrap();
-        loop {
-            if st.closed {
-                drop(st);
-                fail_requests(job.requests, "serve: worker pool is shut down");
-                return;
-            }
-            if st.queue.len() < self.inner.cap {
-                st.queue.push_back(job);
-                self.inner.job_ready.notify_one();
-                return;
-            }
-            st = self.inner.job_space.wait(st).unwrap();
-        }
+        let runner = self.runner.clone();
+        let counters = self.counters.clone();
+        let work: Job<MemoryLedger> =
+            Box::new(move |ledger| execute(runner.as_ref(), job, ledger, &counters));
+        let _ = self.pool.submit(work);
     }
 
     /// Close the job queue: workers finish what is queued, then exit.
     /// Idempotent.
     pub fn close(&self) {
-        let mut st = self.inner.jobs.lock().unwrap();
-        st.closed = true;
-        self.inner.job_ready.notify_all();
-        self.inner.job_space.notify_all();
+        self.pool.close();
     }
 
     /// Join every worker and merge their ledgers. Panics from workers are
@@ -149,46 +91,12 @@ impl WorkerPool {
     /// Non-propagating join for teardown paths that must not panic (Drop):
     /// returns the merged ledger plus the first panic payload, if any.
     pub fn join_collect(&self) -> (MemoryLedger, Option<Box<dyn std::any::Any + Send>>) {
-        let handles: Vec<JoinHandle<MemoryLedger>> = {
-            let mut guard = match self.handles.lock() {
-                Ok(g) => g,
-                Err(poisoned) => poisoned.into_inner(),
-            };
-            guard.drain(..).collect()
-        };
+        let (ledgers, panic) = self.pool.join_collect();
         let mut merged = MemoryLedger::new();
-        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
-        for h in handles {
-            match h.join() {
-                Ok(ledger) => merged.merge(&ledger),
-                Err(p) => {
-                    if panic.is_none() {
-                        panic = Some(p);
-                    }
-                }
-            }
+        for ledger in &ledgers {
+            merged.merge(ledger);
         }
         (merged, panic)
-    }
-}
-
-fn worker_loop(inner: &PoolInner) -> MemoryLedger {
-    let mut ledger = MemoryLedger::new();
-    loop {
-        let job = {
-            let mut st = inner.jobs.lock().unwrap();
-            loop {
-                if let Some(job) = st.queue.pop_front() {
-                    inner.job_space.notify_one();
-                    break job;
-                }
-                if st.closed {
-                    return ledger;
-                }
-                st = inner.job_ready.wait(st).unwrap();
-            }
-        };
-        execute(inner.runner.as_ref(), job, &mut ledger, &inner.counters);
     }
 }
 
@@ -252,12 +160,6 @@ fn execute(runner: &dyn BatchRunner, job: BatchJob, ledger: &mut MemoryLedger, c
                 let _ = req.tx.send(Err(e.clone()));
             }
         }
-    }
-}
-
-fn fail_requests(requests: Vec<PendingRequest>, msg: &str) {
-    for req in requests {
-        let _ = req.tx.send(Err(RuntimeError::Io(msg.into())));
     }
 }
 

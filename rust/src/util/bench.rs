@@ -74,6 +74,34 @@ pub fn percentile(sorted: &[Duration], p: f64) -> Duration {
     sorted[rank.min(sorted.len() - 1)]
 }
 
+/// p50/p95/p99 of a latency sample — the one summary used by the serve
+/// CLI driver, the `serve_throughput`/`train_throughput` benches and any
+/// future latency reporter, so the percentile math lives in one place.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyPercentiles {
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+}
+
+impl LatencyPercentiles {
+    /// Sort the sample in place and pick the percentiles (the sort is the
+    /// caller-visible side effect callers relied on before this helper).
+    pub fn from_unsorted(latencies: &mut [Duration]) -> Self {
+        latencies.sort();
+        Self {
+            p50: percentile(latencies, 50.0),
+            p95: percentile(latencies, 95.0),
+            p99: percentile(latencies, 99.0),
+        }
+    }
+
+    /// One-line `p50=.. p95=.. p99=..` report.
+    pub fn report(&self) -> String {
+        format!("p50={:?} p95={:?} p99={:?}", self.p50, self.p95, self.p99)
+    }
+}
+
 /// Quick-mode switch for CI bench smoke runs: `ANODE_BENCH_QUICK=1` (or
 /// `true`) shrinks iteration/request counts so the benches finish in
 /// seconds while still emitting their `BENCH_*.json` artifacts.
@@ -103,6 +131,17 @@ mod tests {
         let (v, d) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(d.as_nanos() < 1_000_000_000);
+    }
+
+    #[test]
+    fn latency_percentiles_sort_and_pick() {
+        let mut sample: Vec<Duration> = (1..=100).rev().map(Duration::from_millis).collect();
+        let p = LatencyPercentiles::from_unsorted(&mut sample);
+        assert_eq!(sample[0], Duration::from_millis(1), "sample must be sorted in place");
+        assert_eq!(p.p50, Duration::from_millis(51));
+        assert_eq!(p.p95, Duration::from_millis(95));
+        assert_eq!(p.p99, Duration::from_millis(99));
+        assert!(p.report().contains("p95="), "{}", p.report());
     }
 
     #[test]

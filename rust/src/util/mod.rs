@@ -1,7 +1,9 @@
 //! In-tree utilities that replace external crates unavailable in the
 //! offline build image: a JSON parser/writer ([`json`]), a tiny CLI argument
-//! parser ([`cli`]), a micro-benchmark timer ([`bench`]), and a scoped
-//! worker pool for the parallel serving paths ([`pool`]).
+//! parser ([`cli`]), a micro-benchmark timer ([`bench`]), and the
+//! persistent worker pool that is the execution substrate for every
+//! parallel path — serving, inference fan-out and data-parallel training
+//! ([`pool`]).
 
 pub mod bench;
 pub mod cli;

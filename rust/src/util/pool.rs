@@ -1,22 +1,499 @@
-//! A tiny scoped worker pool for data-parallel fan-out.
+//! Worker pools for data-parallel fan-out — the single execution substrate
+//! behind every parallel path in the crate.
 //!
-//! The serving paths (`Session::predict_batches`, `Session::evaluate`)
-//! split pre-batched work across a handful of std threads. Work is divided
-//! into **contiguous chunks**, one per worker, and results come back in
-//! input order — so reductions over the output see exactly the serial
-//! ordering and parallel runs stay bit-identical to `workers = 1`.
+//! [`PersistentPool`] generalizes the serving path's pinned-worker design
+//! (PR 3) into a reusable primitive: **long-lived** named threads, each
+//! owning private per-worker state for its whole lifetime, fed from a
+//! bounded shared job queue with a drain-on-close shutdown protocol and a
+//! panic-safe join. On top of the raw [`PersistentPool::submit`] interface
+//! (used by `anode::serve`), [`PersistentPool::map_with`] provides the
+//! ordered scatter-gather the session paths need: work splits into
+//! **contiguous chunks**, one per worker, and results come back in input
+//! order — so reductions over the output see exactly the serial ordering
+//! and parallel runs stay bit-identical to `workers = 1` for every worker
+//! count.
 //!
-//! No queues, no channels, no unsafe: `std::thread::scope` lets workers
-//! borrow the shared read-only state (`&ExecutionCore`, `&[Tensor]`)
-//! directly, and each worker owns its mutable state (e.g. a
-//! [`crate::memory::MemoryLedger`]) for the duration of its chunk.
+//! The free functions [`parallel_map`]/[`parallel_map_with`] keep the
+//! original per-call API: they run inline for `workers <= 1` and otherwise
+//! stand up a transient pool for the duration of the call (paying the
+//! spawn tax the cached pools on `Session`/`ServeHandle` avoid — the
+//! `train_throughput` bench measures the difference).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of work executed on a pool worker against its per-worker state.
+pub type Job<S> = Box<dyn FnOnce(&mut S) + Send + 'static>;
+
+/// First panic payload observed by any worker (re-raised at join).
+type PanicPayload = Box<dyn std::any::Any + Send>;
+
+struct JobQueue<S> {
+    queue: VecDeque<Job<S>>,
+    closed: bool,
+    /// Workers still running. When the last one leaves (e.g. every init
+    /// panicked), anything still queued is dropped so waiting mappers see
+    /// their channels disconnect instead of hanging on a queue nothing
+    /// will ever drain.
+    live_workers: usize,
+}
+
+struct PoolShared<S> {
+    jobs: Mutex<JobQueue<S>>,
+    job_ready: Condvar,
+    job_space: Condvar,
+    /// Bound on *waiting* jobs (executing jobs are not counted): one spare
+    /// job per worker keeps workers fed without unbounded buffering.
+    cap: usize,
+    /// First payload from a job that panicked on a worker thread. Workers
+    /// contain the unwind and keep serving (a dead worker with queued jobs
+    /// would stall every path sharing the pool); the payload is re-raised
+    /// by [`PersistentPool::join`] after all workers have been joined.
+    panic: Mutex<Option<PanicPayload>>,
+}
+
+/// Long-lived worker threads with per-worker state `S`, a bounded shared
+/// job queue, ordered contiguous-chunk scatter-gather ([`Self::map_with`])
+/// and a drain-on-close, panic-safe shutdown protocol.
+///
+/// One pool instance is one execution domain: `anode::serve` runs its
+/// batches on a pool of ledger-carrying workers, a `Session` caches a pool
+/// for its `evaluate`/`predict_batches`/`step_accumulate` fan-outs, and a
+/// future pool-per-device instantiation is the multi-device sharding seam
+/// (see rust/DESIGN.md §6c).
+pub struct PersistentPool<S = ()> {
+    shared: Arc<PoolShared<S>>,
+    handles: Mutex<Vec<JoinHandle<S>>>,
+    workers: usize,
+}
+
+impl<S: Send + 'static> PersistentPool<S> {
+    /// Spawn `workers` (min 1) persistent threads named `{name}-{i}`, each
+    /// owning a private state built by `init` on the worker's own thread.
+    pub fn new<F>(workers: usize, name: &str, init: F) -> std::io::Result<Self>
+    where
+        F: Fn() -> S + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let shared = Arc::new(PoolShared {
+            jobs: Mutex::new(JobQueue {
+                queue: VecDeque::new(),
+                closed: false,
+                live_workers: workers,
+            }),
+            job_ready: Condvar::new(),
+            job_space: Condvar::new(),
+            cap: workers,
+            panic: Mutex::new(None),
+        });
+        let init = Arc::new(init);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let worker_shared = shared.clone();
+            let worker_init = init.clone();
+            let builder = std::thread::Builder::new().name(format!("{name}-{i}"));
+            let spawned = builder.spawn(move || {
+                // A panicking `init` must not leave an open queue nothing
+                // drains (a later map would hang): close the pool so
+                // submits fail loudly, then die with the original panic so
+                // join() re-raises it.
+                let mut state = match catch_unwind(AssertUnwindSafe(worker_init.as_ref())) {
+                    Ok(state) => state,
+                    Err(payload) => {
+                        close_shared(&worker_shared);
+                        worker_exit(&worker_shared);
+                        resume_unwind(payload);
+                    }
+                };
+                worker_loop(&worker_shared, &mut state);
+                worker_exit(&worker_shared);
+                state
+            });
+            match spawned {
+                Ok(h) => handles.push(h),
+                Err(e) => {
+                    // Unwind the partially spawned pool before propagating:
+                    // without a close, the earlier workers would block on
+                    // job_ready forever — a thread leak per failed spawn.
+                    close_shared(&shared);
+                    for h in handles {
+                        let _ = h.join();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        Ok(Self { shared, handles: Mutex::new(handles), workers })
+    }
+
+    /// Worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Hand a job to the pool, blocking while `workers` jobs already wait
+    /// (backpressure toward the submitter). Once the pool is closed the
+    /// job is handed back — dropping it releases whatever it captured
+    /// (e.g. reply channels), which is the clean-failure path.
+    pub fn submit(&self, job: Job<S>) -> Result<(), Job<S>> {
+        let mut st = self.shared.jobs.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(job);
+            }
+            if st.queue.len() < self.shared.cap {
+                st.queue.push_back(job);
+                self.shared.job_ready.notify_one();
+                return Ok(());
+            }
+            st = self.shared.job_space.wait(st).unwrap();
+        }
+    }
+
+    /// Map `f(chunk_state, index, item)` over `items` on up to `limit` of
+    /// this pool's workers, preserving input order in the output.
+    ///
+    /// See [`Self::map_with`]; this is the stateless-chunk variant.
+    pub fn map<T, R, F>(&self, limit: usize, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let (results, _) = self.map_with(limit, items, || (), move |_cs, i, t| f(i, t));
+        results
+    }
+
+    /// Ordered scatter-gather: split `items` into **contiguous chunks**,
+    /// one per used worker (at most `limit`), run each chunk as one pool
+    /// job with a fresh chunk state from `init`, and return the in-order
+    /// results plus the per-chunk states (e.g. worker memory ledgers) for
+    /// the caller to aggregate.
+    ///
+    /// `limit <= 1` (or a single item) runs inline on the caller's thread
+    /// — the serial path is the parallel path with the pool turned off,
+    /// not a separate code path. Chunking and reassembly are identical to
+    /// the scoped [`parallel_map_with`], so results are bit-identical for
+    /// every worker count.
+    ///
+    /// A panic raised by `f` is contained on the worker (the pool stays
+    /// usable) and re-raised here with its original payload once every
+    /// chunk has settled.
+    pub fn map_with<T, R, CS, FI, F>(
+        &self,
+        limit: usize,
+        items: &[T],
+        init: FI,
+        f: F,
+    ) -> (Vec<R>, Vec<CS>)
+    where
+        T: Sync,
+        R: Send,
+        CS: Send,
+        FI: Fn() -> CS + Sync,
+        F: Fn(&mut CS, usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        let w = limit.max(1).min(self.workers).min(n.max(1));
+        if w <= 1 {
+            return run_inline(items, &init, &f);
+        }
+
+        let chunk = n.div_ceil(w);
+        let chunks = n.div_ceil(chunk);
+        let latch = Arc::new(Latch::default());
+        // Declared before any job exists so it drops — and therefore waits
+        // for every outstanding job closure to be gone — *last*, on both
+        // the return and the unwind path out of this frame.
+        let guard = CompletionGuard(latch.clone());
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<(Vec<R>, CS)>)>();
+
+        let init = &init;
+        let f = &f;
+        for (ci, chunk_items) in items.chunks(chunk).enumerate() {
+            let base = ci * chunk;
+            let tx = tx.clone();
+            // The borrowing closure: run the chunk against a fresh chunk
+            // state, catching panics so a worker thread never dies on user
+            // code (the payload is re-raised on the caller below).
+            let work: Box<dyn FnOnce(&mut S) + Send + '_> = Box::new(move |_worker| {
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    let mut cs = init();
+                    let rs: Vec<R> = chunk_items
+                        .iter()
+                        .enumerate()
+                        .map(|(j, t)| f(&mut cs, base + j, t))
+                        .collect();
+                    (rs, cs)
+                }));
+                let _ = tx.send((ci, out));
+            });
+            // SAFETY: `guard` blocks this frame (return *or* unwind) until
+            // the ticket paired with this job is dropped, and the ticket is
+            // dropped only after `work` has been consumed (run to
+            // completion) or dropped unrun — either way the erased borrows
+            // of `items`/`init`/`f` are dead before the frame can exit.
+            let work: Job<S> = unsafe { erase_job_lifetime(work) };
+            latch.add();
+            let ticket = Ticket(latch.clone());
+            let job: Job<S> = Box::new(move |worker| {
+                work(worker);
+                drop(ticket);
+            });
+            // A closed pool hands the job back; dropping it releases its
+            // ticket + sender, and the missing chunk is detected below.
+            let _ = self.submit(job);
+        }
+        drop(tx);
+
+        let mut slots: Vec<Option<(Vec<R>, CS)>> = (0..chunks).map(|_| None).collect();
+        let mut panic: Option<PanicPayload> = None;
+        while let Ok((ci, outcome)) = rx.recv() {
+            match outcome {
+                Ok(pair) => slots[ci] = Some(pair),
+                Err(payload) => {
+                    if panic.is_none() {
+                        panic = Some(payload);
+                    }
+                }
+            }
+        }
+        // Every sender is gone; wait for the job closures themselves to be
+        // dropped before touching the borrows again.
+        drop(guard);
+        if let Some(payload) = panic {
+            resume_unwind(payload);
+        }
+
+        let mut results = Vec::with_capacity(n);
+        let mut states = Vec::with_capacity(chunks);
+        for slot in slots {
+            match slot {
+                Some((rs, cs)) => {
+                    results.extend(rs);
+                    states.push(cs);
+                }
+                None => panic!("PersistentPool::map_with: pool closed before every chunk ran"),
+            }
+        }
+        (results, states)
+    }
+}
+
+// Shutdown/teardown needs no bounds on `S`: these methods only flip the
+// queue flag and join handles, so `Drop` can share the one protocol.
+impl<S> PersistentPool<S> {
+    /// Close the job queue: workers finish what is queued (drain, never
+    /// drop), then exit. Idempotent and poison-tolerant (teardown paths
+    /// must never panic on a poisoned lock).
+    pub fn close(&self) {
+        close_shared(&self.shared);
+    }
+
+    /// Close, join every worker and return their states in worker-index
+    /// order. The first panic payload captured from any job is re-raised
+    /// *after* all workers have been joined, so a panicking job cannot
+    /// leak threads.
+    pub fn join(&self) -> Vec<S> {
+        let (states, panic) = self.join_collect();
+        if let Some(p) = panic {
+            resume_unwind(p);
+        }
+        states
+    }
+
+    /// Non-propagating join for teardown paths that must not panic (Drop):
+    /// returns the worker states plus the first panic payload, if any.
+    pub fn join_collect(&self) -> (Vec<S>, Option<PanicPayload>) {
+        self.close();
+        let handles: Vec<JoinHandle<S>> = {
+            let mut guard = match self.handles.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            guard.drain(..).collect()
+        };
+        let mut states = Vec::with_capacity(handles.len());
+        let mut panic: Option<PanicPayload> = None;
+        for h in handles {
+            match h.join() {
+                Ok(state) => states.push(state),
+                Err(p) => {
+                    if panic.is_none() {
+                        panic = Some(p);
+                    }
+                }
+            }
+        }
+        if panic.is_none() {
+            panic = match self.shared.panic.lock() {
+                Ok(mut slot) => slot.take(),
+                Err(poisoned) => poisoned.into_inner().take(),
+            };
+        }
+        (states, panic)
+    }
+}
+
+impl<S> Drop for PersistentPool<S> {
+    fn drop(&mut self) {
+        // Quiet teardown through the one shutdown protocol: close, drain,
+        // join. A pending panic payload was either already re-raised by a
+        // map call or is dropped here (Drop must not unwind).
+        let _ = self.join_collect();
+    }
+}
+
+/// The one close implementation (pool `close`, worker init-panic path,
+/// partial-spawn cleanup): poison-tolerant, wakes every waiter.
+fn close_shared<S>(shared: &PoolShared<S>) {
+    {
+        let mut st = match shared.jobs.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        st.closed = true;
+    }
+    shared.job_ready.notify_all();
+    shared.job_space.notify_all();
+}
+
+/// Mark one worker gone. When the last worker leaves, whatever is still
+/// queued is dropped (outside the lock) — dropping a job disconnects its
+/// reply channels and releases its map ticket, so callers fail loudly
+/// instead of waiting forever. On the healthy path the queue is already
+/// empty here: a worker only exits once the pool is closed and drained.
+fn worker_exit<S>(shared: &PoolShared<S>) {
+    let leftovers: Vec<Job<S>> = {
+        let mut st = match shared.jobs.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        st.live_workers = st.live_workers.saturating_sub(1);
+        if st.live_workers == 0 {
+            st.queue.drain(..).collect()
+        } else {
+            Vec::new()
+        }
+    };
+    drop(leftovers);
+}
+
+fn worker_loop<S>(shared: &PoolShared<S>, state: &mut S) {
+    loop {
+        let job = {
+            let mut st = shared.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = st.queue.pop_front() {
+                    shared.job_space.notify_one();
+                    break job;
+                }
+                if st.closed {
+                    return;
+                }
+                st = shared.job_ready.wait(st).unwrap();
+            }
+        };
+        // Contain job panics: the worker (and its state) stays alive for
+        // later jobs — a dead worker would stall whoever shares the queue.
+        // The job may have left `state` logically torn; stateful callers
+        // (e.g. the serve runner's ledger) repair it in their own catch.
+        let outcome = catch_unwind(AssertUnwindSafe(|| job(&mut *state)));
+        if let Err(payload) = outcome {
+            let mut slot = match shared.panic.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+    }
+}
+
+/// Erase the borrow lifetime of a pool job.
+///
+/// # Safety
+/// The caller must guarantee the job is consumed or dropped before `'a`
+/// ends. [`PersistentPool::map_with`] enforces this with a completion
+/// latch whose guard blocks the borrowing frame until every job is gone.
+unsafe fn erase_job_lifetime<'a, S>(
+    job: Box<dyn FnOnce(&mut S) + Send + 'a>,
+) -> Box<dyn FnOnce(&mut S) + Send + 'static> {
+    std::mem::transmute(job)
+}
+
+/// The shared serial path: one state, items in order on the caller's
+/// thread — what every parallel entry point degrades to for `workers <= 1`
+/// (or when thread spawn fails), keeping serial-vs-parallel bit-identity
+/// structural.
+pub(crate) fn run_inline<S, T, R>(
+    items: &[T],
+    init: impl Fn() -> S,
+    f: impl Fn(&mut S, usize, &T) -> R,
+) -> (Vec<R>, Vec<S>) {
+    let mut state = init();
+    let results = items.iter().enumerate().map(|(i, t)| f(&mut state, i, t)).collect();
+    (results, vec![state])
+}
+
+/// Counts outstanding map jobs; zero means every job closure is dropped.
+#[derive(Default)]
+struct Latch {
+    outstanding: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn add(&self) {
+        *self.outstanding.lock().unwrap() += 1;
+    }
+
+    fn done_one(&self) {
+        let mut n = self.outstanding.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut n = self.outstanding.lock().unwrap();
+        while *n > 0 {
+            n = self.done.wait(n).unwrap();
+        }
+    }
+}
+
+/// Dropped when a map job's closure (run or unrun) is destroyed.
+struct Ticket(Arc<Latch>);
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        self.0.done_one();
+    }
+}
+
+/// Blocks in Drop until every ticket issued from the latch is gone — the
+/// frame that erased job lifetimes cannot exit (return or unwind) while a
+/// job still borrows its arguments.
+struct CompletionGuard(Arc<Latch>);
+
+impl Drop for CompletionGuard {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
 
 /// Map `f(index, item)` over `items` on up to `workers` threads,
 /// preserving input order in the output.
 ///
-/// `workers <= 1` (or a single item) runs inline on the caller's thread —
-/// the serial path is the parallel path with the pool turned off, not a
-/// separate code path.
+/// `workers <= 1` (or a single item) runs inline on the caller's thread;
+/// otherwise a **transient** [`PersistentPool`] lives for the duration of
+/// the call. Long-lived callers (`Session`, `ServeHandle`) cache a pool
+/// instead and skip the per-call spawn tax.
 pub fn parallel_map<T, R, F>(items: &[T], workers: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -27,9 +504,9 @@ where
     results
 }
 
-/// Like [`parallel_map`], but each worker thread carries private mutable
-/// state created by `init` (one per worker, on the worker's own thread).
-/// Returns the in-order results plus the per-worker states for the caller
+/// Like [`parallel_map`], but each chunk carries private mutable state
+/// created by `init` (one per chunk, on the executing worker's thread).
+/// Returns the in-order results plus the per-chunk states for the caller
 /// to aggregate (e.g. merging worker memory ledgers).
 pub fn parallel_map_with<S, T, R, FI, F>(
     items: &[T],
@@ -47,54 +524,14 @@ where
     let n = items.len();
     let w = workers.max(1).min(n.max(1));
     if w <= 1 {
-        let mut state = init();
-        let results = items.iter().enumerate().map(|(i, t)| f(&mut state, i, t)).collect();
-        return (results, vec![state]);
+        return run_inline(items, &init, &f);
     }
-
-    let chunk = n.div_ceil(w);
-    let mut results = Vec::with_capacity(n);
-    let mut states = Vec::with_capacity(w);
-    std::thread::scope(|scope| {
-        let init = &init;
-        let f = &f;
-        let mut handles = Vec::with_capacity(w);
-        for (ci, chunk_items) in items.chunks(chunk).enumerate() {
-            let base = ci * chunk;
-            handles.push(scope.spawn(move || {
-                let mut state = init();
-                let out: Vec<R> = chunk_items
-                    .iter()
-                    .enumerate()
-                    .map(|(j, t)| f(&mut state, base + j, t))
-                    .collect();
-                (out, state)
-            }));
-        }
-        // Chunks are contiguous and joined in spawn order, so extending
-        // reconstitutes the input order exactly. A panicking worker is
-        // re-raised on the caller's thread, but only after every other
-        // worker has been joined — callers see the original panic payload
-        // and never a deadlock or a process abort.
-        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
-        for h in handles {
-            match h.join() {
-                Ok((out, state)) => {
-                    results.extend(out);
-                    states.push(state);
-                }
-                Err(payload) => {
-                    if panic.is_none() {
-                        panic = Some(payload);
-                    }
-                }
-            }
-        }
-        if let Some(payload) = panic {
-            std::panic::resume_unwind(payload);
-        }
-    });
-    (results, states)
+    match PersistentPool::new(w, "anode-map", || ()) {
+        Ok(pool) => pool.map_with(w, items, init, f),
+        // Could not spawn (thread exhaustion): degrade to the serial path
+        // rather than fail — the result is bit-identical by construction.
+        Err(_) => run_inline(items, &init, &f),
+    }
 }
 
 #[cfg(test)]
@@ -159,5 +596,101 @@ mod tests {
         assert!(results.is_empty());
         assert_eq!(states.len(), 1);
         assert_eq!(parallel_map(&[5u8], 4, |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn persistent_pool_reuse_preserves_order_across_calls() {
+        let pool: PersistentPool = PersistentPool::new(4, "t-reuse", || ()).unwrap();
+        let items: Vec<usize> = (0..50).collect();
+        for round in 1..=3 {
+            let out = pool.map(4, &items, |i, &x| {
+                assert_eq!(i, x);
+                x * round
+            });
+            let want: Vec<usize> = items.iter().map(|&x| x * round).collect();
+            assert_eq!(out, want, "round={round}");
+        }
+    }
+
+    #[test]
+    fn persistent_pool_limit_bounds_chunk_count() {
+        let pool: PersistentPool = PersistentPool::new(8, "t-limit", || ()).unwrap();
+        let items: Vec<u32> = (0..24).collect();
+        let count_and_copy = |c: &mut usize, _i: usize, x: &u32| {
+            *c += 1;
+            *x
+        };
+        let (results, states) = pool.map_with(2, &items, || 0usize, count_and_copy);
+        assert_eq!(results, items);
+        assert_eq!(states.len(), 2, "limit must bound the chunk fan-out");
+        assert_eq!(states.iter().sum::<usize>(), items.len());
+    }
+
+    #[test]
+    fn persistent_pool_survives_map_panic_and_stays_usable() {
+        let pool: PersistentPool = PersistentPool::new(4, "t-panic", || ()).unwrap();
+        let items: Vec<usize> = (0..32).collect();
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map(4, &items, |_, &x| {
+                if x == 7 {
+                    panic!("kapow {x}");
+                }
+                x
+            })
+        }));
+        assert!(outcome.is_err(), "map panic must propagate to the caller");
+        // The panic was contained on the worker: the pool keeps serving.
+        let out = pool.map(4, &items, |_, &x| x + 1);
+        assert_eq!(out[31], 32);
+        // No worker died, and no payload is pending at join.
+        let states = pool.join();
+        assert_eq!(states.len(), 4);
+    }
+
+    #[test]
+    fn persistent_pool_submit_jobs_mutate_worker_state_and_join_returns_it() {
+        let pool: PersistentPool<usize> = PersistentPool::new(3, "t-state", || 0usize).unwrap();
+        for _ in 0..30 {
+            assert!(pool.submit(Box::new(|n| *n += 1)).is_ok());
+        }
+        let states = pool.join();
+        assert_eq!(states.len(), 3);
+        assert_eq!(states.iter().sum::<usize>(), 30, "drain-on-close must run every queued job");
+        // Submit after close hands the job back instead of dropping it.
+        assert!(pool.submit(Box::new(|_| {})).is_err());
+    }
+
+    #[test]
+    fn panicking_worker_init_fails_maps_loudly_instead_of_hanging() {
+        let pool: PersistentPool<usize> =
+            PersistentPool::new(2, "t-init-panic", || panic!("init boom")).unwrap();
+        let items: Vec<usize> = (0..8).collect();
+        // Whether the dead workers closed the pool before or after these
+        // jobs were submitted, the map must surface a panic — never park
+        // forever on a queue nothing drains.
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| pool.map(2, &items, |_, &x| x)));
+        assert!(outcome.is_err(), "map on a dead pool must fail, not hang");
+        // The init payload itself surfaces at join.
+        let (states, panic) = pool.join_collect();
+        assert!(states.is_empty(), "no worker survived init");
+        let msg = panic
+            .as_ref()
+            .and_then(|p| p.downcast_ref::<&str>())
+            .copied()
+            .unwrap_or_default();
+        assert!(msg.contains("init boom"), "init payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn submitted_job_panic_is_reraised_at_join_after_all_workers_joined() {
+        let pool: PersistentPool<usize> = PersistentPool::new(2, "t-joinpanic", || 0usize).unwrap();
+        assert!(pool.submit(Box::new(|_| panic!("late boom"))).is_ok());
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| pool.join()));
+        let payload = outcome.expect_err("job panic must re-raise at join");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert!(msg.contains("late boom"), "original payload lost: {msg:?}");
+        // The payload was consumed; a second join is clean and empty.
+        let (states, panic) = pool.join_collect();
+        assert!(states.is_empty() && panic.is_none());
     }
 }

@@ -2,9 +2,10 @@
 //!
 //! Stub-safe tests (synthetic manifest, no compiled artifacts) prove the
 //! shared layers are `Send + Sync` and survive concurrent use; the
-//! artifact-gated tests prove the strong property: parallel execution is
-//! **bit-identical** to serial, and per-worker ledger merges account for
-//! exactly the serial traffic.
+//! artifact-gated tests prove the strong property: parallel execution —
+//! evaluation, prediction *and* data-parallel gradient accumulation
+//! across every registered strategy — is **bit-identical** to serial,
+//! and per-worker ledger merges account for exactly the serial traffic.
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -159,6 +160,33 @@ fn concurrent_compile_misses_fail_cleanly_on_stub() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+#[test]
+fn pooled_paths_error_cleanly_and_stay_reusable_on_stub() {
+    // The synthetic manifest builds an engine but module *execution*
+    // fails on the stub: the pooled fan-outs must surface that error —
+    // no hang, no panic — and the session's cached pool must stay
+    // reusable for later calls.
+    let dir = fake_artifacts_dir("pooled_paths");
+    let engine = Engine::builder().artifacts(&dir).build().unwrap();
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let cfg = engine.config().clone();
+    let imgs = Tensor::zeros(&[cfg.batch, cfg.image, cfg.image, 3]);
+    let y = Tensor::zeros(&[cfg.batch]);
+
+    let eval: Vec<(Tensor, Tensor)> = (0..4).map(|_| (imgs.clone(), y.clone())).collect();
+    for round in 0..2 {
+        assert!(session.evaluate_with_workers(&eval, 4).is_err(), "round {round}");
+    }
+    let micro: Vec<(Tensor, Tensor)> = (0..4).map(|_| (imgs.clone(), y.clone())).collect();
+    assert!(session.step_accumulate_with_workers(&micro, 4).is_err());
+
+    // Validation failures fire before any execution or pool use.
+    assert!(session.step_accumulate(&[]).is_err(), "empty micro-batch list must be rejected");
+    let bad = vec![(Tensor::zeros(&[1, 2, 2, 3]), y.clone())];
+    assert!(session.step_accumulate(&bad).is_err(), "wrong batch shape must be rejected");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 // ---------------------------------------------------------------------------
 // Artifact-gated: bit-identical parallel execution
 // ---------------------------------------------------------------------------
@@ -208,6 +236,66 @@ fn two_threaded_sessions_match_serial_training_bitwise() {
 
     assert_eq!(serial_a, thread_a, "session A diverged under concurrency");
     assert_eq!(serial_b, thread_b, "session B diverged under concurrency");
+}
+
+/// Train `steps` accumulate-steps (`accum` micro-batches each) from a
+/// fresh session with the given gradient strategy and worker count.
+/// Returns (per-step loss bits, final param bits, training ledger
+/// traffic) for bitwise comparison against other worker counts.
+fn train_accumulate(
+    engine: &Engine,
+    method: &str,
+    workers: usize,
+    accum: usize,
+    steps: usize,
+) -> (Vec<u32>, Vec<u32>, u64) {
+    let mut session = engine.session(SessionConfig::with_method(method)).unwrap();
+    let cfg = engine.config().clone();
+    let ds = SyntheticCifar::new(cfg.num_classes, 77, 0.1);
+    let traffic0 = session.memory().total_traffic();
+    let mut losses = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let micro: Vec<(Tensor, Tensor)> = (0..accum)
+            .map(|m| {
+                let (imgs, labels) = ds.generate(cfg.batch, (s * accum + m) as u64);
+                let lf: Vec<f32> = labels.iter().map(|&l| l as f32).collect();
+                (imgs, Tensor::from_vec(vec![cfg.batch], lf).unwrap())
+            })
+            .collect();
+        let stats = session.step_accumulate_with_workers(&micro, workers).unwrap();
+        assert!(stats.finite, "{method} diverged at step {s} (workers={workers})");
+        losses.push(stats.loss.to_bits());
+    }
+    let mut params = Vec::new();
+    for p in session.params() {
+        params.extend(p.data().iter().map(|x| x.to_bits()));
+    }
+    assert_eq!(session.memory().unknown_frees(), 0, "{method} workers={workers}");
+    let traffic = session.memory().total_traffic() - traffic0;
+    (losses, params, traffic)
+}
+
+/// The PR 4 acceptance grid: workers ∈ {1, 2, 4, 8} × every registered
+/// gradient strategy, asserting parameters and losses bitwise-equal to
+/// the serial run after k accumulate-steps, plus ledger-merge traffic
+/// equality on the training path.
+#[test]
+fn data_parallel_grad_accumulation_is_bit_identical_for_all_strategies() {
+    let Some(engine) = real_engine() else { return };
+    let (accum, steps) = (4usize, 2usize);
+    for method in ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"] {
+        let (loss1, params1, traffic1) = train_accumulate(&engine, method, 1, accum, steps);
+        for workers in [2usize, 4, 8] {
+            let (loss_w, params_w, traffic_w) =
+                train_accumulate(&engine, method, workers, accum, steps);
+            assert_eq!(loss1, loss_w, "{method}: losses diverged at workers={workers}");
+            assert_eq!(params1, params_w, "{method}: params diverged at workers={workers}");
+            assert_eq!(
+                traffic1, traffic_w,
+                "{method}: training ledger traffic diverged at workers={workers}"
+            );
+        }
+    }
 }
 
 #[test]

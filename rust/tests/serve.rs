@@ -15,11 +15,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anode::api::{argmax_rows, Engine, Prediction, PredictStats, SessionConfig};
+use anode::api::{argmax_rows, head_logits, Engine, Prediction, PredictStats, SessionConfig};
 use anode::data::SyntheticCifar;
 use anode::memory::{Category, MemoryLedger};
 use anode::runtime::Result;
-use anode::serve::{split_examples, BatchRunner, Pending, ServeConfig, ServeHandle};
+use anode::serve::{split_examples, BatchRunner, HostTailRunner, Pending, ServeConfig, ServeHandle};
 use anode::tensor::Tensor;
 
 const WAIT: Duration = Duration::from_secs(20);
@@ -340,6 +340,95 @@ fn merged_worker_ledger_traffic_equals_serial() {
         traffic.push(report.memory.total_traffic());
     }
     assert_eq!(traffic[0], traffic[1], "parallel ledger traffic diverged from serial");
+}
+
+#[test]
+fn hot_swap_changes_subsequent_replies_without_drain() {
+    let (b, h, c, k) = (2usize, 2usize, 3usize, 4usize);
+    let runner = Arc::new(HostTailRunner::new(b, h, c, k));
+    let shape = runner.example_shape();
+    let handle = ServeHandle::spawn(runner, ServeConfig::default().workers(2)).unwrap();
+    let ex = example(&shape, 5);
+    let before =
+        handle.submit(ex.clone()).unwrap().wait_timeout(WAIT).unwrap().expect("pre-swap reply");
+
+    // Roll out a new head between batches: no drain, no restart.
+    let w = Tensor::full(&[c, k], 0.5);
+    let bias = Tensor::full(&[k], 0.25);
+    handle.swap_params(vec![w.clone(), bias.clone()]).unwrap();
+    let after =
+        handle.submit(ex.clone()).unwrap().wait_timeout(WAIT).unwrap().expect("post-swap reply");
+
+    // The post-swap reply must equal a direct run of the new head over
+    // this example (row 0 of a zero-padded batch).
+    let ex_len: usize = shape.iter().product();
+    let mut stacked = Tensor::zeros(&[b, shape[0], shape[1], shape[2]]);
+    stacked.data_mut()[..ex_len].copy_from_slice(ex.data());
+    let expected = head_logits(&stacked, &w, &bias).unwrap();
+    assert_eq!(after.logits.data(), &expected.data()[..k]);
+    assert_ne!(before.logits.data(), after.logits.data(), "swap must change served values");
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.requests, 2);
+}
+
+#[test]
+fn hot_swap_validates_shapes_and_unsupported_runners_reject() {
+    let runner = Arc::new(HostTailRunner::new(2, 2, 3, 4));
+    let handle = ServeHandle::spawn(runner, ServeConfig::default()).unwrap();
+    // Wrong arity: the head is exactly [w (c, k), bias (k)].
+    assert!(handle.swap_params(vec![Tensor::zeros(&[3, 4])]).is_err());
+    // Wrong shapes.
+    assert!(handle.swap_params(vec![Tensor::zeros(&[3, 5]), Tensor::zeros(&[5])]).is_err());
+    // Matching count + shapes succeeds.
+    assert!(handle.swap_params(vec![Tensor::zeros(&[3, 4]), Tensor::zeros(&[4])]).is_ok());
+    handle.shutdown().unwrap();
+
+    // TestRunner keeps the default implementation: hot-swap unsupported.
+    let runner = Arc::new(TestRunner::new(2, &[2, 2], 3));
+    let handle = ServeHandle::spawn(runner, ServeConfig::default()).unwrap();
+    let err = handle.swap_params(Vec::new()).unwrap_err().to_string();
+    assert!(err.contains("hot-swap"), "{err}");
+    handle.shutdown().unwrap();
+}
+
+/// Artifact-gated: a checkpoint trained after the pipeline started rolls
+/// out via `Session::push_params` and serves values bit-identical to
+/// `predict_batches` over the stepped parameters.
+#[test]
+fn hot_swap_rollout_matches_predict_on_real_artifacts() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let engine = Engine::builder().artifacts("artifacts").build().unwrap();
+    let cfg = engine.config().clone();
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let ds = SyntheticCifar::new(cfg.num_classes, 11, 0.1);
+    let (train_imgs, train_labels) = ds.generate(cfg.batch, 0);
+    let labels_f: Vec<f32> = train_labels.iter().map(|&l| l as f32).collect();
+    let y = Tensor::from_vec(vec![cfg.batch], labels_f).unwrap();
+    let (serve_imgs, _) = ds.generate(cfg.batch, 1);
+
+    let config = ServeConfig::default().max_delay_ms(600_000).workers(2).queue_cap(256);
+    let handle = session.serve(config).unwrap();
+    // Train, then roll the new weights out without draining the queue.
+    session.step(&train_imgs, &y).unwrap();
+    session.push_params(&handle).unwrap();
+    let expected = session.predict_batches_with_workers(&[serve_imgs.clone()], 1).unwrap();
+    let pred = &expected.predictions[0];
+    let k = *pred.logits.shape().last().unwrap();
+
+    let pendings: Vec<Pending> = split_examples(&serve_imgs)
+        .unwrap()
+        .into_iter()
+        .map(|ex| handle.submit(ex).unwrap())
+        .collect();
+    for (r, pending) in pendings.into_iter().enumerate() {
+        let reply = pending.wait_timeout(Duration::from_secs(120)).unwrap().expect("reply");
+        assert_eq!(reply.class, pred.classes[r], "request {r}");
+        assert_eq!(reply.logits.data(), &pred.logits.data()[r * k..(r + 1) * k], "request {r}");
+    }
+    handle.shutdown().unwrap();
 }
 
 /// Artifact-gated: the serve path must be bit-identical to
