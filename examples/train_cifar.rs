@@ -35,6 +35,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         workers: args.get_parse_or("workers", 1),
         grad_accum: args.get_parse_or("grad-accum", 1),
         grad_workers: args.get_parse_or("grad-workers", 1),
+        devices: args.get_parse_or("devices", 1),
     };
     let csv = args.get("csv").map(|s| s.to_string());
     args.warn_unknown();

@@ -14,12 +14,17 @@
 //! predict path (reused persistent pool vs per-call spawn), emitted to
 //! `BENCH_train.json`.
 //!
+//! The `shard_throughput` scenario times pool-per-device sharding on the
+//! `runtime::sim` simulated-device harness (1 device vs 4, training and
+//! predict, with bit-identity and ledger-traffic checks), emitted to
+//! `BENCH_shard.json` — it runs on every build, stub included.
+//!
 //! `cargo bench --bench step_throughput` (method timings need
-//! `make artifacts`; `predict_throughput`, `serve_throughput` and
-//! `train_throughput` also run on the offline stub, where they time the
-//! host-side serving tail). `ANODE_BENCH_QUICK=1` shrinks
-//! iteration/request counts for the CI bench-smoke job while still
-//! writing all three `BENCH_*.json` artifacts.
+//! `make artifacts`; `predict_throughput`, `serve_throughput`,
+//! `train_throughput` and `shard_throughput` also run on the offline
+//! stub). `ANODE_BENCH_QUICK=1` shrinks iteration/request counts for the
+//! CI bench-smoke job while still writing all four `BENCH_*.json`
+//! artifacts.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -27,6 +32,7 @@ use std::time::{Duration, Instant};
 use anode::api::{head_logits, Engine, SessionConfig};
 use anode::data::SyntheticCifar;
 use anode::memory::MemoryLedger;
+use anode::runtime::sim::{write_artifacts, SimSpec};
 use anode::serve::{split_examples, BatchRunner, HostTailRunner, ServeConfig, ServeHandle};
 use anode::tensor::Tensor;
 use anode::util::bench::{bench, black_box, percentile, quick_mode};
@@ -41,6 +47,7 @@ fn main() {
     predict_throughput(engine.as_ref().ok());
     serve_throughput(engine.as_ref().ok());
     train_throughput(engine.as_ref().ok());
+    shard_throughput();
 }
 
 fn method_timings(engine: &Engine) {
@@ -478,4 +485,124 @@ fn train_throughput(engine: Option<&Engine>) {
         Ok(()) => println!("wrote BENCH_train.json"),
         Err(e) => eprintln!("could not write BENCH_train.json: {e}"),
     }
+}
+
+/// Pool-per-device sharding on **simulated devices**, emitted to
+/// `BENCH_shard.json`. Runs on every build: the model is the deterministic
+/// `runtime::sim` harness (synthetic artifacts + value-level simulation),
+/// so the full multi-device engine — per-device registries, device-pinned
+/// worker pools, the load-aware `ShardRouter` — executes offline. Times a
+/// data-parallel training step and a `predict_batches` sweep at 1 device
+/// vs `DEVICES` devices, and asserts params/losses/logits bit-identical to
+/// the serial run (the §6d invariant) plus ledger traffic equality.
+fn shard_throughput() {
+    println!("\n=== shard_throughput — pool-per-device sharding (simulated devices) ===\n");
+    const DEVICES: usize = 4;
+    const WORKERS: usize = 2; // per device
+    let quick = quick_mode();
+    let iters = if quick { 2 } else { 5 };
+    let accum = if quick { 8 } else { 16 };
+    let steps = 2;
+    let n_predict = if quick { 16 } else { 64 };
+
+    let dir = std::env::temp_dir().join(format!("anode_bench_shard_{}", std::process::id()));
+    if let Err(e) = write_artifacts(&dir, &SimSpec::default()) {
+        eprintln!("could not write sim artifacts: {e} — skipping shard_throughput");
+        return;
+    }
+    let engine_for = |devices: usize| {
+        Engine::builder().artifacts(&dir).devices(devices).simulate(true).build().unwrap()
+    };
+    let one = engine_for(1);
+    let sharded = engine_for(DEVICES);
+
+    // Deterministic inputs from the spec's shared generators (the same
+    // ones rust/tests/sharding.rs uses).
+    let spec = SimSpec::default();
+    let micro: Vec<(Tensor, Tensor)> =
+        (0..accum).map(|m| (spec.image_batch(m), spec.label_batch(m))).collect();
+    let batches: Vec<Tensor> = (0..n_predict).map(|k| spec.image_batch(k + 1000)).collect();
+
+    // --- training step: 1 device vs DEVICES devices -------------------
+    let mut s1 = one.session(SessionConfig::with_method("anode")).unwrap();
+    let one_dev = bench(&format!("step_accumulate[1 device x {WORKERS}]"), 1, iters, || {
+        black_box(s1.step_accumulate_with_workers(&micro, WORKERS).unwrap());
+    });
+    let mut sd = sharded.session(SessionConfig::with_method("anode")).unwrap();
+    let shard = bench(&format!("step_accumulate[{DEVICES} devices x {WORKERS}]"), 1, iters, || {
+        black_box(sd.step_accumulate_with_workers(&micro, WORKERS).unwrap());
+    });
+
+    // Bit-identity + ledger traffic equality: fresh sessions, `steps`
+    // accumulate-steps, compared against the serial (inline) run.
+    let train_run = |engine: &Engine, workers: usize| {
+        let mut s = engine.session(SessionConfig::with_method("anode")).unwrap();
+        let t0 = s.memory().total_traffic();
+        let mut losses = Vec::new();
+        for _ in 0..steps {
+            losses.push(s.step_accumulate_with_workers(&micro, workers).unwrap().loss.to_bits());
+        }
+        let params: Vec<u32> =
+            s.params().iter().flat_map(|p| p.data().iter().map(|x| x.to_bits())).collect();
+        (losses, params, s.memory().total_traffic() - t0)
+    };
+    let (loss_serial, params_serial, traffic_serial) = train_run(&one, 1);
+    let (loss_shard, params_shard, traffic_shard) = train_run(&sharded, WORKERS);
+    let train_identical = loss_serial == loss_shard && params_serial == params_shard;
+    let traffic_equal = traffic_serial == traffic_shard;
+
+    // --- predict sweep: 1 device vs DEVICES devices --------------------
+    let p1 = one.session(SessionConfig::with_method("anode")).unwrap();
+    let pd = sharded.session(SessionConfig::with_method("anode")).unwrap();
+    let predict_one = bench(&format!("predict_batches[1 device x {WORKERS}]"), 1, iters, || {
+        black_box(p1.predict_batches_with_workers(&batches, WORKERS).unwrap());
+    });
+    let predict_shard =
+        bench(&format!("predict_batches[{DEVICES} devices x {WORKERS}]"), 1, iters, || {
+            black_box(pd.predict_batches_with_workers(&batches, WORKERS).unwrap());
+        });
+    let serial_pred = p1.predict_batches_with_workers(&batches, 1).unwrap();
+    let shard_pred = pd.predict_batches_with_workers(&batches, WORKERS).unwrap();
+    let predict_identical = serial_pred
+        .predictions
+        .iter()
+        .zip(&shard_pred.predictions)
+        .all(|(a, b)| a.classes == b.classes && a.logits.data() == b.logits.data());
+    let identical = train_identical && predict_identical;
+
+    println!("{}", one_dev.report());
+    println!("{}", shard.report());
+    println!("{}", predict_one.report());
+    println!("{}", predict_shard.report());
+    let step_1 = one_dev.median.as_secs_f64();
+    let step_d = shard.median.as_secs_f64();
+    let pred_1 = predict_one.median.as_secs_f64();
+    let pred_d = predict_shard.median.as_secs_f64();
+    let step_speedup = step_1 / step_d.max(1e-12);
+    let predict_speedup = pred_1 / pred_d.max(1e-12);
+    println!(
+        "sharding {DEVICES}x{WORKERS}: step x{step_speedup:.2}, predict x{predict_speedup:.2}  \
+         bit-identical to serial: {identical}  traffic equal: {traffic_equal}"
+    );
+    if !identical {
+        eprintln!("WARNING: sharded run diverged bitwise from serial");
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"shard_throughput\",\n  \"mode\": \"sim\",\n  \
+         \"devices\": {DEVICES},\n  \"workers_per_device\": {WORKERS},\n  \
+         \"micro_batches\": {accum},\n  \"predict_batches\": {n_predict},\n  \
+         \"one_device_step_median_secs\": {step_1:.6},\n  \
+         \"sharded_step_median_secs\": {step_d:.6},\n  \
+         \"step_speedup\": {step_speedup:.3},\n  \
+         \"one_device_predict_median_secs\": {pred_1:.6},\n  \
+         \"sharded_predict_median_secs\": {pred_d:.6},\n  \
+         \"predict_speedup\": {predict_speedup:.3},\n  \
+         \"bit_identical\": {identical},\n  \"traffic_equal\": {traffic_equal}\n}}\n"
+    );
+    match std::fs::write("BENCH_shard.json", &json) {
+        Ok(()) => println!("wrote BENCH_shard.json"),
+        Err(e) => eprintln!("could not write BENCH_shard.json: {e}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }

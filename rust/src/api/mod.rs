@@ -39,6 +39,14 @@
 //!   gradients over micro-batches across the same pool, reducing in
 //!   fixed micro-batch order so parameters and losses stay bit-identical
 //!   to the serial run for every worker count (rust/DESIGN.md §6c).
+//! * **Multi-device sharding** — [`EngineBuilder::devices`] opens one
+//!   registry (PJRT client + executable cache) per device; sessions run
+//!   one pool of device-pinned workers per device and route contiguous
+//!   chunks to the least-loaded device, so every parallel path above
+//!   scales across devices with results still bit-identical to serial
+//!   for every (devices × workers) grid point. `EngineBuilder::simulate`
+//!   backs the devices with the deterministic [`crate::runtime::sim`]
+//!   harness so the whole stack runs offline (rust/DESIGN.md §6d).
 //!
 //! ## Quickstart
 //!
@@ -61,7 +69,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::models::{ModelConfig, ParamIndex};
-use crate::runtime::ArtifactRegistry;
+use crate::runtime::{sim_devices_env, ArtifactRegistry, DeviceSet};
 
 pub use crate::data::make_eval_batches;
 pub use crate::models::{Arch, GradMethod, Solver};
@@ -91,6 +99,8 @@ pub struct EngineBuilder {
     num_classes: usize,
     solver: Solver,
     strategies: StrategyRegistry,
+    devices: Option<usize>,
+    simulate: bool,
 }
 
 impl Default for EngineBuilder {
@@ -102,6 +112,8 @@ impl Default for EngineBuilder {
             num_classes: 10,
             solver: Solver::Euler,
             strategies: StrategyRegistry::builtin(),
+            devices: None,
+            simulate: false,
         }
     }
 }
@@ -151,33 +163,73 @@ impl EngineBuilder {
         self
     }
 
+    /// Number of devices to shard over (default 1; see rust/DESIGN.md
+    /// §6d). The engine opens one registry — one PJRT client and one
+    /// executable cache — per device; sessions route their parallel paths
+    /// across per-device worker pools. When no explicit count (and no
+    /// shared [`EngineBuilder::registry`]) is given, `ANODE_SIM_DEVICES`
+    /// sets the default, so the whole suite can run against a simulated
+    /// multi-device topology.
+    pub fn devices(mut self, devices: usize) -> Self {
+        self.devices = Some(devices.max(1));
+        self
+    }
+
+    /// Execute through the deterministic simulation backend
+    /// ([`crate::runtime::sim`]) instead of PJRT — the offline
+    /// multi-device harness: values depend only on (module, inputs), so
+    /// train/predict/serve run on the vendored xla stub with bit-stable
+    /// numbers. Ignored when [`EngineBuilder::registry`] supplies an open
+    /// registry (the supplied registry's mode wins).
+    pub fn simulate(mut self, yes: bool) -> Self {
+        self.simulate = yes;
+        self
+    }
+
     /// Open (or adopt) the registry, validate the manifest against the
     /// requested configuration, and resolve every module name into typed
     /// handles. All validation is eager: a broken or incomplete artifact
     /// set fails here, with the offending module/param named.
     pub fn build(self) -> Result<Engine> {
-        let reg = match self.registry {
-            Some(r) => r,
-            None => Arc::new(ArtifactRegistry::open(&self.artifacts)?),
+        let devices = match self.registry {
+            Some(r) => {
+                // A shared registry pins device 0; extra devices (explicit
+                // only — the env default never multiplies a shared
+                // registry) open from the same artifact dir and mode.
+                match self.devices.unwrap_or(1) {
+                    0 | 1 => DeviceSet::single(r),
+                    n => DeviceSet::with_primary(r, n)?,
+                }
+            }
+            None => {
+                let count = self.devices.or_else(sim_devices_env).unwrap_or(1);
+                if self.simulate {
+                    DeviceSet::open_simulated(&self.artifacts, count)?
+                } else {
+                    DeviceSet::open(&self.artifacts, count)?
+                }
+            }
         };
-        let cfg = ModelConfig::from_registry(&reg, self.arch, self.num_classes)?;
+        let reg = devices.primary();
+        let cfg = ModelConfig::from_registry(reg, self.arch, self.num_classes)?;
         // Params: key exists and its layout matches the model structure.
         let layout = reg.param_layout(&cfg.params_key())?;
         let _ = ParamIndex::from_layout(layout, &cfg)?;
         // Modules: every reachable name resolves, with arity captured.
-        let modules = ModuleSet::resolve(&reg, &cfg, self.solver)?;
-        Ok(Engine { reg, cfg, solver: self.solver, modules, strategies: self.strategies })
+        let modules = ModuleSet::resolve(reg, &cfg, self.solver)?;
+        Ok(Engine { devices, cfg, solver: self.solver, modules, strategies: self.strategies })
     }
 }
 
 /// A validated, ready-to-serve model configuration: the open artifact
-/// registry, the resolved module handles, and the gradient-strategy
-/// registry. Sessions borrow the engine, so one engine can back many
-/// concurrent sessions sharing one compiled-module cache — and since the
-/// engine is `Sync`, those sessions can live on different threads (see the
-/// "Concurrency model" section of rust/DESIGN.md).
+/// registries (one per device — see [`DeviceSet`]), the resolved module
+/// handles, and the gradient-strategy registry. Sessions borrow the
+/// engine, so one engine can back many concurrent sessions sharing one
+/// compiled-module cache per device — and since the engine is `Sync`,
+/// those sessions can live on different threads (see the "Concurrency
+/// model" section of rust/DESIGN.md; multi-device sharding is §6d).
 pub struct Engine {
-    reg: Arc<ArtifactRegistry>,
+    devices: DeviceSet,
     cfg: ModelConfig,
     solver: Solver,
     modules: ModuleSet,
@@ -224,13 +276,26 @@ impl Engine {
 
     /// Borrow the underlying artifact registry (advanced: direct module
     /// calls outside the model structure, e.g. the tiny gradcheck blocks).
+    /// With multiple devices this is the **primary** (device 0) registry.
     pub fn registry(&self) -> &ArtifactRegistry {
-        &self.reg
+        self.devices.primary()
     }
 
-    /// Share the registry with another engine builder (or another thread).
+    /// Share the primary registry with another engine builder (or another
+    /// thread).
     pub fn shared_registry(&self) -> Arc<ArtifactRegistry> {
-        self.reg.clone()
+        self.devices.primary().clone()
+    }
+
+    /// The engine's device topology: one registry (client + executable
+    /// cache) per device. Single-device engines have a one-entry set.
+    pub fn device_set(&self) -> &DeviceSet {
+        &self.devices
+    }
+
+    /// Devices this engine shards over (>= 1).
+    pub fn device_count(&self) -> usize {
+        self.devices.count()
     }
 }
 

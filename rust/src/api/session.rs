@@ -5,18 +5,21 @@
 //! latency/memory stats, and the single-request serving front end
 //! ([`Session::serve`] → [`crate::serve`]).
 //!
-//! A session splits into the shared-immutable [`ExecutionCore`] (config,
-//! module handles, strategy — behind an `Arc`, safe to fan across worker
-//! threads) and the per-session mutable state it owns (parameters, SGD
-//! momentum, the memory ledger). `evaluate` and `predict_batches` exploit
-//! the split: micro-batches fan out over a lazily-created **persistent**
-//! worker pool cached on the session ([`SessionConfig::workers`]; no
-//! per-call thread-spawn tax), each chunk metering its own
-//! [`MemoryLedger`], merged afterward into aggregate stats. Training fans
-//! out the same way: [`Session::step_accumulate`] runs forward + strategy
-//! backward per micro-batch across [`SessionConfig::grad_workers`]
-//! workers and reduces gradients in fixed micro-batch order, so the
-//! update is bit-identical to serial for every worker count.
+//! A session splits into the shared-immutable [`ExecutionCore`] (one per
+//! engine device: config, module handles, strategy — behind an `Arc`,
+//! safe to fan across worker threads) and the per-session mutable state
+//! it owns (parameters, SGD momentum, the memory ledger). `evaluate` and
+//! `predict_batches` exploit the split: contiguous chunks fan out over
+//! lazily-created **persistent** per-device worker pools cached on the
+//! session ([`SessionConfig::workers`] threads per device, pinned to
+//! their device's core at spawn; no per-call thread-spawn tax), routed to
+//! the least-loaded device, each chunk metering its own [`MemoryLedger`],
+//! folded afterward into aggregate stats (merge within a device, max
+//! across devices — rust/DESIGN.md §6d). Training fans out the same way:
+//! [`Session::step_accumulate`] runs forward + strategy backward per
+//! micro-batch across [`SessionConfig::grad_workers`] workers per device
+//! and reduces gradients in fixed micro-batch order, so the update is
+//! bit-identical to serial for every (devices, workers) combination.
 
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -27,10 +30,11 @@ use crate::memory::{Category, MemoryLedger};
 use crate::metrics::{Curve, CurvePoint, Mean};
 use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{Result, RuntimeError};
-use crate::serve::{ServeConfig, ServeHandle, SessionRunner};
+use crate::serve::{BatchRunner, ServeConfig, ServeHandle, SessionRunner};
 use crate::tensor::Tensor;
-use crate::util::pool::{run_inline, PersistentPool};
+use crate::util::pool::{run_inline, sharded_map_with, PersistentPool, ShardRouter};
 
+use super::modules::ModuleSet;
 use super::Engine;
 
 /// Per-session configuration: which gradient strategy backs `step`, the
@@ -46,19 +50,22 @@ pub struct SessionConfig {
     pub weight_decay: f32,
     /// Global gradient-norm clip; `None` disables clipping.
     pub clip_norm: Option<f32>,
-    /// Worker threads for the data-parallel serving paths
+    /// Worker threads **per device** for the data-parallel serving paths
     /// ([`Session::evaluate`], [`Session::predict_batches`]). `1` (the
-    /// default) runs inline on the caller's thread; results are
-    /// bit-identical for every worker count.
+    /// default) runs inline on the caller's thread when the engine has a
+    /// single device; with several devices the session shards chunks
+    /// across one pool per device. Results are bit-identical for every
+    /// (devices, workers) combination.
     pub workers: usize,
     /// Micro-batches accumulated per optimizer step by [`Session::fit`]
     /// (each micro-batch is one AOT-compiled batch; the gradient is their
     /// fixed-order mean). `1` (the default) is the classic single-batch
     /// step.
     pub grad_accum: usize,
-    /// Worker threads for the data-parallel gradient path
+    /// Worker threads **per device** for the data-parallel gradient path
     /// ([`Session::step_accumulate`]). Parameters and losses are
-    /// bit-identical for every worker count — only wall-clock changes.
+    /// bit-identical for every (devices, workers) combination — only
+    /// wall-clock changes.
     pub grad_workers: usize,
 }
 
@@ -145,10 +152,17 @@ pub struct BatchPredictReport {
     /// Wall-clock for the whole fan-out.
     pub seconds: f64,
     pub examples_per_sec: f64,
-    /// Per-worker ledgers folded with [`MemoryLedger::merge`]: traffic is
-    /// additive (equal to the serial run over the same batches), peaks sum
-    /// across concurrent workers.
+    /// The aggregate ledger: per-chunk ledgers merge **within** each
+    /// device ([`MemoryLedger::merge`] — one memory space, peaks sum; an
+    /// upper bound, since chunks beyond a device's worker count ran
+    /// sequentially yet still sum), then devices fold with
+    /// [`MemoryLedger::absorb_sharded`] (separate memories, peak = max
+    /// over devices). Traffic is additive throughout and equal to the
+    /// serial run over the same batches.
     pub memory: MemoryLedger,
+    /// The per-device folds behind `memory`, device-id order (one entry
+    /// for single-device sessions).
+    pub device_memory: Vec<MemoryLedger>,
 }
 
 /// Result of [`Session::gradcheck`]: this session's gradient vs the fused
@@ -208,30 +222,45 @@ pub struct FitReport {
 pub struct Session<'e> {
     engine: &'e Engine,
     core: Arc<ExecutionCore>,
+    /// One execution core per engine device (`cores[0] == core`), each
+    /// resolved against its own device's registry — the device pin the
+    /// sharded paths hand to device-pinned pool workers.
+    cores: Vec<Arc<ExecutionCore>>,
     config: SessionConfig,
     params: Vec<Tensor>,
     opt: Sgd,
     ledger: MemoryLedger,
     step_idx: usize,
-    /// Lazily-created persistent worker pool cached across calls — the
-    /// execution substrate for `evaluate`, `predict_batches` and
-    /// `step_accumulate` fan-outs (grown on demand, joined when the
-    /// session drops; `workers <= 1` never creates it).
-    exec_pool: Mutex<Option<Arc<PersistentPool>>>,
+    /// Lazily-created per-device worker pools + load-aware router cached
+    /// across calls — the execution substrate for `evaluate`,
+    /// `predict_batches` and `step_accumulate` fan-outs (grown on demand,
+    /// joined when the session drops; a single device with `workers <= 1`
+    /// never creates it).
+    shard: Mutex<Option<Arc<ShardSet>>>,
 }
 
 impl<'e> Session<'e> {
     /// Create a session: resolve the strategy, validate its module needs
-    /// against the manifest, load initial parameters.
+    /// against the manifest (per device), load initial parameters.
     pub(super) fn new(engine: &'e Engine, config: SessionConfig) -> Result<Self> {
-        let strategy = engine.strategies().create(&config.method)?;
-        let core = Arc::new(ExecutionCore::with_strategy(
-            engine.shared_registry(),
-            engine.config().clone(),
-            engine.solver(),
-            engine.modules().clone(),
-            strategy,
-        )?);
+        let mut cores = Vec::with_capacity(engine.device_count());
+        for d in 0..engine.device_count() {
+            let strategy = engine.strategies().create(&config.method)?;
+            let modules = if d == 0 {
+                engine.modules().clone()
+            } else {
+                let reg = engine.device_set().registry(d);
+                ModuleSet::resolve(reg, engine.config(), engine.solver())?
+            };
+            cores.push(Arc::new(ExecutionCore::with_strategy(
+                engine.device_set().registry(d).clone(),
+                engine.config().clone(),
+                engine.solver(),
+                modules,
+                strategy,
+            )?));
+        }
+        let core = cores[0].clone();
         let params = core.load_params()?;
         let opt = Sgd::new(&params, config.lr.at(0), config.momentum, config.weight_decay);
         let mut ledger = MemoryLedger::new();
@@ -242,13 +271,19 @@ impl<'e> Session<'e> {
         Ok(Self {
             engine,
             core,
+            cores,
             config,
             params,
             opt,
             ledger,
             step_idx: 0,
-            exec_pool: Mutex::new(None),
+            shard: Mutex::new(None),
         })
+    }
+
+    /// Devices this session shards its parallel paths over.
+    pub fn device_count(&self) -> usize {
+        self.cores.len()
     }
 
     /// The engine this session runs on.
@@ -292,9 +327,10 @@ impl<'e> Session<'e> {
         &self.ledger
     }
 
-    /// Total module executions so far (perf accounting).
+    /// Total module executions so far (perf accounting), summed across
+    /// every device core.
     pub fn module_calls(&self) -> usize {
-        self.core.calls_made()
+        self.cores.iter().map(|core| core.calls_made()).sum()
     }
 
     /// Validate an input batch against the model's compiled shape.
@@ -402,19 +438,28 @@ impl<'e> Session<'e> {
         let t0 = Instant::now();
         let lr = self.config.lr.at(self.step_idx);
         self.opt.lr = lr;
-        let core = &self.core;
         let params = &self.params;
-        let (per_micro, ledgers) = pooled_map_with(
-            &self.exec_pool,
+        let (per_micro, states) = sharded_exec(
+            &self.shard,
+            &self.cores,
             workers,
             micro_batches,
             MemoryLedger::new,
-            |ledger, _i, xy: &(Tensor, Tensor)| core.loss_and_grad(&xy.0, &xy.1, params, ledger),
+            |core, ledger, _i, xy: &(Tensor, Tensor)| {
+                core.loss_and_grad(&xy.0, &xy.1, params, ledger)
+            },
         );
         // Fold the phase into the session ledger before error propagation:
         // traffic stays additive (equal to the serial run) even when one
-        // micro-batch failed.
-        self.ledger.absorb_parallel(&ledgers);
+        // micro-batch failed. One device: the classic concurrent-worker
+        // fold. Sharded: workers merge per device (one memory each), then
+        // the cross-device candidate is the max over devices (§6d).
+        if self.cores.len() <= 1 {
+            let ledgers: Vec<MemoryLedger> = states.into_iter().map(|(_, l)| l).collect();
+            self.ledger.absorb_parallel(&ledgers);
+        } else {
+            self.ledger.absorb_sharded(&ledgers_by_device(self.cores.len(), &states));
+        }
         let per_micro = per_micro.into_iter().collect::<Result<Vec<_>>>()?;
         let (loss, correct, mut grads) = ExecutionCore::reduce_grads(per_micro)?;
         let finite = loss.is_finite() && grads.iter().all(|g| g.all_finite());
@@ -453,17 +498,17 @@ impl<'e> Session<'e> {
         workers: usize,
     ) -> Result<EvalStats> {
         let t0 = Instant::now();
-        let core = &self.core;
         let params = &self.params;
-        let (per_batch, _) = pooled_map_with(
-            &self.exec_pool,
+        let (per_batch, _) = sharded_exec(
+            &self.shard,
+            &self.cores,
             workers,
             batches,
             || (),
-            |_state, _i, xy: &(Tensor, Tensor)| core.eval_batch(&xy.0, &xy.1, params),
+            |core, _state, _i, xy: &(Tensor, Tensor)| core.eval_batch(&xy.0, &xy.1, params),
         );
         let per_batch = per_batch.into_iter().collect::<Result<Vec<_>>>()?;
-        let (loss, accuracy) = ExecutionCore::reduce_eval(&per_batch, core.cfg.batch);
+        let (loss, accuracy) = ExecutionCore::reduce_eval(&per_batch, self.core.cfg.batch);
         Ok(EvalStats { loss, accuracy, batches: batches.len(), seconds: t0.elapsed().as_secs_f64() })
     }
 
@@ -514,49 +559,64 @@ impl<'e> Session<'e> {
             self.check_batch(images)?;
         }
         let t0 = Instant::now();
-        let core = &self.core;
         let params = &self.params;
-        let cfg = &core.cfg;
-        let (results, ledgers) = pooled_map_with(
-            &self.exec_pool,
+        let cfg = &self.core.cfg;
+        let (results, states) = sharded_exec(
+            &self.shard,
+            &self.cores,
             workers,
             batches,
             MemoryLedger::new,
-            |ledger: &mut MemoryLedger, _i, images: &Tensor| {
+            |core, ledger: &mut MemoryLedger, _i, images: &Tensor| {
                 infer_batch(core, params, images, ledger)
             },
         );
+        let chunks = states.len();
+        let device_memory = ledgers_by_device(self.cores.len(), &states);
+        // Cross-device fold: peaks combine by max (separate memories),
+        // traffic stays additive — equal to the serial sweep. A single
+        // device degenerates to the classic merged-worker aggregate.
         let mut memory = MemoryLedger::new();
-        for ledger in &ledgers {
-            memory.merge(ledger);
-        }
+        memory.absorb_sharded(&device_memory);
         let predictions = results.into_iter().collect::<Result<Vec<_>>>()?;
         let seconds = t0.elapsed().as_secs_f64();
         let examples = predictions.len() * cfg.batch;
         Ok(BatchPredictReport {
             predictions,
-            workers: ledgers.len(),
+            workers: chunks,
             seconds,
             examples_per_sec: examples as f64 / seconds.max(1e-12),
             memory,
+            device_memory,
         })
     }
 
     /// Start the single-request serving front end over this session's
     /// model: a deadline-batched admission queue (requests coalesce into
     /// the AOT batch size, flushing when full or when the oldest request
-    /// has waited `config.max_delay`) feeding a persistent worker pool.
+    /// has waited `config.max_delay`) feeding one persistent worker pool
+    /// **per engine device**, filled batches routed to the least-loaded
+    /// device (rust/DESIGN.md §6d).
     ///
     /// The returned [`ServeHandle`] is cloneable and independent of this
     /// session's lifetime — it snapshots the current parameters over the
-    /// shared execution core, so later `step`s do not affect a running
+    /// shared execution cores, so later `step`s do not affect a running
     /// pipeline. Roll new weights out with [`Session::push_params`] (an
-    /// atomic between-batches hot-swap; no drain). Served values are
-    /// bit-identical to [`Session::predict_batches`] over the same
-    /// examples. See `anode::serve` and rust/DESIGN.md §6b.
+    /// atomic between-batches hot-swap across every device; no drain).
+    /// Served values are bit-identical to [`Session::predict_batches`]
+    /// over the same examples — routing never changes values, because the
+    /// per-batch computation is device-independent. See `anode::serve` and
+    /// rust/DESIGN.md §6b.
     pub fn serve(&self, config: ServeConfig) -> Result<ServeHandle> {
-        let runner = SessionRunner::new(self.core.clone(), self.params.clone());
-        ServeHandle::spawn(Arc::new(runner), config)
+        let runners: Vec<Arc<dyn BatchRunner>> = self
+            .cores
+            .iter()
+            .map(|core| {
+                Arc::new(SessionRunner::new(core.clone(), self.params.clone()))
+                    as Arc<dyn BatchRunner>
+            })
+            .collect();
+        ServeHandle::spawn_sharded(runners, config)
     }
 
     /// Roll this session's *current* parameters out to a running serve
@@ -699,53 +759,126 @@ impl<'e> Session<'e> {
     }
 }
 
-/// Ordered contiguous-chunk fan-out on the session's cached persistent
-/// pool, lazily creating (or growing) it on first parallel use.
+/// The session's cached multi-device execution substrate: one persistent
+/// pool per device whose workers are **pinned to that device's core at
+/// spawn** (the `PersistentPool` per-worker state hook — every job a
+/// worker ever runs executes through its own device's registry), plus the
+/// load-aware [`ShardRouter`] that assigns contiguous chunks to the
+/// least-loaded device.
+struct ShardSet {
+    pools: Vec<PersistentPool<Arc<ExecutionCore>>>,
+    router: ShardRouter,
+    workers_per_device: usize,
+}
+
+impl ShardSet {
+    fn new(cores: &[Arc<ExecutionCore>], workers_per_device: usize) -> std::io::Result<Self> {
+        let workers_per_device = workers_per_device.max(1);
+        let mut pools = Vec::with_capacity(cores.len());
+        for (d, core) in cores.iter().enumerate() {
+            let pinned = core.clone();
+            pools.push(PersistentPool::new(
+                workers_per_device,
+                &format!("anode-d{d}"),
+                move || pinned.clone(),
+            )?);
+        }
+        let caps = vec![workers_per_device; cores.len()];
+        Ok(Self { pools, router: ShardRouter::new(&caps), workers_per_device })
+    }
+}
+
+/// Ordered contiguous-chunk fan-out across the session's cached
+/// per-device pools, lazily creating (or growing) them on first parallel
+/// use. Each chunk executes against the core its worker was pinned to;
+/// results return in input order tagged with the device that ran them.
 ///
-/// `workers <= 1` runs inline on the caller's thread without touching the
-/// pool, and a failed pool spawn degrades to the same serial path — both
-/// produce bit-identical results to the parallel run by construction
-/// (fixed chunking, in-order reassembly). Replacing a too-small pool is
-/// safe mid-flight: concurrent calls hold their own `Arc`, and the old
-/// pool joins when its last user finishes.
-fn pooled_map_with<T, R, CS>(
-    slot: &Mutex<Option<Arc<PersistentPool>>>,
+/// A single device with `workers <= 1` runs inline on the caller's thread
+/// against the primary core without touching any pool, and a failed pool
+/// spawn degrades to the same serial path — both produce bit-identical
+/// results to the sharded run by construction (per-item values never
+/// depend on the chunking or the routing; reassembly is in input order).
+/// Replacing a too-small set is safe mid-flight: concurrent calls hold
+/// their own `Arc`, and the old pools join when their last user finishes.
+fn sharded_exec<T, R, CS>(
+    slot: &Mutex<Option<Arc<ShardSet>>>,
+    cores: &[Arc<ExecutionCore>],
     workers: usize,
     items: &[T],
     init: impl Fn() -> CS + Sync,
-    f: impl Fn(&mut CS, usize, &T) -> R + Sync,
-) -> (Vec<R>, Vec<CS>)
+    f: impl Fn(&ExecutionCore, &mut CS, usize, &T) -> R + Sync,
+) -> (Vec<R>, Vec<(usize, CS)>)
 where
     T: Sync,
     R: Send,
     CS: Send,
 {
-    let w = workers.max(1).min(items.len().max(1));
-    if w <= 1 {
-        return run_inline(items, &init, &f);
+    let devices = cores.len();
+    let w = workers.max(1);
+    let serial = || {
+        let primary: &ExecutionCore = &cores[0];
+        let (results, states) = run_inline(items, &init, |cs, i, t| f(primary, cs, i, t));
+        let tagged: Vec<(usize, CS)> = states.into_iter().map(|cs| (0usize, cs)).collect();
+        (results, tagged)
+    };
+    if (devices <= 1 && w <= 1) || items.len() <= 1 {
+        return serial();
     }
-    let pool = {
+    let set = {
         let mut slot = slot.lock().unwrap();
         let cached = match slot.as_ref() {
-            Some(pool) if pool.workers() >= w => Some(pool.clone()),
+            Some(set) if set.workers_per_device >= w && set.pools.len() == devices => {
+                Some(set.clone())
+            }
             _ => None,
         };
         match cached {
-            Some(pool) => Some(pool),
-            None => match PersistentPool::new(w, "anode-session-worker", || ()) {
-                Ok(pool) => {
-                    let pool = Arc::new(pool);
-                    *slot = Some(pool.clone());
-                    Some(pool)
+            Some(set) => Some(set),
+            None => match ShardSet::new(cores, w) {
+                Ok(set) => {
+                    let set = Arc::new(set);
+                    *slot = Some(set.clone());
+                    Some(set)
                 }
                 Err(_) => None,
             },
         }
     };
-    match pool {
-        Some(pool) => pool.map_with(w, items, init, f),
-        None => run_inline(items, &init, &f),
+    match set {
+        Some(set) => {
+            let pools: Vec<&PersistentPool<Arc<ExecutionCore>>> = set.pools.iter().collect();
+            // `w` caps the fan-out even when a larger pool set is cached
+            // (pools never shrink): an explicit small worker count keeps
+            // its requested concurrency bound, like map_with's limit.
+            sharded_map_with(&pools, &set.router, w, items, &init, |core, cs, i, t| {
+                // The worker's pinned state IS the device: every job this
+                // worker ever runs executes through its device's core.
+                let pinned: &ExecutionCore = core;
+                f(pinned, cs, i, t)
+            })
+        }
+        // Could not spawn (thread exhaustion): degrade to the serial path
+        // rather than fail — the result is bit-identical by construction.
+        None => serial(),
     }
+}
+
+/// Group per-chunk ledgers by the device that ran them into one merged
+/// ledger per device ([`MemoryLedger::merge`] — chunks of one device
+/// share its memory, so their peaks sum); the cross-device fold is then
+/// [`MemoryLedger::absorb_sharded`] (max over devices).
+///
+/// The summed device peak is an **upper bound** on that device's
+/// concurrent working set: when a device receives more chunks than it
+/// has workers (router imbalance, or a fast worker draining two chunks),
+/// some of those chunks ran sequentially yet still sum. The bound is
+/// never an undercount.
+fn ledgers_by_device(devices: usize, states: &[(usize, MemoryLedger)]) -> Vec<MemoryLedger> {
+    let mut per_device = vec![MemoryLedger::new(); devices.max(1)];
+    for (d, ledger) in states {
+        per_device[*d].merge(ledger);
+    }
+    per_device
 }
 
 /// One pre-batched tensor through the inference path with the rolling

@@ -38,6 +38,10 @@ pub struct TrainFigOptions {
     /// (`--grad-workers`); parameters/losses are bit-identical for every
     /// count.
     pub grad_workers: usize,
+    /// Devices to shard the parallel paths over (`--devices`); one
+    /// registry/worker-pool per device, results bit-identical for every
+    /// count (rust/DESIGN.md §6d).
+    pub devices: usize,
 }
 
 impl Default for TrainFigOptions {
@@ -57,6 +61,7 @@ impl Default for TrainFigOptions {
             workers: 1,
             grad_accum: 1,
             grad_workers: 1,
+            devices: 1,
         }
     }
 }
@@ -80,6 +85,7 @@ pub fn train_figure(reg: &Arc<ArtifactRegistry>, o: &TrainFigOptions) -> Result<
         .arch(o.arch)
         .classes(o.num_classes)
         .solver(o.solver)
+        .devices(o.devices.max(1))
         .build()?;
     let batch = engine.config().batch;
 

@@ -28,7 +28,7 @@ use anode::harness;
 use anode::metrics::{format_table, write_csv};
 use anode::models::{Arch, GradMethod, Solver};
 use anode::runtime::ArtifactRegistry;
-use anode::serve::{HostTailRunner, ServeConfig, ServeHandle};
+use anode::serve::{BatchRunner, HostTailRunner, ServeConfig, ServeHandle};
 use anode::tensor::Tensor;
 use anode::util::bench::LatencyPercentiles;
 use anode::util::cli::Args;
@@ -69,9 +69,13 @@ fn print_help() {
          \u{20}          --grad-accum K (micro-batches per optimizer step)\n\
          \u{20}          --grad-workers N (data-parallel gradient workers;\n\
          \u{20}          bit-identical results for every N)\n\
+         \u{20}          --devices N (shard parallel paths over N devices, one\n\
+         \u{20}          registry+pool per device; bit-identical for every N)\n\
          figures:   --fig fig1|fig7|sec3|fig3|fig4|fig5|memory|gradcheck [--fast]\n\
          gradcheck: --seed N\n\
          serve:     --requests N --clients N --max-delay-ms MS --workers N\n\
+         \u{20}          --devices N (one worker pool per device, batches routed\n\
+         \u{20}          by load)\n\
          \u{20}          --queue-cap N --method M (falls back to a host-side demo\n\
          \u{20}          model when artifacts/ is absent)\n\
          common:    --artifacts DIR (default: artifacts)\n\
@@ -128,6 +132,7 @@ fn cmd_train(args: &Args) -> i32 {
         workers: args.get_parse_or("workers", 1),
         grad_accum: args.get_parse_or("grad-accum", 1),
         grad_workers: args.get_parse_or("grad-workers", 1),
+        devices: args.get_parse_or("devices", 1),
     };
     let csv = args.get("csv").map(|s| s.to_string());
     args.warn_unknown();
@@ -206,6 +211,7 @@ fn cmd_figures(args: &Args) -> i32 {
                         workers: args.get_parse_or("workers", 1),
                         grad_accum: args.get_parse_or("grad-accum", 1),
                         grad_workers: args.get_parse_or("grad-workers", 1),
+                        devices: args.get_parse_or("devices", 1),
                     };
                     match harness::train_figure(&reg, &o) {
                         Ok(run) => curves.push(run.curve),
@@ -229,6 +235,7 @@ fn cmd_figures(args: &Args) -> i32 {
                 workers: args.get_parse_or("workers", 1),
                 grad_accum: args.get_parse_or("grad-accum", 1),
                 grad_workers: args.get_parse_or("grad-workers", 1),
+                devices: args.get_parse_or("devices", 1),
             };
             let csv = args.get("csv").map(|s| s.to_string());
             args.warn_unknown();
@@ -291,6 +298,7 @@ fn cmd_gradcheck(args: &Args) -> i32 {
 fn cmd_serve(args: &Args) -> i32 {
     let requests: usize = args.get_parse_or("requests", 256);
     let clients: usize = args.get_parse_or("clients", 4usize).max(1);
+    let devices: usize = args.get_parse_or("devices", 1usize).max(1);
     let serve_cfg = ServeConfig {
         max_delay: Duration::from_millis(args.get_parse_or("max-delay-ms", 5u64)),
         workers: args.get_parse_or("workers", 2),
@@ -300,14 +308,16 @@ fn cmd_serve(args: &Args) -> i32 {
     let dir = args.get_or("artifacts", "artifacts");
     args.warn_unknown();
     println!(
-        "serve: {} requests, {} clients, max_delay={:?}, workers={}, queue_cap={}",
+        "serve: {} requests, {} clients, max_delay={:?}, workers={}/device x {} devices, \
+         queue_cap={}",
         requests,
         clients,
         serve_cfg.max_delay,
         serve_cfg.workers,
+        devices,
         serve_cfg.queue_cap
     );
-    match Engine::builder().artifacts(&dir).build() {
+    match Engine::builder().artifacts(&dir).devices(devices).build() {
         Ok(engine) => {
             let session = match engine.session(SessionConfig::with_method(method.as_str())) {
                 Ok(s) => s,
@@ -345,9 +355,13 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         Err(e) => {
             eprintln!("artifacts unavailable ({e}); serving the synthetic host-tail demo model");
-            let runner = HostTailRunner::new(32, 16, 64, 10);
-            let shape = runner.example_shape();
-            let handle = match ServeHandle::spawn(Arc::new(runner), serve_cfg) {
+            // One demo runner per simulated device: the same deadline
+            // queue feeds `devices` pools through the load-aware router.
+            let runners: Vec<Arc<dyn BatchRunner>> = (0..devices)
+                .map(|_| Arc::new(HostTailRunner::new(32, 16, 64, 10)) as Arc<dyn BatchRunner>)
+                .collect();
+            let shape = runners[0].example_shape();
+            let handle = match ServeHandle::spawn_sharded(runners, serve_cfg) {
                 Ok(h) => h,
                 Err(e) => {
                     eprintln!("error: {e}");
@@ -407,12 +421,13 @@ where
     );
     println!("latency {}", pct.report());
     println!(
-        "batches={} (full={} deadline={} drain={})  workers={}",
+        "batches={} (full={} deadline={} drain={})  workers={} devices={}",
         report.batches,
         report.full_flushes,
         report.deadline_flushes,
         report.drain_flushes,
-        report.workers
+        report.workers,
+        report.devices
     );
     println!("memory: {}", report.memory.summary());
     if latencies.len() == requests {

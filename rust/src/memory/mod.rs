@@ -177,6 +177,15 @@ impl MemoryLedger {
     /// the **max** over phases of that candidate, not a sum over steps.
     /// Traffic and `unknown_frees` stay additive, so a multi-step parallel
     /// training run still accounts exactly the serial run's traffic.
+    ///
+    /// The worker ledgers passed here must share **one memory space**
+    /// (threads of one device): summing their peaks is what makes the
+    /// candidate an upper bound on that space's working set. For the
+    /// nested multi-device case — per-device ledgers that are themselves
+    /// folds of per-worker ledgers — use [`MemoryLedger::absorb_sharded`]:
+    /// devices own *separate* memories, so the cross-device candidate is
+    /// the **max over devices**, not their sum (regression-pinned in the
+    /// tests below).
     pub fn absorb_parallel(&mut self, workers: &[MemoryLedger]) {
         let phase_peak: usize = workers.iter().map(|w| w.peak).sum();
         self.peak = self.peak.max(self.current + phase_peak);
@@ -191,6 +200,37 @@ impl MemoryLedger {
         for w in workers {
             self.total_allocated += w.total_allocated;
             self.unknown_frees += w.unknown_frees;
+        }
+    }
+
+    /// Absorb one **sharded** phase: per-device ledgers — each itself a
+    /// fold of that device's concurrent workers ([`MemoryLedger::merge`],
+    /// peaks summed within the device) — into this long-lived ledger.
+    ///
+    /// Devices own separate memory spaces, so the binding constraint for
+    /// "does the step fit" is the **worst single device**: the phase
+    /// candidate is this ledger's live bytes plus the **max over device
+    /// peaks** (per category too), and the all-time peak is the max over
+    /// phases of that candidate — *never* a sum across devices or steps.
+    /// Traffic and `unknown_frees` stay additive across every device, so
+    /// total traffic still equals the serial run over the same work.
+    ///
+    /// With a single device this is exactly [`MemoryLedger::absorb_parallel`]
+    /// applied to that device's fold.
+    pub fn absorb_sharded(&mut self, devices: &[MemoryLedger]) {
+        let phase_peak: usize = devices.iter().map(|d| d.peak).max().unwrap_or(0);
+        self.peak = self.peak.max(self.current + phase_peak);
+        let cats: std::collections::HashSet<Category> =
+            devices.iter().flat_map(|d| d.peak_by_cat.keys().copied()).collect();
+        for cat in cats {
+            let phase_cat: usize = devices.iter().map(|d| d.peak_of(cat)).max().unwrap_or(0);
+            let candidate = self.current_of(cat) + phase_cat;
+            let cat_peak = self.peak_by_cat.entry(cat).or_default();
+            *cat_peak = (*cat_peak).max(candidate);
+        }
+        for d in devices {
+            self.total_allocated += d.total_allocated;
+            self.unknown_frees += d.unknown_frees;
         }
     }
 
@@ -363,6 +403,55 @@ mod tests {
         assert_eq!(session.peak_of(Category::StepState), 160);
         assert_eq!(session.total_traffic(), 390);
         assert_eq!(session.unknown_frees(), 0);
+    }
+
+    #[test]
+    fn absorb_sharded_pins_max_over_devices_not_sum() {
+        // Regression for the nested fold: per-DEVICE ledgers (each a merge
+        // of that device's concurrent workers, peaks summed within the
+        // device) must combine across devices by MAX — separate memory
+        // spaces — while traffic stays additive.
+        let worker = |bytes: usize| {
+            let mut w = MemoryLedger::new();
+            let id = w.alloc(bytes, Category::StepState);
+            w.free(id);
+            w
+        };
+        // Device 0: workers peaking 40 + 60 -> device peak 100 (sum: one
+        // memory). Device 1: one worker peaking 30 -> device peak 30.
+        let mut dev0 = MemoryLedger::new();
+        dev0.merge(&worker(40));
+        dev0.merge(&worker(60));
+        let mut dev1 = MemoryLedger::new();
+        dev1.merge(&worker(30));
+        assert_eq!(dev0.peak_bytes(), 100);
+        assert_eq!(dev1.peak_bytes(), 30);
+
+        let mut session = MemoryLedger::new();
+        session.alloc(7, Category::Param);
+        session.absorb_sharded(&[dev0.clone(), dev1.clone()]);
+        // Max over devices (100), NOT the cross-device sum (130).
+        assert_eq!(session.peak_bytes(), 107, "cross-device fold must take the max");
+        assert_eq!(session.peak_of(Category::StepState), 100);
+        // Traffic is additive across every device and worker (7 of the
+        // session's own params + 100 + 30 from the phase).
+        assert_eq!(session.total_traffic(), 137);
+
+        // A smaller later phase must not move the all-time peak (max over
+        // phases), while traffic keeps adding.
+        session.absorb_sharded(&[dev1.clone()]);
+        assert_eq!(session.peak_bytes(), 107);
+        assert_eq!(session.total_traffic(), 167);
+
+        // Single-device fold degenerates to absorb_parallel of that fold.
+        let mut a = MemoryLedger::new();
+        a.alloc(7, Category::Param);
+        a.absorb_sharded(std::slice::from_ref(&dev0));
+        let mut b = MemoryLedger::new();
+        b.alloc(7, Category::Param);
+        b.absorb_parallel(std::slice::from_ref(&dev0));
+        assert_eq!(a.peak_bytes(), b.peak_bytes());
+        assert_eq!(a.total_traffic(), b.total_traffic());
     }
 
     #[test]

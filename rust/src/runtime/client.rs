@@ -63,6 +63,13 @@ impl XlaRuntime {
         self.client.platform_name()
     }
 
+    /// Devices the platform exposes. The vendored stub simulates
+    /// `ANODE_SIM_DEVICES` devices (default 1); a real PJRT client reports
+    /// its hardware topology. See [`super::DeviceSet`].
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
     /// Load an HLO-text artifact and compile it.
     pub fn compile_hlo_text(&self, name: &str, path: &Path) -> Result<Executable> {
         if !path.exists() {

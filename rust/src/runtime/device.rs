@@ -1,0 +1,135 @@
+//! Device topology for multi-device sharding: one [`ArtifactRegistry`] —
+//! and therefore one PJRT client and one executable cache — **per
+//! device**.
+//!
+//! A [`DeviceSet`] is the engine-level resource behind pool-per-device
+//! execution (rust/DESIGN.md §6d): device `d`'s worker pool executes only
+//! through `set.registry(d)`, so devices never contend on a shared client
+//! or compiled-module cache, and a per-device failure is contained to that
+//! device's registry. Offline, [`DeviceSet::open_simulated`] backs every
+//! device with the deterministic [`super::sim`] backend (the vendored xla
+//! stub simulates `ANODE_SIM_DEVICES` devices), so the whole multi-device
+//! stack is exercisable without artifacts or a real PJRT backend.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use super::{ArtifactRegistry, Result};
+
+/// Device count the environment asks to simulate: `ANODE_SIM_DEVICES=N`
+/// (N >= 1). This is the same contract the vendored xla stub exposes as
+/// `PjRtClient::device_count` — the CI sim job sets it to run the whole
+/// suite against a 4-device topology.
+pub fn sim_devices_env() -> Option<usize> {
+    std::env::var("ANODE_SIM_DEVICES")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+}
+
+/// One registry (client + executable cache) per device, device ids dense
+/// from 0. Device 0 is the *primary*: single-device code paths (and
+/// back-compat accessors like `Engine::registry`) see exactly the registry
+/// they always did.
+pub struct DeviceSet {
+    devices: Vec<Arc<ArtifactRegistry>>,
+}
+
+impl DeviceSet {
+    /// Open `count` (min 1) PJRT-backed registries over one artifact dir,
+    /// pinned to device ids `0..count`.
+    pub fn open(dir: &Path, count: usize) -> Result<Self> {
+        Self::build(dir, count, false, None)
+    }
+
+    /// Open `count` (min 1) **simulated** registries — the offline
+    /// multi-device harness (deterministic execution, no backend).
+    pub fn open_simulated(dir: &Path, count: usize) -> Result<Self> {
+        Self::build(dir, count, true, None)
+    }
+
+    /// A single-device set around an already-open registry (the
+    /// `EngineBuilder::registry` sharing path).
+    pub fn single(reg: Arc<ArtifactRegistry>) -> Self {
+        Self { devices: vec![reg] }
+    }
+
+    /// A set whose device 0 is an already-open registry; devices
+    /// `1..count` open from the primary's artifact directory with the
+    /// primary's execution mode (simulated primaries get simulated
+    /// siblings).
+    pub fn with_primary(reg: Arc<ArtifactRegistry>, count: usize) -> Result<Self> {
+        let sim = reg.is_simulated();
+        let dir = reg.dir().to_path_buf();
+        Self::build(&dir, count, sim, Some(reg))
+    }
+
+    fn build(
+        dir: &Path,
+        count: usize,
+        sim: bool,
+        primary: Option<Arc<ArtifactRegistry>>,
+    ) -> Result<Self> {
+        let count = count.max(1);
+        let mut devices = Vec::with_capacity(count);
+        if let Some(reg) = primary {
+            devices.push(reg);
+        }
+        for d in devices.len()..count {
+            let reg = if sim {
+                ArtifactRegistry::open_simulated(dir, d)?
+            } else {
+                ArtifactRegistry::open_on_device(dir, d)?
+            };
+            devices.push(Arc::new(reg));
+        }
+        Ok(Self { devices })
+    }
+
+    /// Devices in the set (>= 1).
+    pub fn count(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// The registry pinned to device `d`.
+    pub fn registry(&self, d: usize) -> &Arc<ArtifactRegistry> {
+        &self.devices[d]
+    }
+
+    /// All per-device registries, device-id order.
+    pub fn registries(&self) -> &[Arc<ArtifactRegistry>] {
+        &self.devices
+    }
+
+    /// The primary (device 0) registry — what single-device accessors see.
+    pub fn primary(&self) -> &Arc<ArtifactRegistry> {
+        &self.devices[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sim::{write_artifacts, SimSpec};
+    use super::*;
+
+    #[test]
+    fn device_set_opens_one_registry_per_device() {
+        let dir = std::env::temp_dir().join(format!("anode_devset_{}", std::process::id()));
+        write_artifacts(&dir, &SimSpec::default()).unwrap();
+        let set = DeviceSet::open_simulated(&dir, 3).unwrap();
+        assert_eq!(set.count(), 3);
+        for d in 0..3 {
+            assert_eq!(set.registry(d).device_id(), d);
+            assert!(set.registry(d).is_simulated());
+        }
+        // Distinct registries — separate executable caches and clients.
+        assert!(!Arc::ptr_eq(set.registry(0), set.registry(1)));
+        assert!(!Arc::ptr_eq(set.registry(1), set.registry(2)));
+        assert!(Arc::ptr_eq(set.primary(), set.registry(0)));
+
+        // A zero request still yields one device (a platform always has one).
+        let one = DeviceSet::open_simulated(&dir, 0).unwrap();
+        assert_eq!(one.count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -3,9 +3,17 @@
 //! This is the only module that touches the `xla` crate. Everything above it
 //! (coordinator, models, examples) works in terms of [`crate::tensor::Tensor`]
 //! and module names from the artifact manifest.
+//!
+//! Multi-device execution is modeled as one [`ArtifactRegistry`] (client +
+//! executable cache) per device, collected in a [`DeviceSet`]; the [`sim`]
+//! module provides the deterministic offline backend that lets the whole
+//! multi-device stack run on the vendored xla stub (rust/DESIGN.md §6d).
 
 mod client;
+mod device;
 mod registry;
+pub mod sim;
 
 pub use client::{Executable, Result, RuntimeError, XlaRuntime};
+pub use device::{sim_devices_env, DeviceSet};
 pub use registry::{ArtifactRegistry, ModuleSpec, ParamSpec, TensorSpec};

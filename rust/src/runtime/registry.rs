@@ -16,6 +16,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, OnceLock, RwLock};
 
 use super::client::{Executable, Result, RuntimeError, XlaRuntime};
+use super::sim::{sim_outputs, SimBackend};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
@@ -61,11 +62,25 @@ fn parse_tensor_spec(v: &Json) -> Result<TensorSpec> {
 }
 
 /// Lazily-compiling registry of AOT artifacts.
+///
+/// One registry is **one execution domain**: it owns one lazy PJRT client
+/// and one executable cache. Multi-device execution opens one registry per
+/// device ([`super::DeviceSet`]), each pinned to a `device_id`, so devices
+/// never share clients or compiled modules. A registry opened with
+/// [`ArtifactRegistry::open_simulated`] executes calls through the
+/// deterministic [`super::sim`] backend instead of PJRT — the offline
+/// multi-device harness.
 pub struct ArtifactRegistry {
     /// Created on first executable compile, so manifest parsing and
     /// validation (the `api::EngineBuilder` path) work without a live
     /// PJRT backend.
     runtime: OnceLock<XlaRuntime>,
+    /// Simulated execution: when set, `call` synthesizes outputs from the
+    /// manifest specs instead of touching PJRT.
+    sim: Option<SimBackend>,
+    /// Which device of a [`super::DeviceSet`] this registry is pinned to
+    /// (0 for single-device registries).
+    device_id: usize,
     dir: PathBuf,
     modules: HashMap<String, ModuleSpec>,
     params: HashMap<String, Vec<ParamSpec>>,
@@ -74,8 +89,49 @@ pub struct ArtifactRegistry {
 }
 
 impl ArtifactRegistry {
-    /// Open `dir/manifest.json` and prepare a CPU PJRT runtime.
+    /// Open `dir/manifest.json` and prepare a CPU PJRT runtime (device 0).
     pub fn open(dir: &Path) -> Result<Self> {
+        Self::open_with(dir, 0, None)
+    }
+
+    /// Open a PJRT-backed registry pinned to `device_id` of a multi-device
+    /// set — its own client and executable cache, shared with no other
+    /// device (see [`super::DeviceSet`]).
+    ///
+    /// The id isolates clients and compiled-module caches per device;
+    /// **physical device placement is not wired yet** — the current
+    /// client layer always creates a default CPU client, so on a real
+    /// backend every registry computes on the same device (see the
+    /// "real multi-device PJRT" follow-up in ROADMAP.md; only
+    /// `runtime::client` needs to learn device selection). Simulated
+    /// registries are unaffected — their values are device-independent
+    /// by construction.
+    pub fn open_on_device(dir: &Path, device_id: usize) -> Result<Self> {
+        Self::open_with(dir, device_id, None)
+    }
+
+    /// Open a **simulated** registry pinned to `device_id`: `call`
+    /// synthesizes deterministic outputs from the manifest output specs
+    /// ([`super::sim`]), so the full execution stack runs offline. Values
+    /// depend only on (module, inputs) — never the device — which is what
+    /// keeps sharded runs bit-identical to serial.
+    pub fn open_simulated(dir: &Path, device_id: usize) -> Result<Self> {
+        Self::open_with(dir, device_id, Some(SimBackend::default()))
+    }
+
+    /// [`ArtifactRegistry::open_simulated`] with fault injection: every
+    /// `call` to `fail_module` returns a typed error — the offline
+    /// stand-in for a device whose execution path is broken (used by the
+    /// fault tests in rust/tests/sharding.rs).
+    pub fn open_simulated_with_fault(
+        dir: &Path,
+        device_id: usize,
+        fail_module: impl Into<String>,
+    ) -> Result<Self> {
+        Self::open_with(dir, device_id, Some(SimBackend { fail_module: Some(fail_module.into()) }))
+    }
+
+    fn open_with(dir: &Path, device_id: usize, sim: Option<SimBackend>) -> Result<Self> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
             RuntimeError::Io(format!(
@@ -146,12 +202,33 @@ impl ArtifactRegistry {
         let config = root.get("config").cloned().unwrap_or(Json::Obj(Default::default()));
         Ok(Self {
             runtime: OnceLock::new(),
+            sim,
+            device_id,
             dir: dir.to_path_buf(),
             modules,
             params,
             config,
             cache: RwLock::new(HashMap::new()),
         })
+    }
+
+    /// Which device this registry is pinned to (0 unless opened through a
+    /// [`super::DeviceSet`]).
+    pub fn device_id(&self) -> usize {
+        self.device_id
+    }
+
+    /// The artifact directory this registry was opened from (used by
+    /// [`super::DeviceSet::with_primary`] to open sibling per-device
+    /// registries over the same artifacts).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Does this registry execute through the deterministic simulation
+    /// backend instead of PJRT?
+    pub fn is_simulated(&self) -> bool {
+        self.sim.is_some()
     }
 
     /// The PJRT runtime, created on first use. Two threads racing here both
@@ -249,6 +326,10 @@ impl ArtifactRegistry {
     }
 
     /// Execute a module, validating input shapes against the manifest.
+    ///
+    /// PJRT-backed registries compile lazily and run the artifact;
+    /// simulated registries synthesize deterministic outputs from the
+    /// manifest output specs (same validation, no backend).
     pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         let spec = self.module_spec(name)?.clone();
         if inputs.len() != spec.inputs.len() {
@@ -267,6 +348,15 @@ impl ArtifactRegistry {
                     s.shape
                 )));
             }
+        }
+        if let Some(sim) = &self.sim {
+            if sim.fail_module.as_deref() == Some(name) {
+                return Err(RuntimeError::Xla(format!(
+                    "sim device {}: injected fault executing {name}",
+                    self.device_id
+                )));
+            }
+            return sim_outputs(name, inputs, &spec.outputs);
         }
         let exe = self.get(name)?;
         let outs = exe.call(inputs)?;

@@ -1,0 +1,368 @@
+//! Simulated execution backend — the offline multi-device test harness.
+//!
+//! The vendored xla stub cannot execute HLO, which used to confine every
+//! end-to-end test (training, prediction, serving) to machines with real
+//! artifacts. Simulation closes that gap: a registry opened with
+//! [`super::ArtifactRegistry::open_simulated`] answers `call` by
+//! synthesizing outputs **deterministically from the module name, the
+//! input bytes and the manifest output specs** — no backend, no compiled
+//! executables. The numbers are meaningless as a model but bit-stable, so
+//! every structural property of the execution stack is testable offline:
+//! the forward/backward dataflow of all five gradient strategies, the
+//! fixed-order gradient reduction, SGD updates, ledger accounting, and —
+//! the point of the harness — **bit-identity of sharded execution across
+//! any (devices × workers) grid**, because the synthesized value of a call
+//! depends only on its inputs, never on which device or worker ran it.
+//!
+//! [`write_artifacts`] emits a matching synthetic artifact set (manifest
+//! with full input/output tensor specs plus `params.bin`) for a small
+//! [`SimSpec`] model, so `rust/tests/sharding.rs` and the
+//! `shard_throughput` bench can stand up a complete multi-device engine on
+//! the stub. See rust/DESIGN.md §6d.
+
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+use super::{Result, RuntimeError, TensorSpec};
+
+/// Deterministic-execution state of a simulated registry (one per device;
+/// the device id itself never feeds the value kernel — that is what makes
+/// sharded runs bit-identical to serial).
+#[derive(Debug, Clone, Default)]
+pub(crate) struct SimBackend {
+    /// Fault injection: `call`s to this module fail with a typed error —
+    /// the offline stand-in for a device whose execution path is broken.
+    pub fail_module: Option<String>,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x1_0000_0001_b3;
+
+fn mix(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// Map a hash to a small centered float in [-0.5, 0.5) — always finite,
+/// so simulated losses/gradients never trip the divergence guards.
+fn centered(h: u64) -> f32 {
+    ((h % 1_000_003) as f32 / 1_000_003.0) - 0.5
+}
+
+/// Synthesize a module call's outputs from (name, inputs, output specs).
+///
+/// Pure and order-sensitive in its inputs: two calls agree bitwise iff the
+/// module name and every input tensor's bytes agree, which is exactly the
+/// determinism contract sharded execution needs.
+pub fn sim_outputs(name: &str, inputs: &[&Tensor], outputs: &[TensorSpec]) -> Result<Vec<Tensor>> {
+    if outputs.is_empty() {
+        return Err(RuntimeError::Shape(format!(
+            "sim: module {name} declares no outputs in the manifest — simulated manifests \
+             must carry full output specs (see runtime::sim::write_artifacts)"
+        )));
+    }
+    let mut digest = FNV_OFFSET;
+    for b in name.bytes() {
+        digest = mix(digest, u64::from(b));
+    }
+    for t in inputs {
+        digest = mix(digest, t.data().len() as u64);
+        for &v in t.data() {
+            digest = mix(digest, u64::from(v.to_bits()));
+        }
+    }
+    outputs
+        .iter()
+        .enumerate()
+        .map(|(oi, spec)| {
+            let base = mix(digest, oi as u64 + 1);
+            let n: usize = spec.shape.iter().product::<usize>().max(1);
+            let data: Vec<f32> = (0..n).map(|j| centered(mix(base, j as u64))).collect();
+            Tensor::from_vec(spec.shape.clone(), data)
+                .map_err(|e| RuntimeError::Shape(format!("sim {name}: {e}")))
+        })
+        .collect()
+}
+
+/// Shape of the small synthetic model [`write_artifacts`] emits.
+#[derive(Debug, Clone)]
+pub struct SimSpec {
+    pub batch: usize,
+    pub image: usize,
+    /// Channels per stage; the stage count is `channels.len()`.
+    pub channels: Vec<usize>,
+    pub blocks_per_stage: usize,
+    pub nt: usize,
+    pub num_classes: usize,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        // Small enough that a full (devices × workers × strategies) grid
+        // of simulated training runs stays fast.
+        Self {
+            batch: 4,
+            image: 8,
+            channels: vec![4, 8],
+            blocks_per_stage: 1,
+            nt: 4,
+            num_classes: 10,
+        }
+    }
+}
+
+impl SimSpec {
+    fn stages(&self) -> usize {
+        self.channels.len()
+    }
+
+    fn act_shape(&self, s: usize) -> Vec<usize> {
+        let hw = self.image >> s;
+        vec![self.batch, hw, hw, self.channels[s]]
+    }
+
+    /// Deterministic input image batch `k` shaped for this model — the
+    /// one generator shared by `rust/tests/sharding.rs` and the
+    /// `shard_throughput` bench, so the two harnesses cannot silently
+    /// diverge from the spec's input shape.
+    pub fn image_batch(&self, k: usize) -> Tensor {
+        let len = self.batch * self.image * self.image * 3;
+        let data = (0..len).map(|j| (((k * 131 + j) % 977) as f32) * 0.001 - 0.3).collect();
+        Tensor::from_vec(vec![self.batch, self.image, self.image, 3], data)
+            .expect("sim image shape")
+    }
+
+    /// Deterministic in-range class labels for input batch `k`.
+    pub fn label_batch(&self, k: usize) -> Tensor {
+        let data = (0..self.batch).map(|r| ((k + r) % self.num_classes) as f32).collect();
+        Tensor::from_vec(vec![self.batch], data).expect("sim label shape")
+    }
+}
+
+fn shape_json(shape: &[usize]) -> String {
+    let inner: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+    format!("[{}]", inner.join(","))
+}
+
+fn spec_json(name: &str, shape: &[usize]) -> String {
+    format!(r#"{{"name":"{name}","shape":{},"dtype":"f32"}}"#, shape_json(shape))
+}
+
+/// Write a complete synthetic artifact set (manifest.json with full
+/// input/output tensor specs, plus a matching params.bin) for `spec` into
+/// `dir` — a `resnet`/`euler` model every gradient strategy can drive.
+///
+/// Open the result with [`super::ArtifactRegistry::open_simulated`] (or
+/// `EngineBuilder::simulate(true)`) and the whole execution stack —
+/// train, predict, serve — runs offline with deterministic values.
+pub fn write_artifacts(dir: &Path, spec: &SimSpec) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+
+    // --- params: canonical layout with real shapes and offsets ---------
+    let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+    params.push(("stem.w".into(), vec![3, spec.channels[0]]));
+    params.push(("stem.b".into(), vec![spec.channels[0]]));
+    for s in 0..spec.stages() {
+        let c = spec.channels[s];
+        for b in 0..spec.blocks_per_stage {
+            params.push((format!("s{s}.b{b}.w"), vec![c, c]));
+            params.push((format!("s{s}.b{b}.b"), vec![c]));
+        }
+        if s + 1 < spec.stages() {
+            params.push((format!("trans{s}.w"), vec![c, spec.channels[s + 1]]));
+            params.push((format!("trans{s}.b"), vec![spec.channels[s + 1]]));
+        }
+    }
+    let c_last = *spec.channels.last().expect("at least one stage");
+    params.push(("head.w".into(), vec![c_last, spec.num_classes]));
+    params.push(("head.b".into(), vec![spec.num_classes]));
+
+    let mut param_entries = Vec::with_capacity(params.len());
+    let mut offset = 0usize;
+    let mut blob: Vec<f32> = Vec::new();
+    for (name, shape) in &params {
+        let n: usize = shape.iter().product();
+        param_entries.push(format!(
+            r#"{{"name":"{name}","shape":{},"offset":{offset}}}"#,
+            shape_json(shape)
+        ));
+        for j in 0..n {
+            // Deterministic small init, independent of everything else.
+            blob.push(centered(mix(FNV_OFFSET, (offset + j) as u64)) * 0.2);
+        }
+        offset += n;
+    }
+
+    // --- modules: full input/output specs ------------------------------
+    fn find_shape<'a>(params: &'a [(String, Vec<usize>)], name: &str) -> &'a [usize] {
+        &params.iter().find(|(n, _)| n == name).expect("param exists").1
+    }
+    let x_shape = vec![spec.batch, spec.image, spec.image, 3];
+    let labels_shape = vec![spec.batch];
+    let scalar = vec![1usize];
+
+    let mut modules: Vec<String> = Vec::new();
+    let mut add = |name: &str, inputs: Vec<(&str, &[usize])>, outputs: Vec<(&str, &[usize])>| {
+        let ins: Vec<String> = inputs.iter().map(|(n, s)| spec_json(n, s)).collect();
+        let outs: Vec<String> = outputs.iter().map(|(n, s)| spec_json(n, s)).collect();
+        modules.push(format!(
+            r#"{{"name":"{name}","file":"{name}.hlo.txt","inputs":[{}],"outputs":[{}]}}"#,
+            ins.join(","),
+            outs.join(",")
+        ));
+    };
+
+    let act0 = spec.act_shape(0);
+    add(
+        "stem_fwd",
+        vec![
+            ("x", &x_shape),
+            ("w", find_shape(&params, "stem.w")),
+            ("b", find_shape(&params, "stem.b")),
+        ],
+        vec![("z", &act0)],
+    );
+    add(
+        "stem_vjp",
+        vec![
+            ("x", &x_shape),
+            ("w", find_shape(&params, "stem.w")),
+            ("b", find_shape(&params, "stem.b")),
+            ("gz", &act0),
+        ],
+        vec![("gw", find_shape(&params, "stem.w")), ("gb", find_shape(&params, "stem.b"))],
+    );
+    for s in 0..spec.stages() {
+        let act = spec.act_shape(s);
+        let w = find_shape(&params, &format!("s{s}.b0.w")).to_vec();
+        let b = find_shape(&params, &format!("s{s}.b0.b")).to_vec();
+        let fwd_ins = vec![("z", &act[..]), ("w", &w[..]), ("b", &b[..])];
+        let vjp_ins =
+            vec![("z", &act[..]), ("w", &w[..]), ("b", &b[..]), ("gz", &act[..])];
+        let vjp_outs = vec![("gz", &act[..]), ("gw", &w[..]), ("gb", &b[..])];
+        for kind in ["fwd", "step_fwd"] {
+            add(
+                &format!("block_resnet_s{s}_euler_{kind}"),
+                fwd_ins.clone(),
+                vec![("z", &act[..])],
+            );
+        }
+        for kind in ["vjp", "step_vjp", "otd"] {
+            add(&format!("block_resnet_s{s}_euler_{kind}"), vjp_ins.clone(), vjp_outs.clone());
+        }
+        let mut node_outs = vjp_outs.clone();
+        node_outs.push(("z0_rec", &act[..]));
+        add(&format!("block_resnet_s{s}_euler_node"), vjp_ins.clone(), node_outs);
+        if s + 1 < spec.stages() {
+            let next = spec.act_shape(s + 1);
+            let tw = find_shape(&params, &format!("trans{s}.w")).to_vec();
+            let tb = find_shape(&params, &format!("trans{s}.b")).to_vec();
+            add(
+                &format!("trans{s}_fwd"),
+                vec![("z", &act[..]), ("w", &tw[..]), ("b", &tb[..])],
+                vec![("z", &next[..])],
+            );
+            add(
+                &format!("trans{s}_vjp"),
+                vec![("z", &act[..]), ("w", &tw[..]), ("b", &tb[..]), ("gz", &next[..])],
+                vec![("gz", &act[..]), ("gw", &tw[..]), ("gb", &tb[..])],
+            );
+        }
+    }
+    let z_final = spec.act_shape(spec.stages() - 1);
+    let k = spec.num_classes;
+    add(
+        &format!("head{k}_loss_grad"),
+        vec![
+            ("z", &z_final),
+            ("w", find_shape(&params, "head.w")),
+            ("b", find_shape(&params, "head.b")),
+            ("labels", &labels_shape),
+        ],
+        vec![
+            ("loss", &scalar),
+            ("correct", &scalar),
+            ("gz", &z_final),
+            ("gw", find_shape(&params, "head.w")),
+            ("gb", find_shape(&params, "head.b")),
+        ],
+    );
+    add(
+        &format!("head{k}_eval"),
+        vec![
+            ("z", &z_final),
+            ("w", find_shape(&params, "head.w")),
+            ("b", find_shape(&params, "head.b")),
+            ("labels", &labels_shape),
+        ],
+        vec![("loss", &scalar), ("correct", &scalar)],
+    );
+
+    let manifest = format!(
+        r#"{{
+  "modules": [{}],
+  "params": {{"resnet{k}": [{}]}},
+  "config": {{"batch": {}, "image": {}, "blocks_per_stage": {}, "nt": {}, "channels": {}}}
+}}"#,
+        modules.join(","),
+        param_entries.join(","),
+        spec.batch,
+        spec.image,
+        spec.blocks_per_stage,
+        spec.nt,
+        shape_json(&spec.channels),
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)?;
+
+    let bytes: Vec<u8> = blob.iter().flat_map(|v| v.to_le_bytes()).collect();
+    std::fs::write(dir.join("params.bin"), bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: "f32".into() }
+    }
+
+    #[test]
+    fn sim_outputs_are_deterministic_and_input_sensitive() {
+        let z = Tensor::full(&[2, 3], 0.25);
+        let outs = vec![spec("a", &[2, 3]), spec("loss", &[1])];
+        let run1 = sim_outputs("mod", &[&z], &outs).unwrap();
+        let run2 = sim_outputs("mod", &[&z], &outs).unwrap();
+        assert_eq!(run1.len(), 2);
+        assert_eq!(run1[0].data(), run2[0].data(), "same inputs must agree bitwise");
+        assert_eq!(run1[1].shape(), &[1]);
+        assert!(run1.iter().all(|t| t.all_finite()));
+
+        let z2 = Tensor::full(&[2, 3], 0.26);
+        let run3 = sim_outputs("mod", &[&z2], &outs).unwrap();
+        assert_ne!(run1[0].data(), run3[0].data(), "different inputs must differ");
+        let run4 = sim_outputs("other", &[&z], &outs).unwrap();
+        assert_ne!(run1[0].data(), run4[0].data(), "different modules must differ");
+    }
+
+    #[test]
+    fn sim_outputs_reject_missing_output_specs() {
+        let z = Tensor::zeros(&[2]);
+        let err = sim_outputs("empty", &[&z], &[]).unwrap_err();
+        assert!(err.to_string().contains("no outputs"), "{err}");
+    }
+
+    #[test]
+    fn write_artifacts_emits_parseable_manifest_and_params() {
+        let dir = std::env::temp_dir()
+            .join(format!("anode_sim_unit_{}", std::process::id()));
+        write_artifacts(&dir, &SimSpec::default()).unwrap();
+        let reg = crate::runtime::ArtifactRegistry::open(&dir).unwrap();
+        assert!(reg.has_module("stem_fwd"));
+        assert!(reg.has_module("block_resnet_s0_euler_step_vjp"));
+        assert!(reg.has_module("head10_loss_grad"));
+        let params = reg.load_params("resnet10").unwrap();
+        assert_eq!(params.first().unwrap().shape(), &[3, 4]);
+        assert!(params.iter().all(|p| p.all_finite()));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

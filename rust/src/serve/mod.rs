@@ -33,6 +33,12 @@
 //!   ([`ServeHandle::submit`] blocks, [`ServeHandle::try_submit`] reports
 //!   full) and the pool queues at most one spare batch per worker, so a
 //!   slow model slows admission instead of buffering without bound.
+//! * **Pool-per-device sharding** — [`ServeHandle::spawn_sharded`] runs
+//!   one worker pool per device runner behind the single admission queue;
+//!   the batcher routes each filled batch to the least-loaded device
+//!   (a [`crate::util::pool::ShardRouter`]), per-device ledgers fold into
+//!   one report, and a broken device degrades to error replies for its
+//!   batches while the others keep serving (rust/DESIGN.md §6d).
 //! * **Bit-identical values** — the session-backed runner executes exactly
 //!   the per-batch computation of
 //!   [`Session::predict_batches`](crate::api::Session::predict_batches),
@@ -58,6 +64,7 @@ use crate::coordinator::ExecutionCore;
 use crate::memory::{Category, MemoryLedger};
 use crate::runtime::{Result, RuntimeError};
 use crate::tensor::Tensor;
+use crate::util::pool::ShardRouter;
 
 use pool::{BatchJob, WorkerPool};
 use queue::{AdmissionQueue, FlushReason, PendingRequest};
@@ -87,6 +94,17 @@ pub trait BatchRunner: Send + Sync + 'static {
     /// started with). Runners without swappable weights keep this
     /// default, which reports the capability as unsupported.
     fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+        let _ = params;
+        Err(RuntimeError::Io("serve: this runner does not support parameter hot-swap".into()))
+    }
+
+    /// Validate a prospective hot-swap **without applying it** — the same
+    /// count/shape check [`BatchRunner::swap_params`] performs. A sharded
+    /// [`ServeHandle`] validates every device's runner first and only then
+    /// applies, so a rejected swap leaves no device on mixed weights.
+    /// Override this alongside `swap_params` (the default mirrors the
+    /// unsupported default above).
+    fn validate_swap(&self, params: &[Tensor]) -> Result<()> {
         let _ = params;
         Err(RuntimeError::Io("serve: this runner does not support parameter hot-swap".into()))
     }
@@ -226,6 +244,9 @@ pub struct ServeStats {
     pub drain_flushes: u64,
     /// Requests currently waiting for batch assembly.
     pub queue_depth: usize,
+    /// Batches currently outstanding per device (the router's live load
+    /// view — what the least-loaded dispatch decides on).
+    pub device_loads: Vec<u64>,
     /// Has shutdown been initiated?
     pub closed: bool,
 }
@@ -243,13 +264,20 @@ pub struct ServeReport {
     pub deadline_flushes: u64,
     /// Partial batches flushed by the shutdown drain.
     pub drain_flushes: u64,
-    /// Persistent workers the pool ran.
+    /// Persistent workers the pipeline ran, summed across device pools.
     pub workers: usize,
-    /// Per-worker ledgers folded with
-    /// [`MemoryLedger::merge`](crate::memory::MemoryLedger::merge):
-    /// traffic additive (equal to a serial run over the same batches),
-    /// peaks summed across concurrent workers.
+    /// Device pools the pipeline routed over (1 for a plain
+    /// [`ServeHandle::spawn`]).
+    pub devices: usize,
+    /// The aggregate ledger: per-worker ledgers merge **within** each
+    /// device ([`MemoryLedger::merge`](crate::memory::MemoryLedger::merge)
+    /// — one memory space, peaks summed), then devices fold with
+    /// [`MemoryLedger::absorb_sharded`](crate::memory::MemoryLedger::absorb_sharded)
+    /// (separate memories, peak = max over devices). Traffic is additive
+    /// throughout and equal to a serial run over the same batches.
     pub memory: MemoryLedger,
+    /// The per-device folds behind `memory`, device-id order.
+    pub per_device_memory: Vec<MemoryLedger>,
 }
 
 struct Lifecycle {
@@ -259,14 +287,48 @@ struct Lifecycle {
 
 struct ServeInner {
     queue: Arc<AdmissionQueue>,
-    pool: Arc<WorkerPool>,
-    /// Kept on the handle for parameter hot-swap; the pool holds its own
-    /// clone for batch execution.
-    runner: Arc<dyn BatchRunner>,
+    /// One worker pool per device; the batcher routes filled batches to
+    /// the least-loaded device via `router`.
+    pools: Vec<Arc<WorkerPool>>,
+    router: Arc<ShardRouter>,
+    /// Kept on the handle for parameter hot-swap (applied to every
+    /// device's runner); the pools hold their own clones for execution.
+    runners: Vec<Arc<dyn BatchRunner>>,
     counters: Arc<Counters>,
     example_shape: Vec<usize>,
     batch: usize,
+    /// Serializes cross-device rollouts: without it, two concurrent
+    /// `swap_params` calls could interleave their per-device apply loops
+    /// and leave devices on different snapshots for good.
+    swap_lock: Mutex<()>,
     lifecycle: Mutex<Lifecycle>,
+}
+
+impl ServeInner {
+    /// Close every device pool, join all of them, and fold their ledgers:
+    /// merged per device, devices folded cross-memory (max peaks). The
+    /// first panic payload from any pool is returned only after **every**
+    /// pool has been joined, so a panicking device cannot leak threads on
+    /// the others.
+    fn join_pools(
+        &self,
+    ) -> (MemoryLedger, Vec<MemoryLedger>, Option<Box<dyn std::any::Any + Send>>) {
+        for pool in &self.pools {
+            pool.close();
+        }
+        let mut per_device = Vec::with_capacity(self.pools.len());
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for pool in &self.pools {
+            let (ledger, payload) = pool.join_collect();
+            per_device.push(ledger);
+            if panic.is_none() {
+                panic = payload;
+            }
+        }
+        let mut memory = MemoryLedger::new();
+        memory.absorb_sharded(&per_device);
+        (memory, per_device, panic)
+    }
 }
 
 impl Drop for ServeInner {
@@ -280,8 +342,7 @@ impl Drop for ServeInner {
         };
         if let Some(batcher) = lc.batcher.take() {
             let _ = batcher.join();
-            self.pool.close();
-            let _ = self.pool.join_collect();
+            let _ = self.join_pools();
         }
     }
 }
@@ -303,67 +364,148 @@ impl ServeHandle {
     ///
     /// [`Session::serve`](crate::api::Session::serve) is the engine-backed
     /// entry point; call this directly to serve a different model (or the
-    /// [`HostTailRunner`] demo on artifact-less builds).
+    /// [`HostTailRunner`] demo on artifact-less builds). For multi-device
+    /// serving, [`ServeHandle::spawn_sharded`] takes one runner per
+    /// device.
     pub fn spawn(runner: Arc<dyn BatchRunner>, config: ServeConfig) -> Result<ServeHandle> {
-        let batch = runner.batch_size();
+        Self::spawn_sharded(vec![runner], config)
+    }
+
+    /// Start a **sharded** serving pipeline: one persistent worker pool of
+    /// `config.workers` threads per runner (= per device), a single
+    /// deadline-batched admission queue in front, and a load-aware
+    /// [`ShardRouter`] in between — every filled batch dispatches to the
+    /// device with the least outstanding work. Per-request replies and
+    /// their values are independent of the routing (each runner must
+    /// compute the same function, as the per-device [`SessionRunner`]s of
+    /// one session do), so served logits stay bit-identical to the
+    /// single-device pipeline. See rust/DESIGN.md §6d.
+    ///
+    /// All runners must agree on the batch size and example shape;
+    /// [`ServeHandle::swap_params`] applies to every device's runner.
+    pub fn spawn_sharded(
+        runners: Vec<Arc<dyn BatchRunner>>,
+        config: ServeConfig,
+    ) -> Result<ServeHandle> {
+        let Some(first) = runners.first() else {
+            return Err(RuntimeError::Shape("serve: need at least one device runner".into()));
+        };
+        let batch = first.batch_size();
         if batch == 0 {
             return Err(RuntimeError::Shape("serve: runner batch size must be >= 1".into()));
         }
-        let example_shape = runner.example_shape();
+        let example_shape = first.example_shape();
         if example_shape.iter().product::<usize>() == 0 {
             return Err(RuntimeError::Shape(format!(
                 "serve: runner example shape {example_shape:?} has zero elements"
             )));
         }
+        for (d, runner) in runners.iter().enumerate().skip(1) {
+            if runner.batch_size() != batch || runner.example_shape() != example_shape {
+                return Err(RuntimeError::Shape(format!(
+                    "serve: device {d} runner disagrees with device 0 on batch size or \
+                     example shape ({} vs {batch}, {:?} vs {example_shape:?}) — sharded \
+                     serving needs one model replicated per device",
+                    runner.batch_size(),
+                    runner.example_shape(),
+                )));
+            }
+        }
         let max_delay = config.max_delay;
         let queue = Arc::new(AdmissionQueue::new(config.queue_cap));
         let counters = Arc::new(Counters::default());
-        let pool = Arc::new(
-            WorkerPool::new(runner.clone(), config.workers, counters.clone())
-                .map_err(|e| RuntimeError::Io(format!("serve: worker spawn failed: {e}")))?,
-        );
+        let workers = config.workers.max(1);
+        let router = Arc::new(ShardRouter::new(&vec![workers; runners.len()]));
+        let mut pools = Vec::with_capacity(runners.len());
+        for (d, runner) in runners.iter().enumerate() {
+            let pool = WorkerPool::new(runner.clone(), workers, counters.clone(), d)
+                .map_err(|e| RuntimeError::Io(format!("serve: worker spawn failed: {e}")));
+            match pool {
+                Ok(pool) => pools.push(Arc::new(pool)),
+                Err(e) => {
+                    // Unwind the devices already spawned before reporting.
+                    for pool in &pools {
+                        pool.close();
+                        let _ = pool.join_collect();
+                    }
+                    return Err(e);
+                }
+            }
+        }
         let spawned = {
             let queue = queue.clone();
-            let pool = pool.clone();
+            let pools = pools.clone();
+            let router = router.clone();
             let counters = counters.clone();
             let example_shape = example_shape.clone();
             thread::Builder::new().name("anode-serve-batcher".into()).spawn(move || {
-                batcher_loop(&queue, &pool, &counters, batch, &example_shape, max_delay)
+                batcher_loop(&queue, &pools, &router, &counters, batch, &example_shape, max_delay)
             })
         };
         let batcher = match spawned {
             Ok(handle) => handle,
             Err(e) => {
                 // Without a batcher the workers would wait forever: tear
-                // the pool down before reporting the failure.
-                pool.close();
-                let _ = pool.join_collect();
+                // the pools down before reporting the failure.
+                for pool in &pools {
+                    pool.close();
+                    let _ = pool.join_collect();
+                }
                 return Err(RuntimeError::Io(format!("serve: batcher spawn failed: {e}")));
             }
         };
         Ok(ServeHandle {
             inner: Arc::new(ServeInner {
                 queue,
-                pool,
-                runner,
+                pools,
+                router,
+                runners,
                 counters,
                 example_shape,
                 batch,
+                swap_lock: Mutex::new(()),
                 lifecycle: Mutex::new(Lifecycle { batcher: Some(batcher), report: None }),
             }),
         })
     }
 
     /// Hot-swap the model parameters on the running pipeline: an atomic
-    /// swap of the runner's weight-snapshot `Arc`, applied **between
-    /// batches** — no queue drain, no downtime. Requests already executing
-    /// finish on the old snapshot; every later batch uses the new one.
-    /// The runner validates compatibility (tensor count and shapes) and
-    /// rejects the swap if it does not support one. See
+    /// swap of each device runner's weight-snapshot `Arc`, applied
+    /// **between batches** — no queue drain, no downtime. Requests already
+    /// executing finish on the old snapshot; every later batch uses the
+    /// new one.
+    ///
+    /// Two-phase across devices: every runner first **validates** the
+    /// swap ([`BatchRunner::validate_swap`] — tensor count/shapes, or
+    /// unsupported), and only if all accept is the swap applied — so a
+    /// rejected rollout leaves no device serving mixed weights. Rollouts
+    /// are serialized (concurrent `swap_params` calls from handle clones
+    /// apply one after the other, never interleaved per device). See
     /// [`Session::push_params`](crate::api::Session::push_params) for the
     /// trained-checkpoint rollout path.
     pub fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
-        self.inner.runner.swap_params(params)
+        let _rollout = match self.inner.swap_lock.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for (d, runner) in self.inner.runners.iter().enumerate() {
+            runner.validate_swap(&params).map_err(|e| {
+                RuntimeError::Shape(format!("serve: hot-swap rejected on device {d}: {e}"))
+            })?;
+        }
+        for (d, runner) in self.inner.runners.iter().enumerate() {
+            // Validated above; a failure here (a runner whose validate and
+            // swap disagree) is surfaced, not swallowed.
+            runner.swap_params(params.clone()).map_err(|e| {
+                RuntimeError::Shape(format!("serve: hot-swap failed on device {d}: {e}"))
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Device pools this pipeline routes over.
+    pub fn device_count(&self) -> usize {
+        self.inner.pools.len()
     }
 
     /// The AOT batch capacity the queue coalesces toward.
@@ -434,6 +576,7 @@ impl ServeHandle {
             deadline_flushes: c.deadline_flushes.load(Ordering::Relaxed),
             drain_flushes: c.drain_flushes.load(Ordering::Relaxed),
             queue_depth: self.inner.queue.depth(),
+            device_loads: self.inner.router.loads(),
             closed: self.inner.queue.is_closed(),
         }
     }
@@ -454,10 +597,14 @@ impl ServeHandle {
         };
         if let Some(batcher) = lc.batcher.take() {
             let batcher_outcome = batcher.join();
-            // The batcher closes the pool on exit; repeat in case it died.
-            self.inner.pool.close();
-            let memory = self.inner.pool.join();
+            // The batcher closes the pools on exit; join_pools repeats the
+            // close in case it died, joins EVERY device pool, and folds
+            // the per-device ledgers (merge within a device, max across).
+            let (memory, per_device_memory, pool_panic) = self.inner.join_pools();
             if let Err(payload) = batcher_outcome {
+                std::panic::resume_unwind(payload);
+            }
+            if let Some(payload) = pool_panic {
                 std::panic::resume_unwind(payload);
             }
             let c = &self.inner.counters;
@@ -467,8 +614,10 @@ impl ServeHandle {
                 full_flushes: c.full_flushes.load(Ordering::Relaxed),
                 deadline_flushes: c.deadline_flushes.load(Ordering::Relaxed),
                 drain_flushes: c.drain_flushes.load(Ordering::Relaxed),
-                workers: self.inner.pool.workers(),
+                workers: self.inner.pools.iter().map(|p| p.workers()).sum(),
+                devices: self.inner.pools.len(),
                 memory,
+                per_device_memory,
             });
         }
         lc.report.clone().ok_or_else(|| {
@@ -478,10 +627,15 @@ impl ServeHandle {
 }
 
 /// The batcher thread: drain deadline-coalesced request groups, assemble
-/// the padded batch tensor, hand it to the pool; close the pool on exit.
+/// the padded batch tensor, route it to the **least-loaded device pool**
+/// (load = outstanding batches, tracked by the router and drained as each
+/// batch finishes); close every pool on exit. Routing never reorders
+/// replies — demultiplexing is per-request over each request's own
+/// channel, and values are device-independent.
 fn batcher_loop(
     queue: &AdmissionQueue,
-    pool: &WorkerPool,
+    pools: &[Arc<WorkerPool>],
+    router: &ShardRouter,
     counters: &Counters,
     batch: usize,
     example_shape: &[usize],
@@ -497,9 +651,13 @@ fn batcher_loop(
         };
         flush_counter.fetch_add(1, Ordering::Relaxed);
         let images = assemble(&requests, batch, example_shape);
-        pool.submit(BatchJob { images, requests });
+        let device = router.acquire(1);
+        let load = router.ticket(device, 1);
+        pools[device].submit(BatchJob { images, requests }, load);
     }
-    pool.close();
+    for pool in pools {
+        pool.close();
+    }
 }
 
 /// Stack request examples into a zero-padded `(batch, ...)` tensor,
@@ -601,6 +759,10 @@ impl BatchRunner for SessionRunner {
         *guard = Arc::new(params);
         Ok(())
     }
+
+    fn validate_swap(&self, params: &[Tensor]) -> Result<()> {
+        check_swap_shapes(params, &self.snapshot())
+    }
 }
 
 /// Shared hot-swap validation: the replacement must match the current
@@ -691,9 +853,7 @@ impl BatchRunner for HostTailRunner {
     /// The demo model's swappable state is its head: expects exactly
     /// `[w (c, k), bias (k)]` matching the current shapes.
     fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
-        let current = self.head();
-        let current_pair = [current.0.clone(), current.1.clone()];
-        check_swap_shapes(&params, &current_pair)?;
+        self.validate_swap(&params)?;
         let mut it = params.into_iter();
         let (w, bias) = (it.next().expect("checked len"), it.next().expect("checked len"));
         let mut guard = match self.head.write() {
@@ -702,6 +862,12 @@ impl BatchRunner for HostTailRunner {
         };
         *guard = Arc::new((w, bias));
         Ok(())
+    }
+
+    fn validate_swap(&self, params: &[Tensor]) -> Result<()> {
+        let current = self.head();
+        let current_pair = [current.0.clone(), current.1.clone()];
+        check_swap_shapes(params, &current_pair)
     }
 }
 

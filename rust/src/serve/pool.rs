@@ -22,7 +22,7 @@ use std::time::Instant;
 use crate::memory::{Category, MemoryLedger};
 use crate::runtime::RuntimeError;
 use crate::tensor::Tensor;
-use crate::util::pool::{Job, PersistentPool};
+use crate::util::pool::{Job, LoadTicket, PersistentPool};
 
 use super::queue::PendingRequest;
 use super::{BatchRunner, Counters, RequestStats, ServeReply};
@@ -34,9 +34,11 @@ pub(crate) struct BatchJob {
     pub requests: Vec<PendingRequest>,
 }
 
-/// Long-lived worker threads executing [`BatchJob`]s via the shared
+/// Long-lived worker threads executing [`BatchJob`]s via **one device's**
 /// [`BatchRunner`], on the generalized persistent pool with one
-/// [`MemoryLedger`] per worker.
+/// [`MemoryLedger`] per worker. A multi-device pipeline runs one
+/// `WorkerPool` per device; the batcher routes filled batches across them
+/// by load (rust/DESIGN.md §6d).
 pub(crate) struct WorkerPool {
     pool: PersistentPool<MemoryLedger>,
     runner: Arc<dyn BatchRunner>,
@@ -44,13 +46,16 @@ pub(crate) struct WorkerPool {
 }
 
 impl WorkerPool {
-    /// Spawn `workers` persistent threads, each owning a fresh ledger.
+    /// Spawn `workers` persistent threads for device `device`, each owning
+    /// a fresh ledger for its whole lifetime.
     pub fn new(
         runner: Arc<dyn BatchRunner>,
         workers: usize,
         counters: Arc<Counters>,
+        device: usize,
     ) -> std::io::Result<Self> {
-        let pool = PersistentPool::new(workers, "anode-serve-worker", MemoryLedger::new)?;
+        let pool =
+            PersistentPool::new(workers, &format!("anode-serve-d{device}"), MemoryLedger::new)?;
         Ok(Self { pool, runner, counters })
     }
 
@@ -61,14 +66,18 @@ impl WorkerPool {
 
     /// Hand a job to the pool, blocking while `workers` jobs already wait
     /// (backpressure toward the batcher and, through the admission queue,
-    /// toward submitters). If the pool is already closed the job is
-    /// dropped, which disconnects its per-request reply channels — every
-    /// waiter gets a clean "dropped before a reply" error, never a hang.
-    pub fn submit(&self, job: BatchJob) {
+    /// toward submitters). The router `load` ticket drops — draining this
+    /// batch's load from the device — when the batch finishes executing.
+    /// If the pool is already closed the job is dropped, which disconnects
+    /// its per-request reply channels (every waiter gets a clean "dropped
+    /// before a reply" error, never a hang) and releases the load ticket.
+    pub fn submit(&self, job: BatchJob, load: LoadTicket) {
         let runner = self.runner.clone();
         let counters = self.counters.clone();
-        let work: Job<MemoryLedger> =
-            Box::new(move |ledger| execute(runner.as_ref(), job, ledger, &counters));
+        let work: Job<MemoryLedger> = Box::new(move |ledger| {
+            execute(runner.as_ref(), job, ledger, &counters);
+            drop(load);
+        });
         let _ = self.pool.submit(work);
     }
 

@@ -200,86 +200,326 @@ impl<S: Send + 'static> PersistentPool<S> {
         if w <= 1 {
             return run_inline(items, &init, &f);
         }
-
         let chunk = n.div_ceil(w);
-        let chunks = n.div_ceil(chunk);
-        let latch = Arc::new(Latch::default());
-        // Declared before any job exists so it drops — and therefore waits
-        // for every outstanding job closure to be gone — *last*, on both
-        // the return and the unwind path out of this frame.
-        let guard = CompletionGuard(latch.clone());
-        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<(Vec<R>, CS)>)>();
-
-        let init = &init;
-        let f = &f;
-        for (ci, chunk_items) in items.chunks(chunk).enumerate() {
-            let base = ci * chunk;
-            let tx = tx.clone();
-            // The borrowing closure: run the chunk against a fresh chunk
-            // state, catching panics so a worker thread never dies on user
-            // code (the payload is re-raised on the caller below).
-            let work: Box<dyn FnOnce(&mut S) + Send + '_> = Box::new(move |_worker| {
-                let out = catch_unwind(AssertUnwindSafe(|| {
-                    let mut cs = init();
-                    let rs: Vec<R> = chunk_items
-                        .iter()
-                        .enumerate()
-                        .map(|(j, t)| f(&mut cs, base + j, t))
-                        .collect();
-                    (rs, cs)
-                }));
-                let _ = tx.send((ci, out));
-            });
-            // SAFETY: `guard` blocks this frame (return *or* unwind) until
-            // the ticket paired with this job is dropped, and the ticket is
-            // dropped only after `work` has been consumed (run to
-            // completion) or dropped unrun — either way the erased borrows
-            // of `items`/`init`/`f` are dead before the frame can exit.
-            let work: Job<S> = unsafe { erase_job_lifetime(work) };
-            latch.add();
-            let ticket = Ticket(latch.clone());
-            let job: Job<S> = Box::new(move |worker| {
-                work(worker);
-                drop(ticket);
-            });
-            // A closed pool hands the job back; dropping it releases its
-            // ticket + sender, and the missing chunk is detected below.
-            let _ = self.submit(job);
-        }
-        drop(tx);
-
-        let mut slots: Vec<Option<(Vec<R>, CS)>> = (0..chunks).map(|_| None).collect();
-        let mut panic: Option<PanicPayload> = None;
-        while let Ok((ci, outcome)) = rx.recv() {
-            match outcome {
-                Ok(pair) => slots[ci] = Some(pair),
-                Err(payload) => {
-                    if panic.is_none() {
-                        panic = Some(payload);
-                    }
-                }
-            }
-        }
-        // Every sender is gone; wait for the job closures themselves to be
-        // dropped before touching the borrows again.
-        drop(guard);
-        if let Some(payload) = panic {
-            resume_unwind(payload);
-        }
-
-        let mut results = Vec::with_capacity(n);
-        let mut states = Vec::with_capacity(chunks);
-        for slot in slots {
-            match slot {
-                Some((rs, cs)) => {
-                    results.extend(rs);
-                    states.push(cs);
-                }
-                None => panic!("PersistentPool::map_with: pool closed before every chunk ran"),
-            }
-        }
-        (results, states)
+        let assignments: Vec<ChunkAssignment> = (0..n)
+            .step_by(chunk)
+            .map(|start| ChunkAssignment { device: 0, start, len: chunk.min(n - start) })
+            .collect();
+        // Single-pool map ignores the worker's pinned state; the sharded
+        // entry point `sharded_map_with` exposes it (the device pin).
+        let wrapped = |_worker: &mut S, cs: &mut CS, i: usize, t: &T| f(cs, i, t);
+        let (results, states) =
+            scatter_gather(&[self], &assignments, None, items, &init, &wrapped);
+        (results, states.into_iter().map(|(_, cs)| cs).collect())
     }
+}
+
+/// A contiguous chunk of a sharded map's input, assigned to one device
+/// pool by the [`ShardRouter`]. Assignments are produced (and results
+/// reassembled) in `start` order, so the output order never depends on the
+/// routing decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkAssignment {
+    /// Index of the device pool this chunk executes on.
+    pub device: usize,
+    /// First item index of the chunk.
+    pub start: usize,
+    /// Items in the chunk (>= 1).
+    pub len: usize,
+}
+
+/// Load-aware chunk router for pool-per-device sharding.
+///
+/// Tracks outstanding work items per device and always routes the next
+/// chunk to the **least-loaded** device, where load is normalized by the
+/// device's capacity (its worker count): device `d` wins when
+/// `load[d] / cap[d]` is strictly smallest, ties going to the lowest
+/// device id. With equal capacities and an idle start this degenerates to
+/// capacity-proportional round-robin; under imbalance (one device busy
+/// with serve traffic, or slow) new chunks drain to the others.
+///
+/// Routing never affects *what* is computed — chunks are contiguous and
+/// results reassemble in input order — so any routing decision yields
+/// bit-identical output (asserted under forced worst-case imbalance in
+/// rust/tests/sharding.rs, and property-tested in rust/tests/proptests.rs).
+pub struct ShardRouter {
+    caps: Vec<usize>,
+    /// Outstanding items per device, shared with release-only
+    /// [`LoadTicket`]s (an `Arc` so tickets are `'static` and can ride
+    /// inside pool jobs).
+    loads: Arc<Mutex<Vec<u64>>>,
+}
+
+impl ShardRouter {
+    /// Router over devices with the given capacities (worker counts).
+    /// Zero capacities are clamped to 1; an empty slice means one device.
+    pub fn new(capacities: &[usize]) -> Self {
+        let caps: Vec<usize> = if capacities.is_empty() {
+            vec![1]
+        } else {
+            capacities.iter().map(|&c| c.max(1)).collect()
+        };
+        let n = caps.len();
+        Self { caps, loads: Arc::new(Mutex::new(vec![0; n])) }
+    }
+
+    /// Devices the router routes over.
+    pub fn devices(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Capacity (worker count) of device `d`.
+    pub fn capacity(&self, d: usize) -> usize {
+        self.caps[d]
+    }
+
+    /// Snapshot of the outstanding load per device.
+    pub fn loads(&self) -> Vec<u64> {
+        match self.loads.lock() {
+            Ok(guard) => guard.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
+    }
+
+    /// Least-normalized-load pick under the lock (ties → lowest id).
+    fn pick_locked(&self, loads: &[u64]) -> usize {
+        let mut best = 0usize;
+        for d in 1..loads.len() {
+            if loads[d] * self.caps[best] as u64 < loads[best] * self.caps[d] as u64 {
+                best = d;
+            }
+        }
+        best
+    }
+
+    /// Route one unit of `cost` items to the least-loaded device and add
+    /// it to that device's load. Pair with [`ShardRouter::complete`] or a
+    /// [`ShardRouter::ticket`] so the load drains when the work finishes.
+    pub fn acquire(&self, cost: u64) -> usize {
+        let mut loads = self.loads.lock().unwrap();
+        let d = self.pick_locked(&loads);
+        loads[d] += cost;
+        d
+    }
+
+    /// Mark `cost` items complete on device `d` (the manual counterpart of
+    /// a dropped [`LoadTicket`]). Saturating and poison-tolerant: load
+    /// release runs on teardown paths that must not panic.
+    pub fn complete(&self, device: usize, cost: u64) {
+        let mut loads = match self.loads.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        loads[device] = loads[device].saturating_sub(cost);
+    }
+
+    /// Release-only guard for a load already added by
+    /// [`ShardRouter::acquire`] / [`ShardRouter::assign_chunks`]: dropping
+    /// it completes `cost` items on `device`. Owns an `Arc` of the load
+    /// table, so it can ride inside a `'static` pool job and still release
+    /// when the job is dropped unrun (a closed pool).
+    pub fn ticket(&self, device: usize, cost: u64) -> LoadTicket {
+        LoadTicket { loads: self.loads.clone(), device, cost }
+    }
+
+    /// Split `[0, n)` into contiguous chunks of `chunk_len` (the last one
+    /// short) and route each, in order, to the least-loaded device at that
+    /// point, adding each chunk's length to its device's load. The caller
+    /// releases each chunk via [`ShardRouter::ticket`] /
+    /// [`ShardRouter::complete`] as it finishes.
+    pub fn assign_chunks(&self, n: usize, chunk_len: usize) -> Vec<ChunkAssignment> {
+        let chunk_len = chunk_len.max(1);
+        let mut out = Vec::with_capacity(n.div_ceil(chunk_len));
+        let mut loads = self.loads.lock().unwrap();
+        let mut start = 0usize;
+        while start < n {
+            let len = chunk_len.min(n - start);
+            let d = self.pick_locked(&loads);
+            loads[d] += len as u64;
+            out.push(ChunkAssignment { device: d, start, len });
+            start += len;
+        }
+        out
+    }
+}
+
+/// Release-only load guard — see [`ShardRouter::ticket`].
+pub struct LoadTicket {
+    loads: Arc<Mutex<Vec<u64>>>,
+    device: usize,
+    cost: u64,
+}
+
+impl Drop for LoadTicket {
+    fn drop(&mut self) {
+        let mut loads = match self.loads.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        loads[self.device] = loads[self.device].saturating_sub(self.cost);
+    }
+}
+
+/// Ordered scatter-gather across **several** pools (one per device): run
+/// `items` as contiguous chunks on the pools named by `router`'s
+/// assignment, handing each chunk's closure the executing worker's pinned
+/// per-worker state (the device pin) plus a fresh chunk state from `init`,
+/// and reassemble results in input order.
+///
+/// Returns the in-order results plus each chunk's state tagged with the
+/// device that ran it (so per-device ledger folds stay possible). Chunk
+/// granularity is `ceil(n / total used workers)`, where each device
+/// contributes at most `limit` workers — so a caller asking for fewer
+/// workers than the (never-shrinking) pools hold gets a fan-out bounded
+/// by its request, exactly like `map_with`'s `limit`. A panic inside `f`
+/// is contained on its worker (all pools stay usable) and re-raised here
+/// once every chunk settles; every assigned chunk's load is released on
+/// the router whether the chunk ran, panicked, or was dropped by a closed
+/// pool.
+///
+/// The caller owns the serial path: `sharded_map_with` always dispatches
+/// through the pools (worker state cannot be synthesized inline), so
+/// degenerate cases (`devices == 1 && workers <= 1`) should run
+/// `run_inline`-style on the caller's thread instead — which is exactly
+/// what `Session` does, keeping serial-vs-parallel bit-identity structural.
+pub fn sharded_map_with<S, T, R, CS, FI, F>(
+    pools: &[&PersistentPool<S>],
+    router: &ShardRouter,
+    limit: usize,
+    items: &[T],
+    init: FI,
+    f: F,
+) -> (Vec<R>, Vec<(usize, CS)>)
+where
+    S: Send + 'static,
+    T: Sync,
+    R: Send,
+    CS: Send,
+    FI: Fn() -> CS + Sync,
+    F: Fn(&mut S, &mut CS, usize, &T) -> R + Sync,
+{
+    assert!(!pools.is_empty(), "sharded_map_with needs at least one device pool");
+    assert_eq!(
+        pools.len(),
+        router.devices(),
+        "router device count must match the pool list"
+    );
+    let n = items.len();
+    if n == 0 {
+        return (Vec::new(), Vec::new());
+    }
+    let limit = limit.max(1);
+    let total: usize = pools.iter().map(|p| p.workers().min(limit)).sum();
+    let chunk = n.div_ceil(total.max(1));
+    let assignments = router.assign_chunks(n, chunk);
+    scatter_gather(pools, &assignments, Some(router), items, &init, &f)
+}
+
+/// The shared scatter-gather core behind [`PersistentPool::map_with`]
+/// (one pool, worker state ignored) and [`sharded_map_with`] (pool per
+/// device, worker state = the device pin): submit one job per assignment
+/// to its device's pool, gather `(chunk index, outcome)` over a channel,
+/// reassemble in input order.
+fn scatter_gather<S, T, R, CS, FI, F>(
+    pools: &[&PersistentPool<S>],
+    assignments: &[ChunkAssignment],
+    router: Option<&ShardRouter>,
+    items: &[T],
+    init: &FI,
+    f: &F,
+) -> (Vec<R>, Vec<(usize, CS)>)
+where
+    S: Send + 'static,
+    T: Sync,
+    R: Send,
+    CS: Send,
+    FI: Fn() -> CS + Sync,
+    F: Fn(&mut S, &mut CS, usize, &T) -> R + Sync,
+{
+    let chunks = assignments.len();
+    let latch = Arc::new(Latch::default());
+    // Declared before any job exists so it drops — and therefore waits
+    // for every outstanding job closure to be gone — *last*, on both
+    // the return and the unwind path out of this frame.
+    let guard = CompletionGuard(latch.clone());
+    let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<(Vec<R>, usize, CS)>)>();
+
+    for (ci, a) in assignments.iter().enumerate() {
+        let chunk_items = &items[a.start..a.start + a.len];
+        let base = a.start;
+        let device = a.device;
+        let tx = tx.clone();
+        // The borrowing closure: run the chunk against the worker's pinned
+        // state and a fresh chunk state, catching panics so a worker
+        // thread never dies on user code (the payload is re-raised on the
+        // caller below).
+        let work: Box<dyn FnOnce(&mut S) + Send + '_> = Box::new(move |worker| {
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                let mut cs = init();
+                let rs: Vec<R> = chunk_items
+                    .iter()
+                    .enumerate()
+                    .map(|(j, t)| f(worker, &mut cs, base + j, t))
+                    .collect();
+                (rs, device, cs)
+            }));
+            let _ = tx.send((ci, out));
+        });
+        // SAFETY: `guard` blocks this frame (return *or* unwind) until
+        // the ticket paired with this job is dropped, and the ticket is
+        // dropped only after `work` has been consumed (run to
+        // completion) or dropped unrun — either way the erased borrows
+        // of `items`/`init`/`f` are dead before the frame can exit.
+        let work: Job<S> = unsafe { erase_job_lifetime(work) };
+        latch.add();
+        let ticket = Ticket(latch.clone());
+        // Owned (`Arc`-backed) load guard: the chunk's routed load drains
+        // when the job finishes — or when a closed pool drops it unrun.
+        let load = router.map(|r| r.ticket(device, a.len as u64));
+        let job: Job<S> = Box::new(move |worker| {
+            work(worker);
+            // Load before latch ticket: once the mapping frame unblocks,
+            // every completed chunk's load is already drained.
+            drop(load);
+            drop(ticket);
+        });
+        // A closed pool hands the job back; dropping it releases its
+        // ticket + sender + load, and the missing chunk is detected below.
+        let _ = pools[device].submit(job);
+    }
+    drop(tx);
+
+    let mut slots: Vec<Option<(Vec<R>, usize, CS)>> = (0..chunks).map(|_| None).collect();
+    let mut panic: Option<PanicPayload> = None;
+    while let Ok((ci, outcome)) = rx.recv() {
+        match outcome {
+            Ok(triple) => slots[ci] = Some(triple),
+            Err(payload) => {
+                if panic.is_none() {
+                    panic = Some(payload);
+                }
+            }
+        }
+    }
+    // Every sender is gone; wait for the job closures themselves to be
+    // dropped before touching the borrows again.
+    drop(guard);
+    if let Some(payload) = panic {
+        resume_unwind(payload);
+    }
+
+    let mut results = Vec::with_capacity(items.len());
+    let mut states = Vec::with_capacity(chunks);
+    for slot in slots {
+        match slot {
+            Some((rs, device, cs)) => {
+                results.extend(rs);
+                states.push((device, cs));
+            }
+            None => panic!("sharded map: a device pool closed before every chunk ran"),
+        }
+    }
+    (results, states)
 }
 
 // Shutdown/teardown needs no bounds on `S`: these methods only flip the

@@ -7,6 +7,7 @@ use anode::data::{Batcher, SyntheticCifar};
 use anode::memory::{Category, MemoryLedger};
 use anode::rng::Rng;
 use anode::tensor::Tensor;
+use anode::util::pool::ShardRouter;
 
 /// Run `f` over `n` random cases, reporting the failing seed.
 fn forall(name: &str, n: u64, mut f: impl FnMut(&mut Rng)) {
@@ -151,6 +152,85 @@ fn prop_equispaced_never_beats_revolve() {
         let e = plan(Strategy::Equispaced(m), nt).forward_evals();
         let r = plan(Strategy::Revolve(m), nt).forward_evals();
         assert!(r <= e, "nt={nt} m={m}: revolve {r} > equispaced {e}");
+    });
+}
+
+#[test]
+fn prop_shard_router_conserves_items_and_never_reorders() {
+    forall("shard_router_plan", 150, |rng| {
+        let ndev = 1 + rng.below(5);
+        let caps: Vec<usize> = (0..ndev).map(|_| 1 + rng.below(4)).collect();
+        let router = ShardRouter::new(&caps);
+        let n = rng.below(240);
+        let chunk = 1 + rng.below(17);
+        let assignments = router.assign_chunks(n, chunk);
+        // Contiguous, in input order, conserving every item — the output
+        // reassembly can therefore never reorder, whatever the routing.
+        let mut next = 0usize;
+        for a in &assignments {
+            assert!(a.device < ndev, "device out of range");
+            assert!(a.len >= 1 && a.len <= chunk, "chunk length out of bounds");
+            assert_eq!(a.start, next, "chunks must be contiguous and ordered");
+            next += a.len;
+        }
+        assert_eq!(next, n, "assignments must conserve the total item count");
+        // Loads reflect exactly the outstanding assignment...
+        let loads = router.loads();
+        assert_eq!(loads.iter().sum::<u64>(), n as u64);
+        // ...and drain back to zero as chunks complete (ticket or manual).
+        for a in &assignments {
+            router.complete(a.device, a.len as u64);
+        }
+        assert!(router.loads().iter().all(|&l| l == 0), "load must drain to zero");
+    });
+}
+
+#[test]
+fn prop_shard_router_never_starves_a_device() {
+    forall("shard_router_starvation", 150, |rng| {
+        let ndev = 1 + rng.below(5);
+        let caps: Vec<usize> = (0..ndev).map(|_| 1 + rng.below(4)).collect();
+        let router = ShardRouter::new(&caps);
+        // Pre-load some devices arbitrarily (simulating in-flight work),
+        // then drain it — the plan below starts balanced.
+        for _ in 0..rng.below(8) {
+            let d = router.acquire(1 + rng.below(5) as u64);
+            let l = router.loads()[d];
+            router.complete(d, l);
+        }
+        let chunk = 1 + rng.below(9);
+        let n = chunk * (ndev + rng.below(3 * ndev));
+        let assignments = router.assign_chunks(n, chunk);
+        // From a balanced start, an idle device always beats a loaded one
+        // — so with at least as many chunks as devices, every device
+        // receives work (no starvation).
+        if assignments.len() >= ndev {
+            let mut fed = vec![false; ndev];
+            for a in &assignments {
+                fed[a.device] = true;
+            }
+            assert!(
+                fed.iter().all(|&f| f),
+                "starved device: caps={caps:?} n={n} chunk={chunk} fed={fed:?}"
+            );
+        }
+        // Higher-capacity devices never receive *fewer* items than a
+        // strictly lower-capacity device from a balanced start (load is
+        // normalized by capacity).
+        let mut items = vec![0u64; ndev];
+        for a in &assignments {
+            items[a.device] += a.len as u64;
+        }
+        for hi in 0..ndev {
+            for lo in 0..ndev {
+                if caps[hi] > caps[lo] {
+                    assert!(
+                        items[hi] + chunk as u64 >= items[lo],
+                        "capacity-starved device: caps={caps:?} items={items:?}"
+                    );
+                }
+            }
+        }
     });
 }
 

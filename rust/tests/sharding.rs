@@ -1,0 +1,513 @@
+//! Multi-device sharding tests on the **simulated-device harness**
+//! (`runtime::sim` — deterministic value-level execution on the vendored
+//! xla stub, no artifacts or backend needed; rust/DESIGN.md §6d).
+//!
+//! The lock-in grid: params/losses/logits must be **bit-identical to the
+//! serial run** for every (devices × workers × gradient strategy)
+//! combination across all three execution paths — training
+//! (`step_accumulate`), prediction (`predict_batches`) and serving
+//! (`serve`) — with ledger traffic equal to serial throughout. Plus:
+//! ordering under a router forced into worst-case imbalance, and fault
+//! injection (a panicking device runner / a registry-level device fault)
+//! that must degrade to error replies / propagated errors without
+//! deadlocking the healthy device pools.
+//!
+//! The device grid is {1, 2, 4} extended by `ANODE_SIM_DEVICES` when set
+//! (the CI sim job runs the suite with a 4-device topology).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anode::api::{argmax_rows, Engine, Prediction, PredictStats, SessionConfig};
+use anode::memory::{Category, MemoryLedger};
+use anode::models::ModelConfig;
+use anode::runtime::sim::{write_artifacts, SimSpec};
+use anode::runtime::{sim_devices_env, ArtifactRegistry, Result};
+use anode::serve::{BatchRunner, Pending, ServeConfig, ServeHandle};
+use anode::tensor::Tensor;
+use anode::util::pool::{sharded_map_with, PersistentPool, ShardRouter};
+
+const WAIT: Duration = Duration::from_secs(20);
+const STRATEGIES: [&str; 5] = ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"];
+
+/// Write the sim artifact set into a fresh temp dir.
+fn sim_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("anode_shard_{}_{tag}", std::process::id()));
+    write_artifacts(&dir, &SimSpec::default()).unwrap();
+    dir
+}
+
+/// A simulated engine sharding over `devices` devices.
+fn sim_engine(dir: &Path, devices: usize) -> Engine {
+    Engine::builder().artifacts(dir).devices(devices).simulate(true).build().unwrap()
+}
+
+/// Device counts under test: {1, 2, 4} plus the CI topology when set.
+fn device_grid() -> Vec<usize> {
+    let mut grid = vec![1usize, 2, 4];
+    if let Some(n) = sim_devices_env() {
+        if !grid.contains(&n) {
+            grid.push(n);
+        }
+    }
+    grid
+}
+
+/// Deterministic image batch shaped for the sim model. Every test engine
+/// here is built from `SimSpec::default()` artifacts, so the spec's
+/// shared generators are the single source of input shapes (the
+/// `shard_throughput` bench uses the same ones); the engine config is
+/// taken only to assert the two cannot drift.
+fn image(cfg: &ModelConfig, k: usize) -> Tensor {
+    let spec = SimSpec::default();
+    assert_eq!((cfg.batch, cfg.image), (spec.batch, spec.image), "engine/spec drift");
+    spec.image_batch(k)
+}
+
+fn labels(cfg: &ModelConfig, k: usize) -> Tensor {
+    let spec = SimSpec::default();
+    assert_eq!(cfg.num_classes, spec.num_classes, "engine/spec drift");
+    spec.label_batch(k)
+}
+
+fn micro_batches(cfg: &ModelConfig, accum: usize) -> Vec<(Tensor, Tensor)> {
+    (0..accum).map(|m| (image(cfg, m), labels(cfg, m))).collect()
+}
+
+/// Train `steps` accumulate-steps from a fresh session; return per-step
+/// loss bits, final param bits, and training-ledger traffic.
+fn train_run(
+    engine: &Engine,
+    method: &str,
+    workers: usize,
+    steps: usize,
+) -> (Vec<u32>, Vec<u32>, u64) {
+    let cfg = engine.config().clone();
+    let micro = micro_batches(&cfg, 4);
+    let mut session = engine.session(SessionConfig::with_method(method)).unwrap();
+    let traffic0 = session.memory().total_traffic();
+    let mut losses = Vec::with_capacity(steps);
+    for s in 0..steps {
+        let stats = session.step_accumulate_with_workers(&micro, workers).unwrap();
+        assert!(stats.finite, "{method} non-finite at step {s}");
+        losses.push(stats.loss.to_bits());
+    }
+    let params: Vec<u32> =
+        session.params().iter().flat_map(|p| p.data().iter().map(|x| x.to_bits())).collect();
+    assert_eq!(session.memory().unknown_frees(), 0, "{method} workers={workers}");
+    (losses, params, session.memory().total_traffic() - traffic0)
+}
+
+/// The lock-in grid for the training path: every (devices, workers,
+/// strategy) combination must produce bitwise the serial params/losses
+/// and meter exactly the serial ledger traffic.
+#[test]
+fn training_grid_bit_identical_to_serial_for_all_strategies() {
+    let dir = sim_dir("train_grid");
+    let engines: Vec<(usize, Engine)> =
+        device_grid().into_iter().map(|d| (d, sim_engine(&dir, d))).collect();
+    let serial = &engines[0].1;
+    assert_eq!(serial.device_count(), 1);
+    for method in STRATEGIES {
+        let (loss_ref, params_ref, traffic_ref) = train_run(serial, method, 1, 2);
+        for (devices, engine) in &engines {
+            for workers in [1usize, 2, 4] {
+                if *devices == 1 && workers == 1 {
+                    continue;
+                }
+                let (loss, params, traffic) = train_run(engine, method, workers, 2);
+                assert_eq!(
+                    loss_ref, loss,
+                    "{method}: losses diverged at devices={devices} workers={workers}"
+                );
+                assert_eq!(
+                    params_ref, params,
+                    "{method}: params diverged at devices={devices} workers={workers}"
+                );
+                assert_eq!(
+                    traffic_ref, traffic,
+                    "{method}: ledger traffic diverged at devices={devices} workers={workers}"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The prediction path across the grid: logits bit-identical to serial,
+/// aggregate traffic equal to serial, per-device ledgers accounting for
+/// every byte (the cross-device report is their additive-traffic /
+/// max-peak fold).
+#[test]
+fn predict_grid_matches_serial_and_accounts_per_device() {
+    let dir = sim_dir("predict_grid");
+    let serial_engine = sim_engine(&dir, 1);
+    let cfg = serial_engine.config().clone();
+    let batches: Vec<Tensor> = (0..8).map(|k| image(&cfg, 100 + k)).collect();
+    let serial_session = serial_engine.session(SessionConfig::with_method("anode")).unwrap();
+    let serial = serial_session.predict_batches_with_workers(&batches, 1).unwrap();
+
+    for devices in device_grid() {
+        let engine = sim_engine(&dir, devices);
+        let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+        for workers in [1usize, 2, 4] {
+            let par = session.predict_batches_with_workers(&batches, workers).unwrap();
+            assert_eq!(par.predictions.len(), serial.predictions.len());
+            for (s, p) in serial.predictions.iter().zip(&par.predictions) {
+                assert_eq!(s.classes, p.classes, "devices={devices} workers={workers}");
+                assert_eq!(
+                    s.logits.data(),
+                    p.logits.data(),
+                    "logits diverged at devices={devices} workers={workers}"
+                );
+            }
+            assert_eq!(
+                par.memory.total_traffic(),
+                serial.memory.total_traffic(),
+                "devices={devices} workers={workers}"
+            );
+            assert_eq!(par.memory.unknown_frees(), 0);
+            assert_eq!(par.device_memory.len(), devices, "workers={workers}");
+            let device_traffic: u64 = par.device_memory.iter().map(|l| l.total_traffic()).sum();
+            assert_eq!(
+                device_traffic,
+                par.memory.total_traffic(),
+                "per-device ledgers must account for every byte \
+                 (devices={devices} workers={workers})"
+            );
+            // The cross-device peak is the max over devices, never a sum.
+            let max_dev_peak =
+                par.device_memory.iter().map(|l| l.peak_bytes()).max().unwrap_or(0);
+            assert_eq!(
+                par.memory.peak_bytes(),
+                max_dev_peak,
+                "devices={devices} workers={workers}"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The serving path across the grid: one admission queue over one pool
+/// per device, filled batches routed by load — replies bit-identical to
+/// the serial `predict_batches` sweep for every (devices, workers)
+/// combination. (The sim model digests the whole batch tensor, so the
+/// identity holds exactly on full flushes — the test submits whole
+/// batches and keeps the deadline far away, like the serve suite does.)
+#[test]
+fn serve_grid_matches_serial_predict() {
+    let dir = sim_dir("serve_grid");
+    let serial_engine = sim_engine(&dir, 1);
+    let cfg = serial_engine.config().clone();
+    let batches: Vec<Tensor> = (0..4).map(|k| image(&cfg, 200 + k)).collect();
+    let serial_session = serial_engine.session(SessionConfig::with_method("anode")).unwrap();
+    let expected = serial_session.predict_batches_with_workers(&batches, 1).unwrap();
+
+    for devices in device_grid() {
+        let engine = sim_engine(&dir, devices);
+        let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+        for workers in [1usize, 2, 4] {
+            let config =
+                ServeConfig::default().max_delay_ms(600_000).workers(workers).queue_cap(256);
+            let handle = session.serve(config).unwrap();
+            assert_eq!(handle.device_count(), devices);
+            let mut pendings: Vec<Pending> = Vec::new();
+            for batch in &batches {
+                for ex in anode::serve::split_examples(batch).unwrap() {
+                    pendings.push(handle.submit(ex).unwrap());
+                }
+            }
+            let mut idx = 0usize;
+            for pred in &expected.predictions {
+                let k = *pred.logits.shape().last().unwrap();
+                for r in 0..cfg.batch {
+                    let reply = pendings[idx]
+                        .wait_timeout(WAIT)
+                        .unwrap()
+                        .expect("serve reply timed out");
+                    assert_eq!(
+                        reply.class, pred.classes[r],
+                        "request {idx} devices={devices} workers={workers}"
+                    );
+                    assert_eq!(
+                        reply.logits.data(),
+                        &pred.logits.data()[r * k..(r + 1) * k],
+                        "request {idx} devices={devices} workers={workers}"
+                    );
+                    idx += 1;
+                }
+            }
+            let report = handle.shutdown().unwrap();
+            assert_eq!(report.devices, devices);
+            assert_eq!(report.per_device_memory.len(), devices);
+            assert_eq!(report.requests, (batches.len() * cfg.batch) as u64);
+            assert_eq!(
+                report.memory.total_traffic(),
+                expected.memory.total_traffic(),
+                "serve ledger traffic diverged from serial predict \
+                 (devices={devices} workers={workers})"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Ordering under worst-case imbalance: with one device pinned under a
+/// huge standing load, the router drains every chunk to the idle device —
+/// and the output still comes back in exact input order. Once the load
+/// lifts, chunks spread over both devices again, still in order.
+#[test]
+fn router_worst_case_imbalance_never_reorders_output() {
+    let p0: PersistentPool = PersistentPool::new(2, "shard-imb0", || ()).unwrap();
+    let p1: PersistentPool = PersistentPool::new(2, "shard-imb1", || ()).unwrap();
+    let pools = [&p0, &p1];
+    let router = ShardRouter::new(&[2, 2]);
+    assert_eq!(router.acquire(1_000), 0, "first pick from idle must be device 0");
+
+    let items: Vec<usize> = (0..37).collect();
+    let want: Vec<usize> = items.iter().map(|&x| x * 3).collect();
+    let count_and_triple = |_s: &mut (), c: &mut usize, i: usize, x: &usize| {
+        assert_eq!(i, *x, "index must match input position");
+        *c += 1;
+        *x * 3
+    };
+    let (out, states) = sharded_map_with(&pools, &router, 2, &items, || 0usize, count_and_triple);
+    assert_eq!(out, want, "imbalanced routing must not reorder output");
+    assert!(
+        states.iter().all(|(d, _)| *d == 1),
+        "all chunks must drain to the idle device: {:?}",
+        states.iter().map(|(d, c)| (*d, *c)).collect::<Vec<_>>()
+    );
+    assert_eq!(states.iter().map(|(_, c)| *c).sum::<usize>(), items.len());
+    // The map's own load drained; the standing imbalance remains.
+    assert_eq!(router.loads(), vec![1_000, 0]);
+
+    router.complete(0, 1_000);
+    let (out2, states2) = sharded_map_with(&pools, &router, 2, &items, || 0usize, count_and_triple);
+    assert_eq!(out2, want, "balanced routing must not reorder output");
+    let devices_used: std::collections::HashSet<usize> =
+        states2.iter().map(|(d, _)| *d).collect();
+    assert_eq!(devices_used.len(), 2, "balanced start must feed both devices");
+    assert_eq!(router.loads(), vec![0, 0], "all load must drain after the map");
+}
+
+// ---------------------------------------------------------------------------
+// Fault injection
+// ---------------------------------------------------------------------------
+
+/// Manually released latch blocking a runner, to hold one device busy
+/// deterministically.
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait_open(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Healthy device runner: per-row linear logits, optionally gated.
+struct RowRunner {
+    batch: usize,
+    shape: Vec<usize>,
+    k: usize,
+    gate: Option<Arc<Gate>>,
+    entered: Arc<AtomicUsize>,
+}
+
+impl BatchRunner for RowRunner {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn example_shape(&self) -> Vec<usize> {
+        self.shape.clone()
+    }
+
+    fn run(&self, images: &Tensor, ledger: &mut MemoryLedger) -> Result<Prediction> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        if let Some(gate) = &self.gate {
+            gate.wait_open();
+        }
+        let id = ledger.alloc(64, Category::Transient);
+        let ex_len: usize = self.shape.iter().product();
+        let mut out = Vec::with_capacity(self.batch * self.k);
+        for row in images.data().chunks(ex_len) {
+            let s: f32 = row.iter().sum();
+            out.extend((0..self.k).map(|j| s * (j as f32 + 1.0) - j as f32));
+        }
+        ledger.free(id);
+        let logits = Tensor::from_vec(vec![self.batch, self.k], out).unwrap();
+        let classes = argmax_rows(&logits);
+        Ok(Prediction {
+            classes,
+            logits,
+            stats: PredictStats {
+                batch: self.batch,
+                seconds: 0.0,
+                examples_per_sec: 0.0,
+                peak_activation_bytes: 64,
+            },
+        })
+    }
+}
+
+/// A device whose runner panics mid-batch — the serve-side fault model.
+struct PanickingRunner {
+    batch: usize,
+    shape: Vec<usize>,
+}
+
+impl BatchRunner for PanickingRunner {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn example_shape(&self) -> Vec<usize> {
+        self.shape.clone()
+    }
+
+    fn run(&self, _images: &Tensor, _ledger: &mut MemoryLedger) -> Result<Prediction> {
+        panic!("simulated device blew up mid-batch");
+    }
+}
+
+fn row_example(shape: &[usize], seed: usize) -> Tensor {
+    let len: usize = shape.iter().product();
+    let data = (0..len).map(|j| ((seed * 31 + j) as f32) * 0.01 - 1.0).collect();
+    Tensor::from_vec(shape.to_vec(), data).unwrap()
+}
+
+/// Serve-side fault injection: device 1's runner panics mid-batch. Its
+/// batches must become error replies; device 0 keeps serving; the
+/// pipeline never deadlocks, keeps accepting work, and drains cleanly on
+/// shutdown with every request answered.
+#[test]
+fn panicking_device_runner_yields_error_replies_without_deadlock() {
+    let shape = vec![2usize, 2];
+    let (batch, k) = (2usize, 3usize);
+    let gate = Gate::new();
+    let entered = Arc::new(AtomicUsize::new(0));
+    let good = Arc::new(RowRunner {
+        batch,
+        shape: shape.clone(),
+        k,
+        gate: Some(gate.clone()),
+        entered: entered.clone(),
+    });
+    let bad = Arc::new(PanickingRunner { batch, shape: shape.clone() });
+    let config = ServeConfig::default().max_delay_ms(600_000).workers(1).queue_cap(64);
+    let handle =
+        ServeHandle::spawn_sharded(vec![good as Arc<dyn BatchRunner>, bad], config).unwrap();
+    assert_eq!(handle.device_count(), 2);
+
+    // Batch A fills and routes to idle device 0, whose gated runner holds
+    // it (and its router load) open.
+    let a: Vec<Pending> =
+        (0..batch).map(|i| handle.submit(row_example(&shape, i)).unwrap()).collect();
+    let deadline = std::time::Instant::now() + WAIT;
+    while entered.load(Ordering::SeqCst) < 1 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    assert!(entered.load(Ordering::SeqCst) >= 1, "device 0 never picked up batch A");
+
+    // Batch B must route to device 1 (least loaded) — whose runner
+    // panics. Every request in it gets an error reply, not a hang.
+    let b: Vec<Pending> =
+        (0..batch).map(|i| handle.submit(row_example(&shape, 100 + i)).unwrap()).collect();
+    for (i, pending) in b.into_iter().enumerate() {
+        let err = pending
+            .wait_timeout(WAIT)
+            .map(|r| r.expect("reply timed out"))
+            .expect_err(&format!("request {i} on the panicking device must error"));
+        assert!(err.to_string().contains("panicked"), "unexpected error: {err}");
+    }
+
+    // The healthy device finishes untouched.
+    gate.release();
+    for pending in a {
+        pending.wait_timeout(WAIT).unwrap().expect("healthy device reply");
+    }
+
+    // The pipeline is still alive: later submissions get replies (from
+    // whichever device the router picks — a broken device answers with
+    // errors, never silence), and shutdown drains with all 6 requests
+    // completed.
+    let c: Vec<Pending> =
+        (0..batch).map(|i| handle.submit(row_example(&shape, 200 + i)).unwrap()).collect();
+    for pending in c {
+        let _ = pending.wait_timeout(WAIT).expect("pipeline deadlocked after device fault");
+    }
+    let report = handle.shutdown().unwrap();
+    assert_eq!(report.requests, 3 * batch as u64);
+    assert_eq!(report.devices, 2);
+}
+
+/// Session-side fault injection: device 0's registry fails every
+/// `stem_fwd` call (the simulated broken device). Training and evaluation
+/// must surface the typed error — no deadlock, no panic — and the session
+/// (and its per-device pools) must stay usable and drain cleanly on drop.
+#[test]
+fn faulty_device_registry_propagates_errors_without_deadlock() {
+    let dir = sim_dir("fault_session");
+    let reg =
+        Arc::new(ArtifactRegistry::open_simulated_with_fault(&dir, 0, "stem_fwd").unwrap());
+    assert!(reg.is_simulated());
+    let engine = Engine::builder().registry(reg).devices(2).build().unwrap();
+    assert_eq!(engine.device_count(), 2);
+    let cfg = engine.config().clone();
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let micro = micro_batches(&cfg, 6);
+
+    for round in 0..2 {
+        let err = session
+            .step_accumulate_with_workers(&micro, 2)
+            .expect_err("a faulty device must fail the step");
+        assert!(err.to_string().contains("injected fault"), "round {round}: {err}");
+    }
+    let eval: Vec<(Tensor, Tensor)> =
+        (0..6).map(|k| (image(&cfg, k), labels(&cfg, k))).collect();
+    let err = session
+        .evaluate_with_workers(&eval, 2)
+        .expect_err("a faulty device must fail evaluation");
+    assert!(err.to_string().contains("injected fault"), "{err}");
+    // Reaching drop without a hang proves the pools drained and joined.
+    drop(session);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The engine builder honors `ANODE_SIM_DEVICES` as the default device
+/// count (unless an explicit count or a shared registry pins it), and the
+/// session/serve paths report the same topology.
+#[test]
+fn device_topology_is_visible_end_to_end() {
+    let dir = sim_dir("topology");
+    for devices in device_grid() {
+        let engine = sim_engine(&dir, devices);
+        assert_eq!(engine.device_count(), devices);
+        assert_eq!(engine.device_set().count(), devices);
+        for d in 0..devices {
+            assert_eq!(engine.device_set().registry(d).device_id(), d);
+            assert!(engine.device_set().registry(d).is_simulated());
+        }
+        let session = engine.session(SessionConfig::default()).unwrap();
+        assert_eq!(session.device_count(), devices);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

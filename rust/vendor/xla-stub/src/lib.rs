@@ -23,6 +23,17 @@ impl std::error::Error for Error {}
 
 pub type Result<T> = std::result::Result<T, Error>;
 
+/// Devices the stub platform simulates: `ANODE_SIM_DEVICES=N` (N >= 1),
+/// default 1. A malformed or zero value falls back to 1 — the simulated
+/// platform always has at least one device, like a real PJRT client.
+pub fn simulated_device_count() -> usize {
+    std::env::var("ANODE_SIM_DEVICES")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1)
+}
+
 fn unavailable<T>(what: &str) -> Result<T> {
     Err(Error(format!(
         "{what} requires a real XLA/PJRT backend — this build links the offline \
@@ -62,6 +73,14 @@ impl PjRtClient {
 
     pub fn platform_name(&self) -> String {
         "stub".to_string()
+    }
+
+    /// Number of devices this client exposes. The stub simulates an
+    /// N-device platform when `ANODE_SIM_DEVICES=N` is set (the offline
+    /// multi-device harness — see `anode::runtime::DeviceSet`), mirroring
+    /// xla-rs's `PjRtClient::device_count`; default is 1.
+    pub fn device_count(&self) -> usize {
+        simulated_device_count()
     }
 
     pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
@@ -186,5 +205,15 @@ mod tests {
         assert_eq!(client.platform_name(), "stub");
         let err = HloModuleProto::from_text_file("/tmp/x.hlo").unwrap_err();
         assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn simulated_platform_has_at_least_one_device() {
+        // Without touching the process environment (other tests run in
+        // parallel), the contract that holds for every env value is
+        // "at least one device".
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.device_count() >= 1);
+        assert!(simulated_device_count() >= 1);
     }
 }
