@@ -1,0 +1,248 @@
+//! `net_throughput` — the wire front end (`anode::net`) over the
+//! simulated-device harness, emitted to `BENCH_net.json`. Runs on every
+//! build (no real artifacts needed):
+//!
+//! 1. **Wire vs in-process** — the same request stream through a
+//!    loopback `NetServer` (length-prefixed frames, blocking clients)
+//!    vs direct `ServeHandle::submit`, p50/p95/p99 per-request latency
+//!    on both paths. The gap is the protocol + reactor overhead.
+//! 2. **Shed rate at saturation** — pipelined floods against a
+//!    deliberately tiny admission queue; fraction of requests answered
+//!    with `RetryAfter`, cross-checked against the scraped
+//!    `anode_shed_total`.
+//! 3. **Adaptive vs fixed `max_delay`** — the same mixed-SLO workload
+//!    under a pinned flush window and under the arrival-rate-adaptive
+//!    window, comparing client-observed latency and the final window.
+//!
+//! `cargo bench --bench net_throughput`; `ANODE_BENCH_QUICK=1` shrinks
+//! request counts for the CI bench-smoke job while still writing the
+//! full `BENCH_net.json` artifact.
+
+use std::time::{Duration, Instant};
+
+use anode::api::{Engine, Session, SessionConfig};
+use anode::net::metrics::scrape_value;
+use anode::net::{ClientReply, NetClient, NetConfig};
+use anode::runtime::sim::{write_artifacts, SimSpec};
+use anode::serve::{split_examples, ServeConfig, SloClass};
+use anode::tensor::Tensor;
+use anode::util::bench::{percentile, quick_mode};
+
+fn main() {
+    println!("=== net_throughput — socket front end on simulated devices ===\n");
+    let quick = quick_mode();
+    let requests = if quick { 32 } else { 96 };
+    let clients = if quick { 3 } else { 4 };
+
+    let dir = std::env::temp_dir().join(format!("anode_bench_net_{}", std::process::id()));
+    if let Err(e) = write_artifacts(&dir, &SimSpec::default()) {
+        eprintln!("could not write sim artifacts: {e} — skipping net_throughput");
+        return;
+    }
+    let engine = Engine::builder().artifacts(&dir).devices(2).simulate(true).build().unwrap();
+    let spec = SimSpec::default();
+    let mut examples: Vec<Tensor> = Vec::with_capacity(requests);
+    for k in 0.. {
+        if examples.len() >= requests {
+            break;
+        }
+        examples.extend(split_examples(&spec.image_batch(k)).unwrap());
+    }
+    examples.truncate(requests);
+
+    let session = |engine: &Engine| engine.session(SessionConfig::with_method("anode")).unwrap();
+    let (inproc, wire) = wire_vs_inprocess(&session(&engine), &examples, clients);
+    let shed = saturation_shed_rate(&session(&engine), &examples);
+    let fixed_cfg = ServeConfig::default().max_delay_ms(5).batch_delay_ms(20).workers(2);
+    let fixed = delay_policy_run(&session(&engine), &examples, clients, fixed_cfg.clone(), "fixed");
+    let adaptive_cfg = fixed_cfg.adaptive_delay_ms(1, 20);
+    let adaptive =
+        delay_policy_run(&session(&engine), &examples, clients, adaptive_cfg, "adaptive");
+
+    let json = format!(
+        "{{\n  \"bench\": \"net_throughput\",\n  \"mode\": \"sim\",\n  \
+         \"requests\": {requests},\n  \"clients\": {clients},\n  \
+         \"inprocess_p50_ms\": {:.4},\n  \"inprocess_p95_ms\": {:.4},\n  \
+         \"inprocess_p99_ms\": {:.4},\n  \
+         \"wire_p50_ms\": {:.4},\n  \"wire_p95_ms\": {:.4},\n  \"wire_p99_ms\": {:.4},\n  \
+         \"wire_overhead_p50_ms\": {:.4},\n  \
+         \"saturation_requests\": {},\n  \"saturation_shed\": {},\n  \
+         \"saturation_shed_rate\": {:.4},\n  \
+         \"fixed_p50_ms\": {:.4},\n  \"fixed_p95_ms\": {:.4},\n  \
+         \"fixed_final_window_us\": {},\n  \"fixed_deadline_flushes\": {},\n  \
+         \"adaptive_p50_ms\": {:.4},\n  \"adaptive_p95_ms\": {:.4},\n  \
+         \"adaptive_final_window_us\": {},\n  \"adaptive_deadline_flushes\": {}\n}}\n",
+        inproc.0,
+        inproc.1,
+        inproc.2,
+        wire.0,
+        wire.1,
+        wire.2,
+        wire.0 - inproc.0,
+        shed.total,
+        shed.shed,
+        shed.rate,
+        fixed.p50_ms,
+        fixed.p95_ms,
+        fixed.final_window_us,
+        fixed.deadline_flushes,
+        adaptive.p50_ms,
+        adaptive.p95_ms,
+        adaptive.final_window_us,
+        adaptive.deadline_flushes,
+    );
+    match std::fs::write("BENCH_net.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_net.json"),
+        Err(e) => eprintln!("could not write BENCH_net.json: {e}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Sort and summarize as (p50, p95, p99) in milliseconds.
+fn pct_ms(lat: &mut [Duration]) -> (f64, f64, f64) {
+    lat.sort();
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    (ms(percentile(lat, 50.0)), ms(percentile(lat, 95.0)), ms(percentile(lat, 99.0)))
+}
+
+/// Drive `examples` through a loopback server from `clients` blocking
+/// client threads (interleaved shares, one request in flight each) and
+/// return the client-observed wall latencies.
+fn wire_latencies<F>(addr: &str, examples: &[Tensor], clients: usize, class_for: F) -> Vec<Duration>
+where
+    F: Fn(usize) -> SloClass + Sync,
+{
+    std::thread::scope(|scope| {
+        let class_for = &class_for;
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut client = NetClient::connect(addr).unwrap();
+                    let mut lat = Vec::new();
+                    for i in (c..examples.len()).step_by(clients) {
+                        let t0 = Instant::now();
+                        let reply =
+                            client.request_with_retry(&examples[i], class_for(i), 16).unwrap();
+                        assert!(matches!(reply, ClientReply::Reply { .. }), "request {i} shed out");
+                        lat.push(t0.elapsed());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Scenario 1: identical request stream in-process (`ServeHandle::submit`)
+/// and over the wire; returns ((p50, p95, p99) ms, same) for both paths.
+fn wire_vs_inprocess(
+    session: &Session,
+    examples: &[Tensor],
+    clients: usize,
+) -> ((f64, f64, f64), (f64, f64, f64)) {
+    let config = ServeConfig::default().max_delay_ms(2).workers(2).queue_cap(512);
+
+    let handle = session.serve(config.clone()).unwrap();
+    let pendings: Vec<_> = examples.iter().map(|ex| handle.submit(ex.clone()).unwrap()).collect();
+    let mut inproc: Vec<Duration> =
+        pendings.into_iter().map(|p| p.wait().unwrap().stats.total()).collect();
+    handle.shutdown().unwrap();
+    let inproc = pct_ms(&mut inproc);
+
+    let server = session.serve_net(config, NetConfig::default(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let mut wire = wire_latencies(&addr, examples, clients, |_| SloClass::Interactive);
+    let text = NetClient::connect(&addr).and_then(|mut c| c.metrics()).unwrap_or_default();
+    let server_p50_us = scrape_value(&text, "net_latency_p50_us").unwrap_or(0);
+    let report = server.shutdown().unwrap();
+    let wire = pct_ms(&mut wire);
+
+    println!("--- wire vs in-process ({} requests, {clients} clients) ---", examples.len());
+    println!("in-process p50={:.3}ms p95={:.3}ms p99={:.3}ms", inproc.0, inproc.1, inproc.2);
+    println!("wire       p50={:.3}ms p95={:.3}ms p99={:.3}ms", wire.0, wire.1, wire.2);
+    println!(
+        "wire overhead p50 {:+.3}ms (server-side wire p50 {server_p50_us}us, {} replies)",
+        wire.0 - inproc.0,
+        report.net.replies
+    );
+    (inproc, wire)
+}
+
+struct ShedRate {
+    total: usize,
+    shed: usize,
+    rate: f64,
+}
+
+/// Scenario 2: pipelined floods against a one-worker, two-slot admission
+/// queue — requests beyond capacity must come back as `RetryAfter`.
+fn saturation_shed_rate(session: &Session, examples: &[Tensor]) -> ShedRate {
+    let flood_clients = 4;
+    let per_client = examples.len().min(24);
+    let config = ServeConfig::default().max_delay_ms(1).workers(1).queue_cap(2);
+    let server = session.serve_net(config, NetConfig::default(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let shed: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..flood_clients)
+            .map(|_| {
+                let addr = &addr;
+                scope.spawn(move || {
+                    let mut client = NetClient::connect(addr).unwrap();
+                    let burst: Vec<Tensor> = examples[..per_client].to_vec();
+                    let replies = client.pipeline(&burst, SloClass::Interactive).unwrap();
+                    replies.iter().filter(|r| matches!(r, ClientReply::RetryAfter(_))).count()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+    let text = NetClient::connect(&addr).and_then(|mut c| c.metrics()).unwrap_or_default();
+    let scraped_shed = scrape_value(&text, "shed_total").unwrap_or(0);
+    server.shutdown().unwrap();
+
+    let total = flood_clients * per_client;
+    let rate = shed as f64 / total as f64;
+    println!("\n--- shed rate at saturation (queue_cap=2, workers=1) ---");
+    println!(
+        "{total} pipelined requests -> {shed} shed ({:.1}%), \
+         scraped anode_shed_total={scraped_shed}",
+        100.0 * rate
+    );
+    ShedRate { total, shed, rate }
+}
+
+struct DelayPolicy {
+    p50_ms: f64,
+    p95_ms: f64,
+    final_window_us: u64,
+    deadline_flushes: u64,
+}
+
+/// Scenario 3: one mixed-SLO wire run under the given flush-window
+/// policy; returns client latency plus the final interactive window.
+fn delay_policy_run(
+    session: &Session,
+    examples: &[Tensor],
+    clients: usize,
+    config: ServeConfig,
+    label: &str,
+) -> DelayPolicy {
+    let server = session.serve_net(config, NetConfig::default(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let mixed = |i: usize| if i % 4 == 3 { SloClass::Batch } else { SloClass::Interactive };
+    let mut lat = wire_latencies(&addr, examples, clients, mixed);
+    let text = NetClient::connect(&addr).and_then(|mut c| c.metrics()).unwrap_or_default();
+    let final_window_us = scrape_value(&text, "max_delay_us").unwrap_or(0);
+    let report = server.shutdown().unwrap();
+    let (p50_ms, p95_ms, _) = pct_ms(&mut lat);
+
+    println!("\n--- max_delay policy: {label} ---");
+    println!(
+        "p50={p50_ms:.3}ms p95={p95_ms:.3}ms  final window={final_window_us}us  \
+         flushes full={} deadline={}",
+        report.serve.full_flushes, report.serve.deadline_flushes
+    );
+    DelayPolicy { p50_ms, p95_ms, final_window_us, deadline_flushes: report.serve.deadline_flushes }
+}

@@ -210,7 +210,12 @@ fn serve_throughput(engine: Option<&Engine>) {
             let prebatched_eps =
                 (n_batches * cfg.batch) as f64 / t0.elapsed().as_secs_f64().max(1e-12);
             let expected = expected_rows(base.predictions.iter().map(|p| (&p.classes, &p.logits)));
-            let config = ServeConfig { max_delay, workers: WORKERS, queue_cap: 2 * cfg.batch };
+            let config = ServeConfig {
+                max_delay,
+                workers: WORKERS,
+                queue_cap: 2 * cfg.batch,
+                ..ServeConfig::default()
+            };
             let handle = session.serve(config).unwrap();
             let args = ServeBenchArgs {
                 mode: "session",
@@ -239,7 +244,12 @@ fn serve_throughput(engine: Option<&Engine>) {
                 });
             let prebatched_eps = (n_batches * b) as f64 / t0.elapsed().as_secs_f64().max(1e-12);
             let expected = expected_rows(base.iter().map(|p| (&p.classes, &p.logits)));
-            let config = ServeConfig { max_delay, workers: WORKERS, queue_cap: 2 * b };
+            let config = ServeConfig {
+                max_delay,
+                workers: WORKERS,
+                queue_cap: 2 * b,
+                ..ServeConfig::default()
+            };
             let handle = ServeHandle::spawn(Arc::new(runner), config).unwrap();
             let args = ServeBenchArgs { mode: "stub-tail", batch: b, max_delay, prebatched_eps };
             run_serve_bench(args, handle, &stacked, &expected);

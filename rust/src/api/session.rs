@@ -24,7 +24,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::coordinator::ExecutionCore;
+use crate::coordinator::{ExecutionCore, GradAccumulator};
 use crate::data::Batcher;
 use crate::memory::{Category, MemoryLedger};
 use crate::metrics::{Curve, CurvePoint, Mean};
@@ -32,7 +32,9 @@ use crate::optim::{LrSchedule, Sgd};
 use crate::runtime::{Result, RuntimeError};
 use crate::serve::{BatchRunner, ServeConfig, ServeHandle, SessionRunner};
 use crate::tensor::Tensor;
-use crate::util::pool::{run_inline, sharded_map_with, PersistentPool, ShardRouter};
+use crate::util::pool::{
+    run_inline, sharded_fold_with, sharded_map_with, PersistentPool, ShardRouter,
+};
 
 use super::modules::ModuleSet;
 use super::Engine;
@@ -439,7 +441,16 @@ impl<'e> Session<'e> {
         let lr = self.config.lr.at(self.step_idx);
         self.opt.lr = lr;
         let params = &self.params;
-        let (per_micro, states) = sharded_exec(
+        // Pipelined reduce: the streaming fold consumes chunk i's
+        // gradients on this thread while chunk i+1 is still computing on
+        // the pools. The accumulator's push order is the fixed micro-batch
+        // index order (the streaming scatter delivers chunks in input
+        // order), so the result is bit-identical to the old
+        // gather-everything-then-reduce_grads path and to serial —
+        // asserted on the concurrency grid in rust/tests/concurrency.rs.
+        let mut acc = GradAccumulator::new();
+        let mut first_err: Option<RuntimeError> = None;
+        let states = sharded_exec_fold(
             &self.shard,
             &self.cores,
             workers,
@@ -447,6 +458,26 @@ impl<'e> Session<'e> {
             MemoryLedger::new,
             |core, ledger, _i, xy: &(Tensor, Tensor)| {
                 core.loss_and_grad(&xy.0, &xy.1, params, ledger)
+            },
+            |_base, results: Vec<Result<(f32, f32, Vec<Tensor>)>>| {
+                for r in results {
+                    // The first error (in micro-batch order) wins, exactly
+                    // like the old collect::<Result<Vec<_>>>; later
+                    // gradients are discarded once an error is latched.
+                    match r {
+                        Ok(triple) if first_err.is_none() => {
+                            if let Err(e) = acc.push(triple) {
+                                first_err = Some(e);
+                            }
+                        }
+                        Ok(_) => {}
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
             },
         );
         // Fold the phase into the session ledger before error propagation:
@@ -460,8 +491,10 @@ impl<'e> Session<'e> {
         } else {
             self.ledger.absorb_sharded(&ledgers_by_device(self.cores.len(), &states));
         }
-        let per_micro = per_micro.into_iter().collect::<Result<Vec<_>>>()?;
-        let (loss, correct, mut grads) = ExecutionCore::reduce_grads(per_micro)?;
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let (loss, correct, mut grads) = acc.finish()?;
         let finite = loss.is_finite() && grads.iter().all(|g| g.all_finite());
         let mut grad_norm = 0.0;
         if finite {
@@ -608,15 +641,35 @@ impl<'e> Session<'e> {
     /// per-batch computation is device-independent. See `anode::serve` and
     /// rust/DESIGN.md §6b.
     pub fn serve(&self, config: ServeConfig) -> Result<ServeHandle> {
+        // One shared snapshot: every device runner holds the same Arc, so
+        // serving D devices costs one parameter copy, not D.
+        let snapshot = Arc::new(self.params.clone());
         let runners: Vec<Arc<dyn BatchRunner>> = self
             .cores
             .iter()
             .map(|core| {
-                Arc::new(SessionRunner::new(core.clone(), self.params.clone()))
+                Arc::new(SessionRunner::new(core.clone(), snapshot.clone()))
                     as Arc<dyn BatchRunner>
             })
             .collect();
         ServeHandle::spawn_sharded(runners, config)
+    }
+
+    /// Start the serving pipeline of [`Session::serve`] *and* put the
+    /// `anode::net` socket front end on it: bind `addr` (use
+    /// `"127.0.0.1:0"` for an OS-assigned loopback port) and spawn the
+    /// connection reactor. Clients speak the length-prefixed binary
+    /// protocol of [`crate::net::proto`]; `GET /metrics` on the same
+    /// port answers with scrapeable plain text. Shutting the returned
+    /// [`NetServer`] down drains the sockets first (no accepted request
+    /// is dropped), then the serve pipeline, and returns both reports.
+    pub fn serve_net(
+        &self,
+        config: ServeConfig,
+        net: crate::net::NetConfig,
+        addr: &str,
+    ) -> Result<crate::net::NetServer> {
+        crate::net::NetServer::bind(self.serve(config)?, addr, net)
     }
 
     /// Roll this session's *current* parameters out to a running serve
@@ -626,7 +679,7 @@ impl<'e> Session<'e> {
     /// tensor count/shapes (so a pipeline over a different model rejects
     /// the swap).
     pub fn push_params(&self, handle: &ServeHandle) -> Result<()> {
-        handle.swap_params(self.params.clone())
+        handle.swap_params(Arc::new(self.params.clone()))
     }
 
     /// Compare this session's gradient against the fused DTO reference
@@ -824,27 +877,7 @@ where
     if (devices <= 1 && w <= 1) || items.len() <= 1 {
         return serial();
     }
-    let set = {
-        let mut slot = slot.lock().unwrap();
-        let cached = match slot.as_ref() {
-            Some(set) if set.workers_per_device >= w && set.pools.len() == devices => {
-                Some(set.clone())
-            }
-            _ => None,
-        };
-        match cached {
-            Some(set) => Some(set),
-            None => match ShardSet::new(cores, w) {
-                Ok(set) => {
-                    let set = Arc::new(set);
-                    *slot = Some(set.clone());
-                    Some(set)
-                }
-                Err(_) => None,
-            },
-        }
-    };
-    match set {
+    match acquire_shard_set(slot, cores, w) {
         Some(set) => {
             let pools: Vec<&PersistentPool<Arc<ExecutionCore>>> = set.pools.iter().collect();
             // `w` caps the fan-out even when a larger pool set is cached
@@ -860,6 +893,91 @@ where
         // Could not spawn (thread exhaustion): degrade to the serial path
         // rather than fail — the result is bit-identical by construction.
         None => serial(),
+    }
+}
+
+/// The cached-`ShardSet` acquisition shared by [`sharded_exec`] and
+/// [`sharded_exec_fold`]: reuse a cached set that is large enough,
+/// otherwise build (and cache) a bigger one; `None` on spawn failure
+/// (callers degrade to the serial path).
+fn acquire_shard_set(
+    slot: &Mutex<Option<Arc<ShardSet>>>,
+    cores: &[Arc<ExecutionCore>],
+    w: usize,
+) -> Option<Arc<ShardSet>> {
+    let mut slot = slot.lock().unwrap();
+    let cached = match slot.as_ref() {
+        Some(set) if set.workers_per_device >= w && set.pools.len() == cores.len() => {
+            Some(set.clone())
+        }
+        _ => None,
+    };
+    match cached {
+        Some(set) => Some(set),
+        None => match ShardSet::new(cores, w) {
+            Ok(set) => {
+                let set = Arc::new(set);
+                *slot = Some(set.clone());
+                Some(set)
+            }
+            Err(_) => None,
+        },
+    }
+}
+
+/// Streaming variant of [`sharded_exec`]: instead of gathering every
+/// result before returning, deliver each contiguous chunk's results to
+/// `fold` **in input order as the chunk completes** — so the caller's
+/// reduction (gradient accumulation) overlaps with chunks still
+/// executing on the device pools. The fold order is fixed by
+/// construction (the streaming scatter's in-order cursor), so any
+/// order-sensitive reduction stays bit-identical to the gather-then-fold
+/// path and to serial. The serial/degraded path computes items in order
+/// on the calling thread and folds them identically.
+fn sharded_exec_fold<T, R, CS>(
+    slot: &Mutex<Option<Arc<ShardSet>>>,
+    cores: &[Arc<ExecutionCore>],
+    workers: usize,
+    items: &[T],
+    init: impl Fn() -> CS + Sync,
+    f: impl Fn(&ExecutionCore, &mut CS, usize, &T) -> R + Sync,
+    mut fold: impl FnMut(usize, Vec<R>),
+) -> Vec<(usize, CS)>
+where
+    T: Sync,
+    R: Send,
+    CS: Send,
+{
+    let devices = cores.len();
+    let w = workers.max(1);
+    if (devices <= 1 && w <= 1) || items.len() <= 1 {
+        let primary: &ExecutionCore = &cores[0];
+        let (results, states) = run_inline(items, &init, |cs, i, t| f(primary, cs, i, t));
+        fold(0, results);
+        return states.into_iter().map(|cs| (0usize, cs)).collect();
+    }
+    match acquire_shard_set(slot, cores, w) {
+        Some(set) => {
+            let pools: Vec<&PersistentPool<Arc<ExecutionCore>>> = set.pools.iter().collect();
+            sharded_fold_with(
+                &pools,
+                &set.router,
+                w,
+                items,
+                &init,
+                |core, cs, i, t| {
+                    let pinned: &ExecutionCore = core;
+                    f(pinned, cs, i, t)
+                },
+                fold,
+            )
+        }
+        None => {
+            let primary: &ExecutionCore = &cores[0];
+            let (results, states) = run_inline(items, &init, |cs, i, t| f(primary, cs, i, t));
+            fold(0, results);
+            states.into_iter().map(|cs| (0usize, cs)).collect()
+        }
     }
 }
 

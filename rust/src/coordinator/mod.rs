@@ -327,27 +327,11 @@ impl ExecutionCore {
     pub fn reduce_grads(
         per_micro: Vec<(f32, f32, Vec<Tensor>)>,
     ) -> Result<(f32, f32, Vec<Tensor>)> {
-        let k = per_micro.len();
-        let mut iter = per_micro.into_iter();
-        let Some((loss0, correct0, mut grads)) = iter.next() else {
-            return Err(RuntimeError::Shape("gradient reduction over zero micro-batches".into()));
-        };
-        let mut loss_sum = loss0 as f64;
-        let mut correct_sum = correct0 as f64;
-        for (loss, correct, g) in iter {
-            loss_sum += loss as f64;
-            correct_sum += correct as f64;
-            for (ai, gi) in grads.iter_mut().zip(g.iter()) {
-                ai.axpy(1.0, gi).map_err(|e| RuntimeError::Shape(e.to_string()))?;
-            }
+        let mut acc = GradAccumulator::new();
+        for triple in per_micro {
+            acc.push(triple)?;
         }
-        if k > 1 {
-            let scale = 1.0 / k as f32;
-            for g in grads.iter_mut() {
-                g.scale(scale);
-            }
-        }
-        Ok(((loss_sum / k as f64) as f32, correct_sum as f32, grads))
+        acc.finish()
     }
 
     /// Fold per-batch (loss, correct) pairs into (mean loss, accuracy), in
@@ -364,6 +348,81 @@ impl ExecutionCore {
         }
         let batches_n = per_batch.len().max(1) as f64;
         ((loss_sum / batches_n) as f32, (correct / n.max(1) as f64) as f32)
+    }
+}
+
+/// Incremental form of [`ExecutionCore::reduce_grads`]: push per-micro
+/// `(loss, correct, grads)` triples **in micro-batch index order** as they
+/// become available, then [`GradAccumulator::finish`]. The accumulation is
+/// operation-for-operation the loop `reduce_grads` runs over a complete
+/// vector — adopt the first triple's gradient tensors, `axpy(1.0)` every
+/// later one in push order, scale by `1/k` at the end, fold losses in f64
+/// — so a pipelined caller (folding chunk i while chunk i+1 still
+/// computes, `Session::step_accumulate`'s streaming path) produces a
+/// bit-identical gradient to the all-at-once reduction and to serial.
+pub struct GradAccumulator {
+    loss_sum: f64,
+    correct_sum: f64,
+    grads: Option<Vec<Tensor>>,
+    count: usize,
+}
+
+impl Default for GradAccumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GradAccumulator {
+    /// An empty accumulator ([`GradAccumulator::finish`] on it errors,
+    /// matching `reduce_grads` over zero micro-batches).
+    pub fn new() -> Self {
+        Self { loss_sum: 0.0, correct_sum: 0.0, grads: None, count: 0 }
+    }
+
+    /// Micro-batches folded so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Fold one micro-batch's triple. Must be called in micro-batch index
+    /// order — the caller owns the ordering (the streaming scatter in
+    /// `util::pool` delivers chunks in input order by construction).
+    pub fn push(&mut self, (loss, correct, g): (f32, f32, Vec<Tensor>)) -> Result<()> {
+        match self.grads.as_mut() {
+            None => {
+                // Adopt (not add to zero): `0.0 + -0.0` would flip a sign
+                // bit the all-at-once reduction preserves.
+                self.loss_sum = loss as f64;
+                self.correct_sum = correct as f64;
+                self.grads = Some(g);
+            }
+            Some(acc) => {
+                self.loss_sum += loss as f64;
+                self.correct_sum += correct as f64;
+                for (ai, gi) in acc.iter_mut().zip(g.iter()) {
+                    ai.axpy(1.0, gi).map_err(|e| RuntimeError::Shape(e.to_string()))?;
+                }
+            }
+        }
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Close the fold: `(mean loss, total correct, mean gradient)`, with
+    /// the same zero-micro-batch error as [`ExecutionCore::reduce_grads`].
+    pub fn finish(self) -> Result<(f32, f32, Vec<Tensor>)> {
+        let k = self.count;
+        let Some(mut grads) = self.grads else {
+            return Err(RuntimeError::Shape("gradient reduction over zero micro-batches".into()));
+        };
+        if k > 1 {
+            let scale = 1.0 / k as f32;
+            for g in grads.iter_mut() {
+                g.scale(scale);
+            }
+        }
+        Ok(((self.loss_sum / k as f64) as f32, self.correct_sum as f32, grads))
     }
 }
 

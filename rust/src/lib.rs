@@ -22,7 +22,10 @@
 //! For production-style traffic, [`serve`] adds a deadline-batched
 //! admission queue over a persistent worker pool: single requests are
 //! coalesced into the AOT batch size and demultiplexed back with
-//! per-request latency stats (see rust/DESIGN.md §6b).
+//! per-request latency stats (see rust/DESIGN.md §6b). [`net`] puts a
+//! socket front end on that pipeline — a length-prefixed binary
+//! protocol with typed load shedding and a scrapeable metrics endpoint
+//! (rust/DESIGN.md §6e).
 //!
 //! Architecture (see DESIGN.md):
 //! - **L3 (this crate)** — [`api`] on top of the checkpointing training
@@ -44,6 +47,7 @@ pub mod harness;
 pub mod memory;
 pub mod metrics;
 pub mod models;
+pub mod net;
 pub mod ode;
 pub mod optim;
 pub mod rng;

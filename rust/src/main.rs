@@ -8,13 +8,17 @@
 //!   gradcheck   DTO vs OTD vs [8] gradient-consistency sweep (§IV)
 //!   modules     list AOT modules in the artifact manifest
 //!   serve       single-request serving demo: deadline-batched admission
-//!               queue on the persistent worker pool, p50/p95/p99 report
+//!               queue on the persistent worker pool, p50/p95/p99 report;
+//!               with --listen, serves the `anode::net` wire protocol on
+//!               a TCP socket (plus GET /metrics) and drives it with
+//!               loopback protocol clients
 //!
 //! Examples:
 //!   anode train --arch sqnxt --solver euler --method anode --steps 200
 //!   anode figures --fig fig1
 //!   anode gradcheck --artifacts artifacts
 //!   anode serve --requests 512 --max-delay-ms 5 --workers 4 --queue-cap 256
+//!   anode serve --listen 127.0.0.1:0 --slo mixed --adaptive-delay 1:20
 //!
 //! All heavy lifting goes through the `anode::api` façade (Engine/Session);
 //! see `rust/DESIGN.md` §6.
@@ -27,8 +31,9 @@ use anode::data::{SyntheticCifar, CIFAR_HW};
 use anode::harness;
 use anode::metrics::{format_table, write_csv};
 use anode::models::{Arch, GradMethod, Solver};
+use anode::net::{ClientReply, NetClient, NetConfig, NetServer};
 use anode::runtime::ArtifactRegistry;
-use anode::serve::{BatchRunner, HostTailRunner, ServeConfig, ServeHandle};
+use anode::serve::{BatchRunner, HostTailRunner, ServeConfig, ServeHandle, SloClass};
 use anode::tensor::Tensor;
 use anode::util::bench::LatencyPercentiles;
 use anode::util::cli::Args;
@@ -78,6 +83,14 @@ fn print_help() {
          \u{20}          by load)\n\
          \u{20}          --queue-cap N --method M (falls back to a host-side demo\n\
          \u{20}          model when artifacts/ is absent)\n\
+         \u{20}          --batch-delay-ms MS (flush window for the batch SLO class)\n\
+         \u{20}          --adaptive-delay FLOOR:CEIL (adaptive interactive window,\n\
+         \u{20}          ms; arrival rate retargets it inside the range)\n\
+         \u{20}          --slo interactive|batch|mixed (SLO class of the driven\n\
+         \u{20}          requests; mixed = every 4th request is batch-class)\n\
+         \u{20}          --listen ADDR (serve the anode::net wire protocol on\n\
+         \u{20}          ADDR, e.g. 127.0.0.1:0; requests go over loopback TCP\n\
+         \u{20}          and GET /metrics on the same port answers plain text)\n\
          common:    --artifacts DIR (default: artifacts)\n\
          \u{20}          --csv PATH (train and fig3|fig4|fig5 only)\n\
          \n\
@@ -299,20 +312,36 @@ fn cmd_serve(args: &Args) -> i32 {
     let requests: usize = args.get_parse_or("requests", 256);
     let clients: usize = args.get_parse_or("clients", 4usize).max(1);
     let devices: usize = args.get_parse_or("devices", 1usize).max(1);
-    let serve_cfg = ServeConfig {
-        max_delay: Duration::from_millis(args.get_parse_or("max-delay-ms", 5u64)),
-        workers: args.get_parse_or("workers", 2),
-        queue_cap: args.get_parse_or("queue-cap", 256),
-    };
+    let mut serve_cfg = ServeConfig::default()
+        .max_delay_ms(args.get_parse_or("max-delay-ms", 5u64))
+        .batch_delay_ms(args.get_parse_or("batch-delay-ms", 40u64))
+        .workers(args.get_parse_or("workers", 2))
+        .queue_cap(args.get_parse_or("queue-cap", 256));
+    if let Some(spec) = args.get("adaptive-delay") {
+        match parse_adaptive(spec) {
+            Some((floor, ceil)) => serve_cfg = serve_cfg.adaptive_delay_ms(floor, ceil),
+            None => {
+                eprintln!(
+                    "error: invalid value `{spec}` for --adaptive-delay \
+                     (expected FLOOR_MS:CEIL_MS, e.g. 1:20)"
+                );
+                return 2;
+            }
+        }
+    }
+    let slo = parse_opt("slo", &args.get_or("slo", "interactive"), SloPattern::parse);
+    let listen = args.get("listen").map(|s| s.to_string());
     let method = args.get_or("method", "anode");
     let dir = args.get_or("artifacts", "artifacts");
     args.warn_unknown();
     println!(
-        "serve: {} requests, {} clients, max_delay={:?}, workers={}/device x {} devices, \
-         queue_cap={}",
+        "serve: {} requests, {} clients, max_delay={:?} (adaptive={}), batch_delay={:?}, \
+         workers={}/device x {} devices, queue_cap={}",
         requests,
         clients,
         serve_cfg.max_delay,
+        serve_cfg.adaptive_delay.is_some(),
+        serve_cfg.batch_delay,
         serve_cfg.workers,
         devices,
         serve_cfg.queue_cap
@@ -351,7 +380,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 let (imgs, _) = ds.generate(1, i as u64);
                 imgs.reshape(vec![cfg.image, cfg.image, 3]).expect("example reshape")
             };
-            drive_serve(&handle, requests, clients, &make)
+            drive(handle, listen.as_deref(), requests, clients, slo, &make)
         }
         Err(e) => {
             eprintln!("artifacts unavailable ({e}); serving the synthetic host-tail demo model");
@@ -369,8 +398,67 @@ fn cmd_serve(args: &Args) -> i32 {
                 }
             };
             let make = move |i: usize| Tensor::full(&shape, 0.01 * (i % 97) as f32);
-            drive_serve(&handle, requests, clients, &make)
+            drive(handle, listen.as_deref(), requests, clients, slo, &make)
         }
+    }
+}
+
+/// Parse `--adaptive-delay FLOOR:CEIL` (milliseconds).
+fn parse_adaptive(spec: &str) -> Option<(u64, u64)> {
+    let (floor, ceil) = spec.split_once(':')?;
+    Some((floor.trim().parse().ok()?, ceil.trim().parse().ok()?))
+}
+
+/// Which SLO class the driver stamps on each generated request.
+#[derive(Clone, Copy)]
+enum SloPattern {
+    Interactive,
+    Batch,
+    /// Every 4th request is batch-class — both deadline windows exercise.
+    Mixed,
+}
+
+impl SloPattern {
+    fn parse(s: &str) -> Option<SloPattern> {
+        match s {
+            "interactive" => Some(SloPattern::Interactive),
+            "batch" => Some(SloPattern::Batch),
+            "mixed" => Some(SloPattern::Mixed),
+            _ => None,
+        }
+    }
+
+    fn class_for(self, i: usize) -> SloClass {
+        match self {
+            SloPattern::Interactive => SloClass::Interactive,
+            SloPattern::Batch => SloClass::Batch,
+            SloPattern::Mixed => {
+                if i % 4 == 3 {
+                    SloClass::Batch
+                } else {
+                    SloClass::Interactive
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch the client drive: loopback TCP through `anode::net` when
+/// `--listen` was given, in-process submits otherwise.
+fn drive<F>(
+    handle: ServeHandle,
+    listen: Option<&str>,
+    requests: usize,
+    clients: usize,
+    slo: SloPattern,
+    make: &F,
+) -> i32
+where
+    F: Fn(usize) -> Tensor + Sync,
+{
+    match listen {
+        Some(addr) => drive_serve_net(handle, addr, requests, clients, slo, make),
+        None => drive_serve(&handle, requests, clients, slo, make),
     }
 }
 
@@ -379,7 +467,13 @@ fn cmd_serve(args: &Args) -> i32 {
 /// each client runs on its own pool worker, submits its share of requests
 /// (interleaved round-robin), then waits all replies; latencies are
 /// aggregated across clients for the percentile report.
-fn drive_serve<F>(handle: &ServeHandle, requests: usize, clients: usize, make: &F) -> i32
+fn drive_serve<F>(
+    handle: &ServeHandle,
+    requests: usize,
+    clients: usize,
+    slo: SloPattern,
+    make: &F,
+) -> i32
 where
     F: Fn(usize) -> Tensor + Sync,
 {
@@ -388,7 +482,7 @@ where
     let per_client = parallel_map(&client_ids, clients, |_idx, &c| {
         let mut pendings = Vec::new();
         for i in (c..requests).step_by(clients) {
-            match handle.submit(make(i)) {
+            match handle.submit_class(make(i), slo.class_for(i)) {
                 Ok(pending) => pendings.push((i, pending)),
                 Err(e) => eprintln!("submit {i} failed: {e}"),
             }
@@ -430,6 +524,113 @@ where
         report.devices
     );
     println!("memory: {}", report.memory.summary());
+    if latencies.len() == requests {
+        0
+    } else {
+        1
+    }
+}
+
+/// Loopback wire drive: put the `anode::net` reactor on `addr`, connect
+/// one protocol client per driver thread, and push every request through
+/// TCP — sheds retry with the server's hint, end-to-end wire latency is
+/// measured client-side, and the metrics endpoint is scraped before the
+/// graceful drain.
+fn drive_serve_net<F>(
+    handle: ServeHandle,
+    addr: &str,
+    requests: usize,
+    clients: usize,
+    slo: SloPattern,
+    make: &F,
+) -> i32
+where
+    F: Fn(usize) -> Tensor + Sync,
+{
+    let server = match NetServer::bind(handle, addr, NetConfig::default()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let local = server.local_addr().to_string();
+    println!("listening on {local} (binary frames; GET /metrics for text)");
+    let t0 = Instant::now();
+    let client_ids: Vec<usize> = (0..clients).collect();
+    let per_client = parallel_map(&client_ids, clients, |_idx, &c| {
+        let mut latencies = Vec::new();
+        let mut gave_up = 0usize;
+        let mut client = match NetClient::connect(&local) {
+            Ok(cl) => cl,
+            Err(e) => {
+                eprintln!("client {c}: connect failed: {e}");
+                return (latencies, gave_up);
+            }
+        };
+        for i in (c..requests).step_by(clients) {
+            let image = make(i);
+            let t = Instant::now();
+            match client.request_with_retry(&image, slo.class_for(i), 16) {
+                Ok(ClientReply::Reply { .. }) => latencies.push(t.elapsed()),
+                Ok(ClientReply::RetryAfter(_)) => gave_up += 1,
+                Err(e) => eprintln!("request {i} failed: {e}"),
+            }
+        }
+        (latencies, gave_up)
+    });
+    let mut latencies = Vec::new();
+    let mut gave_up = 0usize;
+    for (lats, g) in per_client {
+        latencies.extend(lats);
+        gave_up += g;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let window = server.handle().stats().current_max_delay;
+    match NetClient::connect(&local).and_then(|mut c| c.metrics()) {
+        Ok(text) => println!(
+            "metrics scrape: {} lines, anode_shed_total={}",
+            text.lines().count(),
+            anode::net::metrics::scrape_value(&text, "shed_total").unwrap_or(0)
+        ),
+        Err(e) => eprintln!("metrics scrape failed: {e}"),
+    }
+    let report = match server.shutdown() {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("shutdown failed: {e}");
+            return 1;
+        }
+    };
+    let pct = LatencyPercentiles::from_unsorted(&mut latencies);
+    println!(
+        "served {}/{} requests over the wire in {:.3}s  ({:.0} req/s across {clients} \
+         connections; {gave_up} gave up after shed retries)",
+        latencies.len(),
+        requests,
+        wall,
+        latencies.len() as f64 / wall.max(1e-12)
+    );
+    println!("wire latency {}  (final interactive window {:?})", pct.report(), window);
+    println!(
+        "net: conns={} frames_in={} replies={} shed={} errors={} metrics_scrapes={}",
+        report.net.connections,
+        report.net.frames_in,
+        report.net.replies,
+        report.net.shed,
+        report.net.errors,
+        report.net.metrics_requests
+    );
+    println!(
+        "batches={} (full={} deadline={} drain={})  workers={} devices={}",
+        report.serve.batches,
+        report.serve.full_flushes,
+        report.serve.deadline_flushes,
+        report.serve.drain_flushes,
+        report.serve.workers,
+        report.serve.devices
+    );
+    println!("memory: {}", report.serve.memory.summary());
     if latencies.len() == requests {
         0
     } else {

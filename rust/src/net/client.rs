@@ -1,0 +1,182 @@
+//! `net::client` — a small blocking protocol client.
+//!
+//! The loopback counterpart to [`net::server`](super::server): the CLI
+//! driver and the integration tests speak the wire format through this
+//! instead of hand-rolling sockets. One connection, blocking I/O,
+//! requests either one-at-a-time ([`NetClient::request`]) or pipelined
+//! ([`NetClient::pipeline`] — the server answers in submission order).
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::runtime::{Result, RuntimeError};
+use crate::serve::SloClass;
+use crate::tensor::Tensor;
+
+use super::proto::{self, Frame};
+
+/// What the server said to one request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientReply {
+    /// Classified: predicted class, logits row, and latency accounting.
+    Reply {
+        class: usize,
+        logits: Tensor,
+        queue_wait: Duration,
+        execute: Duration,
+        batch_fill: usize,
+        batch_size: usize,
+    },
+    /// Shed: the admission queue was saturated; retry after the hint.
+    RetryAfter(Duration),
+}
+
+/// A blocking connection to an `anode::net` server.
+pub struct NetClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect to `addr` (e.g. the server's [`local_addr`]).
+    ///
+    /// [`local_addr`]: super::server::NetServer::local_addr
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| RuntimeError::Io(format!("net: connect {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream, buf: Vec::new(), next_id: 1 })
+    }
+
+    /// Submit one example and block for the server's answer (a reply or
+    /// a typed shed). A server-side failure surfaces as `Err`.
+    pub fn request(&mut self, image: &Tensor, class: SloClass) -> Result<ClientReply> {
+        let id = self.send_request(image, class)?;
+        self.read_reply(id)
+    }
+
+    /// Submit one example, transparently retrying after each shed (up to
+    /// `max_retries` times, sleeping the server's hint in between).
+    /// Returns the reply, or the final `RetryAfter` if retries ran out.
+    pub fn request_with_retry(
+        &mut self,
+        image: &Tensor,
+        class: SloClass,
+        max_retries: usize,
+    ) -> Result<ClientReply> {
+        let mut attempts = 0;
+        loop {
+            match self.request(image, class)? {
+                ClientReply::RetryAfter(hint) if attempts < max_retries => {
+                    attempts += 1;
+                    std::thread::sleep(hint.min(Duration::from_millis(100)));
+                }
+                reply => return Ok(reply),
+            }
+        }
+    }
+
+    /// Pipeline a batch of examples: send them all, then read the
+    /// answers. The server replies strictly in submission order, so the
+    /// returned vector lines up with `images` (asserted via request ids).
+    pub fn pipeline(&mut self, images: &[Tensor], class: SloClass) -> Result<Vec<ClientReply>> {
+        let mut ids = Vec::with_capacity(images.len());
+        for image in images {
+            ids.push(self.send_request(image, class)?);
+        }
+        ids.into_iter().map(|id| self.read_reply(id)).collect()
+    }
+
+    /// Fetch the metrics text over the binary frame path.
+    pub fn metrics(&mut self) -> Result<String> {
+        let id = self.fresh_id();
+        self.send_frame(&Frame::MetricsRequest { id })?;
+        match self.read_frame()? {
+            Frame::MetricsReply { id: got, text } if got == id => Ok(text),
+            Frame::Error { message, .. } => {
+                Err(RuntimeError::Io(format!("net: server error: {message}")))
+            }
+            other => Err(RuntimeError::Io(format!(
+                "net: expected a metrics reply, got frame id {}",
+                other.id()
+            ))),
+        }
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn send_request(&mut self, image: &Tensor, class: SloClass) -> Result<u64> {
+        let id = self.fresh_id();
+        self.send_frame(&Frame::Request { id, class, image: image.clone() })?;
+        Ok(id)
+    }
+
+    fn send_frame(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame.encode_vec();
+        self.stream
+            .write_all(&bytes)
+            .map_err(|e| RuntimeError::Io(format!("net: send: {e}")))
+    }
+
+    fn read_reply(&mut self, id: u64) -> Result<ClientReply> {
+        match self.read_frame()? {
+            Frame::Reply {
+                id: got,
+                class,
+                queue_wait_us,
+                execute_us,
+                batch_fill,
+                batch_size,
+                logits,
+            } if got == id => Ok(ClientReply::Reply {
+                class: class as usize,
+                logits,
+                queue_wait: Duration::from_micros(queue_wait_us),
+                execute: Duration::from_micros(execute_us),
+                batch_fill: batch_fill as usize,
+                batch_size: batch_size as usize,
+            }),
+            Frame::RetryAfter { id: got, retry_after_us } if got == id => {
+                Ok(ClientReply::RetryAfter(Duration::from_micros(retry_after_us)))
+            }
+            Frame::Error { message, .. } => {
+                Err(RuntimeError::Io(format!("net: server error: {message}")))
+            }
+            other => Err(RuntimeError::Io(format!(
+                "net: out-of-order reply: expected id {id}, got frame id {}",
+                other.id()
+            ))),
+        }
+    }
+
+    /// Read (blocking) until one complete frame decodes.
+    fn read_frame(&mut self) -> Result<Frame> {
+        loop {
+            match proto::decode(&self.buf) {
+                Ok(Some((frame, n))) => {
+                    self.buf.drain(..n);
+                    return Ok(frame);
+                }
+                Ok(None) => {}
+                Err(e) => return Err(RuntimeError::Io(format!("net: bad server frame: {e}"))),
+            }
+            let mut chunk = [0u8; 8192];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(RuntimeError::Io(
+                        "net: connection closed before a reply".to_string(),
+                    ))
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(RuntimeError::Io(format!("net: recv: {e}"))),
+            }
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! `net::metrics` — the scrapeable metrics text.
+//!
+//! One render path serves both transports: a binary `MetricsRequest`
+//! frame gets the text back in a `MetricsReply`, and a plain
+//! `GET /metrics HTTP/1.0` on the same listener gets it as an HTTP
+//! response (so `curl` and the CI scraper need no protocol client).
+//!
+//! The format is the Prometheus text convention — `name value` lines,
+//! `{label="v"}` for per-device series — because every line-oriented
+//! tool can parse it and CI turns it into `BENCH_net.json` fields.
+
+use crate::serve::ServeStats;
+use crate::util::bench::LatencyPercentiles;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+/// Live counters owned by the connection reactor, folded into the
+/// metrics text next to the serve-layer [`ServeStats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted over the listener's lifetime.
+    pub connections: u64,
+    /// Connections currently open.
+    pub open_connections: u64,
+    /// Frames decoded off sockets (requests + metrics requests).
+    pub frames_in: u64,
+    /// Reply frames written (successful classifications).
+    pub replies: u64,
+    /// Error frames written.
+    pub errors: u64,
+    /// RetryAfter frames written — requests shed at the wire because the
+    /// admission queue was saturated.
+    pub shed: u64,
+    /// Metrics scrapes served (binary frames + HTTP requests).
+    pub metrics_requests: u64,
+    /// Connections dropped for protocol violations (bad magic/version/
+    /// frame type, malformed payload).
+    pub protocol_errors: u64,
+}
+
+/// Render the metrics text: serve-layer stats, reactor counters, and the
+/// wire-latency percentiles over the recent window (`latencies` is
+/// drained percentile input, micros from frame decode to reply write).
+pub fn render(serve: &ServeStats, net: &NetStats, latencies: &mut [Duration]) -> String {
+    let wire = LatencyPercentiles::from_unsorted(latencies);
+    let mut out = String::with_capacity(1024);
+    let mut line = |name: &str, value: u64| {
+        let _ = writeln!(out, "anode_{name} {value}");
+    };
+    line("submitted_total", serve.submitted);
+    line("submitted_interactive_total", serve.submitted_interactive);
+    line("submitted_batch_total", serve.submitted_batch);
+    line("shed_total", serve.rejected);
+    line("completed_total", serve.completed);
+    line("batches_total", serve.batches);
+    line("full_flushes_total", serve.full_flushes);
+    line("deadline_flushes_total", serve.deadline_flushes);
+    line("drain_flushes_total", serve.drain_flushes);
+    line("queue_depth", serve.queue_depth as u64);
+    line("max_delay_us", duration_us(serve.current_max_delay));
+    line("adaptive_delay", u64::from(serve.adaptive_delay));
+    line("memory_traffic_bytes", serve.memory_traffic);
+    line("memory_worker_peak_bytes", serve.memory_worker_peak);
+    line("closed", u64::from(serve.closed));
+    line("net_connections_total", net.connections);
+    line("net_open_connections", net.open_connections);
+    line("net_frames_in_total", net.frames_in);
+    line("net_replies_total", net.replies);
+    line("net_errors_total", net.errors);
+    line("net_shed_total", net.shed);
+    line("net_metrics_requests_total", net.metrics_requests);
+    line("net_protocol_errors_total", net.protocol_errors);
+    line("net_latency_samples", latencies.len() as u64);
+    line("net_latency_p50_us", duration_us(wire.p50));
+    line("net_latency_p95_us", duration_us(wire.p95));
+    line("net_latency_p99_us", duration_us(wire.p99));
+    for (device, load) in serve.device_loads.iter().enumerate() {
+        let _ = writeln!(out, "anode_device_load{{device=\"{device}\"}} {load}");
+    }
+    out
+}
+
+/// Wrap the metrics text as a complete HTTP/1.0 response (the listener
+/// speaks HTTP only for scrapes; `Connection: close` keeps the reactor's
+/// HTTP handling one-shot).
+pub fn http_response(body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+fn duration_us(d: Duration) -> u64 {
+    d.as_micros().min(u64::MAX as u128) as u64
+}
+
+/// Pull one `anode_<name> <value>` line out of a rendered metrics text
+/// (the CI scraper and tests share this instead of regexing).
+pub fn scrape_value(text: &str, name: &str) -> Option<u64> {
+    let needle = format!("anode_{name} ");
+    text.lines().find_map(|l| l.strip_prefix(&needle).and_then(|v| v.trim().parse().ok()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats() -> ServeStats {
+        ServeStats {
+            submitted: 10,
+            submitted_interactive: 7,
+            submitted_batch: 3,
+            rejected: 2,
+            completed: 9,
+            batches: 4,
+            full_flushes: 2,
+            deadline_flushes: 1,
+            drain_flushes: 1,
+            queue_depth: 1,
+            device_loads: vec![1, 0],
+            current_max_delay: Duration::from_millis(3),
+            adaptive_delay: true,
+            memory_traffic: 4096,
+            memory_worker_peak: 1024,
+            closed: false,
+        }
+    }
+
+    #[test]
+    fn render_emits_scrapeable_lines() {
+        let net = NetStats { connections: 5, shed: 2, ..NetStats::default() };
+        let mut lat = vec![Duration::from_micros(100), Duration::from_micros(300)];
+        let text = render(&stats(), &net, &mut lat);
+        assert_eq!(scrape_value(&text, "submitted_total"), Some(10));
+        assert_eq!(scrape_value(&text, "submitted_batch_total"), Some(3));
+        assert_eq!(scrape_value(&text, "shed_total"), Some(2));
+        assert_eq!(scrape_value(&text, "max_delay_us"), Some(3000));
+        assert_eq!(scrape_value(&text, "adaptive_delay"), Some(1));
+        assert_eq!(scrape_value(&text, "net_connections_total"), Some(5));
+        assert_eq!(scrape_value(&text, "net_latency_samples"), Some(2));
+        assert_eq!(scrape_value(&text, "net_latency_p50_us"), Some(300));
+        assert!(text.contains("anode_device_load{device=\"1\"} 0\n"), "{text}");
+    }
+
+    #[test]
+    fn http_response_is_well_formed() {
+        let body = "anode_submitted_total 1\n";
+        let resp = http_response(body);
+        let text = String::from_utf8(resp).unwrap();
+        assert!(text.starts_with("HTTP/1.0 200 OK\r\n"));
+        assert!(text.contains(&format!("Content-Length: {}\r\n", body.len())));
+        assert!(text.ends_with(body));
+    }
+}

@@ -1,0 +1,41 @@
+//! # `anode::net` — the socket front end for `anode::serve`
+//!
+//! Serving over the wire, with the same guarantees the in-process path
+//! gives: admission control, typed load shedding, and bit-identical
+//! results. The stack is std-only (no async runtime, no protocol
+//! crates — the offline build adds no dependencies):
+//!
+//! ```text
+//! client ──frames──▶ TcpListener ──▶ reactor (poll-driven, 1 thread)
+//!                                      │ decode → try_submit_class
+//!                                      │ shed → RetryAfter frame
+//!                                      ▼
+//!                                 anode::serve (queue → batcher → pools)
+//!                                      │ replies (FIFO per connection)
+//!                                      ▼
+//!                    write-buffered frames back down the same socket
+//! ```
+//!
+//! * [`proto`] — the versioned, length-prefixed binary frame format
+//!   (requests, replies, typed errors, `RetryAfter` sheds, metrics).
+//! * [`server`] — the non-blocking connection reactor over a
+//!   [`ServeHandle`](crate::serve::ServeHandle): per-connection
+//!   in-flight windows, write high-water backpressure, graceful drain.
+//! * [`client`] — a small blocking client (CLI driver, tests, tools).
+//! * [`metrics`] — the scrapeable metrics text, served both as a binary
+//!   frame and as a plain HTTP/1.0 `GET` response on the same port.
+//!
+//! Entry point: [`Session::serve_net`](crate::api::Session::serve_net),
+//! or [`NetServer::bind`] over any [`ServeHandle`]. Wire format and
+//! lifecycle are documented in rust/DESIGN.md §6e.
+//!
+//! [`ServeHandle`]: crate::serve::ServeHandle
+
+pub mod client;
+pub mod metrics;
+pub mod proto;
+pub mod server;
+
+pub use client::{ClientReply, NetClient};
+pub use metrics::NetStats;
+pub use server::{NetConfig, NetReport, NetServer};

@@ -1,0 +1,443 @@
+//! `net::proto` — the length-prefixed binary wire format.
+//!
+//! Every frame is a fixed 20-byte header followed by `payload_len` bytes
+//! of payload. All integers are little-endian; the tensor payload is the
+//! raw f32 data prefixed by its shape. The format is versioned and
+//! self-delimiting, so a reader can (a) decode frames from a byte stream
+//! incrementally ([`decode`] returns `Ok(None)` for "need more bytes")
+//! and (b) reject garbage without panicking ([`ProtoError`]).
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic   = b"ANOD"
+//!      4     1  version = 1
+//!      5     1  frame type (FrameType)
+//!      6     1  SLO class tag (0 interactive, 1 batch; requests only)
+//!      7     1  reserved (0 on write, ignored on read)
+//!      8     8  request id (u64, client-chosen, echoed in replies)
+//!     16     4  payload length (u32, <= MAX_PAYLOAD)
+//!     20     -  payload (frame-type specific)
+//! ```
+//!
+//! Payloads:
+//! * `Request`       — tensor: `rank:u32, dims:[u32; rank], data:[f32]`
+//! * `Reply`         — `class:u32, queue_wait_us:u64, execute_us:u64,
+//!   batch_fill:u32, batch_size:u32`, then the logits tensor
+//! * `Error`         — UTF-8 message
+//! * `RetryAfter`    — `retry_after_us:u64` (the shed reply: the queue is
+//!   saturated; retry after the hint)
+//! * `MetricsRequest`— empty
+//! * `MetricsReply`  — UTF-8 metrics text (same body the HTTP/1.0 path
+//!   serves)
+//!
+//! The wire format is documented in rust/DESIGN.md §6e and fuzzed (hand-
+//! rolled property loop) in rust/tests/net.rs.
+
+use crate::serve::{RequestStats, SloClass};
+use crate::tensor::Tensor;
+use std::time::Duration;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"ANOD";
+
+/// Wire-format version this build speaks.
+pub const VERSION: u8 = 1;
+
+/// Header size in bytes.
+pub const HEADER_LEN: usize = 20;
+
+/// Hard cap on a frame payload (16 MiB): anything larger is rejected at
+/// the header, before buffering — a garbage length cannot balloon memory.
+pub const MAX_PAYLOAD: usize = 16 * 1024 * 1024;
+
+/// Maximum tensor rank accepted over the wire.
+pub const MAX_RANK: usize = 8;
+
+/// Typed decode/encode failure. Wire errors never panic: a malformed
+/// frame surfaces here and the server drops the connection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    /// First four bytes are not [`MAGIC`] — not our protocol.
+    BadMagic([u8; 4]),
+    /// Version byte this build does not speak.
+    BadVersion(u8),
+    /// Unknown frame-type byte.
+    BadFrameType(u8),
+    /// Unknown SLO class tag on a request.
+    BadClass(u8),
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized(usize),
+    /// Payload did not parse as its frame type's layout.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::BadMagic(m) => write!(f, "net: bad frame magic {m:02x?}"),
+            ProtoError::BadVersion(v) => write!(f, "net: unsupported protocol version {v}"),
+            ProtoError::BadFrameType(t) => write!(f, "net: unknown frame type {t}"),
+            ProtoError::BadClass(c) => write!(f, "net: unknown SLO class tag {c}"),
+            ProtoError::Oversized(n) => {
+                write!(f, "net: payload of {n} bytes exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            ProtoError::Malformed(what) => write!(f, "net: malformed frame payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+/// One protocol frame. `id` is client-chosen and echoed verbatim in the
+/// server's answer, so a client may pipeline requests and match replies
+/// by id.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// One example tensor to classify under the given SLO class.
+    Request { id: u64, class: SloClass, image: Tensor },
+    /// Successful reply: predicted class, latency accounting, logits row.
+    Reply {
+        id: u64,
+        class: u32,
+        queue_wait_us: u64,
+        execute_us: u64,
+        batch_fill: u32,
+        batch_size: u32,
+        logits: Tensor,
+    },
+    /// The request failed (shape mismatch, runner failure, shutdown).
+    Error { id: u64, message: String },
+    /// Load shed: the admission queue is saturated; the request was NOT
+    /// accepted and may be retried after the hint.
+    RetryAfter { id: u64, retry_after_us: u64 },
+    /// Ask for the metrics text (binary alternative to the HTTP path).
+    MetricsRequest { id: u64 },
+    /// The metrics text.
+    MetricsReply { id: u64, text: String },
+}
+
+impl Frame {
+    /// Build a `Reply` from a serve-layer reply.
+    pub fn from_reply(id: u64, reply: &crate::serve::ServeReply) -> Frame {
+        let s: &RequestStats = &reply.stats;
+        Frame::Reply {
+            id,
+            class: reply.class as u32,
+            queue_wait_us: s.queue_wait.as_micros().min(u64::MAX as u128) as u64,
+            execute_us: s.execute.as_micros().min(u64::MAX as u128) as u64,
+            batch_fill: s.batch_fill as u32,
+            batch_size: s.batch_size as u32,
+            logits: reply.logits.clone(),
+        }
+    }
+
+    /// Build a `RetryAfter` from a duration hint.
+    pub fn retry_after(id: u64, hint: Duration) -> Frame {
+        Frame::RetryAfter { id, retry_after_us: hint.as_micros().min(u64::MAX as u128) as u64 }
+    }
+
+    /// The frame's request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Request { id, .. }
+            | Frame::Reply { id, .. }
+            | Frame::Error { id, .. }
+            | Frame::RetryAfter { id, .. }
+            | Frame::MetricsRequest { id }
+            | Frame::MetricsReply { id, .. } => *id,
+        }
+    }
+
+    fn frame_type(&self) -> u8 {
+        match self {
+            Frame::Request { .. } => 1,
+            Frame::Reply { .. } => 2,
+            Frame::Error { .. } => 3,
+            Frame::RetryAfter { .. } => 4,
+            Frame::MetricsRequest { .. } => 5,
+            Frame::MetricsReply { .. } => 6,
+        }
+    }
+
+    fn class_tag(&self) -> u8 {
+        match self {
+            Frame::Request { class, .. } => match class {
+                SloClass::Interactive => 0,
+                SloClass::Batch => 1,
+            },
+            _ => 0,
+        }
+    }
+
+    /// Append the encoded frame to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        let mut payload = Vec::new();
+        match self {
+            Frame::Request { image, .. } => put_tensor(&mut payload, image),
+            Frame::Reply {
+                class,
+                queue_wait_us,
+                execute_us,
+                batch_fill,
+                batch_size,
+                logits,
+                ..
+            } => {
+                payload.extend_from_slice(&class.to_le_bytes());
+                payload.extend_from_slice(&queue_wait_us.to_le_bytes());
+                payload.extend_from_slice(&execute_us.to_le_bytes());
+                payload.extend_from_slice(&batch_fill.to_le_bytes());
+                payload.extend_from_slice(&batch_size.to_le_bytes());
+                put_tensor(&mut payload, logits);
+            }
+            Frame::Error { message, .. } => payload.extend_from_slice(message.as_bytes()),
+            Frame::RetryAfter { retry_after_us, .. } => {
+                payload.extend_from_slice(&retry_after_us.to_le_bytes());
+            }
+            Frame::MetricsRequest { .. } => {}
+            Frame::MetricsReply { text, .. } => payload.extend_from_slice(text.as_bytes()),
+        }
+        debug_assert!(payload.len() <= MAX_PAYLOAD, "encoder produced an oversized payload");
+        out.reserve(HEADER_LEN + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.frame_type());
+        out.push(self.class_tag());
+        out.push(0); // reserved
+        out.extend_from_slice(&self.id().to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+    }
+
+    /// Convenience: encode into a fresh buffer.
+    pub fn encode_vec(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode(&mut out);
+        out
+    }
+}
+
+/// Incremental decode from the front of `buf`.
+///
+/// * `Ok(None)` — `buf` holds a frame prefix; read more bytes.
+/// * `Ok(Some((frame, consumed)))` — one frame decoded from
+///   `buf[..consumed]`; the caller drops those bytes and may call again.
+/// * `Err(_)` — the stream is not (or no longer) speaking this protocol;
+///   the connection should be closed. Never panics, whatever the bytes.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, ProtoError> {
+    if buf.len() < HEADER_LEN {
+        // An already-poisoned prefix fails fast (don't wait on bytes that
+        // can never become a frame).
+        let n = buf.len().min(4);
+        if n > 0 && buf[..n] != MAGIC[..n] {
+            let mut m = [0u8; 4];
+            m[..n].copy_from_slice(&buf[..n]);
+            return Err(ProtoError::BadMagic(m));
+        }
+        return Ok(None);
+    }
+    if buf[0..4] != MAGIC {
+        return Err(ProtoError::BadMagic([buf[0], buf[1], buf[2], buf[3]]));
+    }
+    if buf[4] != VERSION {
+        return Err(ProtoError::BadVersion(buf[4]));
+    }
+    let ftype = buf[5];
+    let class_tag = buf[6];
+    let id = u64::from_le_bytes(buf[8..16].try_into().expect("8 header bytes"));
+    let payload_len = u32::from_le_bytes(buf[16..20].try_into().expect("4 header bytes")) as usize;
+    if payload_len > MAX_PAYLOAD {
+        return Err(ProtoError::Oversized(payload_len));
+    }
+    let total = HEADER_LEN + payload_len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let p = &buf[HEADER_LEN..total];
+    let frame = match ftype {
+        1 => {
+            let class = match class_tag {
+                0 => SloClass::Interactive,
+                1 => SloClass::Batch,
+                c => return Err(ProtoError::BadClass(c)),
+            };
+            let mut cur = Cursor { p, off: 0 };
+            let image = get_tensor(&mut cur)?;
+            cur.finish()?;
+            Frame::Request { id, class, image }
+        }
+        2 => {
+            let mut cur = Cursor { p, off: 0 };
+            let class = cur.u32()?;
+            let queue_wait_us = cur.u64()?;
+            let execute_us = cur.u64()?;
+            let batch_fill = cur.u32()?;
+            let batch_size = cur.u32()?;
+            let logits = get_tensor(&mut cur)?;
+            cur.finish()?;
+            Frame::Reply { id, class, queue_wait_us, execute_us, batch_fill, batch_size, logits }
+        }
+        3 => Frame::Error { id, message: get_text(p)? },
+        4 => {
+            let mut cur = Cursor { p, off: 0 };
+            let retry_after_us = cur.u64()?;
+            cur.finish()?;
+            Frame::RetryAfter { id, retry_after_us }
+        }
+        5 => {
+            if !p.is_empty() {
+                return Err(ProtoError::Malformed("metrics request carries a payload"));
+            }
+            Frame::MetricsRequest { id }
+        }
+        6 => Frame::MetricsReply { id, text: get_text(p)? },
+        t => return Err(ProtoError::BadFrameType(t)),
+    };
+    Ok(Some((frame, total)))
+}
+
+/// Does the buffer look like the start of an HTTP request (the metrics
+/// scrape path: `GET /metrics HTTP/1.0`)? Checked before frame decode so
+/// a curl probe gets text instead of a BadMagic drop.
+pub fn looks_like_http(buf: &[u8]) -> bool {
+    const GET: &[u8] = b"GET ";
+    let n = buf.len().min(GET.len());
+    n > 0 && buf[..n] == GET[..n]
+}
+
+struct Cursor<'a> {
+    p: &'a [u8],
+    off: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], ProtoError> {
+        if self.p.len() - self.off < n {
+            return Err(ProtoError::Malformed("payload shorter than its layout"));
+        }
+        let s = &self.p[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// Trailing junk after the declared layout is malformed, not ignored:
+    /// a length-prefixed format with slack would hide encoder bugs.
+    fn finish(&self) -> Result<(), ProtoError> {
+        if self.off != self.p.len() {
+            return Err(ProtoError::Malformed("payload longer than its layout"));
+        }
+        Ok(())
+    }
+}
+
+fn put_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    out.extend_from_slice(&(t.shape().len() as u32).to_le_bytes());
+    for &d in t.shape() {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    for v in t.data() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn get_tensor(cur: &mut Cursor<'_>) -> Result<Tensor, ProtoError> {
+    let rank = cur.u32()? as usize;
+    if rank > MAX_RANK {
+        return Err(ProtoError::Malformed("tensor rank exceeds the wire cap"));
+    }
+    let mut dims = Vec::with_capacity(rank);
+    let mut len: usize = 1;
+    for _ in 0..rank {
+        let d = cur.u32()? as usize;
+        len = len
+            .checked_mul(d)
+            .filter(|&n| n <= MAX_PAYLOAD / 4)
+            .ok_or(ProtoError::Malformed("tensor element count overflows the payload cap"))?;
+        dims.push(d);
+    }
+    let bytes = cur.take(len * 4)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+        .collect();
+    Tensor::from_vec(dims, data).map_err(|_| ProtoError::Malformed("tensor shape/data mismatch"))
+}
+
+fn get_text(p: &[u8]) -> Result<String, ProtoError> {
+    String::from_utf8(p.to_vec()).map_err(|_| ProtoError::Malformed("text payload is not UTF-8"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(frame: &Frame) {
+        let bytes = frame.encode_vec();
+        let (decoded, consumed) = decode(&bytes).expect("decode").expect("complete frame");
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(&decoded, frame);
+    }
+
+    #[test]
+    fn frames_round_trip() {
+        let image = Tensor::from_vec(vec![2, 2], vec![1.0, -2.5, 0.0, 3.25]).unwrap();
+        round_trip(&Frame::Request { id: 7, class: SloClass::Interactive, image: image.clone() });
+        round_trip(&Frame::Request { id: 8, class: SloClass::Batch, image });
+        round_trip(&Frame::Reply {
+            id: 9,
+            class: 3,
+            queue_wait_us: 1200,
+            execute_us: 88,
+            batch_fill: 3,
+            batch_size: 4,
+            logits: Tensor::from_vec(vec![4], vec![0.1, 0.2, 0.3, 0.4]).unwrap(),
+        });
+        round_trip(&Frame::Error { id: 10, message: "nope".into() });
+        round_trip(&Frame::RetryAfter { id: 11, retry_after_us: 5000 });
+        round_trip(&Frame::MetricsRequest { id: 12 });
+        round_trip(&Frame::MetricsReply { id: 13, text: "anode_submitted 4\n".into() });
+    }
+
+    #[test]
+    fn incremental_decode_waits_for_full_frame() {
+        let frame = Frame::Error { id: 1, message: "partial".into() };
+        let bytes = frame.encode_vec();
+        for cut in 0..bytes.len() {
+            assert_eq!(decode(&bytes[..cut]).expect("prefix is not an error"), None, "cut={cut}");
+        }
+        assert!(decode(&bytes).unwrap().is_some());
+    }
+
+    #[test]
+    fn garbage_and_oversize_are_typed_errors_not_panics() {
+        assert!(matches!(decode(b"HELLO world, not a frame"), Err(ProtoError::BadMagic(_))));
+        // Bad version.
+        let mut bytes = Frame::MetricsRequest { id: 0 }.encode_vec();
+        bytes[4] = 9;
+        assert!(matches!(decode(&bytes), Err(ProtoError::BadVersion(9))));
+        // Unknown frame type.
+        let mut bytes = Frame::MetricsRequest { id: 0 }.encode_vec();
+        bytes[5] = 77;
+        assert!(matches!(decode(&bytes), Err(ProtoError::BadFrameType(77))));
+        // Oversized declared payload.
+        let mut bytes = Frame::MetricsRequest { id: 0 }.encode_vec();
+        bytes[16..20].copy_from_slice(&(MAX_PAYLOAD as u32 + 1).to_le_bytes());
+        assert!(matches!(decode(&bytes), Err(ProtoError::Oversized(_))));
+    }
+
+    #[test]
+    fn http_sniff_matches_prefixes_only() {
+        assert!(looks_like_http(b"GET /metrics HTTP/1.0\r\n\r\n"));
+        assert!(looks_like_http(b"GE"));
+        assert!(!looks_like_http(b"ANOD"));
+        assert!(!looks_like_http(b""));
+    }
+}

@@ -1,0 +1,560 @@
+//! `net::server` — the socket front end over a [`ServeHandle`].
+//!
+//! A `std::net::TcpListener` accept loop feeds a single-threaded,
+//! non-blocking, poll-driven connection reactor (no async runtime — the
+//! offline build carries no extra crates). The reactor:
+//!
+//! * decodes [`proto`](super::proto) frames incrementally off each
+//!   socket and submits requests through [`ServeHandle::try_submit_class`]
+//!   — the *non-blocking* admission path, so one saturated queue never
+//!   stalls the reactor;
+//! * applies **per-connection backpressure**: at most
+//!   [`NetConfig::inflight_window`] requests per socket are in flight at
+//!   once, and a connection with more than [`WRITE_HIGH_WATER`] unsent
+//!   reply bytes stops being decoded until the client drains it;
+//! * **sheds load** with typed `RetryAfter` frames (carrying the current
+//!   flush-window as the retry hint) whenever the admission queue is
+//!   saturated — the request was *not* accepted and the client may retry;
+//! * answers metrics scrapes on the same listener, as a binary
+//!   `MetricsRequest` frame or a plain-text `GET` (HTTP/1.0) response;
+//! * **drains gracefully** on [`NetServer::shutdown`]: stop accepting,
+//!   stop reading, flush every in-flight (= admitted) request's reply,
+//!   close. An accepted request is never dropped by the drain; buffered
+//!   bytes that never reached admission are simply discarded.
+//!
+//! Replies are delivered **in submission order per connection** (FIFO):
+//! the reactor polls only the oldest pending reply of each socket, so a
+//! client that pipelines requests reads answers in the order it sent
+//! them, ids matching one-to-one.
+
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::runtime::{Result, RuntimeError};
+use crate::serve::{Pending, ServeHandle, ServeReport};
+
+use super::metrics::{self, NetStats};
+use super::proto::{self, Frame, ProtoError};
+
+/// Stop decoding a connection while it holds this many unsent bytes:
+/// a client that stops reading stops being served, instead of growing
+/// the reactor's buffers without bound.
+pub const WRITE_HIGH_WATER: usize = 1 << 20;
+
+/// Drop an HTTP connection whose request line never completes within
+/// this many buffered bytes.
+const HTTP_REQUEST_CAP: usize = 8 * 1024;
+
+/// Wire-latency samples kept for the percentile lines (ring buffer).
+const LATENCY_WINDOW: usize = 4096;
+
+/// Reactor tuning for [`NetServer::spawn`].
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Max requests in flight per connection before the reactor stops
+    /// decoding that socket (per-connection backpressure).
+    pub inflight_window: usize,
+    /// How long the reactor parks when a poll pass makes no progress.
+    pub idle_park: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig { inflight_window: 32, idle_park: Duration::from_micros(500) }
+    }
+}
+
+impl NetConfig {
+    /// Set the per-connection in-flight window (clamped to >= 1).
+    pub fn inflight_window(mut self, window: usize) -> Self {
+        self.inflight_window = window.max(1);
+        self
+    }
+}
+
+/// Shutdown report: reactor counters plus the serve pipeline's report.
+#[derive(Debug, Clone)]
+pub struct NetReport {
+    /// Final reactor counters.
+    pub net: NetStats,
+    /// The drained serve pipeline's report.
+    pub serve: ServeReport,
+}
+
+struct Shared {
+    draining: AtomicBool,
+    stats: Mutex<NetStats>,
+    latencies: Mutex<LatencyRing>,
+}
+
+/// Fixed-capacity ring of recent wire latencies (decode → reply write).
+struct LatencyRing {
+    samples: Vec<Duration>,
+    next: usize,
+}
+
+impl LatencyRing {
+    fn push(&mut self, d: Duration) {
+        if self.samples.len() < LATENCY_WINDOW {
+            self.samples.push(d);
+        } else {
+            self.samples[self.next % LATENCY_WINDOW] = d;
+        }
+        self.next = (self.next + 1) % LATENCY_WINDOW;
+    }
+}
+
+/// A running socket front end. Dropping without [`NetServer::shutdown`]
+/// tears the reactor down (drain, then join) but discards the report.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    reactor: Option<JoinHandle<()>>,
+    handle: ServeHandle,
+    local_addr: SocketAddr,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"`) and spawn the reactor over a
+    /// clone of `handle`.
+    pub fn bind(handle: ServeHandle, addr: &str, config: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| RuntimeError::Io(format!("net: bind {addr}: {e}")))?;
+        NetServer::spawn(handle, listener, config)
+    }
+
+    /// Spawn the reactor thread over an already-bound listener.
+    pub fn spawn(
+        handle: ServeHandle,
+        listener: TcpListener,
+        config: NetConfig,
+    ) -> Result<NetServer> {
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| RuntimeError::Io(format!("net: local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| RuntimeError::Io(format!("net: set_nonblocking: {e}")))?;
+        let shared = Arc::new(Shared {
+            draining: AtomicBool::new(false),
+            stats: Mutex::new(NetStats::default()),
+            latencies: Mutex::new(LatencyRing { samples: Vec::new(), next: 0 }),
+        });
+        let reactor = {
+            let shared = shared.clone();
+            let handle = handle.clone();
+            thread::Builder::new()
+                .name("anode-net".into())
+                .spawn(move || {
+                    Reactor { listener, handle, shared, config, conns: Vec::new() }.run()
+                })
+                .map_err(|e| RuntimeError::Io(format!("net: reactor spawn failed: {e}")))?
+        };
+        Ok(NetServer { shared, reactor: Some(reactor), handle, local_addr })
+    }
+
+    /// The bound address (port resolved when binding `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The serve pipeline behind this listener (for in-process submits,
+    /// hot swaps, or stats alongside the socket traffic).
+    pub fn handle(&self) -> &ServeHandle {
+        &self.handle
+    }
+
+    /// Snapshot of the reactor counters.
+    pub fn stats(&self) -> NetStats {
+        self.shared.stats.lock().expect("net stats lock").clone()
+    }
+
+    /// Render the metrics text exactly as a scrape would see it.
+    pub fn metrics_text(&self) -> String {
+        render_metrics(&self.handle, &self.shared)
+    }
+
+    /// Graceful drain: stop accepting and reading (bytes short of
+    /// admission are discarded), shut the serve pipeline down — which
+    /// flushes every *admitted* request's reply regardless of how far
+    /// its deadline window is — flush those replies down the sockets,
+    /// close, join the reactor, and return both reports.
+    pub fn shutdown(mut self) -> Result<NetReport> {
+        let (net, serve) = self.teardown();
+        let serve = serve.expect("live reactor on first shutdown")?;
+        Ok(NetReport { net, serve })
+    }
+
+    fn teardown(&mut self) -> (NetStats, Option<Result<ServeReport>>) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // Drain the serve pipeline *before* joining the reactor: the
+        // reactor's drain waits on admitted replies, and only the serve
+        // drain guarantees those flush ahead of their deadline windows.
+        let serve = self.reactor.as_ref().map(|_| self.handle.shutdown());
+        if let Some(t) = self.reactor.take() {
+            if t.join().is_err() {
+                // The reactor never unwinds by design; surface it loudly
+                // on the shutdown path rather than swallowing it.
+                panic!("net: reactor thread panicked");
+            }
+        }
+        (self.stats(), serve)
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        if self.reactor.is_some() && !thread::panicking() {
+            let _ = self.teardown();
+        }
+    }
+}
+
+fn render_metrics(handle: &ServeHandle, shared: &Shared) -> String {
+    let serve = handle.stats();
+    let net = shared.stats.lock().expect("net stats lock").clone();
+    let mut lat = shared.latencies.lock().expect("net latency lock").samples.clone();
+    metrics::render(&serve, &net, &mut lat)
+}
+
+/// One response slot in a connection's FIFO: either still waiting on the
+/// serve pipeline, or already answered (sheds, metrics) and queued so
+/// *every* response leaves in request order.
+struct Inflight {
+    id: u64,
+    started: Instant,
+    state: InflightState,
+}
+
+enum InflightState {
+    /// Admitted into the serve pipeline; reply pending.
+    Waiting(Pending),
+    /// Answered at decode time (RetryAfter, MetricsReply); held in the
+    /// FIFO so it cannot overtake an earlier request's reply.
+    Ready(Frame),
+}
+
+/// Per-connection reactor state.
+struct Conn {
+    stream: TcpStream,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    inflight: VecDeque<Inflight>,
+    /// Stop reading; close once `inflight` and `write_buf` drain.
+    closing: bool,
+    /// Hard-dead (io error): discard without flushing.
+    dead: bool,
+}
+
+impl Conn {
+    fn finished(&self) -> bool {
+        self.dead || (self.closing && self.inflight.is_empty() && self.write_buf.is_empty())
+    }
+}
+
+struct Reactor {
+    listener: TcpListener,
+    handle: ServeHandle,
+    shared: Arc<Shared>,
+    config: NetConfig,
+    conns: Vec<Conn>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        loop {
+            let draining = self.shared.draining.load(Ordering::SeqCst);
+            let mut progress = false;
+            if !draining {
+                progress |= self.accept();
+            }
+            for i in 0..self.conns.len() {
+                progress |= self.pump(i, draining);
+            }
+            let before = self.conns.len();
+            self.conns.retain(|c| !c.finished());
+            if self.conns.len() != before {
+                let mut s = self.shared.stats.lock().expect("net stats lock");
+                s.open_connections = self.conns.len() as u64;
+            }
+            let idle = |c: &Conn| c.inflight.is_empty() && c.write_buf.is_empty();
+            if draining && self.conns.iter().all(idle) {
+                // Every admitted request has been answered and flushed.
+                return;
+            }
+            if !progress {
+                thread::park_timeout(self.config.idle_park);
+            }
+        }
+    }
+
+    /// Accept until the listener would block. Returns whether anything
+    /// was accepted.
+    fn accept(&mut self) -> bool {
+        let mut any = false;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    self.conns.push(Conn {
+                        stream,
+                        read_buf: Vec::new(),
+                        write_buf: Vec::new(),
+                        inflight: VecDeque::new(),
+                        closing: false,
+                        dead: false,
+                    });
+                    let mut s = self.shared.stats.lock().expect("net stats lock");
+                    s.connections += 1;
+                    s.open_connections = self.conns.len() as u64;
+                    any = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return any,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return any,
+            }
+        }
+    }
+
+    /// One poll pass over connection `i`: read, decode/submit, poll
+    /// replies, write. Returns whether the pass made progress.
+    fn pump(&mut self, i: usize, draining: bool) -> bool {
+        let mut progress = false;
+        progress |= self.read(i, draining);
+        if !draining {
+            // Bytes buffered but not yet admitted are discarded by the
+            // drain — decoding them now would submit into a pipeline
+            // that is already shutting down.
+            progress |= self.decode(i);
+        }
+        progress |= self.poll_replies(i);
+        progress |= self.write(i);
+        progress
+    }
+
+    fn read(&mut self, i: usize, draining: bool) -> bool {
+        let conn = &mut self.conns[i];
+        if conn.dead || conn.closing || draining {
+            // The drain stops reading: bytes short of admission are
+            // discarded, admitted requests still get their replies.
+            return false;
+        }
+        let mut buf = [0u8; 8192];
+        let mut any = false;
+        loop {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.closing = true;
+                    return any;
+                }
+                Ok(n) => {
+                    conn.read_buf.extend_from_slice(&buf[..n]);
+                    any = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return any,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    return any;
+                }
+            }
+        }
+    }
+
+    /// Decode as many frames as backpressure allows and act on them.
+    fn decode(&mut self, i: usize) -> bool {
+        if self.conns[i].dead || self.conns[i].read_buf.is_empty() {
+            return false;
+        }
+        // HTTP scrape path: same listener, one-shot text response.
+        if proto::looks_like_http(&self.conns[i].read_buf) {
+            return self.serve_http(i);
+        }
+        let mut consumed = 0usize;
+        let mut progress = false;
+        loop {
+            let conn = &self.conns[i];
+            if conn.closing
+                || conn.inflight.len() >= self.config.inflight_window
+                || conn.write_buf.len() >= WRITE_HIGH_WATER
+            {
+                break;
+            }
+            match proto::decode(&conn.read_buf[consumed..]) {
+                Ok(None) => break,
+                Ok(Some((frame, n))) => {
+                    consumed += n;
+                    progress = true;
+                    self.on_frame(i, frame);
+                }
+                Err(e) => {
+                    consumed = self.conns[i].read_buf.len();
+                    progress = true;
+                    self.on_protocol_error(i, e);
+                    break;
+                }
+            }
+        }
+        if consumed > 0 {
+            self.conns[i].read_buf.drain(..consumed);
+        }
+        progress
+    }
+
+    fn on_frame(&mut self, i: usize, frame: Frame) {
+        {
+            let mut s = self.shared.stats.lock().expect("net stats lock");
+            s.frames_in += 1;
+        }
+        match frame {
+            Frame::Request { id, class, image } => {
+                let started = Instant::now();
+                let state = match self.handle.try_submit_class(&image, class) {
+                    Ok(Some(pending)) => InflightState::Waiting(pending),
+                    Ok(None) => {
+                        // Saturated admission queue: shed with the current
+                        // flush window as the retry hint — by then the
+                        // batcher has had a full window to make room.
+                        let hint = self.handle.stats().current_max_delay;
+                        self.shared.stats.lock().expect("net stats lock").shed += 1;
+                        InflightState::Ready(Frame::retry_after(id, hint))
+                    }
+                    Err(e) => {
+                        self.shared.stats.lock().expect("net stats lock").errors += 1;
+                        InflightState::Ready(Frame::Error { id, message: e.to_string() })
+                    }
+                };
+                self.conns[i].inflight.push_back(Inflight { id, started, state });
+            }
+            Frame::MetricsRequest { id } => {
+                let text = render_metrics(&self.handle, &self.shared);
+                self.conns[i].inflight.push_back(Inflight {
+                    id,
+                    started: Instant::now(),
+                    state: InflightState::Ready(Frame::MetricsReply { id, text }),
+                });
+                self.shared.stats.lock().expect("net stats lock").metrics_requests += 1;
+            }
+            // Server-to-client frames arriving at the server are a
+            // protocol violation, same as garbage bytes.
+            Frame::Reply { .. }
+            | Frame::Error { .. }
+            | Frame::RetryAfter { .. }
+            | Frame::MetricsReply { .. } => {
+                self.on_protocol_error(i, ProtoError::Malformed("client sent a server-only frame"));
+            }
+        }
+    }
+
+    /// A malformed stream gets one explanatory `Error` frame (id 0 — no
+    /// request id is trustworthy at this point), then the connection
+    /// stops being read and closes after its admitted replies flush.
+    fn on_protocol_error(&mut self, i: usize, e: ProtoError) {
+        self.send(i, &Frame::Error { id: 0, message: e.to_string() });
+        self.conns[i].closing = true;
+        self.shared.stats.lock().expect("net stats lock").protocol_errors += 1;
+    }
+
+    /// Serve `GET <path> HTTP/1.x` once the request head is complete.
+    fn serve_http(&mut self, i: usize) -> bool {
+        let head_complete = {
+            let buf = &self.conns[i].read_buf;
+            buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+        };
+        if !head_complete {
+            if self.conns[i].read_buf.len() > HTTP_REQUEST_CAP {
+                self.conns[i].dead = true;
+                return true;
+            }
+            return false;
+        }
+        let text = render_metrics(&self.handle, &self.shared);
+        let conn = &mut self.conns[i];
+        conn.read_buf.clear();
+        conn.write_buf.extend_from_slice(&metrics::http_response(&text));
+        conn.closing = true;
+        let mut s = self.shared.stats.lock().expect("net stats lock");
+        s.metrics_requests += 1;
+        true
+    }
+
+    /// Poll each connection's *oldest* response slot only: every
+    /// response (reply, error, shed, metrics) leaves strictly in request
+    /// order per connection.
+    fn poll_replies(&mut self, i: usize) -> bool {
+        let mut progress = false;
+        loop {
+            let conn = &mut self.conns[i];
+            if conn.dead || conn.write_buf.len() >= WRITE_HIGH_WATER {
+                return progress;
+            }
+            let Some(front) = conn.inflight.front() else { return progress };
+            let frame = match &front.state {
+                InflightState::Ready(frame) => frame.clone(),
+                InflightState::Waiting(pending) => match pending.wait_timeout(Duration::ZERO) {
+                    Ok(None) => return progress,
+                    Ok(Some(reply)) => Frame::from_reply(front.id, &reply),
+                    Err(e) => Frame::Error { id: front.id, message: e.to_string() },
+                },
+            };
+            let done = conn.inflight.pop_front().expect("front exists");
+            let was_waiting = matches!(done.state, InflightState::Waiting(_));
+            let is_reply = matches!(frame, Frame::Reply { .. });
+            self.send(i, &frame);
+            let mut s = self.shared.stats.lock().expect("net stats lock");
+            if is_reply {
+                s.replies += 1;
+                drop(s);
+                let mut ring = self.shared.latencies.lock().expect("net latency lock");
+                ring.push(done.started.elapsed());
+            } else if was_waiting {
+                // An admitted request that came back as an error.
+                s.errors += 1;
+            }
+            progress = true;
+        }
+    }
+
+    fn send(&mut self, i: usize, frame: &Frame) {
+        frame.encode(&mut self.conns[i].write_buf);
+    }
+
+    fn write(&mut self, i: usize) -> bool {
+        let conn = &mut self.conns[i];
+        if conn.dead || conn.write_buf.is_empty() {
+            return false;
+        }
+        let mut written = 0usize;
+        loop {
+            match conn.stream.write(&conn.write_buf[written..]) {
+                Ok(0) => {
+                    conn.dead = true;
+                    break;
+                }
+                Ok(n) => {
+                    written += n;
+                    if written == conn.write_buf.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    conn.dead = true;
+                    break;
+                }
+            }
+        }
+        if written > 0 {
+            conn.write_buf.drain(..written);
+        }
+        written > 0
+    }
+}

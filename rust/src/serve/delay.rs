@@ -1,0 +1,225 @@
+//! Adaptive flush-window control for the admission queue.
+//!
+//! The fixed `max_delay` deadline trades tail latency against batch fill:
+//! too long and a sparse stream pays the whole window on every request,
+//! too short and a dense stream flushes half-empty batches ahead of the
+//! fill it would have gotten for free. [`DelayController`] resolves the
+//! tension from the observed arrival rate: it keeps an EWMA of the
+//! inter-arrival gap and sets the interactive flush window to the time a
+//! *full* batch is expected to take to assemble —
+//! `(batch_size − 1) · ewma_gap` — clamped into a configured
+//! `[floor, ceiling]`. Dense traffic ⇒ the window shrinks toward the
+//! floor (the batch fills before any deadline matters, so don't promise
+//! more latency than needed); sparse traffic ⇒ it grows toward the
+//! ceiling (waiting is the only way to fill). Batch-class requests keep
+//! their own fixed, longer window — their SLO is throughput, not p99.
+//!
+//! Deadlines are resolved *at admission* ([`DelayController::on_arrival`]
+//! records the arrival and returns the class's current window), so a
+//! window change never retroactively moves already-admitted deadlines.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::SloClass;
+
+/// EWMA smoothing factor for the inter-arrival gap (higher = more
+/// reactive). 0.2 settles within ~10 requests without chasing jitter.
+const ALPHA: f64 = 0.2;
+
+/// Gaps longer than this are clamped before entering the EWMA: a long
+/// idle period means "no information", not "traffic is 60 s apart", and
+/// must not pin the window at the ceiling for the next burst's duration.
+const MAX_GAP: Duration = Duration::from_secs(1);
+
+struct DelayState {
+    last_arrival: Option<Instant>,
+    /// Smoothed inter-arrival gap in seconds (None until two arrivals).
+    ewma_gap: Option<f64>,
+    /// Current interactive flush window.
+    current: Duration,
+}
+
+/// Resolves the per-class flush window at admission; adaptive when
+/// configured with a `[floor, ceiling]`, otherwise fixed.
+pub(crate) struct DelayController {
+    /// Fixed interactive window (`ServeConfig::max_delay`); also the
+    /// adaptive mode's initial window before any rate estimate exists.
+    base: Duration,
+    /// Fixed window for [`SloClass::Batch`] requests.
+    batch_delay: Duration,
+    /// `(floor, ceiling)` for the adaptive interactive window; `None`
+    /// pins the window at `base`.
+    adaptive: Option<(Duration, Duration)>,
+    batch_size: usize,
+    state: Mutex<DelayState>,
+}
+
+impl DelayController {
+    pub fn new(
+        base: Duration,
+        batch_delay: Duration,
+        adaptive: Option<(Duration, Duration)>,
+        batch_size: usize,
+    ) -> Self {
+        // Normalize a floor above its ceiling instead of erroring: clamp
+        // semantics stay total and the window simply degenerates to fixed.
+        let adaptive = adaptive.map(|(f, c)| (f.min(c), f.max(c)));
+        let initial = match adaptive {
+            Some((floor, ceiling)) => base.clamp(floor, ceiling),
+            None => base,
+        };
+        Self {
+            base,
+            batch_delay,
+            adaptive,
+            batch_size: batch_size.max(1),
+            state: Mutex::new(DelayState {
+                last_arrival: None,
+                ewma_gap: None,
+                current: initial,
+            }),
+        }
+    }
+
+    /// Record one admission at `now` and return the flush window the
+    /// request's deadline should be built from.
+    pub fn on_arrival(&self, now: Instant, class: SloClass) -> Duration {
+        let mut st = match self.state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if let Some((floor, ceiling)) = self.adaptive {
+            if let Some(last) = st.last_arrival {
+                let gap = now.saturating_duration_since(last).min(MAX_GAP).as_secs_f64();
+                let ewma = match st.ewma_gap {
+                    Some(prev) => ALPHA * gap + (1.0 - ALPHA) * prev,
+                    None => gap,
+                };
+                st.ewma_gap = Some(ewma);
+                // Expected time for the batch's remaining (batch−1) slots
+                // to fill at the observed rate.
+                let fill = Duration::from_secs_f64(ewma * (self.batch_size - 1) as f64);
+                st.current = fill.clamp(floor, ceiling);
+            }
+            st.last_arrival = Some(now);
+        }
+        match class {
+            SloClass::Interactive => st.current,
+            SloClass::Batch => self.batch_delay,
+        }
+    }
+
+    /// The current interactive flush window (for stats/metrics export).
+    pub fn current_window(&self) -> Duration {
+        match self.state.lock() {
+            Ok(guard) => guard.current,
+            Err(poisoned) => poisoned.into_inner().current,
+        }
+    }
+
+    /// Is the window adaptive (vs pinned at `max_delay`)?
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive.is_some()
+    }
+
+    /// The fixed interactive window the controller was built from.
+    pub fn base(&self) -> Duration {
+        self.base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_mode_returns_base_and_batch_windows() {
+        let c = DelayController::new(
+            Duration::from_millis(5),
+            Duration::from_millis(40),
+            None,
+            8,
+        );
+        let t = Instant::now();
+        assert_eq!(c.on_arrival(t, SloClass::Interactive), Duration::from_millis(5));
+        assert_eq!(c.on_arrival(t, SloClass::Batch), Duration::from_millis(40));
+        assert_eq!(c.current_window(), Duration::from_millis(5));
+        assert!(!c.is_adaptive());
+    }
+
+    #[test]
+    fn dense_arrivals_shrink_toward_floor() {
+        let floor = Duration::from_micros(500);
+        let ceiling = Duration::from_millis(50);
+        let c = DelayController::new(
+            Duration::from_millis(5),
+            Duration::from_millis(40),
+            Some((floor, ceiling)),
+            8,
+        );
+        let t0 = Instant::now();
+        // 10 µs gaps: a batch fills in ~70 µs, far below the floor.
+        for i in 0..64u64 {
+            c.on_arrival(t0 + Duration::from_micros(10 * i), SloClass::Interactive);
+        }
+        assert_eq!(c.current_window(), floor);
+        assert!(c.is_adaptive());
+    }
+
+    #[test]
+    fn sparse_arrivals_grow_toward_ceiling() {
+        let floor = Duration::from_micros(500);
+        let ceiling = Duration::from_millis(20);
+        let c = DelayController::new(
+            Duration::from_millis(1),
+            Duration::from_millis(40),
+            Some((floor, ceiling)),
+            8,
+        );
+        let t0 = Instant::now();
+        // 30 ms gaps: filling 7 more slots would take ~210 ms >> ceiling.
+        for i in 0..32u64 {
+            c.on_arrival(t0 + Duration::from_millis(30 * i), SloClass::Interactive);
+        }
+        assert_eq!(c.current_window(), ceiling);
+    }
+
+    #[test]
+    fn batch_class_window_is_unaffected_by_rate() {
+        let c = DelayController::new(
+            Duration::from_millis(5),
+            Duration::from_millis(40),
+            Some((Duration::from_millis(1), Duration::from_millis(20))),
+            8,
+        );
+        let t0 = Instant::now();
+        for i in 0..16u64 {
+            assert_eq!(
+                c.on_arrival(t0 + Duration::from_micros(i), SloClass::Batch),
+                Duration::from_millis(40)
+            );
+        }
+    }
+
+    #[test]
+    fn idle_gap_does_not_pin_the_ceiling_forever() {
+        let floor = Duration::from_millis(1);
+        let ceiling = Duration::from_millis(20);
+        let c = DelayController::new(
+            Duration::from_millis(5),
+            Duration::from_millis(40),
+            Some((floor, ceiling)),
+            8,
+        );
+        let mut t = Instant::now();
+        c.on_arrival(t, SloClass::Interactive);
+        // An hour of idleness, then a dense burst: the clamped gap decays
+        // under the burst instead of holding the ceiling for hours.
+        t += Duration::from_secs(3600);
+        for i in 0..256u64 {
+            c.on_arrival(t + Duration::from_micros(5 * i), SloClass::Interactive);
+        }
+        assert_eq!(c.current_window(), floor);
+    }
+}

@@ -15,10 +15,18 @@
 //! ```
 //!
 //! * **Deadline flush** — a batch leaves the queue when it fills to the
-//!   AOT batch size *or* when the oldest admitted request has waited
-//!   `max_delay`, whichever comes first; shutdown drains the remainder.
-//!   Partial batches are zero-padded to the compiled shape (per-example
+//!   AOT batch size *or* when the earliest admitted *deadline* arrives,
+//!   whichever comes first; shutdown drains the remainder. Partial
+//!   batches are zero-padded to the compiled shape (per-example
 //!   computation makes row values independent of the padding).
+//! * **SLO classes & adaptive window** — each request carries a
+//!   [`SloClass`]: `Interactive` requests use the `max_delay` flush
+//!   window (optionally *adaptive* — an arrival-rate tracker shrinks or
+//!   grows it between a configured floor and ceiling, see
+//!   [`ServeConfig::adaptive_delay_ms`]), while `Batch` requests hold a
+//!   longer fixed window ([`ServeConfig::batch_delay_ms`]) so background
+//!   traffic coalesces into fuller batches without dragging interactive
+//!   p99. Deadlines are absolute and fixed at admission.
 //! * **Persistent workers** — the pool's threads (a serving-flavored
 //!   [`crate::util::pool::PersistentPool`]) are spawned once and live
 //!   until shutdown, each metering a private
@@ -51,6 +59,7 @@
 //! vendored xla stub, so the serving path is exercisable offline).
 //! Semantics are documented in rust/DESIGN.md §6b.
 
+mod delay;
 mod pool;
 mod queue;
 
@@ -66,8 +75,45 @@ use crate::runtime::{Result, RuntimeError};
 use crate::tensor::Tensor;
 use crate::util::pool::ShardRouter;
 
+use delay::DelayController;
 use pool::{BatchJob, WorkerPool};
 use queue::{AdmissionQueue, FlushReason, PendingRequest};
+
+/// Service-level-objective class of a submitted request: which flush
+/// window its admission deadline is derived from.
+///
+/// `Interactive` is the latency class (the — possibly adaptive —
+/// `max_delay` window); `Batch` is the throughput class (a longer fixed
+/// window that lets background traffic coalesce into fuller batches).
+/// Classes share the FIFO admission queue — the class decides *when* a
+/// partial flush fires, never request order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SloClass {
+    /// Latency-sensitive: flush by the (possibly adaptive) `max_delay`.
+    #[default]
+    Interactive,
+    /// Throughput-oriented: flush by the longer fixed `batch_delay`.
+    Batch,
+}
+
+impl SloClass {
+    /// Stable lowercase name (wire tags, CLI flags, metrics labels).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+        }
+    }
+
+    /// Parse the stable name back (`"interactive"` / `"batch"`).
+    pub fn parse(s: &str) -> Option<SloClass> {
+        match s {
+            "interactive" => Some(SloClass::Interactive),
+            "batch" => Some(SloClass::Batch),
+            _ => None,
+        }
+    }
+}
 
 /// Executes one assembled batch for the serving pipeline.
 ///
@@ -91,9 +137,12 @@ pub trait BatchRunner: Send + Sync + 'static {
 
     /// Atomically replace the parameter snapshot used by *subsequent*
     /// batches (a batch already executing finishes on the snapshot it
-    /// started with). Runners without swappable weights keep this
-    /// default, which reports the capability as unsupported.
-    fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+    /// started with). The snapshot arrives as an `Arc` so a sharded
+    /// rollout shares **one** tensor set across all device runners
+    /// (cloning the `Arc`, never the tensors). Runners without swappable
+    /// weights keep this default, which reports the capability as
+    /// unsupported.
+    fn swap_params(&self, params: Arc<Vec<Tensor>>) -> Result<()> {
         let _ = params;
         Err(RuntimeError::Io("serve: this runner does not support parameter hot-swap".into()))
     }
@@ -113,9 +162,18 @@ pub trait BatchRunner: Send + Sync + 'static {
 /// Configuration for the serving front end.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Deadline for a partial batch: the oldest admitted request waits at
-    /// most this long before a flush (default 5 ms).
+    /// Flush window for [`SloClass::Interactive`] requests: an admitted
+    /// request waits at most this long before a partial-batch flush
+    /// (default 5 ms). The *initial* window when `adaptive_delay` is set.
     pub max_delay: Duration,
+    /// Flush window for [`SloClass::Batch`] requests — longer, so
+    /// background traffic coalesces into fuller batches (default 40 ms).
+    pub batch_delay: Duration,
+    /// Adaptive interactive window as `(floor, ceiling)`: when set, an
+    /// EWMA arrival-rate tracker retargets the window each admission to
+    /// the expected batch fill time, clamped into this range. `None`
+    /// (default) pins the window at `max_delay`.
+    pub adaptive_delay: Option<(Duration, Duration)>,
     /// Persistent worker threads executing batches (default 2, min 1).
     pub workers: usize,
     /// Admission-queue capacity in *requests*; `submit` blocks and
@@ -125,14 +183,34 @@ pub struct ServeConfig {
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { max_delay: Duration::from_millis(5), workers: 2, queue_cap: 256 }
+        Self {
+            max_delay: Duration::from_millis(5),
+            batch_delay: Duration::from_millis(40),
+            adaptive_delay: None,
+            workers: 2,
+            queue_cap: 256,
+        }
     }
 }
 
 impl ServeConfig {
-    /// Set the deadline flush in milliseconds.
+    /// Set the interactive deadline flush in milliseconds.
     pub fn max_delay_ms(mut self, ms: u64) -> Self {
         self.max_delay = Duration::from_millis(ms);
+        self
+    }
+
+    /// Set the batch-class deadline flush in milliseconds.
+    pub fn batch_delay_ms(mut self, ms: u64) -> Self {
+        self.batch_delay = Duration::from_millis(ms);
+        self
+    }
+
+    /// Enable the adaptive interactive window, clamped to
+    /// `[floor_ms, ceiling_ms]` (order-normalized if swapped).
+    pub fn adaptive_delay_ms(mut self, floor_ms: u64, ceiling_ms: u64) -> Self {
+        self.adaptive_delay =
+            Some((Duration::from_millis(floor_ms), Duration::from_millis(ceiling_ms)));
         self
     }
 
@@ -217,12 +295,20 @@ fn dropped_reply() -> RuntimeError {
 #[derive(Default)]
 pub(crate) struct Counters {
     pub submitted: AtomicU64,
+    pub submitted_interactive: AtomicU64,
+    pub submitted_batch: AtomicU64,
     pub rejected: AtomicU64,
     pub completed: AtomicU64,
     pub batches: AtomicU64,
     pub full_flushes: AtomicU64,
     pub deadline_flushes: AtomicU64,
     pub drain_flushes: AtomicU64,
+    /// Cumulative ledger traffic (alloc'd bytes) across all worker
+    /// batches — the live view of the per-worker ledgers, which are
+    /// thread-owned until shutdown folds them.
+    pub mem_traffic: AtomicU64,
+    /// Max single-worker ledger peak observed so far (bytes).
+    pub mem_worker_peak: AtomicU64,
 }
 
 /// Point-in-time serving statistics (see [`ServeHandle::stats`]).
@@ -230,7 +316,11 @@ pub(crate) struct Counters {
 pub struct ServeStats {
     /// Requests admitted into the queue.
     pub submitted: u64,
-    /// `try_submit` calls bounced by a full queue.
+    /// Admitted requests in the interactive SLO class.
+    pub submitted_interactive: u64,
+    /// Admitted requests in the batch SLO class.
+    pub submitted_batch: u64,
+    /// `try_submit` calls bounced by a full queue (the shed count).
     pub rejected: u64,
     /// Requests whose reply (success or error) has been sent.
     pub completed: u64,
@@ -247,6 +337,16 @@ pub struct ServeStats {
     /// Batches currently outstanding per device (the router's live load
     /// view — what the least-loaded dispatch decides on).
     pub device_loads: Vec<u64>,
+    /// The interactive flush window in force right now (= `max_delay`
+    /// when the adaptive controller is off).
+    pub current_max_delay: Duration,
+    /// Is the interactive window adaptive?
+    pub adaptive_delay: bool,
+    /// Cumulative worker-ledger traffic so far, in bytes (live view; the
+    /// authoritative fold is [`ServeReport::memory`] at shutdown).
+    pub memory_traffic: u64,
+    /// Max single-worker ledger peak observed so far, in bytes.
+    pub memory_worker_peak: u64,
     /// Has shutdown been initiated?
     pub closed: bool,
 }
@@ -295,6 +395,8 @@ struct ServeInner {
     /// device's runner); the pools hold their own clones for execution.
     runners: Vec<Arc<dyn BatchRunner>>,
     counters: Arc<Counters>,
+    /// Per-class flush-window source; deadlines resolve at admission.
+    delay: DelayController,
     example_shape: Vec<usize>,
     batch: usize,
     /// Serializes cross-device rollouts: without it, two concurrent
@@ -411,7 +513,12 @@ impl ServeHandle {
                 )));
             }
         }
-        let max_delay = config.max_delay;
+        let delay = DelayController::new(
+            config.max_delay,
+            config.batch_delay,
+            config.adaptive_delay,
+            batch,
+        );
         let queue = Arc::new(AdmissionQueue::new(config.queue_cap));
         let counters = Arc::new(Counters::default());
         let workers = config.workers.max(1);
@@ -439,7 +546,7 @@ impl ServeHandle {
             let counters = counters.clone();
             let example_shape = example_shape.clone();
             thread::Builder::new().name("anode-serve-batcher".into()).spawn(move || {
-                batcher_loop(&queue, &pools, &router, &counters, batch, &example_shape, max_delay)
+                batcher_loop(&queue, &pools, &router, &counters, batch, &example_shape)
             })
         };
         let batcher = match spawned {
@@ -461,6 +568,7 @@ impl ServeHandle {
                 router,
                 runners,
                 counters,
+                delay,
                 example_shape,
                 batch,
                 swap_lock: Mutex::new(()),
@@ -483,7 +591,11 @@ impl ServeHandle {
     /// apply one after the other, never interleaved per device). See
     /// [`Session::push_params`](crate::api::Session::push_params) for the
     /// trained-checkpoint rollout path.
-    pub fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+    ///
+    /// The snapshot is an `Arc`: all device runners share the **same**
+    /// tensor set (N `Arc` clones, zero tensor copies), so a rollout's
+    /// memory cost is one snapshot regardless of device count.
+    pub fn swap_params(&self, params: Arc<Vec<Tensor>>) -> Result<()> {
         let _rollout = match self.inner.swap_lock.lock() {
             Ok(guard) => guard,
             Err(poisoned) => poisoned.into_inner(),
@@ -531,32 +643,57 @@ impl ServeHandle {
         Ok(())
     }
 
-    /// Submit one example, blocking while the admission queue is at
-    /// `queue_cap` (backpressure). Errors after shutdown. The `max_delay`
-    /// clock (and `RequestStats::queue_wait`) starts at *admission*, not
-    /// at the start of a blocked `submit` call.
+    /// Submit one [`SloClass::Interactive`] example, blocking while the
+    /// admission queue is at `queue_cap` (backpressure). Errors after
+    /// shutdown. The flush clock (and `RequestStats::queue_wait`) starts
+    /// at *admission*, not at the start of a blocked `submit` call.
     pub fn submit(&self, image: Tensor) -> Result<Pending> {
+        self.submit_class(image, SloClass::Interactive)
+    }
+
+    /// [`ServeHandle::submit`] with an explicit SLO class: the class's
+    /// flush window (interactive — possibly adaptive — vs the longer
+    /// batch window) fixes the request's absolute deadline at admission.
+    pub fn submit_class(&self, image: Tensor, class: SloClass) -> Result<Pending> {
         self.check_example(&image)?;
+        let delay = self.inner.delay.on_arrival(Instant::now(), class);
         let (tx, rx) = mpsc::channel();
-        self.inner.queue.push(image, tx)?;
-        self.inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
+        self.inner.queue.push(image, class, delay, tx)?;
+        self.count_submit(class);
         Ok(Pending { rx })
     }
 
-    /// Non-blocking submit: `Ok(None)` when the queue is full (the
-    /// backpressure signal; the caller keeps `image`), `Err` after
-    /// shutdown. The example is cloned only when it is actually admitted —
-    /// a bounced call costs no tensor copy.
+    /// Non-blocking [`SloClass::Interactive`] submit: `Ok(None)` when the
+    /// queue is full (the backpressure signal; the caller keeps `image`),
+    /// `Err` after shutdown. The example is cloned only when it is
+    /// actually admitted — a bounced call costs no tensor copy.
     pub fn try_submit(&self, image: &Tensor) -> Result<Option<Pending>> {
+        self.try_submit_class(image, SloClass::Interactive)
+    }
+
+    /// [`ServeHandle::try_submit`] with an explicit SLO class — the load
+    /// shed point for `net::server`: `Ok(None)` is the signal a
+    /// `RetryAfter` frame answers.
+    pub fn try_submit_class(&self, image: &Tensor, class: SloClass) -> Result<Option<Pending>> {
         self.check_example(image)?;
         let mut rx_slot = None;
         let admitted = self.inner.queue.try_push_with(|| {
+            // The arrival is recorded only for admitted requests: a shed
+            // burst must not drag the adaptive window toward its floor.
+            let now = Instant::now();
+            let delay = self.inner.delay.on_arrival(now, class);
             let (tx, rx) = mpsc::channel();
             rx_slot = Some(rx);
-            PendingRequest { image: image.clone(), enqueued_at: Instant::now(), tx }
+            PendingRequest {
+                image: image.clone(),
+                class,
+                enqueued_at: now,
+                deadline: now + delay,
+                tx,
+            }
         })?;
         if admitted {
-            self.inner.counters.submitted.fetch_add(1, Ordering::Relaxed);
+            self.count_submit(class);
             Ok(rx_slot.map(|rx| Pending { rx }))
         } else {
             self.inner.counters.rejected.fetch_add(1, Ordering::Relaxed);
@@ -564,11 +701,22 @@ impl ServeHandle {
         }
     }
 
+    fn count_submit(&self, class: SloClass) {
+        let c = &self.inner.counters;
+        c.submitted.fetch_add(1, Ordering::Relaxed);
+        match class {
+            SloClass::Interactive => c.submitted_interactive.fetch_add(1, Ordering::Relaxed),
+            SloClass::Batch => c.submitted_batch.fetch_add(1, Ordering::Relaxed),
+        };
+    }
+
     /// Point-in-time counters (cheap; safe from any thread).
     pub fn stats(&self) -> ServeStats {
         let c = &self.inner.counters;
         ServeStats {
             submitted: c.submitted.load(Ordering::Relaxed),
+            submitted_interactive: c.submitted_interactive.load(Ordering::Relaxed),
+            submitted_batch: c.submitted_batch.load(Ordering::Relaxed),
             rejected: c.rejected.load(Ordering::Relaxed),
             completed: c.completed.load(Ordering::Relaxed),
             batches: c.batches.load(Ordering::Relaxed),
@@ -577,6 +725,10 @@ impl ServeHandle {
             drain_flushes: c.drain_flushes.load(Ordering::Relaxed),
             queue_depth: self.inner.queue.depth(),
             device_loads: self.inner.router.loads(),
+            current_max_delay: self.inner.delay.current_window(),
+            adaptive_delay: self.inner.delay.is_adaptive(),
+            memory_traffic: c.mem_traffic.load(Ordering::Relaxed),
+            memory_worker_peak: c.mem_worker_peak.load(Ordering::Relaxed),
             closed: self.inner.queue.is_closed(),
         }
     }
@@ -639,9 +791,8 @@ fn batcher_loop(
     counters: &Counters,
     batch: usize,
     example_shape: &[usize],
-    max_delay: Duration,
 ) {
-    while let Some((requests, reason)) = queue.next_batch(batch, max_delay) {
+    while let Some((requests, reason)) = queue.next_batch(batch) {
         debug_assert!(!requests.is_empty(), "queue flushed an empty batch");
         counters.batches.fetch_add(1, Ordering::Relaxed);
         let flush_counter = match reason {
@@ -714,11 +865,13 @@ pub struct SessionRunner {
 }
 
 impl SessionRunner {
-    /// Snapshot `params` (serving is read-only; later training steps on
-    /// the originating session do not affect a running pipeline unless
-    /// explicitly rolled out via [`ServeHandle::swap_params`]).
-    pub fn new(core: Arc<ExecutionCore>, params: Vec<Tensor>) -> Self {
-        Self { core, params: RwLock::new(Arc::new(params)) }
+    /// Adopt a shared `params` snapshot (serving is read-only; later
+    /// training steps on the originating session do not affect a running
+    /// pipeline unless explicitly rolled out via
+    /// [`ServeHandle::swap_params`]). All device runners of one session
+    /// hold the **same** `Arc` — one snapshot, N pointers.
+    pub fn new(core: Arc<ExecutionCore>, params: Arc<Vec<Tensor>>) -> Self {
+        Self { core, params: RwLock::new(params) }
     }
 
     /// The current snapshot (an `Arc` clone; cheap, lock held briefly).
@@ -749,14 +902,14 @@ impl BatchRunner for SessionRunner {
         infer_batch(&self.core, &params, images, ledger)
     }
 
-    fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+    fn swap_params(&self, params: Arc<Vec<Tensor>>) -> Result<()> {
         let current = self.snapshot();
         check_swap_shapes(&params, &current)?;
         let mut guard = match self.params.write() {
             Ok(guard) => guard,
             Err(poisoned) => poisoned.into_inner(),
         };
-        *guard = Arc::new(params);
+        *guard = params;
         Ok(())
     }
 
@@ -851,11 +1004,11 @@ impl BatchRunner for HostTailRunner {
     }
 
     /// The demo model's swappable state is its head: expects exactly
-    /// `[w (c, k), bias (k)]` matching the current shapes.
-    fn swap_params(&self, params: Vec<Tensor>) -> Result<()> {
+    /// `[w (c, k), bias (k)]` matching the current shapes. Clones the two
+    /// (small) tensors out of the shared snapshot into the head pair.
+    fn swap_params(&self, params: Arc<Vec<Tensor>>) -> Result<()> {
         self.validate_swap(&params)?;
-        let mut it = params.into_iter();
-        let (w, bias) = (it.next().expect("checked len"), it.next().expect("checked len"));
+        let (w, bias) = (params[0].clone(), params[1].clone());
         let mut guard = match self.head.write() {
             Ok(guard) => guard,
             Err(poisoned) => poisoned.into_inner(),
@@ -925,6 +1078,25 @@ mod tests {
         let report = handle.shutdown().unwrap();
         assert_eq!(report.requests, 4);
         assert!(report.batches >= 1);
+    }
+
+    #[test]
+    fn slo_classes_are_counted_and_batch_class_gets_replies() {
+        let runner = Arc::new(HostTailRunner::new(4, 2, 3, 5));
+        let handle =
+            ServeHandle::spawn(runner, ServeConfig::default().batch_delay_ms(10)).unwrap();
+        let ex = Tensor::full(&[2, 2, 3], 0.25);
+        let a = handle.submit_class(ex.clone(), SloClass::Batch).unwrap();
+        let b = handle.try_submit_class(&ex, SloClass::Interactive).unwrap().unwrap();
+        assert!(a.wait().is_ok());
+        assert!(b.wait().is_ok());
+        let stats = handle.stats();
+        assert_eq!(stats.submitted, 2);
+        assert_eq!(stats.submitted_batch, 1);
+        assert_eq!(stats.submitted_interactive, 1);
+        assert!(!stats.adaptive_delay);
+        assert_eq!(stats.current_max_delay, Duration::from_millis(5));
+        handle.shutdown().unwrap();
     }
 
     #[test]

@@ -118,10 +118,18 @@ fn execute(runner: &dyn BatchRunner, job: BatchJob, ledger: &mut MemoryLedger, c
     let fill = job.requests.len();
     let capacity = runner.batch_size();
     let started = Instant::now();
+    let traffic_before = ledger.total_traffic();
     let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         runner.run(&job.images, ledger)
     }));
     let execute = started.elapsed();
+    // Live ledger view for the metrics endpoint: per-worker ledgers are
+    // thread-owned until shutdown folds them, so publish this batch's
+    // traffic delta and the worker's running peak through the shared
+    // counters instead.
+    let traffic = ledger.total_traffic().saturating_sub(traffic_before);
+    c.mem_traffic.fetch_add(traffic, Ordering::Relaxed);
+    c.mem_worker_peak.fetch_max(ledger.peak_bytes() as u64, Ordering::Relaxed);
     let result = caught.unwrap_or_else(|payload| {
         // The runner unwound mid-batch, skipping its transient free(s).
         // Release the leaked live transients so this worker's ledger keeps

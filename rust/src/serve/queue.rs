@@ -4,8 +4,19 @@
 //! clones submit), single-consumer (the batcher thread): requests enter
 //! FIFO through [`AdmissionQueue::push`]/[`AdmissionQueue::try_push_with`]
 //! and leave in batches through [`AdmissionQueue::next_batch`], which
-//! flushes on whichever comes first — the batch filling up, the oldest
-//! request reaching `max_delay`, or shutdown (which drains the remainder).
+//! flushes on whichever comes first — the batch filling up, the earliest
+//! pending *deadline* arriving, or shutdown (which drains the remainder).
+//!
+//! Deadlines are **per request** (SLO-aware since PR 6): every admitted
+//! request carries the absolute instant by which it must be flushed,
+//! computed at admission from its [`SloClass`](crate::serve::SloClass)'s
+//! delay window (interactive requests carry the — possibly adaptive —
+//! flush window; batch-class requests a longer one). The batcher flushes
+//! when the *minimum* pending deadline arrives, so a late-arriving
+//! interactive request can pull a partial batch out from under older
+//! batch-class requests, while a queue of only batch-class work coalesces
+//! for longer. Draining stays strictly FIFO: deadlines decide *when* a
+//! flush fires, never which requests ride in it.
 //!
 //! The queue is bounded at `cap` pending requests: `push` blocks (and
 //! `try_push_with` declines without even constructing the request) while
@@ -20,14 +31,20 @@ use std::time::{Duration, Instant};
 use crate::runtime::{Result, RuntimeError};
 use crate::tensor::Tensor;
 
-use super::ServeReply;
+use super::{ServeReply, SloClass};
 
 /// One admitted request waiting for batch assembly: the example tensor,
-/// its admission timestamp (the deadline clock and the queue-wait origin),
-/// and the channel its reply is demultiplexed onto.
+/// its admission timestamp (the queue-wait origin), the absolute flush
+/// deadline derived from its SLO class at admission, and the channel its
+/// reply is demultiplexed onto.
 pub(crate) struct PendingRequest {
     pub image: Tensor,
+    pub class: SloClass,
     pub enqueued_at: Instant,
+    /// Flush-by instant: `enqueued_at + delay(class)`, resolved at
+    /// admission (so an adaptive window change never retroactively moves
+    /// already-admitted deadlines).
+    pub deadline: Instant,
     pub tx: mpsc::Sender<Result<ServeReply>>,
 }
 
@@ -36,7 +53,7 @@ pub(crate) struct PendingRequest {
 pub(crate) enum FlushReason {
     /// The batch filled to the AOT-compiled size.
     Full,
-    /// The oldest request reached `max_delay`; a partial batch flushed.
+    /// The earliest pending deadline arrived; a partial batch flushed.
     Deadline,
     /// Shutdown drained the remaining requests.
     Drain,
@@ -68,19 +85,31 @@ impl AdmissionQueue {
     /// Admit a request, blocking while the queue is at capacity. Errors if
     /// the queue has been closed (shutdown), including while blocked.
     ///
-    /// The request (and its `enqueued_at` deadline anchor) is constructed
-    /// only once capacity is granted: time a caller spends *blocked* here
-    /// must not burn the `max_delay` window, or a saturated pipeline with
-    /// `cap < batch` would degenerate into immediate near-empty deadline
-    /// flushes.
-    pub fn push(&self, image: Tensor, tx: mpsc::Sender<Result<ServeReply>>) -> Result<()> {
+    /// The request (and its deadline anchor) is constructed only once
+    /// capacity is granted: time a caller spends *blocked* here must not
+    /// burn the flush window, or a saturated pipeline with `cap < batch`
+    /// would degenerate into immediate near-empty deadline flushes.
+    pub fn push(
+        &self,
+        image: Tensor,
+        class: SloClass,
+        delay: Duration,
+        tx: mpsc::Sender<Result<ServeReply>>,
+    ) -> Result<()> {
         let mut st = self.state.lock().unwrap();
         loop {
             if st.closed {
                 return Err(RuntimeError::Io("serve: handle is shut down".into()));
             }
             if st.pending.len() < self.cap {
-                st.pending.push_back(PendingRequest { image, enqueued_at: Instant::now(), tx });
+                let now = Instant::now();
+                st.pending.push_back(PendingRequest {
+                    image,
+                    class,
+                    enqueued_at: now,
+                    deadline: now + delay,
+                    tx,
+                });
                 self.not_empty.notify_one();
                 return Ok(());
             }
@@ -108,11 +137,7 @@ impl AdmissionQueue {
     /// Batcher side: block until a batch is ready and drain it. Returns up
     /// to `batch` requests in submission order, with the reason the flush
     /// fired, or `None` once the queue is closed *and* empty (terminate).
-    pub fn next_batch(
-        &self,
-        batch: usize,
-        max_delay: Duration,
-    ) -> Option<(Vec<PendingRequest>, FlushReason)> {
+    pub fn next_batch(&self, batch: usize) -> Option<(Vec<PendingRequest>, FlushReason)> {
         let batch = batch.max(1);
         let mut st = self.state.lock().unwrap();
         loop {
@@ -122,9 +147,6 @@ impl AdmissionQueue {
                 }
                 st = self.not_empty.wait(st).unwrap();
             }
-            // The deadline is anchored on the *oldest* request: no admitted
-            // request waits in the queue longer than `max_delay`.
-            let deadline = st.pending.front().expect("non-empty queue").enqueued_at + max_delay;
             loop {
                 if st.pending.len() >= batch {
                     return Some((self.drain_locked(&mut st, batch), FlushReason::Full));
@@ -132,6 +154,12 @@ impl AdmissionQueue {
                 if st.closed {
                     return Some((self.drain_locked(&mut st, batch), FlushReason::Drain));
                 }
+                // Flush at the *earliest* pending deadline: no admitted
+                // request waits past its own SLO window. The scan is
+                // O(pending) under the lock, bounded by `cap` — and a new
+                // admission wakes this wait, so a tighter deadline arriving
+                // mid-wait re-shortens the timeout below.
+                let deadline = min_deadline(&st.pending).expect("non-empty queue");
                 let now = Instant::now();
                 if now >= deadline {
                     return Some((self.drain_locked(&mut st, batch), FlushReason::Deadline));
@@ -175,28 +203,43 @@ impl AdmissionQueue {
     }
 }
 
+/// Earliest deadline over the pending requests (`None` when empty). Not
+/// simply the front's: a short-window interactive request admitted behind
+/// a long-window batch request owns the earlier deadline.
+fn min_deadline(pending: &VecDeque<PendingRequest>) -> Option<Instant> {
+    pending.iter().map(|r| r.deadline).min()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn req(v: f32) -> (PendingRequest, mpsc::Receiver<Result<ServeReply>>) {
+    fn req(
+        v: f32,
+        class: SloClass,
+        delay: Duration,
+    ) -> (PendingRequest, mpsc::Receiver<Result<ServeReply>>) {
         let (tx, rx) = mpsc::channel();
         let image = Tensor::full(&[2], v);
-        (PendingRequest { image, enqueued_at: Instant::now(), tx }, rx)
+        let now = Instant::now();
+        (
+            PendingRequest { image, class, enqueued_at: now, deadline: now + delay, tx },
+            rx,
+        )
     }
 
-    fn push(q: &AdmissionQueue, v: f32) -> Result<()> {
+    fn push(q: &AdmissionQueue, v: f32, delay: Duration) -> Result<()> {
         let (tx, _rx) = mpsc::channel();
-        q.push(Tensor::full(&[2], v), tx)
+        q.push(Tensor::full(&[2], v), SloClass::Interactive, delay, tx)
     }
 
     #[test]
     fn full_batch_drains_in_fifo_order() {
         let q = AdmissionQueue::new(8);
         for v in 0..4 {
-            push(&q, v as f32).unwrap();
+            push(&q, v as f32, Duration::from_secs(10)).unwrap();
         }
-        let (batch, reason) = q.next_batch(4, Duration::from_secs(10)).unwrap();
+        let (batch, reason) = q.next_batch(4).unwrap();
         assert_eq!(reason, FlushReason::Full);
         let values: Vec<f32> = batch.iter().map(|r| r.image.data()[0]).collect();
         assert_eq!(values, vec![0.0, 1.0, 2.0, 3.0]);
@@ -206,29 +249,49 @@ mod tests {
     #[test]
     fn deadline_flushes_partial_batch() {
         let q = AdmissionQueue::new(8);
-        push(&q, 7.0).unwrap();
+        push(&q, 7.0, Duration::from_millis(30)).unwrap();
         let t0 = Instant::now();
-        let (batch, reason) = q.next_batch(4, Duration::from_millis(30)).unwrap();
+        let (batch, reason) = q.next_batch(4).unwrap();
         assert_eq!(reason, FlushReason::Deadline);
         assert_eq!(batch.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(20), "flushed before the deadline");
     }
 
     #[test]
+    fn interactive_deadline_preempts_batch_class_window() {
+        let q = AdmissionQueue::new(8);
+        // An old batch-class request with a distant deadline...
+        let (slow, _srx) = req(1.0, SloClass::Batch, Duration::from_secs(10));
+        assert!(q.try_push_with(|| slow).unwrap());
+        // ...must be flushed by the interactive request arriving behind it.
+        let (fast, _frx) = req(2.0, SloClass::Interactive, Duration::from_millis(25));
+        assert!(q.try_push_with(|| fast).unwrap());
+        let t0 = Instant::now();
+        let (batch, reason) = q.next_batch(4).unwrap();
+        assert_eq!(reason, FlushReason::Deadline);
+        assert_eq!(batch.len(), 2, "the flush carries the whole FIFO prefix");
+        assert_eq!(batch[0].image.data()[0], 1.0, "FIFO order survives the deadline preempt");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "flush must fire on the interactive window, not the batch one"
+        );
+    }
+
+    #[test]
     fn try_push_reports_full_and_close_drains() {
         let q = AdmissionQueue::new(2);
-        let (a, _arx) = req(1.0);
-        let (b, _brx) = req(2.0);
+        let (a, _arx) = req(1.0, SloClass::Interactive, Duration::from_secs(10));
+        let (b, _brx) = req(2.0, SloClass::Batch, Duration::from_secs(10));
         assert!(q.try_push_with(|| a).unwrap());
         assert!(q.try_push_with(|| b).unwrap());
         // Full: the constructor must not even run.
         let accepted = q.try_push_with(|| unreachable!("constructed despite a full queue"));
         assert!(!accepted.unwrap());
         q.close();
-        assert!(push(&q, 4.0).is_err());
-        let (batch, reason) = q.next_batch(4, Duration::from_secs(10)).unwrap();
+        assert!(push(&q, 4.0, Duration::from_secs(10)).is_err());
+        let (batch, reason) = q.next_batch(4).unwrap();
         assert_eq!(reason, FlushReason::Drain);
         assert_eq!(batch.len(), 2);
-        assert!(q.next_batch(4, Duration::from_secs(10)).is_none());
+        assert!(q.next_batch(4).is_none());
     }
 }

@@ -415,11 +415,66 @@ where
     scatter_gather(pools, &assignments, Some(router), items, &init, &f)
 }
 
+/// Streaming scatter-gather over `items` split per `router`, delivering
+/// each chunk's results to `fold` **on the calling thread, in input
+/// order, as chunks complete** — so a reduction over chunk i overlaps
+/// with chunk i+1 still executing on the pools (the pipelined
+/// reduce/apply behind `Session::step_accumulate`), while the fixed fold
+/// order keeps the result bit-identical to the barrier version (and to
+/// serial). `fold(base, results)` receives the chunk's first item index
+/// and its in-order results; chunks are contiguous and folded in `start`
+/// order, so concatenating the `base`s reproduces `0..n`.
+///
+/// Returns each chunk's state tagged with its device (chunk order).
+/// Panic/teardown semantics match [`sharded_map_with`]; a panic may
+/// surface after `fold` has already consumed earlier chunks.
+pub fn sharded_fold_with<S, T, R, CS, FI, F, K>(
+    pools: &[&PersistentPool<S>],
+    router: &ShardRouter,
+    limit: usize,
+    items: &[T],
+    init: FI,
+    f: F,
+    fold: K,
+) -> Vec<(usize, CS)>
+where
+    S: Send + 'static,
+    T: Sync,
+    R: Send,
+    CS: Send,
+    FI: Fn() -> CS + Sync,
+    F: Fn(&mut S, &mut CS, usize, &T) -> R + Sync,
+    K: FnMut(usize, Vec<R>),
+{
+    assert!(!pools.is_empty(), "sharded_fold_with needs at least one device pool");
+    assert_eq!(
+        pools.len(),
+        router.devices(),
+        "router device count must match the pool list"
+    );
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let limit = limit.max(1);
+    let total: usize = pools.iter().map(|p| p.workers().min(limit)).sum();
+    let chunk = n.div_ceil(total.max(1));
+    let assignments = router.assign_chunks(n, chunk);
+    let mut states = Vec::with_capacity(assignments.len());
+    let mut fold = fold;
+    scatter_stream(pools, &assignments, Some(router), items, &init, &f, |ci, rs, device, cs| {
+        fold(assignments[ci].start, rs);
+        states.push((device, cs));
+    });
+    states
+}
+
 /// The shared scatter-gather core behind [`PersistentPool::map_with`]
 /// (one pool, worker state ignored) and [`sharded_map_with`] (pool per
 /// device, worker state = the device pin): submit one job per assignment
 /// to its device's pool, gather `(chunk index, outcome)` over a channel,
-/// reassemble in input order.
+/// reassemble in input order. A thin collecting sink over
+/// [`scatter_stream`].
 fn scatter_gather<S, T, R, CS, FI, F>(
     pools: &[&PersistentPool<S>],
     assignments: &[ChunkAssignment],
@@ -435,6 +490,40 @@ where
     CS: Send,
     FI: Fn() -> CS + Sync,
     F: Fn(&mut S, &mut CS, usize, &T) -> R + Sync,
+{
+    let mut results = Vec::with_capacity(items.len());
+    let mut states = Vec::with_capacity(assignments.len());
+    scatter_stream(pools, assignments, router, items, init, f, |_ci, rs, device, cs| {
+        results.extend(rs);
+        states.push((device, cs));
+    });
+    (results, states)
+}
+
+/// The streaming core: submit one job per assignment, then deliver each
+/// chunk's `(results, device, state)` to `sink` **in chunk-index order**
+/// on the calling thread, buffering out-of-order completions. Because
+/// assignments are produced in `start` order, chunk order *is* input
+/// order — the invariant every fixed-order reduction above relies on.
+/// The first panic from any chunk is re-raised after all chunks settle;
+/// a chunk dropped by a closed pool panics with a diagnostic.
+#[allow(clippy::too_many_arguments)]
+fn scatter_stream<S, T, R, CS, FI, F, K>(
+    pools: &[&PersistentPool<S>],
+    assignments: &[ChunkAssignment],
+    router: Option<&ShardRouter>,
+    items: &[T],
+    init: &FI,
+    f: &F,
+    mut sink: K,
+) where
+    S: Send + 'static,
+    T: Sync,
+    R: Send,
+    CS: Send,
+    FI: Fn() -> CS + Sync,
+    F: Fn(&mut S, &mut CS, usize, &T) -> R + Sync,
+    K: FnMut(usize, Vec<R>, usize, CS),
 {
     let chunks = assignments.len();
     let latch = Arc::new(Latch::default());
@@ -489,11 +578,27 @@ where
     }
     drop(tx);
 
+    // Deliver chunks to the sink the moment the in-order cursor reaches
+    // them: chunk i folds on this thread while chunk i+1 (and beyond) is
+    // still executing on the pools. Out-of-order completions park in
+    // `slots` until the cursor catches up.
     let mut slots: Vec<Option<(Vec<R>, usize, CS)>> = (0..chunks).map(|_| None).collect();
+    let mut cursor = 0usize;
     let mut panic: Option<PanicPayload> = None;
     while let Ok((ci, outcome)) = rx.recv() {
         match outcome {
-            Ok(triple) => slots[ci] = Some(triple),
+            Ok(triple) => {
+                slots[ci] = Some(triple);
+                while cursor < chunks {
+                    match slots[cursor].take() {
+                        Some((rs, device, cs)) => {
+                            sink(cursor, rs, device, cs);
+                            cursor += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
             Err(payload) => {
                 if panic.is_none() {
                     panic = Some(payload);
@@ -507,19 +612,9 @@ where
     if let Some(payload) = panic {
         resume_unwind(payload);
     }
-
-    let mut results = Vec::with_capacity(items.len());
-    let mut states = Vec::with_capacity(chunks);
-    for slot in slots {
-        match slot {
-            Some((rs, device, cs)) => {
-                results.extend(rs);
-                states.push((device, cs));
-            }
-            None => panic!("sharded map: a device pool closed before every chunk ran"),
-        }
+    if cursor < chunks {
+        panic!("sharded map: a device pool closed before every chunk ran");
     }
-    (results, states)
 }
 
 // Shutdown/teardown needs no bounds on `S`: these methods only flip the
@@ -885,6 +980,36 @@ mod tests {
         // No worker died, and no payload is pending at join.
         let states = pool.join();
         assert_eq!(states.len(), 4);
+    }
+
+    #[test]
+    fn sharded_fold_streams_chunks_in_input_order() {
+        let p0: PersistentPool = PersistentPool::new(2, "t-fold0", || ()).unwrap();
+        let p1: PersistentPool = PersistentPool::new(2, "t-fold1", || ()).unwrap();
+        let router = ShardRouter::new(&[2, 2]);
+        let items: Vec<usize> = (0..37).collect();
+        let mut folded: Vec<usize> = Vec::new();
+        let states = sharded_fold_with(
+            &[&p0, &p1],
+            &router,
+            2,
+            &items,
+            || 0usize,
+            |_worker, count, _i, &x| {
+                *count += 1;
+                x * 2
+            },
+            |base, rs| {
+                // The fold must see chunks in input order even though
+                // completions race across two pools.
+                assert_eq!(folded.len(), base, "chunk arrived out of order");
+                folded.extend(rs);
+            },
+        );
+        let want: Vec<usize> = items.iter().map(|&x| x * 2).collect();
+        assert_eq!(folded, want);
+        assert_eq!(states.iter().map(|(_, c)| *c).sum::<usize>(), items.len());
+        assert!(states.iter().all(|(d, _)| *d < 2));
     }
 
     #[test]

@@ -279,6 +279,12 @@ fn train_accumulate(
 /// gradient strategy, asserting parameters and losses bitwise-equal to
 /// the serial run after k accumulate-steps, plus ledger-merge traffic
 /// equality on the training path.
+///
+/// This grid is also the regression lock for the pipelined
+/// reduce/apply in `step_accumulate_with_workers`: gradients are now
+/// folded into the accumulator as shards complete (streaming, not
+/// barrier-then-reduce), and the fold order is fixed by micro-batch
+/// index — so every cell here must stay bitwise-equal to workers=1.
 #[test]
 fn data_parallel_grad_accumulation_is_bit_identical_for_all_strategies() {
     let Some(engine) = real_engine() else { return };

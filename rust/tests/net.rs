@@ -1,0 +1,621 @@
+//! Integration tests for `anode::net` — the socket front end.
+//!
+//! Everything here runs offline: the wire tests need only loopback TCP,
+//! the serving tests drive either the deterministic host-side runner or
+//! the simulated-device engine (`runtime::sim`). Covered:
+//!
+//! * property-style round-trip of every frame type under randomized
+//!   contents (hand-rolled forall on `anode::rng` — no external crates),
+//!   including byte-at-a-time incremental decode;
+//! * rejection without panic: truncated, bit-flipped, and garbage
+//!   buffers must produce `Ok(None)` or a typed error, never unwind;
+//! * loopback end-to-end on sim devices: N client threads × D devices,
+//!   replies order-correct per connection and bit-identical to
+//!   `Session::predict_batches`;
+//! * load shedding over the wire: a saturated queue answers `RetryAfter`
+//!   and a later retry succeeds;
+//! * graceful drain: shutdown with replies still gated loses no
+//!   accepted request;
+//! * the metrics endpoint, over both the binary frame and HTTP/1.0.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anode::api::{argmax_rows, Engine, Prediction, PredictStats, SessionConfig};
+use anode::memory::{Category, MemoryLedger};
+use anode::net::metrics::scrape_value;
+use anode::net::proto::{self, Frame, ProtoError};
+use anode::net::{ClientReply, NetClient, NetConfig, NetServer};
+use anode::rng::Rng;
+use anode::runtime::sim::{write_artifacts, SimSpec};
+use anode::runtime::Result;
+use anode::serve::{split_examples, BatchRunner, ServeConfig, ServeHandle, SloClass};
+use anode::tensor::Tensor;
+
+const WAIT: Duration = Duration::from_secs(20);
+
+// ---------------------------------------------------------------- proto
+
+fn random_tensor(rng: &mut Rng) -> Tensor {
+    let rank = 1 + rng.below(3);
+    let dims: Vec<usize> = (0..rank).map(|_| 1 + rng.below(4)).collect();
+    let len: usize = dims.iter().product();
+    let data: Vec<f32> = (0..len)
+        .map(|_| {
+            // Exercise odd bit patterns, not just tame values.
+            match rng.below(8) {
+                0 => 0.0,
+                1 => -0.0,
+                2 => f32::MIN_POSITIVE / 2.0,
+                3 => f32::MAX,
+                _ => rng.uniform_range(-1e6, 1e6),
+            }
+        })
+        .collect();
+    Tensor::from_vec(dims, data).unwrap()
+}
+
+fn random_text(rng: &mut Rng) -> String {
+    let len = rng.below(64);
+    (0..len)
+        .map(|_| char::from_u32(0x20 + rng.below(0x7e - 0x20) as u32).unwrap())
+        .collect()
+}
+
+fn random_frame(rng: &mut Rng) -> Frame {
+    let id = rng.next_u64();
+    match rng.below(6) {
+        0 => Frame::Request {
+            id,
+            class: if rng.below(2) == 0 { SloClass::Interactive } else { SloClass::Batch },
+            image: random_tensor(rng),
+        },
+        1 => Frame::Reply {
+            id,
+            class: rng.next_u64() as u32,
+            queue_wait_us: rng.next_u64(),
+            execute_us: rng.next_u64(),
+            batch_fill: rng.next_u64() as u32,
+            batch_size: rng.next_u64() as u32,
+            logits: random_tensor(rng),
+        },
+        2 => Frame::Error { id, message: random_text(rng) },
+        3 => Frame::RetryAfter { id, retry_after_us: rng.next_u64() },
+        4 => Frame::MetricsRequest { id },
+        _ => Frame::MetricsReply { id, text: random_text(rng) },
+    }
+}
+
+/// Hand-rolled forall: every frame type round-trips bit-exactly through
+/// encode → decode, including when the bytes arrive one at a time.
+#[test]
+fn random_frames_round_trip_whole_and_incrementally() {
+    let mut rng = Rng::new(0xF0CACC1A);
+    for case in 0..200 {
+        let frame = random_frame(&mut rng);
+        let bytes = frame.encode_vec();
+        let (decoded, consumed) =
+            proto::decode(&bytes).expect("valid frame").expect("complete frame");
+        assert_eq!(consumed, bytes.len(), "case {case}");
+        assert_eq!(decoded, frame, "case {case}");
+
+        // Incremental: a decoder fed a growing prefix must answer
+        // "need more" at every cut, then decode at the full length.
+        let step = 1 + rng.below(7);
+        let mut cut = 0usize;
+        while cut < bytes.len() {
+            assert_eq!(proto::decode(&bytes[..cut]).expect("prefix"), None, "case {case}");
+            cut = (cut + step).min(bytes.len());
+        }
+        let (decoded, _) = proto::decode(&bytes).expect("full").expect("frame");
+        assert_eq!(decoded, frame, "case {case}");
+    }
+}
+
+/// Two frames back-to-back decode in sequence with exact consumed counts
+/// (the reactor's read buffer sees exactly this).
+#[test]
+fn decode_consumes_frames_in_sequence() {
+    let mut rng = Rng::new(7);
+    let a = random_frame(&mut rng);
+    let b = random_frame(&mut rng);
+    let mut buf = a.encode_vec();
+    let a_len = buf.len();
+    b.encode(&mut buf);
+    let (first, n1) = proto::decode(&buf).unwrap().unwrap();
+    assert_eq!(first, a);
+    assert_eq!(n1, a_len);
+    let (second, n2) = proto::decode(&buf[n1..]).unwrap().unwrap();
+    assert_eq!(second, b);
+    assert_eq!(n1 + n2, buf.len());
+}
+
+/// Corrupted, truncated, and garbage buffers must never panic: every
+/// outcome is `Ok(None)`, `Ok(Some(_))` (a flip that kept the frame
+/// valid), or a typed `ProtoError`.
+#[test]
+fn corruption_never_panics() {
+    let mut rng = Rng::new(0xBAD5EED);
+    for _ in 0..100 {
+        let frame = random_frame(&mut rng);
+        let bytes = frame.encode_vec();
+        // Single-byte corruption at every position.
+        for pos in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[pos] ^= 1 << rng.below(8);
+            let _ = proto::decode(&bad);
+        }
+        // Random truncation of a corrupted buffer.
+        let mut bad = bytes.clone();
+        let pos = rng.below(bad.len());
+        bad[pos] = rng.next_u64() as u8;
+        bad.truncate(rng.below(bad.len() + 1));
+        let _ = proto::decode(&bad);
+    }
+    // Pure garbage of random lengths.
+    for _ in 0..200 {
+        let len = rng.below(256);
+        let junk: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = proto::decode(&junk);
+    }
+}
+
+#[test]
+fn oversized_and_malformed_are_typed_rejections() {
+    // Declared payload over the cap.
+    let mut bytes = Frame::MetricsRequest { id: 1 }.encode_vec();
+    bytes[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(proto::decode(&bytes), Err(ProtoError::Oversized(_))));
+
+    // A request whose tensor dims overflow the payload cap.
+    let image = Tensor::from_vec(vec![2], vec![1.0, 2.0]).unwrap();
+    let mut bytes = Frame::Request { id: 2, class: SloClass::Interactive, image }.encode_vec();
+    // dims[0] lives right after the header's 20 bytes + 4-byte rank.
+    bytes[24..28].copy_from_slice(&u32::MAX.to_le_bytes());
+    assert!(matches!(proto::decode(&bytes), Err(ProtoError::Malformed(_))));
+
+    // Unknown SLO class tag on a request.
+    let image = Tensor::from_vec(vec![1], vec![0.5]).unwrap();
+    let mut bytes = Frame::Request { id: 3, class: SloClass::Batch, image }.encode_vec();
+    bytes[6] = 9;
+    assert!(matches!(proto::decode(&bytes), Err(ProtoError::BadClass(9))));
+}
+
+// ----------------------------------------------------- loopback serving
+
+/// Manually released latch blocking the runner (same pattern as
+/// rust/tests/serve.rs), so saturation and drain are deterministic.
+struct Gate {
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait_open(&self) {
+        let mut open = self.open.lock().unwrap();
+        while !*open {
+            open = self.cv.wait(open).unwrap();
+        }
+    }
+}
+
+/// Deterministic host-side model: row logits are a fixed linear function
+/// of the row sum, so wire replies compare bitwise against direct runs.
+struct TestRunner {
+    batch: usize,
+    shape: Vec<usize>,
+    k: usize,
+    gate: Option<Arc<Gate>>,
+    entered: Arc<AtomicUsize>,
+}
+
+impl TestRunner {
+    fn new(batch: usize, shape: &[usize], k: usize) -> Self {
+        Self {
+            batch,
+            shape: shape.to_vec(),
+            k,
+            gate: None,
+            entered: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+}
+
+impl BatchRunner for TestRunner {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn example_shape(&self) -> Vec<usize> {
+        self.shape.clone()
+    }
+
+    fn run(&self, images: &Tensor, ledger: &mut MemoryLedger) -> Result<Prediction> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        if let Some(gate) = &self.gate {
+            gate.wait_open();
+        }
+        let id = ledger.alloc(64, Category::Transient);
+        let ex_len: usize = self.shape.iter().product();
+        let mut out = Vec::with_capacity(self.batch * self.k);
+        for row in images.data().chunks(ex_len) {
+            let s: f32 = row.iter().sum();
+            out.extend((0..self.k).map(|j| s * (j as f32 + 1.0) - j as f32));
+        }
+        ledger.free(id);
+        let logits = Tensor::from_vec(vec![self.batch, self.k], out).unwrap();
+        let classes = argmax_rows(&logits);
+        Ok(Prediction {
+            classes,
+            logits,
+            stats: PredictStats {
+                batch: self.batch,
+                seconds: 0.0,
+                examples_per_sec: 0.0,
+                peak_activation_bytes: 64,
+            },
+        })
+    }
+}
+
+fn example(shape: &[usize], seed: usize) -> Tensor {
+    let len: usize = shape.iter().product();
+    let data = (0..len).map(|j| ((seed * 31 + j) as f32) * 0.01 - 1.0).collect();
+    Tensor::from_vec(shape.to_vec(), data).unwrap()
+}
+
+fn spawn_net(runner: TestRunner, config: ServeConfig, net: NetConfig) -> NetServer {
+    let handle = ServeHandle::spawn(Arc::new(runner), config).unwrap();
+    NetServer::bind(handle, "127.0.0.1:0", net).unwrap()
+}
+
+/// Per-connection FIFO over the wire: pipelined requests come back in
+/// submission order with matching ids and bit-identical values, from
+/// several client threads at once.
+#[test]
+fn loopback_replies_are_order_correct_across_client_threads() {
+    let shape = [2, 3];
+    let (batch, k, clients, per_client) = (4usize, 3usize, 4usize, 12usize);
+    let reference = TestRunner::new(batch, &shape, k);
+    let config = ServeConfig::default().max_delay_ms(2).workers(2).queue_cap(256);
+    let server = spawn_net(TestRunner::new(batch, &shape, k), config, NetConfig::default());
+    let addr = server.local_addr().to_string();
+
+    thread::scope(|s| {
+        for c in 0..clients {
+            let addr = addr.clone();
+            let reference = &reference;
+            s.spawn(move || {
+                let examples: Vec<Tensor> =
+                    (0..per_client).map(|i| example(&shape, c * 1000 + i)).collect();
+                let mut client = NetClient::connect(&addr).unwrap();
+                let replies = client.pipeline(&examples, SloClass::Interactive).unwrap();
+                assert_eq!(replies.len(), per_client);
+                let mut ledger = MemoryLedger::new();
+                for (i, (ex, reply)) in examples.iter().zip(&replies).enumerate() {
+                    let ClientReply::Reply { class, logits, .. } = reply else {
+                        panic!("client {c} request {i}: unexpected shed");
+                    };
+                    // Expected: this example as row 0 of a padded batch.
+                    let ex_len: usize = shape.iter().product();
+                    let mut stacked = Tensor::zeros(&[batch, shape[0], shape[1]]);
+                    stacked.data_mut()[..ex_len].copy_from_slice(ex.data());
+                    let pred = reference.run(&stacked, &mut ledger).unwrap();
+                    assert_eq!(*class, pred.classes[0], "client {c} request {i}");
+                    assert_eq!(
+                        logits.data(),
+                        &pred.logits.data()[..k],
+                        "client {c} request {i}"
+                    );
+                }
+            });
+        }
+    });
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.net.replies, (clients * per_client) as u64);
+    assert_eq!(report.net.connections, clients as u64);
+    assert_eq!(report.net.shed, 0);
+    assert_eq!(report.serve.requests, (clients * per_client) as u64);
+}
+
+/// Saturating the admission queue over the wire answers typed
+/// `RetryAfter` (the request is NOT accepted), and retrying after the
+/// gate opens succeeds.
+#[test]
+fn shed_returns_retry_after_and_retry_succeeds() {
+    let shape = [2, 2];
+    let gate = Gate::new();
+    let mut runner = TestRunner::new(1, &shape, 3);
+    runner.gate = Some(gate.clone());
+    // batch=1, workers=1, queue_cap=1 with a gated runner: the pipeline
+    // holds at most 4 requests (1 executing + 1 pool-queued + 1
+    // batcher-held + 1 admitted), so 8 pipelined requests must shed.
+    let config = ServeConfig::default().max_delay_ms(600_000).workers(1).queue_cap(1);
+    let server = spawn_net(runner, config, NetConfig::default());
+    let addr = server.local_addr().to_string();
+    let handle = server.handle().clone();
+
+    let worker = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut client = NetClient::connect(&addr).unwrap();
+            // More than the pipeline can hold: the tail must shed. All
+            // responses still arrive in request order.
+            let examples: Vec<Tensor> = (0..8).map(|i| example(&shape, i)).collect();
+            let replies = client.pipeline(&examples, SloClass::Interactive).unwrap();
+            let shed: Vec<bool> =
+                replies.iter().map(|r| matches!(r, ClientReply::RetryAfter(_))).collect();
+            assert!(!shed[0], "the first request into an empty queue must be accepted");
+            assert!(shed.iter().any(|&s| s), "queue never shed: {shed:?}");
+            for (reply, &s) in replies.iter().zip(&shed) {
+                if s {
+                    let ClientReply::RetryAfter(hint) = reply else { unreachable!() };
+                    assert!(*hint > Duration::ZERO, "shed must carry a retry hint");
+                }
+            }
+            // Retry the shed requests now that the gate is open and the
+            // pipeline drains.
+            for (i, ex) in examples.iter().enumerate() {
+                if !shed[i] {
+                    continue;
+                }
+                let reply = client.request_with_retry(ex, SloClass::Interactive, 64).unwrap();
+                assert!(
+                    matches!(reply, ClientReply::Reply { .. }),
+                    "request {i} still shed after retries"
+                );
+            }
+        })
+    };
+    // The worker is blocked reading reply 1 (gated). Open the gate once
+    // the saturated tail has been shed, so every queued response flushes
+    // and the retries land in a draining pipeline.
+    let t0 = Instant::now();
+    while handle.stats().rejected < 1 {
+        assert!(t0.elapsed() < WAIT, "queue never saturated");
+        thread::sleep(Duration::from_millis(2));
+    }
+    gate.release();
+    worker.join().unwrap();
+
+    assert!(handle.stats().rejected >= 1, "serve layer never counted a shed");
+    let report = server.shutdown().unwrap();
+    assert!(report.net.shed >= 1, "reactor never counted a shed");
+}
+
+/// Graceful drain: shutdown while replies are still gated must flush
+/// every accepted request before closing — no accepted request is lost.
+#[test]
+fn graceful_drain_loses_no_accepted_request() {
+    let shape = [2, 2];
+    let gate = Gate::new();
+    let mut runner = TestRunner::new(2, &shape, 3);
+    runner.gate = Some(gate.clone());
+    let config = ServeConfig::default().max_delay_ms(600_000).workers(1).queue_cap(64);
+    let server = spawn_net(runner, config, NetConfig::default());
+    let addr = server.local_addr().to_string();
+    let handle = server.handle().clone();
+    let n = 5usize;
+
+    let client_thread = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            let mut client = NetClient::connect(&addr).unwrap();
+            let examples: Vec<Tensor> = (0..n).map(|i| example(&shape, i)).collect();
+            client.pipeline(&examples, SloClass::Interactive).unwrap()
+        })
+    };
+
+    // Wait until all n are admitted (the client blocks reading replies).
+    let t0 = Instant::now();
+    while handle.stats().submitted < n as u64 {
+        assert!(t0.elapsed() < WAIT, "requests never admitted");
+        thread::sleep(Duration::from_millis(2));
+    }
+
+    // Start the drain with every reply still gated, then release.
+    let shutdown_thread = thread::spawn(move || server.shutdown().unwrap());
+    thread::sleep(Duration::from_millis(50));
+    gate.release();
+
+    let report = shutdown_thread.join().unwrap();
+    let replies = client_thread.join().unwrap();
+    assert_eq!(replies.len(), n, "drain lost accepted requests");
+    assert!(
+        replies.iter().all(|r| matches!(r, ClientReply::Reply { .. })),
+        "an accepted request was not served: {replies:?}"
+    );
+    assert_eq!(report.net.replies, n as u64);
+    assert_eq!(report.serve.requests, n as u64);
+}
+
+/// The metrics endpoint answers on both transports, with consistent
+/// serve-layer counters.
+#[test]
+fn metrics_scrape_over_binary_frame_and_http() {
+    let shape = [2, 2];
+    let config = ServeConfig::default().max_delay_ms(2).workers(1).queue_cap(64);
+    let server = spawn_net(TestRunner::new(2, &shape, 3), config, NetConfig::default());
+    let addr = server.local_addr().to_string();
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    for i in 0..4 {
+        let reply = client.request(&example(&shape, i), SloClass::Batch).unwrap();
+        assert!(matches!(reply, ClientReply::Reply { .. }));
+    }
+    let text = client.metrics().unwrap();
+    assert_eq!(scrape_value(&text, "submitted_total"), Some(4), "{text}");
+    assert_eq!(scrape_value(&text, "submitted_batch_total"), Some(4), "{text}");
+    assert_eq!(scrape_value(&text, "completed_total"), Some(4), "{text}");
+    assert_eq!(scrape_value(&text, "net_replies_total"), Some(4), "{text}");
+    assert!(scrape_value(&text, "net_latency_p50_us").is_some(), "{text}");
+
+    // Same listener, HTTP/1.0 text path.
+    let mut http = TcpStream::connect(&addr).unwrap();
+    http.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+    let mut response = String::new();
+    http.read_to_string(&mut response).unwrap();
+    assert!(response.starts_with("HTTP/1.0 200 OK\r\n"), "{response}");
+    let body = response.split("\r\n\r\n").nth(1).expect("http body");
+    assert_eq!(scrape_value(body, "submitted_total"), Some(4), "{body}");
+    assert_eq!(scrape_value(body, "net_metrics_requests_total"), Some(1), "{body}");
+
+    server.shutdown().unwrap();
+}
+
+/// Garbage on the socket gets a typed error frame and a close — the
+/// server neither panics nor hangs, and keeps serving other connections.
+#[test]
+fn garbage_connection_is_rejected_and_server_survives() {
+    let shape = [2, 2];
+    let config = ServeConfig::default().max_delay_ms(2).workers(1).queue_cap(64);
+    let server = spawn_net(TestRunner::new(2, &shape, 3), config, NetConfig::default());
+    let addr = server.local_addr().to_string();
+
+    let mut bad = TcpStream::connect(&addr).unwrap();
+    bad.write_all(b"definitely not the anode protocol\r\n").unwrap();
+    let mut tail = Vec::new();
+    // The server answers with an Error frame, then closes (EOF).
+    bad.read_to_end(&mut tail).unwrap();
+    let (frame, _) = proto::decode(&tail).expect("error frame").expect("complete");
+    assert!(matches!(frame, Frame::Error { id: 0, .. }), "{frame:?}");
+
+    // A well-behaved client still gets served afterwards.
+    let mut client = NetClient::connect(&addr).unwrap();
+    let reply = client.request(&example(&shape, 1), SloClass::Interactive).unwrap();
+    assert!(matches!(reply, ClientReply::Reply { .. }));
+    let report = server.shutdown().unwrap();
+    assert!(report.net.protocol_errors >= 1);
+}
+
+// ------------------------------------------------- sim-device loopback
+
+fn sim_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("anode_net_{}_{tag}", std::process::id()));
+    write_artifacts(&dir, &SimSpec::default()).unwrap();
+    dir
+}
+
+/// End-to-end on the simulated engine, two phases per device count:
+///
+/// 1. **Bit-identity** — one pipelined client submits every example in
+///    order with the deadline far away, so the serve batcher reassembles
+///    exactly the original full batches (the sim model digests the whole
+///    batch tensor — the same caveat `serve_grid_matches_serial_predict`
+///    documents) and every wire reply is bit-identical to
+///    `Session::predict_batches`.
+/// 2. **Concurrency** — three client threads with interleaved shares,
+///    both SLO classes and the adaptive window live; batch composition
+///    is nondeterministic here, so the assertions are structural:
+///    nothing sheds, every reply is well-formed, and the per-class
+///    admission counters and scraped metrics add up.
+#[test]
+fn loopback_serving_matches_predict_batches_on_sim_devices() {
+    let dir = sim_dir("e2e");
+    for devices in [1usize, 2] {
+        let engine =
+            Engine::builder().artifacts(&dir).devices(devices).simulate(true).build().unwrap();
+        let cfg = engine.config().clone();
+        let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+        let spec = SimSpec::default();
+        let batches: Vec<Tensor> = (0..2).map(|b| spec.image_batch(b)).collect();
+        let expected = session.predict_batches_with_workers(&batches, 1).unwrap();
+        let examples: Vec<Tensor> =
+            batches.iter().flat_map(|b| split_examples(b).unwrap()).collect();
+
+        // Flatten the expected per-example answers in submission order.
+        let mut expected_rows: Vec<(usize, Vec<f32>)> = Vec::new();
+        for pred in &expected.predictions {
+            let k = *pred.logits.shape().last().unwrap();
+            for r in 0..cfg.batch {
+                expected_rows
+                    .push((pred.classes[r], pred.logits.data()[r * k..(r + 1) * k].to_vec()));
+            }
+        }
+
+        // --- phase 1: single pipelined client, exact identity ----------
+        let config = ServeConfig::default().max_delay_ms(600_000).workers(2).queue_cap(512);
+        let net = NetConfig::default().inflight_window(examples.len().max(1));
+        let server = session.serve_net(config, net, "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let mut client = NetClient::connect(&addr).unwrap();
+        let replies = client.pipeline(&examples, SloClass::Interactive).unwrap();
+        for (i, (reply, (want_class, want_logits))) in
+            replies.iter().zip(&expected_rows).enumerate()
+        {
+            let ClientReply::Reply { class, logits, .. } = reply else {
+                panic!("request {i} shed on devices={devices}");
+            };
+            assert_eq!(class, want_class, "request {i} devices={devices}");
+            assert_eq!(logits.data(), want_logits.as_slice(), "request {i} devices={devices}");
+        }
+        drop(client);
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.serve.requests, examples.len() as u64, "devices={devices}");
+        assert_eq!(report.net.replies, examples.len() as u64, "devices={devices}");
+        assert_eq!(report.serve.devices, devices, "devices={devices}");
+        assert_eq!(report.serve.full_flushes, batches.len() as u64, "devices={devices}");
+
+        // --- phase 2: concurrent clients, adaptive window, mixed SLO ---
+        let config = ServeConfig::default()
+            .max_delay_ms(5)
+            .batch_delay_ms(20)
+            .adaptive_delay_ms(1, 20)
+            .workers(2)
+            .queue_cap(512);
+        let server = session.serve_net(config, NetConfig::default(), "127.0.0.1:0").unwrap();
+        let addr = server.local_addr().to_string();
+        let clients = 3usize;
+        let num_classes = cfg.num_classes;
+
+        thread::scope(|s| {
+            for c in 0..clients {
+                let addr = addr.clone();
+                let examples = &examples;
+                s.spawn(move || {
+                    let mut client = NetClient::connect(&addr).unwrap();
+                    // Interleaved shares; client 1 runs batch-class so
+                    // both deadline windows serve live traffic.
+                    let mine: Vec<usize> = (c..examples.len()).step_by(clients).collect();
+                    let class = if c == 1 { SloClass::Batch } else { SloClass::Interactive };
+                    let share: Vec<Tensor> = mine.iter().map(|&i| examples[i].clone()).collect();
+                    let replies = client.pipeline(&share, class).unwrap();
+                    for (&i, reply) in mine.iter().zip(&replies) {
+                        let ClientReply::Reply { class, logits, .. } = reply else {
+                            panic!("request {i} shed on devices={devices}");
+                        };
+                        assert!(*class < num_classes, "request {i} devices={devices}");
+                        assert_eq!(logits.data().len(), num_classes, "request {i}");
+                        assert!(logits.data().iter().all(|v| v.is_finite()), "request {i}");
+                    }
+                });
+            }
+        });
+
+        let text = NetClient::connect(&addr).and_then(|mut c| c.metrics()).unwrap();
+        let expected_batch = (1..examples.len()).step_by(clients).count() as u64;
+        assert_eq!(scrape_value(&text, "submitted_total"), Some(examples.len() as u64));
+        assert_eq!(scrape_value(&text, "submitted_batch_total"), Some(expected_batch));
+        assert_eq!(scrape_value(&text, "adaptive_delay"), Some(1), "{text}");
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.serve.requests, examples.len() as u64, "devices={devices}");
+        assert_eq!(report.net.replies, examples.len() as u64, "devices={devices}");
+        assert_eq!(report.net.shed, 0, "devices={devices}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

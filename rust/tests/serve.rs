@@ -355,7 +355,7 @@ fn hot_swap_changes_subsequent_replies_without_drain() {
     // Roll out a new head between batches: no drain, no restart.
     let w = Tensor::full(&[c, k], 0.5);
     let bias = Tensor::full(&[k], 0.25);
-    handle.swap_params(vec![w.clone(), bias.clone()]).unwrap();
+    handle.swap_params(Arc::new(vec![w.clone(), bias.clone()])).unwrap();
     let after =
         handle.submit(ex.clone()).unwrap().wait_timeout(WAIT).unwrap().expect("post-swap reply");
 
@@ -376,17 +376,19 @@ fn hot_swap_validates_shapes_and_unsupported_runners_reject() {
     let runner = Arc::new(HostTailRunner::new(2, 2, 3, 4));
     let handle = ServeHandle::spawn(runner, ServeConfig::default()).unwrap();
     // Wrong arity: the head is exactly [w (c, k), bias (k)].
-    assert!(handle.swap_params(vec![Tensor::zeros(&[3, 4])]).is_err());
+    assert!(handle.swap_params(Arc::new(vec![Tensor::zeros(&[3, 4])])).is_err());
     // Wrong shapes.
-    assert!(handle.swap_params(vec![Tensor::zeros(&[3, 5]), Tensor::zeros(&[5])]).is_err());
+    let bad = Arc::new(vec![Tensor::zeros(&[3, 5]), Tensor::zeros(&[5])]);
+    assert!(handle.swap_params(bad).is_err());
     // Matching count + shapes succeeds.
-    assert!(handle.swap_params(vec![Tensor::zeros(&[3, 4]), Tensor::zeros(&[4])]).is_ok());
+    let good = Arc::new(vec![Tensor::zeros(&[3, 4]), Tensor::zeros(&[4])]);
+    assert!(handle.swap_params(good).is_ok());
     handle.shutdown().unwrap();
 
     // TestRunner keeps the default implementation: hot-swap unsupported.
     let runner = Arc::new(TestRunner::new(2, &[2, 2], 3));
     let handle = ServeHandle::spawn(runner, ServeConfig::default()).unwrap();
-    let err = handle.swap_params(Vec::new()).unwrap_err().to_string();
+    let err = handle.swap_params(Arc::new(Vec::new())).unwrap_err().to_string();
     assert!(err.contains("hot-swap"), "{err}");
     handle.shutdown().unwrap();
 }
