@@ -1,0 +1,164 @@
+//! `compile_throughput` — the compiled backend (`anode::compile`) vs the
+//! sim interpreter, emitted to `BENCH_compile.json`. Runs on every build
+//! (simulated artifacts, no accelerator needed):
+//!
+//! 1. **Per-call dispatch** — the same module called through the sim
+//!    interpreter (per-call spec walk + name hash + shape checks), the
+//!    compiled plan (validated path), and the compiled trusted path
+//!    (arity check only). The gap is exactly the per-call interpretation
+//!    the compile pipeline moves to open time.
+//! 2. **Fused inference** — the whole forward chain as sequential
+//!    registry calls vs one [`InferProgram`] over the liveness-planned
+//!    arena. Alongside latency, the shared [`CompileStats`] counters
+//!    prove the steady state performs **zero arena allocations**.
+//! 3. **Compile cost** — one full manifest compile (IR → passes →
+//!    plans), the price paid once at open.
+//!
+//! `cargo bench --bench compile_throughput`; `ANODE_BENCH_QUICK=1`
+//! shrinks iteration counts for the CI bench-smoke job while still
+//! writing the full `BENCH_compile.json` artifact.
+
+use anode::compile::{CompiledSet, InferCall, InferProgram};
+use anode::runtime::sim::{write_artifacts, SimSpec};
+use anode::runtime::{ArtifactRegistry, Backend};
+use anode::tensor::Tensor;
+use anode::util::bench::{bench, black_box, quick_mode, BenchStats};
+
+fn main() {
+    println!("=== compile_throughput — compiled plans vs the sim interpreter ===\n");
+    let quick = quick_mode();
+    let iters = if quick { 300 } else { 3000 };
+    let warmup = iters / 10;
+
+    let dir = std::env::temp_dir().join(format!("anode_bench_compile_{}", std::process::id()));
+    if let Err(e) = write_artifacts(&dir, &SimSpec::default()) {
+        eprintln!("could not write sim artifacts: {e} — skipping compile_throughput");
+        return;
+    }
+    let sim = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Sim).unwrap();
+    let compiled = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled).unwrap();
+
+    // --- 1. per-call dispatch on one representative hot module ---------
+    let module = "block_resnet_s0_euler_fwd";
+    let shapes: Vec<Vec<usize>> =
+        sim.module_spec(module).unwrap().inputs.iter().map(|t| t.shape.clone()).collect();
+    let inputs: Vec<Tensor> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let n: usize = s.iter().product::<usize>().max(1);
+            let data = (0..n).map(|j| ((i * 97 + j) % 89) as f32 * 0.5 - 22.0).collect();
+            Tensor::from_vec(s.clone(), data).unwrap()
+        })
+        .collect();
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+
+    let sim_call = bench(&format!("sim::call({module})"), warmup, iters, || {
+        black_box(sim.call(module, &refs).unwrap());
+    });
+    let compiled_call = bench(&format!("compiled::call({module})"), warmup, iters, || {
+        black_box(compiled.call(module, &refs).unwrap());
+    });
+    let trusted_call = bench(&format!("compiled::call_trusted({module})"), warmup, iters, || {
+        black_box(compiled.call_trusted(module, &refs).unwrap());
+    });
+    println!("{}", sim_call.report());
+    println!("{}", compiled_call.report());
+    println!("{}", trusted_call.report());
+
+    // --- 2. fused inference program vs sequential registry calls -------
+    let layout: Vec<Vec<usize>> =
+        compiled.param_layout("resnet10").unwrap().iter().map(|p| p.shape.clone()).collect();
+    let chain = [
+        InferCall { module: "stem_fwd".into(), params: vec![0, 1] },
+        InferCall { module: "block_resnet_s0_euler_fwd".into(), params: vec![2, 3] },
+        InferCall { module: "trans0_fwd".into(), params: vec![4, 5] },
+        InferCall { module: "block_resnet_s1_euler_fwd".into(), params: vec![6, 7] },
+    ];
+    let prog = InferProgram::build(&compiled, &chain, &layout).unwrap();
+    let params = compiled.load_params("resnet10").unwrap();
+    let x = SimSpec::default().image_batch(1);
+
+    let forward = |reg: &ArtifactRegistry| {
+        let mut z = reg.call("stem_fwd", &[&x, &params[0], &params[1]]).unwrap().remove(0);
+        for (module, w, b) in [
+            ("block_resnet_s0_euler_fwd", 2usize, 3usize),
+            ("trans0_fwd", 4, 5),
+            ("block_resnet_s1_euler_fwd", 6, 7),
+        ] {
+            z = reg.call(module, &[&z, &params[w], &params[b]]).unwrap().remove(0);
+        }
+        z
+    };
+    let seq_sim = bench("forward: sequential sim calls", warmup, iters, || {
+        black_box(forward(&sim));
+    });
+    let seq_compiled = bench("forward: sequential compiled calls", warmup, iters, || {
+        black_box(forward(&compiled));
+    });
+    let stats_before_fused = compiled.compile_stats().unwrap();
+    let fused = bench("forward: fused InferProgram::run", warmup, iters, || {
+        black_box(prog.run(&x, &params).unwrap());
+    });
+    println!("{}", seq_sim.report());
+    println!("{}", seq_compiled.report());
+    println!("{}", fused.report());
+
+    // The warmup allocates once per pooled arena; the timed steady state
+    // must not allocate at all.
+    let stats = compiled.compile_stats().unwrap();
+    let steady_allocs = stats.arena_allocs - stats_before_fused.arena_allocs;
+    let runs = (warmup + iters) as u64;
+    println!(
+        "\narena: {} bytes, {} alloc(s) over {} runs, {} pool reuses (steady-state allocs: {})",
+        stats.arena_bytes,
+        stats.arena_allocs,
+        runs,
+        stats.arena_reuses,
+        steady_allocs.saturating_sub(1)
+    );
+    assert_eq!(stats.arena_allocs + stats.arena_reuses, runs, "every run hits the arena pool");
+    assert_eq!(steady_allocs, 1, "exactly one warmup allocation, zero steady-state");
+
+    // --- 3. one full manifest compile (the open-time cost) -------------
+    let specs: Vec<_> =
+        sim.module_names().iter().map(|&n| sim.module_spec(n).unwrap().clone()).collect();
+    let compile_iters = if quick { 20 } else { 200 };
+    let full_compile = bench("compile: full manifest", compile_iters / 10, compile_iters, || {
+        black_box(CompiledSet::compile(specs.iter()).unwrap());
+    });
+    println!("{}", full_compile.report());
+
+    let us = |s: &BenchStats| s.median.as_secs_f64() * 1e6;
+    let json = format!(
+        "{{\n  \"bench\": \"compile_throughput\",\n  \"mode\": \"sim\",\n  \
+         \"iters\": {iters},\n  \
+         \"sim_call_median_us\": {:.4},\n  \"compiled_call_median_us\": {:.4},\n  \
+         \"trusted_call_median_us\": {:.4},\n  \
+         \"forward_sim_median_us\": {:.4},\n  \"forward_compiled_median_us\": {:.4},\n  \
+         \"forward_fused_median_us\": {:.4},\n  \
+         \"full_compile_median_us\": {:.4},\n  \
+         \"plans_cached\": {},\n  \"fused_ops\": {},\n  \"folded_consts\": {},\n  \
+         \"arena_bytes\": {},\n  \"arena_allocs\": {},\n  \"arena_reuses\": {},\n  \
+         \"steady_state_allocs\": {}\n}}\n",
+        us(&sim_call),
+        us(&compiled_call),
+        us(&trusted_call),
+        us(&seq_sim),
+        us(&seq_compiled),
+        us(&fused),
+        us(&full_compile),
+        stats.plans_cached,
+        stats.fused_ops,
+        stats.folded_consts,
+        stats.arena_bytes,
+        stats.arena_allocs,
+        stats.arena_reuses,
+        steady_allocs.saturating_sub(1),
+    );
+    match std::fs::write("BENCH_compile.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_compile.json"),
+        Err(e) => eprintln!("could not write BENCH_compile.json: {e}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

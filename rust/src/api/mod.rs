@@ -69,12 +69,12 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use crate::models::{ModelConfig, ParamIndex};
-use crate::runtime::{sim_devices_env, ArtifactRegistry, DeviceSet};
+use crate::runtime::{backend_env, sim_devices_env, ArtifactRegistry, DeviceSet};
 
 pub use crate::data::make_eval_batches;
 pub use crate::models::{Arch, GradMethod, Solver};
 pub use crate::optim::LrSchedule;
-pub use crate::runtime::{Result, RuntimeError};
+pub use crate::runtime::{Backend, Result, RuntimeError};
 pub use modules::{ModuleHandle, ModuleSet, StageModules};
 pub use session::{
     argmax_rows, head_logits, BatchPredictReport, EvalStats, FitOptions, FitReport,
@@ -101,6 +101,7 @@ pub struct EngineBuilder {
     strategies: StrategyRegistry,
     devices: Option<usize>,
     simulate: bool,
+    backend: Option<Backend>,
 }
 
 impl Default for EngineBuilder {
@@ -114,6 +115,7 @@ impl Default for EngineBuilder {
             strategies: StrategyRegistry::builtin(),
             devices: None,
             simulate: false,
+            backend: None,
         }
     }
 }
@@ -186,6 +188,18 @@ impl EngineBuilder {
         self
     }
 
+    /// Select the execution backend explicitly. Resolution order when
+    /// building without a shared registry: this call, else the
+    /// `ANODE_BACKEND` env var (`compiled` | `sim` | `xla` — how CI flips
+    /// the whole suite onto the compiled backend), else
+    /// [`EngineBuilder::simulate`] (a legacy alias for
+    /// [`Backend::Sim`]), else PJRT. A shared [`EngineBuilder::registry`]
+    /// keeps its own backend regardless.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
     /// Open (or adopt) the registry, validate the manifest against the
     /// requested configuration, and resolve every module name into typed
     /// handles. All validation is eager: a broken or incomplete artifact
@@ -203,11 +217,12 @@ impl EngineBuilder {
             }
             None => {
                 let count = self.devices.or_else(sim_devices_env).unwrap_or(1);
-                if self.simulate {
-                    DeviceSet::open_simulated(&self.artifacts, count)?
+                let backend = self.backend.or_else(backend_env).unwrap_or(if self.simulate {
+                    Backend::Sim
                 } else {
-                    DeviceSet::open(&self.artifacts, count)?
-                }
+                    Backend::Xla
+                });
+                DeviceSet::open_with_backend(&self.artifacts, count, backend)?
             }
         };
         let reg = devices.primary();

@@ -1,0 +1,240 @@
+//! Typed IR over one manifest module.
+//!
+//! [`build_module_ir`] decomposes the deterministic value model of
+//! [`crate::runtime::sim`] into primitive digest operations over a
+//! dataflow graph, validating the [`ModuleSpec`] **once** — dtype, output
+//! materializability, element counts — so the emitted plan never checks a
+//! shape again. The op set is tiny but it is a real IR: values have
+//! identities, effects have roots, and the passes
+//! ([`super::passes`]) do genuine dataflow work over it (constant
+//! folding of manifest-known scalars, dead-code elimination by
+//! reachability, fusion of op chains into single fused kernels with
+//! primitive-count accounting).
+
+use crate::runtime::ModuleSpec;
+
+use super::{CompileError, Result};
+
+/// Identity of the value an [`Op`] defines. Ids are unique within a
+/// [`ModuleIr`] but need not stay dense — passes remove and merge ops.
+pub type ValueId = usize;
+
+/// One step of a fused absorb chain: either mix a manifest-known scalar
+/// (an input's element count) or absorb a runtime input's data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AbsorbStep {
+    /// Mix a compile-time-known length into the digest.
+    Len(u64),
+    /// Mix every element of runtime input `i` into the digest.
+    Data(usize),
+}
+
+/// Primitive (and fused) digest operations.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum OpKind {
+    /// A digest constant (the product of constant folding).
+    Const(u64),
+    /// FNV digest of the module name — manifest-known, hence foldable.
+    NameDigest,
+    /// Mix a manifest-known scalar into `src` — foldable when `src` is
+    /// already constant.
+    MixLen { src: ValueId, len: u64 },
+    /// Absorb runtime input `input`'s elements into `src`.
+    AbsorbData { src: ValueId, input: usize },
+    /// Fusion product: a whole absorb chain as one kernel. `primitives`
+    /// records how many primitive ops it covers (op-count accounting).
+    FusedAbsorb { src: ValueId, steps: Vec<AbsorbStep>, primitives: usize },
+    /// Materialize output `output` from digest `src`.
+    Fill { src: ValueId, output: usize },
+    /// Fusion product: all output fills off one digest as one kernel.
+    FusedFill { src: ValueId, outputs: Vec<usize>, primitives: usize },
+}
+
+impl OpKind {
+    /// The value this op reads, if any.
+    pub fn src(&self) -> Option<ValueId> {
+        match self {
+            OpKind::Const(_) | OpKind::NameDigest => None,
+            OpKind::MixLen { src, .. }
+            | OpKind::AbsorbData { src, .. }
+            | OpKind::FusedAbsorb { src, .. }
+            | OpKind::Fill { src, .. }
+            | OpKind::FusedFill { src, .. } => Some(*src),
+        }
+    }
+
+    /// How many primitive operations this op represents (fused ops carry
+    /// their coverage; primitives count as one).
+    pub fn primitive_count(&self) -> usize {
+        match self {
+            OpKind::FusedAbsorb { primitives, .. } | OpKind::FusedFill { primitives, .. } => {
+                *primitives
+            }
+            _ => 1,
+        }
+    }
+
+    /// Is this op an observable effect (an output materialization)?
+    pub fn is_effect(&self) -> bool {
+        matches!(self, OpKind::Fill { .. } | OpKind::FusedFill { .. })
+    }
+}
+
+/// One IR operation: the value it defines plus what it computes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Op {
+    pub id: ValueId,
+    pub kind: OpKind,
+}
+
+/// The IR of one module: validated shapes plus the op list in program
+/// order. Effects ([`OpKind::is_effect`]) are the DCE roots.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModuleIr {
+    pub name: String,
+    /// Validated input shapes (element counts are the foldable scalars).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Validated output shapes.
+    pub output_shapes: Vec<Vec<usize>>,
+    pub ops: Vec<Op>,
+}
+
+impl ModuleIr {
+    /// Total primitive operations represented (invariant under fusion:
+    /// the fusion pass must preserve this number — asserted by tests).
+    pub fn primitive_count(&self) -> usize {
+        self.ops.iter().map(|op| op.kind.primitive_count()).sum()
+    }
+
+    /// Ops currently in the program (shrinks under DCE and fusion).
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// A fresh value id (max existing + 1) for passes that insert ops.
+    pub fn fresh_id(&self) -> ValueId {
+        self.ops.iter().map(|op| op.id + 1).max().unwrap_or(0)
+    }
+}
+
+/// Element count of a shape under the value model (empty shape = scalar
+/// = 1 element, matching `sim_outputs`).
+pub(crate) fn element_count(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(1)
+}
+
+/// Build the typed IR for one module, performing all validation the hot
+/// path will skip: dtype support, output materializability, non-empty
+/// output set. Inputs with zero elements are legal (they absorb only
+/// their length), zero-sized *outputs* are not — they cannot be
+/// materialized as tensors.
+pub fn build_module_ir(spec: &ModuleSpec) -> Result<ModuleIr> {
+    if spec.outputs.is_empty() {
+        return Err(CompileError::NoOutputs { module: spec.name.clone() });
+    }
+    for t in spec.inputs.iter().chain(spec.outputs.iter()) {
+        if t.dtype != "f32" {
+            return Err(CompileError::UnsupportedDtype {
+                module: spec.name.clone(),
+                tensor: t.name.clone(),
+                dtype: t.dtype.clone(),
+            });
+        }
+    }
+    for t in &spec.outputs {
+        if !t.shape.is_empty() && t.shape.iter().any(|&d| d == 0) {
+            return Err(CompileError::ZeroDimOutput {
+                module: spec.name.clone(),
+                tensor: t.name.clone(),
+                shape: t.shape.clone(),
+            });
+        }
+    }
+
+    let mut ops = Vec::with_capacity(1 + 2 * spec.inputs.len() + spec.outputs.len());
+    let mut next = 0usize;
+    let mut push = |ops: &mut Vec<Op>, kind: OpKind| -> ValueId {
+        let id = next;
+        next += 1;
+        ops.push(Op { id, kind });
+        id
+    };
+
+    let mut digest = push(&mut ops, OpKind::NameDigest);
+    for (i, t) in spec.inputs.iter().enumerate() {
+        // `sim_outputs` mixes the *actual* data length, which equals the
+        // manifest element count for every validated call — the scalar is
+        // therefore manifest-known and becomes a fold/fuse candidate.
+        let len = t.shape.iter().product::<usize>() as u64;
+        digest = push(&mut ops, OpKind::MixLen { src: digest, len });
+        digest = push(&mut ops, OpKind::AbsorbData { src: digest, input: i });
+    }
+    for o in 0..spec.outputs.len() {
+        push(&mut ops, OpKind::Fill { src: digest, output: o });
+    }
+
+    Ok(ModuleIr {
+        name: spec.name.clone(),
+        input_shapes: spec.inputs.iter().map(|t| t.shape.clone()).collect(),
+        output_shapes: spec.outputs.iter().map(|t| t.shape.clone()).collect(),
+        ops,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::TensorSpec;
+
+    fn tensor(name: &str, shape: &[usize], dtype: &str) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: dtype.into() }
+    }
+
+    fn spec(name: &str, ins: &[&[usize]], outs: &[&[usize]]) -> ModuleSpec {
+        ModuleSpec {
+            name: name.into(),
+            file: format!("{name}.hlo.txt"),
+            inputs: ins
+                .iter()
+                .enumerate()
+                .map(|(i, s)| tensor(&format!("i{i}"), s, "f32"))
+                .collect(),
+            outputs: outs
+                .iter()
+                .enumerate()
+                .map(|(o, s)| tensor(&format!("o{o}"), s, "f32"))
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn ir_shape_matches_value_model() {
+        let ir = build_module_ir(&spec("m", &[&[2, 3], &[3]], &[&[2, 3], &[1]])).unwrap();
+        // NameDigest + 2×(MixLen + AbsorbData) + 2×Fill.
+        assert_eq!(ir.op_count(), 7);
+        assert_eq!(ir.primitive_count(), 7);
+        assert_eq!(ir.ops[1].kind, OpKind::MixLen { src: 0, len: 6 });
+        assert!(ir.ops[5].kind.is_effect() && ir.ops[6].kind.is_effect());
+    }
+
+    #[test]
+    fn ir_rejects_bad_manifests_with_typed_errors() {
+        let e = build_module_ir(&spec("empty", &[&[2]], &[])).unwrap_err();
+        assert_eq!(e, CompileError::NoOutputs { module: "empty".into() });
+
+        let mut bad_dtype = spec("dt", &[&[2]], &[&[2]]);
+        bad_dtype.inputs[0].dtype = "i32".into();
+        let e = build_module_ir(&bad_dtype).unwrap_err();
+        assert!(matches!(e, CompileError::UnsupportedDtype { ref tensor, .. } if tensor == "i0"));
+
+        let e = build_module_ir(&spec("z", &[], &[&[2, 0]])).unwrap_err();
+        assert!(matches!(e, CompileError::ZeroDimOutput { ref shape, .. } if shape == &[2, 0]));
+    }
+
+    #[test]
+    fn zero_element_inputs_are_legal() {
+        let ir = build_module_ir(&spec("zin", &[&[0]], &[&[1]])).unwrap();
+        assert_eq!(ir.ops[1].kind, OpKind::MixLen { src: 0, len: 0 });
+        assert_eq!(element_count(&[]), 1, "scalar output occupies one element");
+    }
+}

@@ -1,0 +1,236 @@
+//! # `anode::compile` — manifest → typed IR → fused native kernels
+//!
+//! The third execution backend ([`crate::runtime::Backend::Compiled`]):
+//! instead of interpreting the manifest per call (the sim path) or
+//! round-tripping through PJRT, the whole manifest graph is lowered
+//! **ahead of time** through a typed IR into compact kernel plans, and
+//! the hot path dispatches those plans with zero per-call shape checks
+//! and zero steady-state allocations beyond the returned tensors.
+//!
+//! The pipeline (rust/DESIGN.md §6f):
+//!
+//! ```text
+//! ModuleSpec ──ir::build_module_ir──▶ ModuleIr      (shape inference +
+//!                                        │            validation, once)
+//!             passes: const-fold ▶ DCE ▶ fusion      (optimization)
+//!                                        │
+//!             plan::lower_module ────▶ ModulePlan    (flat fused-kernel
+//!                                                     program, folded seed)
+//! ```
+//!
+//! and, one level up, [`plan::InferProgram`] fuses the *model-level*
+//! inference chain (stem → per-time-step block applications →
+//! transitions) into a single flat instruction list whose intermediate
+//! activations live in a preallocated buffer arena laid out by liveness
+//! analysis — the ANODE-specific win: the discretize-then-optimize
+//! structure makes the whole forward pass a statically known sequence,
+//! so it compiles to one program instead of `O(stages × blocks)`
+//! dispatches with per-step tensor allocations.
+//!
+//! **Value model.** The offline artifact set carries no executable code,
+//! so what the kernels compute is the deterministic value model of
+//! [`crate::runtime::sim`] — and they share its primitives
+//! (`mix`/`centered`), which makes *compiled ≡ sim, bitwise* a
+//! structural property. The IR/plan seam is execution-agnostic: a real
+//! native or JIT (e.g. Cranelift) kernel set slots in behind
+//! [`plan::ModulePlan`] without touching the passes (ROADMAP follow-up).
+//!
+//! Everything here is std-only pure Rust: no new dependencies.
+
+pub mod ir;
+pub mod passes;
+pub mod plan;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::runtime::ModuleSpec;
+
+pub use ir::{build_module_ir, AbsorbStep, ModuleIr, Op, OpKind, ValueId};
+pub use passes::{run_default_passes, PassStats};
+pub use plan::{compile_module, InferCall, InferProgram, ModulePlan};
+
+/// Compile-time result type.
+pub type Result<T> = std::result::Result<T, CompileError>;
+
+/// Typed compile-time errors: everything the pipeline rejects is named
+/// with the module/tensor that caused it, so a corrupt manifest fails at
+/// **compile time** with a diagnosable error — never a panic, never a
+/// mid-training shape surprise.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CompileError {
+    /// A module declares no outputs — the value model cannot seed any.
+    NoOutputs { module: String },
+    /// Only f32 tensors are lowerable (the manifest's only dtype today).
+    UnsupportedDtype { module: String, tensor: String, dtype: String },
+    /// An output tensor with a zero dimension cannot be materialized.
+    ZeroDimOutput { module: String, tensor: String, shape: Vec<usize> },
+    /// Cross-module shape inference failed: a consumer's declared input
+    /// shape disagrees with what the producer (or parameter layout)
+    /// actually supplies.
+    ShapeMismatch {
+        module: String,
+        input: String,
+        expected: Vec<usize>,
+        found: Vec<usize>,
+    },
+    /// A chain step references a module with the wrong input arity.
+    ArityMismatch { module: String, expected: usize, found: usize },
+    /// A chain step references a module the manifest does not define.
+    MissingModule { module: String },
+    /// The IR has a shape the lowering cannot express (e.g. a digest
+    /// graph that is not a single chain) — surfaced, not panicked on.
+    Unsupported { module: String, reason: String },
+}
+
+impl std::fmt::Display for CompileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CompileError::NoOutputs { module } => {
+                write!(f, "{module}: declares no outputs")
+            }
+            CompileError::UnsupportedDtype { module, tensor, dtype } => {
+                write!(f, "{module}: tensor {tensor} has unsupported dtype {dtype:?}")
+            }
+            CompileError::ZeroDimOutput { module, tensor, shape } => {
+                write!(f, "{module}: output {tensor} has zero-sized shape {shape:?}")
+            }
+            CompileError::ShapeMismatch { module, input, expected, found } => {
+                write!(
+                    f,
+                    "{module}: input {input} expects shape {expected:?} but the \
+                     producer supplies {found:?}"
+                )
+            }
+            CompileError::ArityMismatch { module, expected, found } => {
+                write!(f, "{module}: expects {expected} inputs, chain supplies {found}")
+            }
+            CompileError::MissingModule { module } => {
+                write!(f, "{module}: not in the manifest")
+            }
+            CompileError::Unsupported { module, reason } => {
+                write!(f, "{module}: unsupported IR shape: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CompileError {}
+
+impl From<CompileError> for crate::runtime::RuntimeError {
+    fn from(e: CompileError) -> Self {
+        crate::runtime::RuntimeError::Io(format!("compile: {e}"))
+    }
+}
+
+/// Live counters of one compiled backend instance (per registry),
+/// shared by `Arc` with every [`InferProgram`] built over it, so plan
+/// and arena activity aggregate in one place and export through the
+/// `net::metrics` endpoint.
+#[derive(Debug, Default)]
+pub struct CompileStats {
+    /// Module plans compiled and cached at open time.
+    pub plans_cached: AtomicU64,
+    /// Fused kernels across all cached plans (each covers a chain of
+    /// primitive IR ops — see [`PassStats`]).
+    pub fused_ops: AtomicU64,
+    /// IR ops constant-folded away at compile time.
+    pub folded_consts: AtomicU64,
+    /// Bytes of liveness-planned arena backing fused infer programs.
+    pub arena_bytes: AtomicU64,
+    /// Arena buffers allocated (warmup only, in steady state).
+    pub arena_allocs: AtomicU64,
+    /// Arena buffers reused from the pool (the steady-state path).
+    pub arena_reuses: AtomicU64,
+}
+
+impl CompileStats {
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> CompileStatsSnapshot {
+        CompileStatsSnapshot {
+            plans_cached: self.plans_cached.load(Ordering::Relaxed),
+            fused_ops: self.fused_ops.load(Ordering::Relaxed),
+            folded_consts: self.folded_consts.load(Ordering::Relaxed),
+            arena_bytes: self.arena_bytes.load(Ordering::Relaxed),
+            arena_allocs: self.arena_allocs.load(Ordering::Relaxed),
+            arena_reuses: self.arena_reuses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-number snapshot of [`CompileStats`] — what crosses thread and
+/// wire boundaries (`ServeHandle::compile_stats`, the metrics text).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CompileStatsSnapshot {
+    pub plans_cached: u64,
+    pub fused_ops: u64,
+    pub folded_consts: u64,
+    pub arena_bytes: u64,
+    pub arena_allocs: u64,
+    pub arena_reuses: u64,
+}
+
+impl CompileStatsSnapshot {
+    /// Fold another device's snapshot into this one (sharded serving
+    /// sums per-device compiled backends for the metrics endpoint).
+    pub fn absorb(&mut self, other: &CompileStatsSnapshot) {
+        self.plans_cached += other.plans_cached;
+        self.fused_ops += other.fused_ops;
+        self.folded_consts += other.folded_consts;
+        self.arena_bytes += other.arena_bytes;
+        self.arena_allocs += other.arena_allocs;
+        self.arena_reuses += other.arena_reuses;
+    }
+}
+
+/// The compiled backend of one registry: every manifest module lowered
+/// to a [`ModulePlan`] **eagerly at open time** (compile once, dispatch
+/// forever — a corrupt manifest fails the open, not the thousandth
+/// call), plus the shared [`CompileStats`].
+pub struct CompiledSet {
+    plans: HashMap<String, Arc<ModulePlan>>,
+    stats: Arc<CompileStats>,
+}
+
+impl CompiledSet {
+    /// Lower every module through the full pipeline (IR → passes →
+    /// plan). Deterministic: modules compile in sorted-name order, so
+    /// stats are reproducible across runs.
+    pub fn compile<'a>(modules: impl IntoIterator<Item = &'a ModuleSpec>) -> Result<CompiledSet> {
+        let mut specs: Vec<&ModuleSpec> = modules.into_iter().collect();
+        specs.sort_by(|a, b| a.name.cmp(&b.name));
+        let stats = Arc::new(CompileStats::default());
+        let mut plans = HashMap::with_capacity(specs.len());
+        for spec in specs {
+            let plan = compile_module(spec)?;
+            stats.plans_cached.fetch_add(1, Ordering::Relaxed);
+            stats.fused_ops.fetch_add(plan.fused_ops() as u64, Ordering::Relaxed);
+            stats.folded_consts.fetch_add(plan.folded_consts() as u64, Ordering::Relaxed);
+            plans.insert(spec.name.clone(), Arc::new(plan));
+        }
+        Ok(CompiledSet { plans, stats })
+    }
+
+    /// The cached plan for a module, if the manifest defines it.
+    pub fn plan(&self, name: &str) -> Option<&Arc<ModulePlan>> {
+        self.plans.get(name)
+    }
+
+    /// Plans cached (== manifest module count after a successful open).
+    pub fn plan_count(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// The shared live counters.
+    pub fn stats(&self) -> &Arc<CompileStats> {
+        &self.stats
+    }
+}
+
+// One compiled set is shared across every worker thread of its registry.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<CompiledSet>();
+    assert_send_sync::<CompileStats>();
+};

@@ -1,0 +1,231 @@
+//! Optimization passes over [`ModuleIr`], run in a fixed order:
+//! constant folding → dead-code elimination → fusion.
+//!
+//! * **Constant folding** ([`const_fold`]) evaluates every op whose
+//!   operands are manifest-known at compile time: the module-name digest
+//!   and any length-mix over an already-constant digest. For every real
+//!   module this folds the entire pre-data prefix — the seed the emitted
+//!   plan starts from, so the hot path never re-hashes the module name.
+//! * **DCE** ([`dce`]) keeps only ops reachable from the effect roots
+//!   (output fills) by walking `src` edges backwards; orphaned constants
+//!   left behind by folding, and any unreferenced chain in a
+//!   hand-constructed or corrupted IR, are dropped.
+//! * **Fusion** ([`fuse`]) merges each single-use chain of
+//!   `MixLen`/`AbsorbData` ops into one [`OpKind::FusedAbsorb`] kernel
+//!   and all fills off one digest into one [`OpKind::FusedFill`] — the
+//!   value-model analog of fusing a time step's conv/norm/act chain into
+//!   a single dispatched op. Fused ops carry `primitives`, so
+//!   [`ModuleIr::primitive_count`] is **invariant under fusion** (the
+//!   op-count accounting the tests pin down).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::runtime::sim;
+
+use super::ir::{AbsorbStep, ModuleIr, Op, OpKind, ValueId};
+
+/// What one full pass pipeline did to a module's IR.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    /// Ops replaced by constants.
+    pub folded: usize,
+    /// Ops removed as unreachable from any effect.
+    pub removed: usize,
+    /// Fused kernels created.
+    pub fused: usize,
+}
+
+/// Fold manifest-known scalars: `NameDigest` and `MixLen` over constant
+/// digests become [`OpKind::Const`]. Returns the number of ops folded.
+pub fn const_fold(ir: &mut ModuleIr) -> usize {
+    let mut consts: HashMap<ValueId, u64> = HashMap::new();
+    let mut folded = 0usize;
+    let name = ir.name.clone();
+    for op in &mut ir.ops {
+        let replacement = match &op.kind {
+            OpKind::Const(c) => {
+                consts.insert(op.id, *c);
+                None
+            }
+            OpKind::NameDigest => Some(sim::name_digest(&name)),
+            OpKind::MixLen { src, len } => consts.get(src).map(|&c| sim::mix(c, *len)),
+            _ => None,
+        };
+        if let Some(c) = replacement {
+            consts.insert(op.id, c);
+            op.kind = OpKind::Const(c);
+            folded += 1;
+        }
+    }
+    folded
+}
+
+/// Remove every op not reachable (via `src` edges) from an effect root.
+/// Returns the number of ops removed.
+pub fn dce(ir: &mut ModuleIr) -> usize {
+    let by_id: HashMap<ValueId, Option<ValueId>> =
+        ir.ops.iter().map(|op| (op.id, op.kind.src())).collect();
+    let mut live: HashSet<ValueId> = HashSet::new();
+    let mut stack: Vec<ValueId> = ir
+        .ops
+        .iter()
+        .filter(|op| op.kind.is_effect())
+        .map(|op| op.id)
+        .collect();
+    while let Some(id) = stack.pop() {
+        if live.insert(id) {
+            if let Some(Some(src)) = by_id.get(&id) {
+                stack.push(*src);
+            }
+        }
+    }
+    let before = ir.ops.len();
+    ir.ops.retain(|op| live.contains(&op.id));
+    before - ir.ops.len()
+}
+
+/// Fuse single-use `MixLen`/`AbsorbData` chains into [`OpKind::FusedAbsorb`]
+/// kernels and same-digest fills into [`OpKind::FusedFill`]. Returns the
+/// number of fused ops created. Preserves [`ModuleIr::primitive_count`].
+pub fn fuse(ir: &mut ModuleIr) -> usize {
+    // A value is fusable into its consumer only if nothing else reads it.
+    let mut uses: HashMap<ValueId, usize> = HashMap::new();
+    for op in &ir.ops {
+        if let Some(src) = op.kind.src() {
+            *uses.entry(src).or_default() += 1;
+        }
+    }
+
+    let mut fused_created = 0usize;
+    let mut out: Vec<Op> = Vec::with_capacity(ir.ops.len());
+    let mut i = 0usize;
+    while i < ir.ops.len() {
+        let op = &ir.ops[i];
+        let absorb_step = |kind: &OpKind| match kind {
+            OpKind::MixLen { len, .. } => Some(AbsorbStep::Len(*len)),
+            OpKind::AbsorbData { input, .. } => Some(AbsorbStep::Data(*input)),
+            _ => None,
+        };
+        if let Some(first_step) = absorb_step(&op.kind) {
+            // Grow the run while the next op consumes exactly this value.
+            let chain_src = op.kind.src().expect("absorb ops always read a digest");
+            let mut steps = vec![first_step];
+            let mut last_id = op.id;
+            let mut j = i + 1;
+            while j < ir.ops.len() {
+                let next = &ir.ops[j];
+                let extends = next.kind.src() == Some(last_id)
+                    && uses.get(&last_id).copied().unwrap_or(0) == 1;
+                match (extends, absorb_step(&next.kind)) {
+                    (true, Some(step)) => {
+                        steps.push(step);
+                        last_id = next.id;
+                        j += 1;
+                    }
+                    _ => break,
+                }
+            }
+            if steps.len() > 1 {
+                let primitives = steps.len();
+                out.push(Op {
+                    id: last_id,
+                    kind: OpKind::FusedAbsorb { src: chain_src, steps, primitives },
+                });
+                fused_created += 1;
+                i = j;
+                continue;
+            }
+        }
+        if let OpKind::Fill { src, output } = op.kind {
+            // Collect every later fill off the same digest into one kernel.
+            let mut outputs = vec![output];
+            let mut rest: Vec<Op> = Vec::new();
+            for later in &ir.ops[i + 1..] {
+                match later.kind {
+                    OpKind::Fill { src: s2, output: o2 } if s2 == src => outputs.push(o2),
+                    _ => rest.push(later.clone()),
+                }
+            }
+            if outputs.len() > 1 {
+                let primitives = outputs.len();
+                out.push(Op { id: op.id, kind: OpKind::FusedFill { src, outputs, primitives } });
+                fused_created += 1;
+                out.extend(rest);
+                ir.ops = out;
+                return fused_created;
+            }
+        }
+        out.push(op.clone());
+        i += 1;
+    }
+    ir.ops = out;
+    fused_created
+}
+
+/// The default pipeline: fold → DCE → fuse, with per-pass accounting.
+pub fn run_default_passes(ir: &mut ModuleIr) -> PassStats {
+    let folded = const_fold(ir);
+    let removed = dce(ir);
+    let fused = fuse(ir);
+    PassStats { folded, removed, fused }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ir::build_module_ir;
+    use super::*;
+    use crate::runtime::{ModuleSpec, TensorSpec};
+
+    fn spec(name: &str, ins: &[&[usize]], outs: &[&[usize]]) -> ModuleSpec {
+        let t = |n: String, s: &[usize]| TensorSpec {
+            name: n,
+            shape: s.to_vec(),
+            dtype: "f32".into(),
+        };
+        ModuleSpec {
+            name: name.into(),
+            file: format!("{name}.hlo.txt"),
+            inputs: ins.iter().enumerate().map(|(i, s)| t(format!("i{i}"), s)).collect(),
+            outputs: outs.iter().enumerate().map(|(o, s)| t(format!("o{o}"), s)).collect(),
+        }
+    }
+
+    #[test]
+    fn fold_reduces_prefix_to_seed_constant() {
+        let mut ir = build_module_ir(&spec("m", &[&[4], &[2]], &[&[4]])).unwrap();
+        let folded = const_fold(&mut ir);
+        // NameDigest and the first MixLen fold; the second MixLen reads a
+        // post-data digest and must not.
+        assert_eq!(folded, 2);
+        let expected = sim::mix(sim::name_digest("m"), 4);
+        assert!(ir
+            .ops
+            .iter()
+            .any(|op| matches!(op.kind, OpKind::Const(c) if c == expected)));
+    }
+
+    #[test]
+    fn dce_drops_orphaned_constants_after_folding() {
+        let mut ir = build_module_ir(&spec("m", &[&[4]], &[&[4]])).unwrap();
+        let n = ir.op_count();
+        const_fold(&mut ir);
+        let removed = dce(&mut ir);
+        // The folded NameDigest constant is no longer referenced.
+        assert_eq!(removed, 1);
+        assert_eq!(ir.op_count(), n - 1);
+    }
+
+    #[test]
+    fn fusion_preserves_primitive_count() {
+        let mut ir = build_module_ir(&spec("m", &[&[4], &[2], &[3]], &[&[4], &[1]])).unwrap();
+        let primitives = ir.primitive_count();
+        let stats = run_default_passes(&mut ir);
+        assert!(stats.fused >= 2, "absorb chain + fill group: {stats:?}");
+        assert_eq!(
+            ir.primitive_count() + stats.removed,
+            primitives,
+            "fusion must account for every primitive it swallows"
+        );
+        assert!(ir.op_count() < primitives, "the program must actually shrink");
+    }
+}

@@ -1,0 +1,555 @@
+//! Plan emission: typed IR → compact kernel programs, plus the fused
+//! model-level inference program with its liveness-planned buffer arena.
+//!
+//! A [`ModulePlan`] is the unit the registry dispatches: a folded seed
+//! digest, a flat list of absorb steps, and shape-specialized output
+//! fills — no spec lookup, no name hashing, no shape checks on the hot
+//! path. An [`InferProgram`] chains module plans into the whole
+//! inference forward (stem → per-time-step blocks → transitions) with
+//! every intermediate activation placed in one preallocated arena by
+//! liveness analysis ([`assign_slots`]), so steady-state execution
+//! performs **zero allocations** beyond the returned output tensor
+//! (arena buffers recycle through a pool; the counters in
+//! [`CompileStats`] prove it).
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::sim::{centered, mix};
+use crate::runtime::{ArtifactRegistry, ModuleSpec, RuntimeError};
+use crate::tensor::Tensor;
+
+use super::ir::{element_count, AbsorbStep, ModuleIr, OpKind, ValueId};
+use super::passes::run_default_passes;
+use super::{CompileError, CompileStats, Result};
+
+/// One shape-specialized output fill of a [`ModulePlan`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct OutputPlan {
+    shape: Vec<usize>,
+    len: usize,
+}
+
+/// The compiled form of one module: a flat fused-kernel program.
+///
+/// Executing a plan is exactly the value model of
+/// [`crate::runtime::sim::sim_outputs`] — bit-identical by construction,
+/// since both build on the same `mix`/`centered` primitives — minus all
+/// per-call interpretation: the constant prefix (name digest + first
+/// length mix) is folded into [`seed`](Self::seed) at compile time, and
+/// shapes were validated when the plan was built.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModulePlan {
+    name: String,
+    seed: u64,
+    steps: Vec<AbsorbStep>,
+    outputs: Vec<OutputPlan>,
+    input_count: usize,
+    fused_ops: usize,
+    folded_consts: usize,
+    primitives: usize,
+}
+
+/// Compile one module through the full pipeline: IR construction (all
+/// validation), default passes, lowering. Never panics — corrupt specs
+/// surface as typed [`CompileError`]s.
+pub fn compile_module(spec: &ModuleSpec) -> Result<ModulePlan> {
+    let mut ir = super::ir::build_module_ir(spec)?;
+    let stats = run_default_passes(&mut ir);
+    let mut plan = lower_module(&ir)?;
+    plan.fused_ops = stats.fused;
+    plan.folded_consts = stats.folded;
+    Ok(plan)
+}
+
+/// Lower a (passed or raw) [`ModuleIr`] to a [`ModulePlan`]. The digest
+/// graph must be a single chain ending in the fills — anything else is a
+/// typed [`CompileError::Unsupported`], so hand-mangled IR cannot panic
+/// the lowering.
+pub fn lower_module(ir: &ModuleIr) -> Result<ModulePlan> {
+    let unsupported = |reason: &str| CompileError::Unsupported {
+        module: ir.name.clone(),
+        reason: reason.to_string(),
+    };
+
+    let mut consts: std::collections::HashMap<ValueId, u64> = std::collections::HashMap::new();
+    let mut seed: Option<u64> = None;
+    let mut chain: Option<ValueId> = None;
+    let mut steps: Vec<AbsorbStep> = Vec::new();
+    let mut fills: Vec<(usize, ValueId)> = Vec::new();
+
+    // Adopt `src` as the start of the dynamic chain (or extend it).
+    fn begin_or_extend(
+        name: &str,
+        src: ValueId,
+        id: ValueId,
+        chain: &mut Option<ValueId>,
+        seed: &mut Option<u64>,
+        consts: &std::collections::HashMap<ValueId, u64>,
+    ) -> Result<()> {
+        let unsupported = |reason: &str| CompileError::Unsupported {
+            module: name.to_string(),
+            reason: reason.to_string(),
+        };
+        match (*chain, consts.get(&src)) {
+            (Some(tail), _) if tail == src => {}
+            (None, Some(&c)) => *seed = Some(c),
+            (Some(_), Some(_)) | (Some(_), None) => {
+                return Err(unsupported("digest graph is not a single chain"));
+            }
+            (None, None) => return Err(unsupported("op reads an undefined digest")),
+        }
+        *chain = Some(id);
+        Ok(())
+    }
+
+    for op in &ir.ops {
+        match &op.kind {
+            OpKind::Const(c) => {
+                consts.insert(op.id, *c);
+            }
+            OpKind::NameDigest => {
+                consts.insert(op.id, crate::runtime::sim::name_digest(&ir.name));
+            }
+            OpKind::MixLen { src, len } => {
+                if let Some(&c) = consts.get(src) {
+                    consts.insert(op.id, mix(c, *len));
+                } else {
+                    begin_or_extend(&ir.name, *src, op.id, &mut chain, &mut seed, &consts)?;
+                    steps.push(AbsorbStep::Len(*len));
+                }
+            }
+            OpKind::AbsorbData { src, input } => {
+                if *input >= ir.input_shapes.len() {
+                    return Err(unsupported("absorb references a nonexistent input"));
+                }
+                begin_or_extend(&ir.name, *src, op.id, &mut chain, &mut seed, &consts)?;
+                steps.push(AbsorbStep::Data(*input));
+            }
+            OpKind::FusedAbsorb { src, steps: fused, .. } => {
+                if fused.iter().any(
+                    |s| matches!(s, AbsorbStep::Data(i) if *i >= ir.input_shapes.len()),
+                ) {
+                    return Err(unsupported("fused absorb references a nonexistent input"));
+                }
+                begin_or_extend(&ir.name, *src, op.id, &mut chain, &mut seed, &consts)?;
+                steps.extend(fused.iter().copied());
+            }
+            OpKind::Fill { src, output } => fills.push((*output, *src)),
+            OpKind::FusedFill { src, outputs, .. } => {
+                fills.extend(outputs.iter().map(|&o| (o, *src)));
+            }
+        }
+    }
+
+    // Every fill must read the final digest — either the chain tail or,
+    // for a module with no runtime inputs, a fully folded constant.
+    let final_digest = chain;
+    for &(_, src) in &fills {
+        match final_digest {
+            Some(tail) if src == tail => {}
+            Some(_) => return Err(unsupported("fill reads a non-final digest")),
+            None => {
+                let Some(&c) = consts.get(&src) else {
+                    return Err(unsupported("fill reads an undefined digest"));
+                };
+                match seed {
+                    Some(s) if s != c => {
+                        return Err(unsupported("fills disagree on the seed digest"));
+                    }
+                    _ => seed = Some(c),
+                }
+            }
+        }
+    }
+    let Some(seed) = seed else {
+        return Err(unsupported("program produces no digest"));
+    };
+
+    // Exactly one fill per declared output.
+    let mut outputs: Vec<Option<OutputPlan>> = vec![None; ir.output_shapes.len()];
+    for (o, _) in fills {
+        let Some(slot) = outputs.get_mut(o) else {
+            return Err(unsupported("fill targets a nonexistent output"));
+        };
+        if slot.is_some() {
+            return Err(unsupported("output filled twice"));
+        }
+        let shape = ir.output_shapes[o].clone();
+        let len = element_count(&shape);
+        *slot = Some(OutputPlan { shape, len });
+    }
+    let outputs = outputs
+        .into_iter()
+        .collect::<Option<Vec<_>>>()
+        .ok_or_else(|| unsupported("a declared output is never filled"))?;
+
+    Ok(ModulePlan {
+        name: ir.name.clone(),
+        seed,
+        steps,
+        outputs,
+        input_count: ir.input_shapes.len(),
+        fused_ops: 0,
+        folded_consts: 0,
+        primitives: ir.primitive_count(),
+    })
+}
+
+impl ModulePlan {
+    /// Module this plan was compiled from.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Inputs the plan expects (the only per-call check trusted callers
+    /// keep is this arity).
+    pub fn input_count(&self) -> usize {
+        self.input_count
+    }
+
+    /// Outputs the plan materializes.
+    pub fn output_count(&self) -> usize {
+        self.outputs.len()
+    }
+
+    /// Fused kernels in this plan (see [`super::passes::fuse`]).
+    pub fn fused_ops(&self) -> usize {
+        self.fused_ops
+    }
+
+    /// Ops constant-folded while compiling this plan.
+    pub fn folded_consts(&self) -> usize {
+        self.folded_consts
+    }
+
+    /// Primitive ops this plan covers (invariant under fusion).
+    pub fn primitive_count(&self) -> usize {
+        self.primitives
+    }
+
+    /// The digest after absorbing `parts` (one slice per declared input).
+    fn digest_parts(&self, parts: &[&[f32]]) -> u64 {
+        let mut h = self.seed;
+        for step in &self.steps {
+            match *step {
+                AbsorbStep::Len(l) => h = mix(h, l),
+                AbsorbStep::Data(i) => {
+                    for &v in parts[i] {
+                        h = mix(h, u64::from(v.to_bits()));
+                    }
+                }
+            }
+        }
+        h
+    }
+
+    /// Fill output `oi` (0-based) off the final digest into `out`.
+    fn fill_into(&self, h: u64, oi: usize, out: &mut [f32]) {
+        let base = mix(h, oi as u64 + 1);
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = centered(mix(base, j as u64));
+        }
+    }
+
+    /// Execute the plan. **No shape checks** — compile time validated the
+    /// manifest and the caller (the registry seam) owns input validation.
+    /// Bit-identical to `sim_outputs` on the same module and inputs.
+    pub fn execute(&self, inputs: &[&Tensor]) -> crate::runtime::Result<Vec<Tensor>> {
+        let parts: Vec<&[f32]> = inputs.iter().map(|t| t.data()).collect();
+        let h = self.digest_parts(&parts);
+        self.outputs
+            .iter()
+            .enumerate()
+            .map(|(oi, o)| {
+                let mut data = vec![0.0f32; o.len];
+                self.fill_into(h, oi, &mut data);
+                Tensor::from_vec(o.shape.clone(), data)
+                    .map_err(|e| RuntimeError::Shape(format!("compiled {}: {e}", self.name)))
+            })
+            .collect()
+    }
+}
+
+/// Greedy liveness-interval slot assignment: `intervals[i] = (def,
+/// last_use, len)` per value, in definition order. Returns `(slot of
+/// each value, slot sizes)`. A slot is reusable strictly **after** its
+/// holder's last use (`last_use + 1`), so a value written at instruction
+/// `i` can never alias an operand still being read at `i`.
+pub fn assign_slots(intervals: &[(usize, usize, usize)]) -> (Vec<usize>, Vec<usize>) {
+    let mut slot_sizes: Vec<usize> = Vec::new();
+    let mut free_at: Vec<usize> = Vec::new();
+    let mut assignment = Vec::with_capacity(intervals.len());
+    for &(def, last_use, len) in intervals {
+        let slot = match (0..slot_sizes.len()).find(|&s| free_at[s] <= def) {
+            Some(s) => s,
+            None => {
+                slot_sizes.push(0);
+                free_at.push(0);
+                slot_sizes.len() - 1
+            }
+        };
+        slot_sizes[slot] = slot_sizes[slot].max(len);
+        free_at[slot] = last_use + 1;
+        assignment.push(slot);
+    }
+    (assignment, slot_sizes)
+}
+
+/// One step of the model-level inference chain: a module applied to the
+/// running activation plus the named parameter tensors (indices into the
+/// session's canonical parameter vector).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InferCall {
+    pub module: String,
+    pub params: Vec<usize>,
+}
+
+/// Where an instruction operand lives at run time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Loc {
+    /// The program input (the image batch).
+    Image,
+    /// A parameter tensor (index into the params slice).
+    Param(usize),
+    /// An arena slot (f32 offset + length).
+    Slot { off: usize, len: usize },
+}
+
+/// One fused-program instruction: execute `plan` over `args`, write the
+/// single output into the arena at `out_off`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct InferInstr {
+    plan: usize,
+    args: Vec<Loc>,
+    out_off: usize,
+    out_len: usize,
+}
+
+/// The whole inference forward as one flat program: shape-specialized
+/// fused kernels dispatched from an instruction list, intermediate
+/// activations in a liveness-planned arena recycled through a pool.
+///
+/// Built once per [`crate::coordinator::ExecutionCore`] when the
+/// registry runs the compiled backend; bit-identical to the sequential
+/// per-module path (same plans, same order).
+pub struct InferProgram {
+    plans: Vec<Arc<ModulePlan>>,
+    instrs: Vec<InferInstr>,
+    arena_len: usize,
+    slot_count: usize,
+    out_off: usize,
+    out_len: usize,
+    out_shape: Vec<usize>,
+    pool: Mutex<Vec<Vec<f32>>>,
+    stats: Arc<CompileStats>,
+}
+
+impl InferProgram {
+    /// Compile the chain against a compiled-backend registry, running
+    /// **cross-module shape inference**: each step's declared input
+    /// shapes must match what the previous step produces and what the
+    /// parameter layout supplies — a mismatched manifest fails here,
+    /// once, with a typed error naming the module and tensor.
+    pub fn build(
+        reg: &ArtifactRegistry,
+        chain: &[InferCall],
+        param_shapes: &[Vec<usize>],
+    ) -> Result<InferProgram> {
+        let Some(set) = reg.compiled_set() else {
+            return Err(CompileError::Unsupported {
+                module: "<infer>".into(),
+                reason: "registry does not run the compiled backend".into(),
+            });
+        };
+        if chain.is_empty() {
+            return Err(CompileError::Unsupported {
+                module: "<infer>".into(),
+                reason: "empty inference chain".into(),
+            });
+        }
+
+        let mut plans: Vec<Arc<ModulePlan>> = Vec::with_capacity(chain.len());
+        let mut out_shapes: Vec<Vec<usize>> = Vec::with_capacity(chain.len());
+        let mut activation: Option<Vec<usize>> = None;
+        for call in chain {
+            let spec = reg
+                .module_spec(&call.module)
+                .map_err(|_| CompileError::MissingModule { module: call.module.clone() })?;
+            if spec.inputs.len() != 1 + call.params.len() {
+                return Err(CompileError::ArityMismatch {
+                    module: call.module.clone(),
+                    expected: spec.inputs.len(),
+                    found: 1 + call.params.len(),
+                });
+            }
+            if let Some(prev) = &activation {
+                if &spec.inputs[0].shape != prev {
+                    return Err(CompileError::ShapeMismatch {
+                        module: call.module.clone(),
+                        input: spec.inputs[0].name.clone(),
+                        expected: spec.inputs[0].shape.clone(),
+                        found: prev.clone(),
+                    });
+                }
+            }
+            for (j, &p) in call.params.iter().enumerate() {
+                let declared = &spec.inputs[1 + j];
+                let supplied = param_shapes.get(p).ok_or_else(|| CompileError::Unsupported {
+                    module: call.module.clone(),
+                    reason: format!("chain references parameter {p} outside the layout"),
+                })?;
+                if &declared.shape != supplied {
+                    return Err(CompileError::ShapeMismatch {
+                        module: call.module.clone(),
+                        input: declared.name.clone(),
+                        expected: declared.shape.clone(),
+                        found: supplied.clone(),
+                    });
+                }
+            }
+            if spec.outputs.len() != 1 {
+                return Err(CompileError::Unsupported {
+                    module: call.module.clone(),
+                    reason: format!(
+                        "inference chain needs single-output modules, found {}",
+                        spec.outputs.len()
+                    ),
+                });
+            }
+            let plan = set.plan(&call.module).ok_or_else(|| CompileError::MissingModule {
+                module: call.module.clone(),
+            })?;
+            plans.push(plan.clone());
+            activation = Some(spec.outputs[0].shape.clone());
+            out_shapes.push(spec.outputs[0].shape.clone());
+        }
+        let out_shape = activation.expect("non-empty chain has a final activation");
+
+        // Liveness: value k (instr k's output) is read by instr k+1; the
+        // final value is read by the output copy "instruction" at n.
+        let n = chain.len();
+        let intervals: Vec<(usize, usize, usize)> = out_shapes
+            .iter()
+            .enumerate()
+            .map(|(k, shape)| (k, (k + 1).min(n), element_count(shape)))
+            .collect();
+        let (slots, slot_sizes) = assign_slots(&intervals);
+        let mut offsets = Vec::with_capacity(slot_sizes.len());
+        let mut total = 0usize;
+        for &size in &slot_sizes {
+            offsets.push(total);
+            total += size;
+        }
+
+        let loc_of = |k: usize| Loc::Slot {
+            off: offsets[slots[k]],
+            len: element_count(&out_shapes[k]),
+        };
+        let instrs: Vec<InferInstr> = chain
+            .iter()
+            .enumerate()
+            .map(|(k, call)| {
+                let mut args = Vec::with_capacity(1 + call.params.len());
+                args.push(if k == 0 { Loc::Image } else { loc_of(k - 1) });
+                args.extend(call.params.iter().map(|&p| Loc::Param(p)));
+                let Loc::Slot { off, len } = loc_of(k) else { unreachable!() };
+                InferInstr { plan: k, args, out_off: off, out_len: len }
+            })
+            .collect();
+
+        let (out_off, out_len) = (instrs[n - 1].out_off, instrs[n - 1].out_len);
+        let stats = set.stats().clone();
+        stats
+            .arena_bytes
+            .fetch_add((total * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
+        Ok(InferProgram {
+            plans,
+            instrs,
+            arena_len: total,
+            slot_count: slot_sizes.len(),
+            out_off,
+            out_len,
+            out_shape,
+            pool: Mutex::new(Vec::new()),
+            stats,
+        })
+    }
+
+    /// Kernels dispatched per run (== chain length; used for
+    /// call-accounting parity with the sequential path).
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// A program always has at least one instruction.
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Arena slots after liveness reuse (a linear chain ping-pongs two).
+    pub fn slot_count(&self) -> usize {
+        self.slot_count
+    }
+
+    /// Bytes of one arena buffer.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena_len * std::mem::size_of::<f32>()
+    }
+
+    /// Shape of the program's output (the head input activation).
+    pub fn out_shape(&self) -> &[usize] {
+        &self.out_shape
+    }
+
+    /// Run the program: one pooled arena, zero steady-state allocations
+    /// (the pool hands buffers back after the first run per concurrent
+    /// caller), output bit-identical to the sequential module-call chain.
+    pub fn run(&self, x: &Tensor, params: &[Tensor]) -> crate::runtime::Result<Tensor> {
+        let mut arena = match self.pool.lock().expect("arena pool poisoned").pop() {
+            Some(buf) => {
+                self.stats.arena_reuses.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.stats.arena_allocs.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; self.arena_len]
+            }
+        };
+
+        for instr in &self.instrs {
+            let plan = &self.plans[instr.plan];
+            let mut h = plan.seed;
+            for step in &plan.steps {
+                match *step {
+                    AbsorbStep::Len(l) => h = mix(h, l),
+                    AbsorbStep::Data(i) => {
+                        let part: &[f32] = match instr.args[i] {
+                            Loc::Image => x.data(),
+                            Loc::Param(p) => params[p].data(),
+                            Loc::Slot { off, len } => &arena[off..off + len],
+                        };
+                        for &v in part {
+                            h = mix(h, u64::from(v.to_bits()));
+                        }
+                    }
+                }
+            }
+            plan.fill_into(h, 0, &mut arena[instr.out_off..instr.out_off + instr.out_len]);
+        }
+
+        let out = Tensor::from_vec(
+            self.out_shape.clone(),
+            arena[self.out_off..self.out_off + self.out_len].to_vec(),
+        )
+        .map_err(|e| RuntimeError::Shape(format!("compiled infer output: {e}")));
+        self.pool.lock().expect("arena pool poisoned").push(arena);
+        out
+    }
+}
+
+// The program is shared across worker threads via the execution core.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<InferProgram>();
+};

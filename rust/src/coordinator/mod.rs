@@ -42,9 +42,10 @@ use std::sync::Arc;
 
 use crate::api::modules::{ModuleHandle, ModuleSet};
 use crate::api::strategy::{GradientStrategy, ModuleExec, StrategyRegistry};
+use crate::compile::{InferCall, InferProgram};
 use crate::memory::{Category, MemoryLedger};
 use crate::models::{GradMethod, ModelConfig, ParamIndex, Solver};
-use crate::runtime::{ArtifactRegistry, Result, RuntimeError};
+use crate::runtime::{ArtifactRegistry, Backend, Result, RuntimeError};
 use crate::tensor::Tensor;
 
 /// Back-compat name for the shared core ([`ExecutionCore`] since the
@@ -84,6 +85,11 @@ pub struct ExecutionCore {
     /// Calls made to each module (perf accounting; relaxed — a counter,
     /// not a synchronization point).
     pub call_count: AtomicUsize,
+    /// The inference forward (stem → blocks → transitions) fused into one
+    /// flat compiled program with arena-backed intermediates. Built when
+    /// the registry runs [`Backend::Compiled`]; `None` otherwise.
+    /// Bit-identical to the sequential module-call chain by construction.
+    fused_infer: Option<InferProgram>,
 }
 
 impl ExecutionCore {
@@ -122,6 +128,11 @@ impl ExecutionCore {
                 })?;
             }
         }
+        let fused_infer = if reg.backend() == Backend::Compiled {
+            Some(Self::build_fused_infer(&reg, &cfg, &index, &modules)?)
+        } else {
+            None
+        };
         Ok(Self {
             reg,
             cfg,
@@ -130,7 +141,54 @@ impl ExecutionCore {
             modules,
             strategy,
             call_count: AtomicUsize::new(0),
+            fused_infer,
         })
+    }
+
+    /// Assemble the model-level inference chain (the module/param sequence
+    /// [`Self::forward_infer`] walks) and compile it into one fused
+    /// program. The chain is statically known from the config — the
+    /// discretize-then-optimize structure has no data-dependent control
+    /// flow — which is exactly what makes whole-forward fusion legal.
+    fn build_fused_infer(
+        reg: &ArtifactRegistry,
+        cfg: &ModelConfig,
+        index: &ParamIndex,
+        modules: &ModuleSet,
+    ) -> Result<InferProgram> {
+        let mut chain = Vec::new();
+        chain.push(InferCall {
+            module: modules.stem_fwd.name().to_string(),
+            params: vec![index.stem.0, index.stem.1],
+        });
+        for s in 0..cfg.stages() {
+            let fwd = modules.stages[s].require("fwd")?;
+            for b in 0..cfg.blocks_per_stage {
+                chain.push(InferCall {
+                    module: fwd.name().to_string(),
+                    params: index.blocks[s][b].clone(),
+                });
+            }
+            if s + 1 < cfg.stages() {
+                let (tw, tb) = index.trans[s];
+                chain.push(InferCall {
+                    module: modules.trans[s].fwd.name().to_string(),
+                    params: vec![tw, tb],
+                });
+            }
+        }
+        let param_shapes: Vec<Vec<usize>> = reg
+            .param_layout(&cfg.params_key())?
+            .iter()
+            .map(|p| p.shape.clone())
+            .collect();
+        InferProgram::build(reg, &chain, &param_shapes).map_err(RuntimeError::from)
+    }
+
+    /// The fused compiled inference program, when the registry runs the
+    /// compiled backend (tests and benches inspect its arena layout).
+    pub fn fused_infer(&self) -> Option<&InferProgram> {
+        self.fused_infer.as_ref()
     }
 
     /// Canonical name of the configured gradient method.
@@ -148,10 +206,14 @@ impl ExecutionCore {
         self.reg.load_params(&self.cfg.params_key())
     }
 
-    /// Execute a resolved module.
+    /// Execute a resolved module through the registry's **trusted** path:
+    /// handles are resolved against the manifest eagerly and every tensor
+    /// flowing through the core is shape-checked at the API boundary
+    /// ([`crate::api::Session`]), so per-call shape re-validation here
+    /// would be pure hot-loop overhead (arity is still checked).
     pub(crate) fn call(&self, handle: &ModuleHandle, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
         self.call_count.fetch_add(1, Ordering::Relaxed);
-        self.reg.call(handle.name(), inputs)
+        self.reg.call_trusted(handle.name(), inputs)
     }
 
     /// Gather a block's parameter tensors in artifact order.
@@ -221,6 +283,13 @@ impl ExecutionCore {
     /// no ledger traffic is generated — evaluation and serving pay zero
     /// gradient-bookkeeping overhead.
     pub fn forward_infer(&self, x: &Tensor, params: &[Tensor]) -> Result<Tensor> {
+        if let Some(prog) = &self.fused_infer {
+            // One fused program instead of O(stages × blocks) dispatches;
+            // count its kernels so call accounting matches the sequential
+            // path exactly.
+            self.call_count.fetch_add(prog.len(), Ordering::Relaxed);
+            return prog.run(x, params);
+        }
         let (sw, sb) = (&params[self.index.stem.0], &params[self.index.stem.1]);
         let mut z = self.call(&self.modules.stem_fwd, &[x, sw, sb])?.remove(0);
         for s in 0..self.cfg.stages() {

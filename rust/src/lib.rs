@@ -41,6 +41,7 @@
 
 pub mod api;
 pub mod checkpoint;
+pub mod compile;
 pub mod coordinator;
 pub mod data;
 pub mod harness;

@@ -32,7 +32,7 @@ use anode::harness;
 use anode::metrics::{format_table, write_csv};
 use anode::models::{Arch, GradMethod, Solver};
 use anode::net::{ClientReply, NetClient, NetConfig, NetServer};
-use anode::runtime::ArtifactRegistry;
+use anode::runtime::{backend_env, ArtifactRegistry, Backend};
 use anode::serve::{BatchRunner, HostTailRunner, ServeConfig, ServeHandle, SloClass};
 use anode::tensor::Tensor;
 use anode::util::bench::LatencyPercentiles;
@@ -41,11 +41,13 @@ use anode::util::pool::parallel_map;
 
 fn main() {
     let args = Args::from_env();
-    // --artifacts is honored by every subcommand (open_registry), so it
-    // must never trip the unknown-option warning. --csv is deliberately
-    // NOT pre-marked: commands that don't write a CSV should warn rather
-    // than silently swallow it.
+    // --artifacts and --backend are honored by every subcommand
+    // (open_registry / the engine builder), so they must never trip the
+    // unknown-option warning. --csv is deliberately NOT pre-marked:
+    // commands that don't write a CSV should warn rather than silently
+    // swallow it.
     let _ = args.get("artifacts");
+    let _ = args.get("backend");
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "train" => cmd_train(&args),
@@ -92,6 +94,10 @@ fn print_help() {
          \u{20}          ADDR, e.g. 127.0.0.1:0; requests go over loopback TCP\n\
          \u{20}          and GET /metrics on the same port answers plain text)\n\
          common:    --artifacts DIR (default: artifacts)\n\
+         \u{20}          --backend xla|sim|compiled (execution backend; default\n\
+         \u{20}          xla, or the ANODE_BACKEND env var. `compiled` lowers the\n\
+         \u{20}          manifest to fused kernel plans ahead of time — values\n\
+         \u{20}          bit-identical to `sim`)\n\
          \u{20}          --csv PATH (train and fig3|fig4|fig5 only)\n\
          \n\
          Malformed option values are hard errors; unknown options warn.\n\
@@ -117,12 +123,31 @@ fn parse_opt<T>(kind: &str, value: &str, parse: impl Fn(&str) -> Option<T>) -> T
     }
 }
 
+/// Execution backend requested on the command line (`--backend`), falling
+/// back to `ANODE_BACKEND`. A malformed flag value is a hard error, like
+/// every other malformed option.
+fn cli_backend(args: &Args) -> Backend {
+    match args.get("backend") {
+        Some(v) => parse_opt("backend", v, Backend::parse),
+        None => backend_env().unwrap_or_default(),
+    }
+}
+
 fn open_registry(args: &Args) -> Result<Arc<ArtifactRegistry>, i32> {
     let dir = args.get_or("artifacts", "artifacts");
-    open_artifacts(&dir).map_err(|e| {
-        eprintln!("error: {e}");
-        2
-    })
+    match cli_backend(args) {
+        // The shared-registry helper keeps its PJRT default.
+        Backend::Xla => open_artifacts(&dir).map_err(|e| {
+            eprintln!("error: {e}");
+            2
+        }),
+        backend => ArtifactRegistry::open_with_backend(std::path::Path::new(&dir), 0, backend)
+            .map(Arc::new)
+            .map_err(|e| {
+                eprintln!("error: {e}");
+                2
+            }),
+    }
 }
 
 fn cmd_train(args: &Args) -> i32 {
@@ -346,7 +371,7 @@ fn cmd_serve(args: &Args) -> i32 {
         devices,
         serve_cfg.queue_cap
     );
-    match Engine::builder().artifacts(&dir).devices(devices).build() {
+    match Engine::builder().artifacts(&dir).devices(devices).backend(cli_backend(args)).build() {
         Ok(engine) => {
             let session = match engine.session(SessionConfig::with_method(method.as_str())) {
                 Ok(s) => s,

@@ -9,6 +9,7 @@
 //! `{label="v"}` for per-device series — because every line-oriented
 //! tool can parse it and CI turns it into `BENCH_net.json` fields.
 
+use crate::compile::CompileStatsSnapshot;
 use crate::serve::ServeStats;
 use crate::util::bench::LatencyPercentiles;
 use std::fmt::Write as _;
@@ -38,10 +39,17 @@ pub struct NetStats {
     pub protocol_errors: u64,
 }
 
-/// Render the metrics text: serve-layer stats, reactor counters, and the
+/// Render the metrics text: serve-layer stats, reactor counters, the
 /// wire-latency percentiles over the recent window (`latencies` is
-/// drained percentile input, micros from frame decode to reply write).
-pub fn render(serve: &ServeStats, net: &NetStats, latencies: &mut [Duration]) -> String {
+/// drained percentile input, micros from frame decode to reply write),
+/// and — when the pipeline executes through the compiled backend —
+/// the compile-plan counters summed across device runners.
+pub fn render(
+    serve: &ServeStats,
+    net: &NetStats,
+    latencies: &mut [Duration],
+    compile: Option<&CompileStatsSnapshot>,
+) -> String {
     let wire = LatencyPercentiles::from_unsorted(latencies);
     let mut out = String::with_capacity(1024);
     let mut line = |name: &str, value: u64| {
@@ -74,6 +82,14 @@ pub fn render(serve: &ServeStats, net: &NetStats, latencies: &mut [Duration]) ->
     line("net_latency_p50_us", duration_us(wire.p50));
     line("net_latency_p95_us", duration_us(wire.p95));
     line("net_latency_p99_us", duration_us(wire.p99));
+    if let Some(c) = compile {
+        line("compile_plans_cached", c.plans_cached);
+        line("compile_fused_ops", c.fused_ops);
+        line("compile_folded_consts", c.folded_consts);
+        line("compile_arena_bytes", c.arena_bytes);
+        line("compile_arena_allocs_total", c.arena_allocs);
+        line("compile_arena_reuses_total", c.arena_reuses);
+    }
     for (device, load) in serve.device_loads.iter().enumerate() {
         let _ = writeln!(out, "anode_device_load{{device=\"{device}\"}} {load}");
     }
@@ -132,7 +148,7 @@ mod tests {
     fn render_emits_scrapeable_lines() {
         let net = NetStats { connections: 5, shed: 2, ..NetStats::default() };
         let mut lat = vec![Duration::from_micros(100), Duration::from_micros(300)];
-        let text = render(&stats(), &net, &mut lat);
+        let text = render(&stats(), &net, &mut lat, None);
         assert_eq!(scrape_value(&text, "submitted_total"), Some(10));
         assert_eq!(scrape_value(&text, "submitted_batch_total"), Some(3));
         assert_eq!(scrape_value(&text, "shed_total"), Some(2));
@@ -142,6 +158,27 @@ mod tests {
         assert_eq!(scrape_value(&text, "net_latency_samples"), Some(2));
         assert_eq!(scrape_value(&text, "net_latency_p50_us"), Some(300));
         assert!(text.contains("anode_device_load{device=\"1\"} 0\n"), "{text}");
+        // Pipelines off the compiled backend export no compile series.
+        assert_eq!(scrape_value(&text, "compile_plans_cached"), None);
+    }
+
+    #[test]
+    fn render_exports_compile_counters_when_present() {
+        let compile = CompileStatsSnapshot {
+            plans_cached: 12,
+            fused_ops: 24,
+            folded_consts: 24,
+            arena_bytes: 8192,
+            arena_allocs: 2,
+            arena_reuses: 98,
+        };
+        let text = render(&stats(), &NetStats::default(), &mut [], Some(&compile));
+        assert_eq!(scrape_value(&text, "compile_plans_cached"), Some(12));
+        assert_eq!(scrape_value(&text, "compile_fused_ops"), Some(24));
+        assert_eq!(scrape_value(&text, "compile_folded_consts"), Some(24));
+        assert_eq!(scrape_value(&text, "compile_arena_bytes"), Some(8192));
+        assert_eq!(scrape_value(&text, "compile_arena_allocs_total"), Some(2));
+        assert_eq!(scrape_value(&text, "compile_arena_reuses_total"), Some(98));
     }
 
     #[test]

@@ -216,9 +216,10 @@ impl Drop for NetServer {
 
 fn render_metrics(handle: &ServeHandle, shared: &Shared) -> String {
     let serve = handle.stats();
+    let compile = handle.compile_stats();
     let net = shared.stats.lock().expect("net stats lock").clone();
     let mut lat = shared.latencies.lock().expect("net latency lock").samples.clone();
-    metrics::render(&serve, &net, &mut lat)
+    metrics::render(&serve, &net, &mut lat, compile.as_ref())
 }
 
 /// One response slot in a connection's FIFO: either still waiting on the

@@ -1,0 +1,86 @@
+//! Execution-backend selection: which engine executes module calls.
+//!
+//! A registry runs in exactly one of three modes, and every layer above it
+//! — [`super::DeviceSet`], `api::EngineBuilder`, the CLI — selects the
+//! mode through this one enum instead of ad-hoc booleans:
+//!
+//! * [`Backend::Xla`] — compile the HLO-text artifacts through PJRT
+//!   (the production path; errors on the vendored stub).
+//! * [`Backend::Sim`] — synthesize outputs through the deterministic
+//!   [`super::sim`] value model (the offline interpreter).
+//! * [`Backend::Compiled`] — lower the manifest through the typed IR of
+//!   [`crate::compile`] into fused native kernels ahead of time; calls
+//!   dispatch precompiled plans with zero per-call shape checks. Values
+//!   are bit-identical to [`Backend::Sim`] by construction (the plans
+//!   implement the same value model), so every bit-identity property of
+//!   the sharded execution stack holds across backends.
+//!
+//! Selection precedence at the engine layer: an explicit
+//! `EngineBuilder::backend` wins, then the `ANODE_BACKEND` environment
+//! variable ([`backend_env`]), then the legacy `simulate(true)` flag
+//! (an alias for [`Backend::Sim`]), then [`Backend::Xla`]. The env
+//! overriding `simulate` is deliberate: `ANODE_BACKEND=compiled` makes
+//! the whole sim-based test suite exercise the compiled path (the CI
+//! `backend-compiled` gate leg).
+
+/// Which execution engine a registry dispatches module calls to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Backend {
+    /// PJRT over the AOT HLO-text artifacts (default).
+    #[default]
+    Xla,
+    /// Deterministic simulated execution (interpreted value model).
+    Sim,
+    /// Ahead-of-time compiled fused kernels ([`crate::compile`]).
+    Compiled,
+}
+
+impl Backend {
+    /// Stable lowercase name (CLI flags, `ANODE_BACKEND`, logs).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Backend::Xla => "xla",
+            Backend::Sim => "sim",
+            Backend::Compiled => "compiled",
+        }
+    }
+
+    /// Parse the stable name back (`"xla"` / `"sim"` / `"compiled"`).
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "xla" => Some(Backend::Xla),
+            "sim" => Some(Backend::Sim),
+            "compiled" => Some(Backend::Compiled),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Backend requested by the environment: `ANODE_BACKEND=xla|sim|compiled`.
+/// Unset or unrecognized values yield `None` (callers fall back to their
+/// own default; the CLI rejects bad values loudly at flag-parse time).
+pub fn backend_env() -> Option<Backend> {
+    std::env::var("ANODE_BACKEND").ok().as_deref().and_then(Backend::parse)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_stable_names() {
+        for b in [Backend::Xla, Backend::Sim, Backend::Compiled] {
+            assert_eq!(Backend::parse(b.as_str()), Some(b));
+            assert_eq!(b.to_string(), b.as_str());
+        }
+        assert_eq!(Backend::parse(" Compiled "), Some(Backend::Compiled));
+        assert_eq!(Backend::parse("jit"), None);
+        assert_eq!(Backend::default(), Backend::Xla);
+    }
+}

@@ -14,7 +14,7 @@
 use std::path::Path;
 use std::sync::Arc;
 
-use super::{ArtifactRegistry, Result};
+use super::{ArtifactRegistry, Backend, Result};
 
 /// Device count the environment asks to simulate: `ANODE_SIM_DEVICES=N`
 /// (N >= 1). This is the same contract the vendored xla stub exposes as
@@ -39,13 +39,20 @@ impl DeviceSet {
     /// Open `count` (min 1) PJRT-backed registries over one artifact dir,
     /// pinned to device ids `0..count`.
     pub fn open(dir: &Path, count: usize) -> Result<Self> {
-        Self::build(dir, count, false, None)
+        Self::build(dir, count, Backend::Xla, None)
     }
 
     /// Open `count` (min 1) **simulated** registries — the offline
     /// multi-device harness (deterministic execution, no backend).
     pub fn open_simulated(dir: &Path, count: usize) -> Result<Self> {
-        Self::build(dir, count, true, None)
+        Self::build(dir, count, Backend::Sim, None)
+    }
+
+    /// Open `count` (min 1) registries all running `backend` — the
+    /// general constructor behind the `ANODE_BACKEND` / `--backend`
+    /// selection seam.
+    pub fn open_with_backend(dir: &Path, count: usize, backend: Backend) -> Result<Self> {
+        Self::build(dir, count, backend, None)
     }
 
     /// A single-device set around an already-open registry (the
@@ -59,15 +66,15 @@ impl DeviceSet {
     /// primary's execution mode (simulated primaries get simulated
     /// siblings).
     pub fn with_primary(reg: Arc<ArtifactRegistry>, count: usize) -> Result<Self> {
-        let sim = reg.is_simulated();
+        let backend = reg.backend();
         let dir = reg.dir().to_path_buf();
-        Self::build(&dir, count, sim, Some(reg))
+        Self::build(&dir, count, backend, Some(reg))
     }
 
     fn build(
         dir: &Path,
         count: usize,
-        sim: bool,
+        backend: Backend,
         primary: Option<Arc<ArtifactRegistry>>,
     ) -> Result<Self> {
         let count = count.max(1);
@@ -76,12 +83,7 @@ impl DeviceSet {
             devices.push(reg);
         }
         for d in devices.len()..count {
-            let reg = if sim {
-                ArtifactRegistry::open_simulated(dir, d)?
-            } else {
-                ArtifactRegistry::open_on_device(dir, d)?
-            };
-            devices.push(Arc::new(reg));
+            devices.push(Arc::new(ArtifactRegistry::open_with_backend(dir, d, backend)?));
         }
         Ok(Self { devices })
     }

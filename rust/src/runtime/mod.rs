@@ -9,11 +9,13 @@
 //! module provides the deterministic offline backend that lets the whole
 //! multi-device stack run on the vendored xla stub (rust/DESIGN.md §6d).
 
+mod backend;
 mod client;
 mod device;
 mod registry;
 pub mod sim;
 
+pub use backend::{backend_env, Backend};
 pub use client::{Executable, Result, RuntimeError, XlaRuntime};
 pub use device::{sim_devices_env, DeviceSet};
 pub use registry::{ArtifactRegistry, ModuleSpec, ParamSpec, TensorSpec};

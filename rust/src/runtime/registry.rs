@@ -15,8 +15,10 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, OnceLock, RwLock};
 
+use super::backend::Backend;
 use super::client::{Executable, Result, RuntimeError, XlaRuntime};
 use super::sim::{sim_outputs, SimBackend};
+use crate::compile::{CompileStatsSnapshot, CompiledSet};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 
@@ -78,6 +80,11 @@ pub struct ArtifactRegistry {
     /// Simulated execution: when set, `call` synthesizes outputs from the
     /// manifest specs instead of touching PJRT.
     sim: Option<SimBackend>,
+    /// Compiled execution ([`Backend::Compiled`]): every manifest module
+    /// lowered to a fused kernel plan at open time; `call` dispatches the
+    /// cached plan with no per-call spec interpretation. Takes precedence
+    /// over `sim` (a registry runs exactly one backend).
+    compiled: Option<CompiledSet>,
     /// Which device of a [`super::DeviceSet`] this registry is pinned to
     /// (0 for single-device registries).
     device_id: usize,
@@ -129,6 +136,23 @@ impl ArtifactRegistry {
         fail_module: impl Into<String>,
     ) -> Result<Self> {
         Self::open_with(dir, device_id, Some(SimBackend { fail_module: Some(fail_module.into()) }))
+    }
+
+    /// Open a registry pinned to `device_id` running the given execution
+    /// [`Backend`]. [`Backend::Compiled`] lowers **every** manifest module
+    /// through the `crate::compile` pipeline eagerly here, so a corrupt
+    /// manifest fails the open with a typed compile error rather than the
+    /// thousandth call — and the hot path never re-validates a shape.
+    pub fn open_with_backend(dir: &Path, device_id: usize, backend: Backend) -> Result<Self> {
+        match backend {
+            Backend::Xla => Self::open_with(dir, device_id, None),
+            Backend::Sim => Self::open_with(dir, device_id, Some(SimBackend::default())),
+            Backend::Compiled => {
+                let mut reg = Self::open_with(dir, device_id, None)?;
+                reg.compiled = Some(CompiledSet::compile(reg.modules.values())?);
+                Ok(reg)
+            }
+        }
     }
 
     fn open_with(dir: &Path, device_id: usize, sim: Option<SimBackend>) -> Result<Self> {
@@ -203,6 +227,7 @@ impl ArtifactRegistry {
         Ok(Self {
             runtime: OnceLock::new(),
             sim,
+            compiled: None,
             device_id,
             dir: dir.to_path_buf(),
             modules,
@@ -226,9 +251,33 @@ impl ArtifactRegistry {
     }
 
     /// Does this registry execute through the deterministic simulation
-    /// backend instead of PJRT?
+    /// backend instead of PJRT? (Strictly [`Backend::Sim`] — the compiled
+    /// backend is offline too but reports itself via [`Self::backend`].)
     pub fn is_simulated(&self) -> bool {
         self.sim.is_some()
+    }
+
+    /// Which execution backend this registry dispatches calls to.
+    pub fn backend(&self) -> Backend {
+        if self.compiled.is_some() {
+            Backend::Compiled
+        } else if self.sim.is_some() {
+            Backend::Sim
+        } else {
+            Backend::Xla
+        }
+    }
+
+    /// Snapshot of the compiled backend's live counters (plans cached,
+    /// fused ops, arena activity), if this registry runs it.
+    pub fn compile_stats(&self) -> Option<CompileStatsSnapshot> {
+        self.compiled.as_ref().map(|c| c.stats().snapshot())
+    }
+
+    /// The compiled plan set, for building fused model-level programs
+    /// over this registry ([`crate::compile::InferProgram`]).
+    pub(crate) fn compiled_set(&self) -> Option<&CompiledSet> {
+        self.compiled.as_ref()
     }
 
     /// The PJRT runtime, created on first use. Two threads racing here both
@@ -327,11 +376,14 @@ impl ArtifactRegistry {
 
     /// Execute a module, validating input shapes against the manifest.
     ///
-    /// PJRT-backed registries compile lazily and run the artifact;
-    /// simulated registries synthesize deterministic outputs from the
-    /// manifest output specs (same validation, no backend).
+    /// The spec is **borrowed**, not cloned — the manifest tables are
+    /// immutable after `open`, so the hot path carries no per-call
+    /// allocation for the spec. Compiled registries dispatch the cached
+    /// fused-kernel plan; simulated registries synthesize deterministic
+    /// outputs from the manifest output specs; PJRT-backed registries
+    /// compile lazily and run the artifact.
     pub fn call(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        let spec = self.module_spec(name)?.clone();
+        let spec = self.module_spec(name)?;
         if inputs.len() != spec.inputs.len() {
             return Err(RuntimeError::Shape(format!(
                 "{name}: expected {} inputs, got {}",
@@ -349,20 +401,51 @@ impl ArtifactRegistry {
                 )));
             }
         }
+        self.dispatch(spec, inputs)
+    }
+
+    /// [`Self::call`] minus the per-input shape loop — only the input
+    /// *count* is checked. For callers whose inputs are shape-validated
+    /// at the API boundary and then flow through a fixed module sequence
+    /// (the execution core's training/inference loops), re-validating
+    /// every tensor on every call is pure overhead; this is the trusted
+    /// hot path. Unknown modules and wrong arity still fail typed.
+    pub fn call_trusted(&self, name: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        let spec = self.module_spec(name)?;
+        if inputs.len() != spec.inputs.len() {
+            return Err(RuntimeError::Shape(format!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        self.dispatch(spec, inputs)
+    }
+
+    /// Backend dispatch shared by [`Self::call`] and [`Self::call_trusted`]:
+    /// compiled plan → simulation (with fault injection) → PJRT.
+    fn dispatch(&self, spec: &ModuleSpec, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        if let Some(set) = &self.compiled {
+            let plan = set.plan(&spec.name).ok_or_else(|| {
+                RuntimeError::Io(format!("module {} missing from compiled set", spec.name))
+            })?;
+            return plan.execute(inputs);
+        }
         if let Some(sim) = &self.sim {
-            if sim.fail_module.as_deref() == Some(name) {
+            if sim.fail_module.as_deref() == Some(spec.name.as_str()) {
                 return Err(RuntimeError::Xla(format!(
-                    "sim device {}: injected fault executing {name}",
-                    self.device_id
+                    "sim device {}: injected fault executing {}",
+                    self.device_id, spec.name
                 )));
             }
-            return sim_outputs(name, inputs, &spec.outputs);
+            return sim_outputs(&spec.name, inputs, &spec.outputs);
         }
-        let exe = self.get(name)?;
+        let exe = self.get(&spec.name)?;
         let outs = exe.call(inputs)?;
         if outs.len() != spec.outputs.len() {
             return Err(RuntimeError::Shape(format!(
-                "{name}: expected {} outputs, got {}",
+                "{}: expected {} outputs, got {}",
+                spec.name,
                 spec.outputs.len(),
                 outs.len()
             )));

@@ -36,17 +36,34 @@ pub(crate) struct SimBackend {
     pub fail_module: Option<String>,
 }
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 const FNV_PRIME: u64 = 0x1_0000_0001_b3;
 
-fn mix(h: u64, v: u64) -> u64 {
+/// The one FNV-style mixing step of the deterministic value model.
+///
+/// `pub(crate)` because the compiled backend ([`crate::compile`]) lowers
+/// the *same* value model to fused kernels: sharing the primitive is what
+/// makes "compiled ≡ sim, bitwise" a structural property instead of two
+/// hand-synchronized copies of the constants.
+pub(crate) fn mix(h: u64, v: u64) -> u64 {
     (h ^ v).wrapping_mul(FNV_PRIME)
 }
 
 /// Map a hash to a small centered float in [-0.5, 0.5) — always finite,
 /// so simulated losses/gradients never trip the divergence guards.
-fn centered(h: u64) -> f32 {
+/// Shared with [`crate::compile`] for the same reason as [`mix`].
+pub(crate) fn centered(h: u64) -> f32 {
     ((h % 1_000_003) as f32 / 1_000_003.0) - 0.5
+}
+
+/// FNV digest of a module name — the compile-time-constant prefix of the
+/// value model ([`crate::compile`] folds it into each plan's seed).
+pub(crate) fn name_digest(name: &str) -> u64 {
+    let mut digest = FNV_OFFSET;
+    for b in name.bytes() {
+        digest = mix(digest, u64::from(b));
+    }
+    digest
 }
 
 /// Synthesize a module call's outputs from (name, inputs, output specs).
@@ -61,10 +78,7 @@ pub fn sim_outputs(name: &str, inputs: &[&Tensor], outputs: &[TensorSpec]) -> Re
              must carry full output specs (see runtime::sim::write_artifacts)"
         )));
     }
-    let mut digest = FNV_OFFSET;
-    for b in name.bytes() {
-        digest = mix(digest, u64::from(b));
-    }
+    let mut digest = name_digest(name);
     for t in inputs {
         digest = mix(digest, t.data().len() as u64);
         for &v in t.data() {

@@ -69,6 +69,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::api::session::{argmax_rows, head_logits, infer_batch, PredictStats, Prediction};
+use crate::compile::CompileStatsSnapshot;
 use crate::coordinator::ExecutionCore;
 use crate::memory::{Category, MemoryLedger};
 use crate::runtime::{Result, RuntimeError};
@@ -156,6 +157,14 @@ pub trait BatchRunner: Send + Sync + 'static {
     fn validate_swap(&self, params: &[Tensor]) -> Result<()> {
         let _ = params;
         Err(RuntimeError::Io("serve: this runner does not support parameter hot-swap".into()))
+    }
+
+    /// Snapshot of this runner's compiled-backend counters (plan cache,
+    /// fusion, arena activity), when it executes through
+    /// [`crate::runtime::Backend::Compiled`]. Runners on other backends
+    /// keep this default `None`; the metrics endpoint sums the rest.
+    fn compile_stats(&self) -> Option<CompileStatsSnapshot> {
+        None
     }
 }
 
@@ -620,6 +629,20 @@ impl ServeHandle {
         self.inner.pools.len()
     }
 
+    /// Aggregate compiled-backend counters across every device runner
+    /// (summed via [`CompileStatsSnapshot::absorb`]), or `None` when no
+    /// runner executes through the compiled backend — what the
+    /// `net::metrics` endpoint exports as `anode_compile_*`.
+    pub fn compile_stats(&self) -> Option<CompileStatsSnapshot> {
+        let mut total: Option<CompileStatsSnapshot> = None;
+        for runner in &self.inner.runners {
+            if let Some(snap) = runner.compile_stats() {
+                total.get_or_insert_with(CompileStatsSnapshot::default).absorb(&snap);
+            }
+        }
+        total
+    }
+
     /// The AOT batch capacity the queue coalesces toward.
     pub fn batch_size(&self) -> usize {
         self.inner.batch
@@ -915,6 +938,10 @@ impl BatchRunner for SessionRunner {
 
     fn validate_swap(&self, params: &[Tensor]) -> Result<()> {
         check_swap_shapes(params, &self.snapshot())
+    }
+
+    fn compile_stats(&self) -> Option<CompileStatsSnapshot> {
+        self.core.reg.compile_stats()
     }
 }
 

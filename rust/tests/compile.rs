@@ -1,0 +1,349 @@
+//! Compile-pipeline tests (`anode::compile` — rust/DESIGN.md §6f).
+//!
+//! The lock-ins: (1) compiled plans are **bit-identical** to the sim
+//! interpreter for every manifest module; (2) DCE actually removes
+//! unreferenced op chains — and lowering *requires* it to; (3) shape
+//! inference rejects mismatched manifests at compile time with typed
+//! errors; (4) fusion preserves the primitive-op accounting; (5) the
+//! fused inference program's liveness-planned arena reuses slots and
+//! performs zero steady-state allocations; (6) corrupt manifests fail
+//! the compiled open with an error — never a panic.
+
+use std::path::PathBuf;
+
+use anode::compile::{
+    build_module_ir, compile_module, passes, plan::assign_slots, CompileError, InferCall,
+    InferProgram, Op, OpKind,
+};
+use anode::runtime::sim::{write_artifacts, SimSpec};
+use anode::runtime::{ArtifactRegistry, Backend, ModuleSpec, TensorSpec};
+use anode::tensor::Tensor;
+
+/// Write the sim artifact set into a fresh temp dir.
+fn sim_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("anode_compile_{}_{tag}", std::process::id()));
+    write_artifacts(&dir, &SimSpec::default()).unwrap();
+    dir
+}
+
+fn tensor_spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.into(), shape: shape.to_vec(), dtype: "f32".into() }
+}
+
+fn module_spec(name: &str, ins: &[&[usize]], outs: &[&[usize]]) -> ModuleSpec {
+    ModuleSpec {
+        name: name.into(),
+        file: format!("{name}.hlo.txt"),
+        inputs: ins.iter().enumerate().map(|(i, s)| tensor_spec(&format!("i{i}"), s)).collect(),
+        outputs: outs.iter().enumerate().map(|(o, s)| tensor_spec(&format!("o{o}"), s)).collect(),
+    }
+}
+
+/// Deterministic input data for a declared shape.
+fn input_tensor(shape: &[usize], seed: usize) -> Tensor {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    let data = (0..n).map(|j| ((seed * 37 + j) % 101) as f32 * 0.25 - 12.5).collect();
+    Tensor::from_vec(shape.to_vec(), data).unwrap()
+}
+
+/// Every manifest module, called through the sim interpreter and through
+/// its compiled plan, must produce bitwise-identical outputs — the core
+/// claim of the compiled backend (shared value-model primitives make
+/// this structural; the test locks the structure in).
+#[test]
+fn compiled_plans_bitwise_equal_to_sim_for_every_module() {
+    let dir = sim_dir("bitwise");
+    let sim = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Sim).unwrap();
+    let compiled = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled).unwrap();
+    assert_eq!(sim.backend(), Backend::Sim);
+    assert_eq!(compiled.backend(), Backend::Compiled);
+
+    let names: Vec<String> = sim.module_names().iter().map(|n| n.to_string()).collect();
+    assert!(!names.is_empty());
+    for (k, name) in names.iter().enumerate() {
+        let shapes: Vec<Vec<usize>> =
+            sim.module_spec(name).unwrap().inputs.iter().map(|t| t.shape.clone()).collect();
+        let inputs: Vec<Tensor> =
+            shapes.iter().enumerate().map(|(i, s)| input_tensor(s, k * 11 + i)).collect();
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let a = sim.call(name, &refs).unwrap();
+        let b = compiled.call(name, &refs).unwrap();
+        assert_eq!(a.len(), b.len(), "{name}: output arity diverged");
+        for (oi, (ta, tb)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(ta.shape(), tb.shape(), "{name} output {oi}: shape diverged");
+            let bits_a: Vec<u32> = ta.data().iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = tb.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "{name} output {oi}: bits diverged");
+        }
+        // The trusted path dispatches the same plans.
+        let c = compiled.call_trusted(name, &refs).unwrap();
+        for (ta, tc) in a.iter().zip(&c) {
+            assert_eq!(ta.data(), tc.data(), "{name}: trusted dispatch diverged");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The compiled open eagerly caches a plan for every manifest module and
+/// the pass counters carry the expected per-module structure: the whole
+/// pre-data prefix folds (NameDigest + first MixLen = 2 per module) and
+/// every module fuses at least its absorb chain.
+#[test]
+fn compiled_open_caches_every_module_with_pass_accounting() {
+    let dir = sim_dir("cache");
+    let reg = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled).unwrap();
+    let stats = reg.compile_stats().expect("compiled registries expose stats");
+    let modules = reg.module_names().len() as u64;
+    assert_eq!(stats.plans_cached, modules);
+    assert_eq!(stats.folded_consts, 2 * modules, "pre-data prefix folds per module");
+    assert!(stats.fused_ops >= modules, "every absorb chain must fuse: {stats:?}");
+    assert_eq!(stats.arena_allocs, 0, "no arena activity before any fused program runs");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// DCE removes unreferenced op chains — and lowering depends on it: a
+/// grafted dead chain makes the raw IR non-lowerable (the digest graph
+/// is no longer a single chain), while the DCE'd IR lowers to exactly
+/// the plan of the clean module.
+#[test]
+fn dce_removes_unreferenced_chains_and_unblocks_lowering() {
+    let spec = module_spec("m", &[&[4], &[2]], &[&[3]]);
+    let clean = compile_module(&spec).unwrap();
+
+    let mut ir = build_module_ir(&spec).unwrap();
+    let id = ir.fresh_id();
+    ir.ops.push(Op { id, kind: OpKind::NameDigest });
+    ir.ops.push(Op { id: id + 1, kind: OpKind::MixLen { src: id, len: 9 } });
+    ir.ops.push(Op { id: id + 2, kind: OpKind::AbsorbData { src: id + 1, input: 0 } });
+
+    let err = anode::compile::plan::lower_module(&ir).unwrap_err();
+    assert!(
+        matches!(err, CompileError::Unsupported { ref reason, .. } if reason.contains("chain")),
+        "dead code must make raw lowering fail typed: {err}"
+    );
+
+    let removed = passes::dce(&mut ir);
+    assert_eq!(removed, 3, "the whole grafted chain is unreachable");
+    let lowered = anode::compile::plan::lower_module(&ir).unwrap();
+    // The DCE'd raw IR and the fully passed pipeline compute the same
+    // function — same bits on the same inputs.
+    let inputs = [input_tensor(&[4], 1), input_tensor(&[2], 2)];
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let a = lowered.execute(&refs).unwrap();
+    let b = clean.execute(&refs).unwrap();
+    assert_eq!(a[0].data(), b[0].data(), "lowering paths diverged");
+}
+
+/// Cross-module shape inference over an inference chain: every way a
+/// manifest (or chain) can disagree surfaces as the matching typed
+/// [`CompileError`] at build time — never at call time.
+#[test]
+fn infer_chain_shape_inference_rejects_mismatches_with_typed_errors() {
+    let dir = sim_dir("shapes");
+    let reg = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled).unwrap();
+    let layout: Vec<Vec<usize>> =
+        reg.param_layout("resnet10").unwrap().iter().map(|p| p.shape.clone()).collect();
+    let call = |module: &str, params: &[usize]| InferCall {
+        module: module.into(),
+        params: params.to_vec(),
+    };
+
+    let err = InferProgram::build(&reg, &[call("nope", &[])], &layout).unwrap_err();
+    assert_eq!(err, CompileError::MissingModule { module: "nope".into() });
+
+    let err = InferProgram::build(&reg, &[call("stem_fwd", &[0])], &layout).unwrap_err();
+    assert!(matches!(err, CompileError::ArityMismatch { expected: 3, found: 2, .. }), "{err}");
+
+    // Swapped parameter indices: w receives b's shape.
+    let err = InferProgram::build(&reg, &[call("stem_fwd", &[1, 0])], &layout).unwrap_err();
+    assert!(
+        matches!(err, CompileError::ShapeMismatch { ref module, ref input, .. }
+            if module == "stem_fwd" && input == "w"),
+        "{err}"
+    );
+
+    // Chained activation mismatch: stem output feeds stem input again.
+    let chain = [call("stem_fwd", &[0, 1]), call("stem_fwd", &[0, 1])];
+    let err = InferProgram::build(&reg, &chain, &layout).unwrap_err();
+    assert!(
+        matches!(err, CompileError::ShapeMismatch { ref input, .. } if input == "x"),
+        "{err}"
+    );
+
+    // Multi-output modules cannot join a fused single-activation chain.
+    let err = InferProgram::build(&reg, &[call("head10_loss_grad", &[8, 9, 1])], &layout)
+        .unwrap_err();
+    assert!(
+        matches!(err, CompileError::Unsupported { ref reason, .. }
+            if reason.contains("single-output")),
+        "{err}"
+    );
+
+    // A sim registry has no compiled set to build against.
+    let sim = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Sim).unwrap();
+    let err = InferProgram::build(&sim, &[call("stem_fwd", &[0, 1])], &layout).unwrap_err();
+    assert!(
+        matches!(err, CompileError::Unsupported { ref reason, .. }
+            if reason.contains("compiled backend")),
+        "{err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Fusion preserves the primitive-op accounting on every real manifest
+/// module: the plan covers exactly the primitives of its unfused IR.
+#[test]
+fn fusion_preserves_op_count_accounting_across_the_manifest() {
+    let dir = sim_dir("fusion");
+    let reg = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Sim).unwrap();
+    for name in reg.module_names() {
+        let spec = reg.module_spec(name).unwrap();
+        let raw = build_module_ir(spec).unwrap();
+        let primitives = raw.primitive_count();
+        let plan = compile_module(spec).unwrap();
+        assert_eq!(
+            plan.primitive_count(),
+            primitives,
+            "{name}: fusion must account for every primitive"
+        );
+        assert!(plan.fused_ops() >= 1, "{name}: the absorb chain must fuse");
+        assert_eq!(plan.folded_consts(), 2, "{name}: the pre-data prefix folds");
+        assert_eq!(plan.input_count(), spec.inputs.len());
+        assert_eq!(plan.output_count(), spec.outputs.len());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Liveness-interval slot assignment: a linear chain ping-pongs two
+/// slots (a value can never alias an operand still being read), slots
+/// size to their largest resident, and disjoint lifetimes share.
+#[test]
+fn assign_slots_reuses_buffers_without_aliasing() {
+    // Linear chain: v0 read by v1's def, v2 reuses v0's slot.
+    let (slots, sizes) = assign_slots(&[(0, 1, 10), (1, 2, 4), (2, 3, 6)]);
+    assert_eq!(slots, vec![0, 1, 0]);
+    assert_eq!(sizes, vec![10, 4]);
+
+    // Adjacent values must not share: v1 is defined while v0 is read.
+    let (slots, _) = assign_slots(&[(0, 1, 8), (1, 2, 8)]);
+    assert_eq!(slots, vec![0, 1], "in/out aliasing would corrupt the digest");
+
+    // Disjoint lifetimes share one slot sized to the max.
+    let (slots, sizes) = assign_slots(&[(0, 1, 5), (2, 3, 7)]);
+    assert_eq!(slots, vec![0, 0]);
+    assert_eq!(sizes, vec![7]);
+}
+
+/// The fused inference program: bit-identical to the sequential
+/// module-call chain, two arena slots for the linear forward, and zero
+/// steady-state allocations (the pool hands the arena back after the
+/// first run — the shared counters prove it).
+#[test]
+fn infer_program_arena_reuse_and_bitwise_identity() {
+    let dir = sim_dir("arena");
+    let reg = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled).unwrap();
+    let layout: Vec<Vec<usize>> =
+        reg.param_layout("resnet10").unwrap().iter().map(|p| p.shape.clone()).collect();
+    // The SimSpec::default forward: stem → s0 block → trans0 → s1 block.
+    let chain = [
+        InferCall { module: "stem_fwd".into(), params: vec![0, 1] },
+        InferCall { module: "block_resnet_s0_euler_fwd".into(), params: vec![2, 3] },
+        InferCall { module: "trans0_fwd".into(), params: vec![4, 5] },
+        InferCall { module: "block_resnet_s1_euler_fwd".into(), params: vec![6, 7] },
+    ];
+    let prog = InferProgram::build(&reg, &chain, &layout).unwrap();
+    assert_eq!(prog.len(), chain.len());
+    assert_eq!(prog.slot_count(), 2, "a linear chain ping-pongs two slots");
+    assert_eq!(prog.out_shape(), &[4, 4, 4, 8]);
+    // Stage-0 activations are [4, 8, 8, 4] = 1024 elements; both slots
+    // size to that largest resident.
+    let act0 = 1024usize;
+    assert_eq!(
+        prog.arena_bytes(),
+        2 * act0 * std::mem::size_of::<f32>(),
+        "both slots size to the stage-0 activation"
+    );
+
+    let params = reg.load_params("resnet10").unwrap();
+    let x = SimSpec::default().image_batch(7);
+
+    // Sequential reference through the registry.
+    let mut z = reg.call("stem_fwd", &[&x, &params[0], &params[1]]).unwrap().remove(0);
+    z = reg
+        .call("block_resnet_s0_euler_fwd", &[&z, &params[2], &params[3]])
+        .unwrap()
+        .remove(0);
+    z = reg.call("trans0_fwd", &[&z, &params[4], &params[5]]).unwrap().remove(0);
+    z = reg
+        .call("block_resnet_s1_euler_fwd", &[&z, &params[6], &params[7]])
+        .unwrap()
+        .remove(0);
+
+    let before = reg.compile_stats().unwrap();
+    assert_eq!(before.arena_allocs, 0);
+    let y1 = prog.run(&x, &params).unwrap();
+    let y2 = prog.run(&x, &params).unwrap();
+    assert_eq!(y1.data(), z.data(), "fused program diverged from the sequential chain");
+    assert_eq!(y1.data(), y2.data(), "rerun must be deterministic");
+
+    let after = reg.compile_stats().unwrap();
+    assert_eq!(after.arena_allocs, 1, "exactly one warmup allocation");
+    assert_eq!(after.arena_reuses, 1, "the second run reuses the pooled arena");
+    assert_eq!(after.arena_bytes, prog.arena_bytes() as u64);
+
+    // Steady state: ten more runs, zero further allocations.
+    for _ in 0..10 {
+        prog.run(&x, &params).unwrap();
+    }
+    let steady = reg.compile_stats().unwrap();
+    assert_eq!(steady.arena_allocs, 1, "steady state must not allocate");
+    assert_eq!(steady.arena_reuses, 11);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Corrupt-manifest fuzz: targeted mutations and deterministic
+/// truncations of a valid manifest. Opening the compiled backend must
+/// return an error in every case — never panic, never defer the failure
+/// to call time.
+#[test]
+fn corrupt_manifests_fail_compiled_open_without_panicking() {
+    let dir = sim_dir("fuzz");
+    let manifest_path = dir.join("manifest.json");
+    let pristine = std::fs::read_to_string(&manifest_path).unwrap();
+
+    // Sanity: the pristine manifest compiles.
+    assert!(ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled).is_ok());
+
+    let zero_dim = pristine
+        .replace("{\"name\":\"loss\",\"shape\":[1]", "{\"name\":\"loss\",\"shape\":[1,0]");
+    let no_outputs = pristine.replace(
+        "\"outputs\":[{\"name\":\"z\",",
+        "\"outputs\":[],\"unused\":[{\"name\":\"z\",",
+    );
+    let mutations: Vec<(&str, String)> = vec![
+        ("unsupported dtype", pristine.replacen("\"f32\"", "\"i32\"", 1)),
+        ("zero-dim output", zero_dim),
+        ("no outputs", no_outputs),
+        ("not json", pristine.replace(':', ";")),
+        ("empty file", String::new()),
+    ];
+    for (what, text) in &mutations {
+        assert_ne!(text, &pristine, "mutation `{what}` must change the manifest");
+        std::fs::write(&manifest_path, text).unwrap();
+        let result = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled);
+        assert!(result.is_err(), "mutation `{what}` must fail the compiled open");
+    }
+
+    // Deterministic truncation sweep — malformed JSON at every cut.
+    for i in 1..8 {
+        let cut = pristine.len() * i / 8;
+        std::fs::write(&manifest_path, &pristine[..cut]).unwrap();
+        let result = ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled);
+        assert!(result.is_err(), "truncation at {cut} bytes must fail the open");
+    }
+
+    // Restore: the artifacts open again (no state was corrupted).
+    std::fs::write(&manifest_path, &pristine).unwrap();
+    assert!(ArtifactRegistry::open_with_backend(&dir, 0, Backend::Compiled).is_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -24,7 +24,7 @@ use anode::api::{argmax_rows, Engine, Prediction, PredictStats, SessionConfig};
 use anode::memory::{Category, MemoryLedger};
 use anode::models::ModelConfig;
 use anode::runtime::sim::{write_artifacts, SimSpec};
-use anode::runtime::{sim_devices_env, ArtifactRegistry, Result};
+use anode::runtime::{sim_devices_env, ArtifactRegistry, Backend, Result};
 use anode::serve::{BatchRunner, Pending, ServeConfig, ServeHandle};
 use anode::tensor::Tensor;
 use anode::util::pool::{sharded_map_with, PersistentPool, ShardRouter};
@@ -504,10 +504,143 @@ fn device_topology_is_visible_end_to_end() {
         assert_eq!(engine.device_set().count(), devices);
         for d in 0..devices {
             assert_eq!(engine.device_set().registry(d).device_id(), d);
-            assert!(engine.device_set().registry(d).is_simulated());
+            // `simulate(true)` resolves to an offline backend — Sim by
+            // default, Compiled when `ANODE_BACKEND` retargets the suite.
+            assert_ne!(engine.device_set().registry(d).backend(), Backend::Xla);
         }
         let session = engine.session(SessionConfig::default()).unwrap();
         assert_eq!(session.device_count(), devices);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Backend axis: sim interpreter vs compiled kernel plans
+// ---------------------------------------------------------------------------
+
+/// An engine pinned to an explicit execution backend. The backend axis
+/// must stay meaningful under the CI `ANODE_BACKEND` legs, so these
+/// tests never rely on default resolution (explicit builder choice beats
+/// the environment).
+fn backend_engine(dir: &Path, devices: usize, backend: Backend) -> Engine {
+    Engine::builder().artifacts(dir).devices(devices).backend(backend).build().unwrap()
+}
+
+/// The backend axis on the training grid: the compiled plans must be
+/// bit-identical to the sim interpreter for every (devices × workers ×
+/// strategy) combination — per-step losses, final params, and ledger
+/// traffic. This is the lock-in for the compiled backend's core claim:
+/// same values, fewer per-call costs.
+#[test]
+fn backend_axis_training_grid_compiled_bitwise_equal_to_sim() {
+    let dir = sim_dir("backend_train");
+    let sim_serial = backend_engine(&dir, 1, Backend::Sim);
+    assert_eq!(sim_serial.device_set().registry(0).backend(), Backend::Sim);
+    let compiled: Vec<(usize, Engine)> = device_grid()
+        .into_iter()
+        .map(|d| (d, backend_engine(&dir, d, Backend::Compiled)))
+        .collect();
+    for (devices, engine) in &compiled {
+        for d in 0..*devices {
+            let reg = engine.device_set().registry(d);
+            assert_eq!(reg.backend(), Backend::Compiled);
+            let stats = reg.compile_stats().expect("compiled registries expose plan stats");
+            assert!(stats.plans_cached > 0, "eager compile must cache the manifest modules");
+        }
+    }
+    for method in STRATEGIES {
+        let (loss_ref, params_ref, traffic_ref) = train_run(&sim_serial, method, 1, 2);
+        for (devices, engine) in &compiled {
+            for workers in [1usize, 2, 4] {
+                let (loss, params, traffic) = train_run(engine, method, workers, 2);
+                assert_eq!(
+                    loss_ref, loss,
+                    "{method}: compiled losses diverged at devices={devices} workers={workers}"
+                );
+                assert_eq!(
+                    params_ref, params,
+                    "{method}: compiled params diverged at devices={devices} workers={workers}"
+                );
+                assert_eq!(
+                    traffic_ref, traffic,
+                    "{method}: compiled ledger traffic diverged at devices={devices} \
+                     workers={workers}"
+                );
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The backend axis on the prediction and serving paths: the compiled
+/// engine's fused inference program must reproduce the sim serial logits
+/// and replies bitwise across the (devices × workers) grid, with ledger
+/// traffic equal to serial (the compiled path changes execution, never
+/// the memory model).
+#[test]
+fn backend_axis_predict_and_serve_compiled_match_sim_serial() {
+    let dir = sim_dir("backend_predict");
+    let sim_serial = backend_engine(&dir, 1, Backend::Sim);
+    let cfg = sim_serial.config().clone();
+    let batches: Vec<Tensor> = (0..4).map(|k| image(&cfg, 300 + k)).collect();
+    let serial_session = sim_serial.session(SessionConfig::with_method("anode")).unwrap();
+    let expected = serial_session.predict_batches_with_workers(&batches, 1).unwrap();
+
+    for devices in device_grid() {
+        let engine = backend_engine(&dir, devices, Backend::Compiled);
+        let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+        for workers in [1usize, 2, 4] {
+            let par = session.predict_batches_with_workers(&batches, workers).unwrap();
+            assert_eq!(par.predictions.len(), expected.predictions.len());
+            for (s, p) in expected.predictions.iter().zip(&par.predictions) {
+                assert_eq!(s.classes, p.classes, "devices={devices} workers={workers}");
+                assert_eq!(
+                    s.logits.data(),
+                    p.logits.data(),
+                    "compiled logits diverged at devices={devices} workers={workers}"
+                );
+            }
+            assert_eq!(
+                par.memory.total_traffic(),
+                expected.memory.total_traffic(),
+                "devices={devices} workers={workers}"
+            );
+            assert_eq!(par.memory.unknown_frees(), 0);
+        }
+
+        // One serve pass per device count locks the wire path in too.
+        let config = ServeConfig::default().max_delay_ms(600_000).workers(2).queue_cap(256);
+        let handle = session.serve(config).unwrap();
+        assert_eq!(handle.device_count(), devices);
+        let mut pendings: Vec<Pending> = Vec::new();
+        for batch in &batches {
+            for ex in anode::serve::split_examples(batch).unwrap() {
+                pendings.push(handle.submit(ex).unwrap());
+            }
+        }
+        let mut idx = 0usize;
+        for pred in &expected.predictions {
+            let k = *pred.logits.shape().last().unwrap();
+            for r in 0..cfg.batch {
+                let reply =
+                    pendings[idx].wait_timeout(WAIT).unwrap().expect("serve reply timed out");
+                assert_eq!(reply.class, pred.classes[r], "request {idx} devices={devices}");
+                assert_eq!(
+                    reply.logits.data(),
+                    &pred.logits.data()[r * k..(r + 1) * k],
+                    "request {idx} devices={devices}"
+                );
+                idx += 1;
+            }
+        }
+        let report = handle.shutdown().unwrap();
+        assert_eq!(report.requests, (batches.len() * cfg.batch) as u64);
+        assert_eq!(
+            report.memory.total_traffic(),
+            expected.memory.total_traffic(),
+            "compiled serve ledger traffic diverged from sim serial predict \
+             (devices={devices})"
+        );
     }
     std::fs::remove_dir_all(&dir).ok();
 }
