@@ -1,0 +1,217 @@
+//! `rollout_throughput` — the train→canary→promote/rollback orchestrator
+//! (`anode::rollout`) over the simulated-device harness, emitted to
+//! `BENCH_rollout.json`. Runs on every build (no real artifacts needed):
+//!
+//! 1. **Campaign under live traffic** — a promotion campaign runs on the
+//!    caller's thread while a background client keeps the same pipeline
+//!    busy; reports snapshot→swap promotion latency (p50/max), the
+//!    serve-side p50/p95/p99 observed *during* the campaign, and the
+//!    pipeline's own p99 for batches that completed inside a swap window
+//!    (`rollout_swap_p99_us`).
+//! 2. **Rollback detection** — a fault-injected device fails the canary
+//!    step; reports the regression→last-good-swap latency.
+//! 3. **Bit identity** — after the campaign, a far-deadline pipeline
+//!    over the promoted snapshot must answer bitwise what the trainer's
+//!    `predict_batches` answers. This is the flag the CI baseline gate
+//!    (`bench_check`) hard-fails on.
+//!
+//! `cargo bench --bench rollout_throughput`; `ANODE_BENCH_QUICK=1`
+//! shrinks the round count for the CI bench-smoke job while still
+//! writing the full `BENCH_rollout.json` artifact.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anode::api::{Engine, Session, SessionConfig};
+use anode::rollout::{RolloutConfig, RolloutOrchestrator};
+use anode::runtime::sim::{write_artifacts, SimSpec};
+use anode::runtime::ArtifactRegistry;
+use anode::serve::{split_examples, ServeConfig, ServeHandle};
+use anode::tensor::Tensor;
+use anode::util::bench::{percentile, quick_mode};
+
+const DEVICES: usize = 2;
+
+fn main() {
+    println!("=== rollout_throughput — canary campaigns on simulated devices ===\n");
+    let quick = quick_mode();
+    let rounds = if quick { 4 } else { 12 };
+    let canary_every = 2;
+
+    let dir = std::env::temp_dir().join(format!("anode_bench_rollout_{}", std::process::id()));
+    if let Err(e) = write_artifacts(&dir, &SimSpec::default()) {
+        eprintln!("could not write sim artifacts: {e} — skipping rollout_throughput");
+        return;
+    }
+    let engine =
+        Engine::builder().artifacts(&dir).devices(DEVICES).simulate(true).build().unwrap();
+    let spec = SimSpec::default();
+    let train: Vec<(Tensor, Tensor)> =
+        (0..4).map(|k| (spec.image_batch(k), spec.label_batch(k))).collect();
+    let eval: Vec<(Tensor, Tensor)> =
+        (0..2).map(|k| (spec.image_batch(100 + k), spec.label_batch(100 + k))).collect();
+
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let serve_cfg = ServeConfig::default().max_delay_ms(2).workers(2).queue_cap(512);
+    let handle = session.serve(serve_cfg).unwrap();
+
+    // Scenario 1: promotion campaign with a background client hammering
+    // the same pipeline the whole time.
+    let stop = Arc::new(AtomicBool::new(false));
+    let traffic = spawn_traffic(&handle, &spec, stop.clone());
+    let config =
+        RolloutConfig::default().rounds(rounds).canary_every(canary_every).gate_threshold(10.0);
+    let report = session.rollout(&handle, &train, &eval, config).unwrap();
+    stop.store(true, Ordering::SeqCst);
+    let mut serve_lat = traffic.join().unwrap();
+    let (serve_p50, serve_p95, serve_p99) = pct_ms(&mut serve_lat);
+
+    let mut promote_ms: Vec<f64> =
+        report.promote_latency.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+    promote_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let promote_p50 = promote_ms.get(promote_ms.len() / 2).copied().unwrap_or(0.0);
+    let promote_max = promote_ms.last().copied().unwrap_or(0.0);
+    let stats = handle.stats();
+    println!("--- campaign under live traffic ({rounds} rounds, {DEVICES} devices) ---");
+    println!(
+        "promotions={} rollbacks={} baseline_loss={:.4} wall={:.1}ms",
+        report.promotions,
+        report.rollbacks,
+        report.baseline_loss,
+        report.wall.as_secs_f64() * 1e3
+    );
+    println!("promote latency p50={promote_p50:.3}ms max={promote_max:.3}ms");
+    println!(
+        "serve during campaign p50={serve_p50:.3}ms p95={serve_p95:.3}ms p99={serve_p99:.3}ms \
+         ({} samples); swap-window batch p99={}us",
+        serve_lat.len(),
+        stats.rollout_swap_p99_us
+    );
+
+    // Scenario 3 (while the pipeline is still up): bit identity of the
+    // promoted snapshot. A far-deadline sibling pipeline reassembles the
+    // exact batches, so replies must match predict_batches bitwise.
+    let bit_identical = bit_identity(&session, &spec);
+    println!("\n--- bit identity after promotion: {bit_identical} ---");
+    handle.shutdown().unwrap();
+
+    // Scenario 2: rollback detection with a fault-injected device 0.
+    let rollback_detect_ms = rollback_detection(&dir, &train, &eval);
+
+    let json = format!(
+        "{{\n  \"bench\": \"rollout_throughput\",\n  \"mode\": \"sim\",\n  \
+         \"devices\": {DEVICES},\n  \"rounds\": {rounds},\n  \
+         \"canary_every\": {canary_every},\n  \
+         \"promotions\": {},\n  \"rollbacks\": {},\n  \
+         \"promote_p50_ms\": {promote_p50:.4},\n  \"promote_max_ms\": {promote_max:.4},\n  \
+         \"serve_during_p50_ms\": {serve_p50:.4},\n  \
+         \"serve_during_p95_ms\": {serve_p95:.4},\n  \
+         \"serve_during_p99_ms\": {serve_p99:.4},\n  \
+         \"swap_window_p99_us\": {},\n  \
+         \"rollback_detect_ms\": {rollback_detect_ms:.4},\n  \
+         \"bit_identical\": {bit_identical}\n}}\n",
+        report.promotions, report.rollbacks, stats.rollout_swap_p99_us,
+    );
+    match std::fs::write("BENCH_rollout.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_rollout.json"),
+        Err(e) => eprintln!("could not write BENCH_rollout.json: {e}"),
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Sort and summarize as (p50, p95, p99) in milliseconds.
+fn pct_ms(lat: &mut [Duration]) -> (f64, f64, f64) {
+    lat.sort();
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    if lat.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    (ms(percentile(lat, 50.0)), ms(percentile(lat, 95.0)), ms(percentile(lat, 99.0)))
+}
+
+/// Background client: submit examples in a loop until `stop`, recording
+/// each reply's end-to-end pipeline latency.
+fn spawn_traffic(
+    handle: &ServeHandle,
+    spec: &SimSpec,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<Vec<Duration>> {
+    let handle = handle.clone();
+    let examples = split_examples(&spec.image_batch(999)).unwrap();
+    std::thread::spawn(move || {
+        let mut lat = Vec::new();
+        while !stop.load(Ordering::SeqCst) {
+            let pendings: Vec<_> =
+                examples.iter().map(|ex| handle.submit(ex.clone()).unwrap()).collect();
+            for p in pendings {
+                lat.push(p.wait().unwrap().stats.total());
+            }
+        }
+        lat
+    })
+}
+
+/// Serve the promoted snapshot through a full-batch pipeline and compare
+/// classes + logits bitwise against the trainer's predict path.
+fn bit_identity(session: &Session, spec: &SimSpec) -> bool {
+    let far = ServeConfig::default().max_delay_ms(600_000).workers(2).queue_cap(512);
+    let handle = session.serve(far).unwrap();
+    let images: Vec<Tensor> = (0..2).map(|k| spec.image_batch(500 + k)).collect();
+    let examples: Vec<Tensor> =
+        images.iter().flat_map(|b| split_examples(b).unwrap()).collect();
+    let pendings: Vec<_> = examples.iter().map(|ex| handle.submit(ex.clone()).unwrap()).collect();
+    let served: Vec<(usize, Vec<f32>)> = pendings
+        .into_iter()
+        .map(|p| {
+            let reply = p.wait().unwrap();
+            (reply.class, reply.logits.data().to_vec())
+        })
+        .collect();
+    handle.shutdown().unwrap();
+
+    let pred = session.predict_batches_with_workers(&images, 1).unwrap();
+    let mut expected = Vec::new();
+    for p in &pred.predictions {
+        let k = *p.logits.shape().last().unwrap();
+        for (r, &class) in p.classes.iter().enumerate() {
+            expected.push((class, p.logits.data()[r * k..(r + 1) * k].to_vec()));
+        }
+    }
+    served.len() == expected.len()
+        && served.iter().zip(&expected).all(|(a, b)| {
+            a.0 == b.0
+                && a.1.len() == b.1.len()
+                && a.1.iter().zip(&b.1).all(|(x, y)| x.to_bits() == y.to_bits())
+        })
+}
+
+/// A campaign over a fault-injected session: the canary step errors and
+/// the orchestrator swaps last-good back in. Returns detection→swap
+/// latency in milliseconds.
+fn rollback_detection(
+    dir: &std::path::Path,
+    train: &[(Tensor, Tensor)],
+    eval: &[(Tensor, Tensor)],
+) -> f64 {
+    let reg = Arc::new(ArtifactRegistry::open_simulated_with_fault(dir, 0, "stem_fwd").unwrap());
+    let engine = Engine::builder().registry(reg).devices(DEVICES).build().unwrap();
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let handle = session.serve(ServeConfig::default().max_delay_ms(2).workers(2)).unwrap();
+    let config = RolloutConfig::default().rounds(1).canary_every(1).gate_threshold(10.0);
+    let mut orch = RolloutOrchestrator::new(
+        handle.clone(),
+        Arc::new(session.params().to_vec()),
+        config,
+    );
+    let report = orch.run(&mut session, train, eval).unwrap();
+    handle.shutdown().unwrap();
+    let ms = report
+        .rollback_latency
+        .first()
+        .map(|d| d.as_secs_f64() * 1e3)
+        .unwrap_or(0.0);
+    println!("\n--- rollback detection (injected stem_fwd fault on device 0) ---");
+    println!("rollbacks={} detect->swap={ms:.3}ms", report.rollbacks);
+    ms
+}

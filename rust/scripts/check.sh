@@ -2,11 +2,20 @@
 # Tier-1 gate for the Rust workspace: formatting, lints, tests.
 #
 #   bash rust/scripts/check.sh          # from the repo root
+#   bash rust/scripts/check.sh --bench  # also: quick benches + baseline gate
 #
 # Mirrors what CI runs (and what ROADMAP.md documents as the tier-1
 # verify). Artifacts are NOT required: integration tests skip gracefully
 # when artifacts/manifest.json is absent, and the offline build links the
 # vendored xla stub (rust/vendor/xla-stub).
+#
+# --bench reproduces the CI bench-smoke job: every BENCH_*.json-producing
+# bench in quick mode, then `bench_check`, which diffs the artifacts
+# against the committed baselines in rust/bench-baselines/ (hard fail on
+# a boolean invariant gone false or a missing artifact; ::warning:: on
+# >30% latency drift). After a deliberate perf-affecting change, rewrite
+# the baselines with `cargo run --bin bench_check -- --bless` and commit
+# the rust/bench-baselines/ diff alongside the change (rust/DESIGN.md §6g).
 
 set -euo pipefail
 
@@ -20,5 +29,14 @@ cargo clippy --workspace --all-targets -- -D warnings
 
 echo "== cargo test -q =="
 cargo test -q --workspace
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== quick benches (ANODE_BENCH_QUICK=1) =="
+    for bench in step_throughput net_throughput compile_throughput rollout_throughput; do
+        ANODE_BENCH_QUICK=1 cargo bench --bench "$bench"
+    done
+    echo "== bench_check (baseline regression gate) =="
+    cargo run --bin bench_check
+fi
 
 echo "== OK: fmt + clippy + tests clean =="

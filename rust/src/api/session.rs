@@ -682,6 +682,30 @@ impl<'e> Session<'e> {
         handle.swap_params(Arc::new(self.params.clone()))
     }
 
+    /// Run one train→canary→promote/rollback campaign against a running
+    /// serve pipeline (rust/DESIGN.md §6g): train `canary_every` steps,
+    /// snapshot a candidate (one `Arc` allocation shared across every
+    /// device runner), shadow-evaluate it on `eval` through the session's
+    /// cached per-device pools, and promote it to `handle` when the
+    /// quality gate passes — or roll back to the last-good snapshot on a
+    /// regression event. The pipeline keeps serving throughout; swaps are
+    /// atomic and between-batches (zero drain).
+    ///
+    /// This is the one-shot convenience over
+    /// [`crate::rollout::RolloutOrchestrator`]; hold the orchestrator
+    /// yourself when rollback state must survive across campaigns.
+    pub fn rollout(
+        &mut self,
+        handle: &ServeHandle,
+        train: &[(Tensor, Tensor)],
+        eval: &[(Tensor, Tensor)],
+        config: crate::rollout::RolloutConfig,
+    ) -> Result<crate::rollout::RolloutReport> {
+        let initial = Arc::new(self.params.clone());
+        crate::rollout::RolloutOrchestrator::new(handle.clone(), initial, config)
+            .run(self, train, eval)
+    }
+
     /// Compare this session's gradient against the fused DTO reference
     /// (`anode`) on one batch — the §IV consistency check as a serving API.
     pub fn gradcheck(&mut self, images: &Tensor, labels: &Tensor) -> Result<GradCheckReport> {

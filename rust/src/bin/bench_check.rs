@@ -1,0 +1,225 @@
+//! `bench_check` — CI's bench-baseline regression gate.
+//!
+//! Diffs the `BENCH_*.json` artifacts a bench run just produced against
+//! the committed baselines in `rust/bench-baselines/`, with two tiers:
+//!
+//! * **Hard failures** (exit 1, `::error::` annotations): a baseline
+//!   artifact with no counterpart in the current run, or any boolean
+//!   invariant that was `true` at the baseline and is now `false` or
+//!   missing. Bit-identity flags (`bit_identical`, `traffic_equal`) are
+//!   correctness claims — a run where one goes false is a regression no
+//!   timing number can excuse.
+//! * **Soft drift** (`::warning::` annotations, exit 0): latency-flavored
+//!   numbers (fields ending `_ms`, `_us`, or `_secs`) more than 30% above
+//!   the baseline. Shared CI runners jitter far too much for timing to be
+//!   a hard gate; the warning keeps drift visible on the run summary
+//!   without flaking the build.
+//!
+//! Integer counters, throughput rates, and mode strings are informational
+//! and never gate — they vary run to run (quick vs full, stub vs sim).
+//!
+//! Usage, from anywhere in the repo after a bench run:
+//!
+//! ```text
+//! cargo run --bin bench_check            # gate the artifacts in CWD / rust/
+//! cargo run --bin bench_check -- --bless # rewrite the baselines from this run
+//! ```
+//!
+//! `--bless` is the intended workflow after a deliberate perf-affecting
+//! change: run `rust/scripts/check.sh --bench`, eyeball the diff of
+//! `rust/bench-baselines/`, and commit it alongside the change. See
+//! rust/DESIGN.md §6g.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anode::util::json::Json;
+
+/// Relative latency drift (vs baseline) that earns a warning.
+const DRIFT_TOLERANCE: f64 = 0.30;
+
+fn baselines_dir() -> PathBuf {
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/bench-baselines"))
+}
+
+/// Find the freshly-produced counterpart of a baseline artifact: benches
+/// write to the invoking CWD, which is the repo root in CI and `rust/`
+/// under a bare `cargo bench`.
+fn find_artifact(name: &str) -> Option<PathBuf> {
+    let candidates = [
+        PathBuf::from(name),
+        PathBuf::from("rust").join(name),
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(name),
+    ];
+    candidates.into_iter().find(|p| p.is_file())
+}
+
+fn load(path: &Path) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    Json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Is this a latency-flavored field the soft drift check applies to?
+fn is_latency_field(key: &str) -> bool {
+    key.ends_with("_ms") || key.ends_with("_us") || key.ends_with("_secs")
+}
+
+struct Outcome {
+    errors: usize,
+    warnings: usize,
+}
+
+/// Diff one artifact against its baseline. Pushes `::error::` /
+/// `::warning::` annotations (the format GitHub Actions renders onto the
+/// run summary) alongside the human lines.
+fn check_one(name: &str, baseline: &Json, current: &Json, out: &mut Outcome) {
+    let fields = match baseline {
+        Json::Obj(map) => map,
+        _ => {
+            println!("::error::{name}: baseline is not a JSON object");
+            out.errors += 1;
+            return;
+        }
+    };
+    for (key, base_val) in fields {
+        match base_val {
+            Json::Bool(true) => match current.get(key).and_then(Json::as_bool) {
+                Some(true) => {}
+                Some(false) => {
+                    println!(
+                        "::error::{name}: invariant \"{key}\" regressed true -> false \
+                         (a correctness flag the baseline guarantees)"
+                    );
+                    out.errors += 1;
+                }
+                None => {
+                    println!("::error::{name}: invariant \"{key}\" is missing from this run");
+                    out.errors += 1;
+                }
+            },
+            Json::Num(base) if is_latency_field(key) => {
+                let Some(cur) = current.get(key).and_then(Json::as_f64) else {
+                    continue;
+                };
+                if *base > 0.0 && cur > base * (1.0 + DRIFT_TOLERANCE) {
+                    println!(
+                        "::warning::{name}: \"{key}\" drifted {cur:.4} vs baseline {base:.4} \
+                         (+{:.0}%, tolerance {:.0}%)",
+                        100.0 * (cur / base - 1.0),
+                        100.0 * DRIFT_TOLERANCE
+                    );
+                    out.warnings += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    let bools = fields.values().filter(|v| matches!(v, Json::Bool(true))).count();
+    println!(
+        "checked {name}: {bools} invariant(s), drift tolerance {:.0}%",
+        100.0 * DRIFT_TOLERANCE
+    );
+}
+
+fn bless(dir: &Path) -> ExitCode {
+    let mut blessed = 0usize;
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        eprintln!("::error::no baselines dir at {}", dir.display());
+        return ExitCode::FAILURE;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !name.starts_with("BENCH_") || !name.ends_with(".json") {
+            continue;
+        }
+        match find_artifact(&name) {
+            Some(artifact) => {
+                if let Err(e) = std::fs::copy(&artifact, entry.path()) {
+                    eprintln!("::error::bless {name}: {e}");
+                    return ExitCode::FAILURE;
+                }
+                println!("blessed {} <- {}", entry.path().display(), artifact.display());
+                blessed += 1;
+            }
+            None => println!("skipped {name}: no artifact from this run (bench not executed?)"),
+        }
+    }
+    println!("blessed {blessed} baseline(s); review the diff before committing");
+    ExitCode::SUCCESS
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!(
+            "bench_check — diff BENCH_*.json artifacts against rust/bench-baselines/\n\n\
+             USAGE: bench_check [--bless]\n\n\
+             Hard-fails (exit 1) on a missing artifact or a true->false boolean\n\
+             invariant; warns on >{}% latency drift. --bless rewrites the\n\
+             baselines from the current run's artifacts.",
+            (100.0 * DRIFT_TOLERANCE) as u32
+        );
+        return ExitCode::SUCCESS;
+    }
+    let dir = baselines_dir();
+    if args.iter().any(|a| a == "--bless") {
+        return bless(&dir);
+    }
+
+    let mut names: Vec<String> = match std::fs::read_dir(&dir) {
+        Ok(entries) => entries
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+            .collect(),
+        Err(e) => {
+            println!("::error::no baselines dir at {}: {e}", dir.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    names.sort();
+    if names.is_empty() {
+        println!("::error::{} holds no BENCH_*.json baselines", dir.display());
+        return ExitCode::FAILURE;
+    }
+
+    let mut out = Outcome { errors: 0, warnings: 0 };
+    for name in &names {
+        let baseline = match load(&dir.join(name)) {
+            Ok(j) => j,
+            Err(e) => {
+                println!("::error::unreadable baseline {e}");
+                out.errors += 1;
+                continue;
+            }
+        };
+        let Some(artifact) = find_artifact(name) else {
+            println!(
+                "::error::{name}: baseline exists but this run produced no artifact — \
+                 did the bench crash or get dropped from the suite?"
+            );
+            out.errors += 1;
+            continue;
+        };
+        match load(&artifact) {
+            Ok(current) => check_one(name, &baseline, &current, &mut out),
+            Err(e) => {
+                println!("::error::unreadable artifact {e}");
+                out.errors += 1;
+            }
+        }
+    }
+
+    println!(
+        "\nbench_check: {} baseline(s), {} error(s), {} warning(s)",
+        names.len(),
+        out.errors,
+        out.warnings
+    );
+    if out.errors > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -25,7 +25,10 @@
 //! per-request latency stats (see rust/DESIGN.md §6b). [`net`] puts a
 //! socket front end on that pipeline — a length-prefixed binary
 //! protocol with typed load shedding and a scrapeable metrics endpoint
-//! (rust/DESIGN.md §6e).
+//! (rust/DESIGN.md §6e). [`rollout`] closes the loop: a train→canary→
+//! promote/rollback orchestrator that hot-swaps shadow-evaluated
+//! parameter snapshots into the live pipeline behind a quality gate
+//! (rust/DESIGN.md §6g).
 //!
 //! Architecture (see DESIGN.md):
 //! - **L3 (this crate)** — [`api`] on top of the checkpointing training
@@ -52,6 +55,7 @@ pub mod net;
 pub mod ode;
 pub mod optim;
 pub mod rng;
+pub mod rollout;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

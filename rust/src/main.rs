@@ -12,6 +12,10 @@
 //!               with --listen, serves the `anode::net` wire protocol on
 //!               a TCP socket (plus GET /metrics) and drives it with
 //!               loopback protocol clients
+//!   rollout     continuous-training demo: train in canary windows while
+//!               the serve pipeline keeps running, shadow-evaluate each
+//!               candidate snapshot, promote behind the quality gate or
+//!               roll back to last-good on regression
 //!
 //! Examples:
 //!   anode train --arch sqnxt --solver euler --method anode --steps 200
@@ -19,6 +23,7 @@
 //!   anode gradcheck --artifacts artifacts
 //!   anode serve --requests 512 --max-delay-ms 5 --workers 4 --queue-cap 256
 //!   anode serve --listen 127.0.0.1:0 --slo mixed --adaptive-delay 1:20
+//!   anode rollout --rounds 3 --canary-every 2 --gate-threshold 0.25 --devices 2
 //!
 //! All heavy lifting goes through the `anode::api` façade (Engine/Session);
 //! see `rust/DESIGN.md` §6.
@@ -32,6 +37,7 @@ use anode::harness;
 use anode::metrics::{format_table, write_csv};
 use anode::models::{Arch, GradMethod, Solver};
 use anode::net::{ClientReply, NetClient, NetConfig, NetServer};
+use anode::rollout::RolloutConfig;
 use anode::runtime::{backend_env, ArtifactRegistry, Backend};
 use anode::serve::{BatchRunner, HostTailRunner, ServeConfig, ServeHandle, SloClass};
 use anode::tensor::Tensor;
@@ -56,6 +62,7 @@ fn main() {
         "gradcheck" => cmd_gradcheck(&args),
         "modules" => cmd_modules(&args),
         "serve" => cmd_serve(&args),
+        "rollout" => cmd_rollout(&args),
         _ => {
             print_help();
             0
@@ -93,6 +100,13 @@ fn print_help() {
          \u{20}          --listen ADDR (serve the anode::net wire protocol on\n\
          \u{20}          ADDR, e.g. 127.0.0.1:0; requests go over loopback TCP\n\
          \u{20}          and GET /metrics on the same port answers plain text)\n\
+         rollout:   --rounds N (candidate rounds; default 3)\n\
+         \u{20}          --canary-every N (training steps per candidate snapshot)\n\
+         \u{20}          --gate-threshold F (relative held-out loss tolerance;\n\
+         \u{20}          negative demands strict improvement)\n\
+         \u{20}          --hysteresis N (consecutive passes before a promotion)\n\
+         \u{20}          --devices N --workers N --method M (the serve pipeline\n\
+         \u{20}          keeps running while candidates train and hot-swap in)\n\
          common:    --artifacts DIR (default: artifacts)\n\
          \u{20}          --backend xla|sim|compiled (execution backend; default\n\
          \u{20}          xla, or the ANODE_BACKEND env var. `compiled` lowers the\n\
@@ -428,6 +442,114 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 }
 
+/// Continuous-training demo: start the serve pipeline, then run the
+/// `anode::rollout` orchestrator against it — train in canary windows,
+/// shadow-evaluate each snapshot on a held-out split, promote behind the
+/// quality gate (or roll back on regression) while the pipeline keeps
+/// serving. Reports the campaign outcome plus the pipeline's rollout
+/// counters and swap-window p99.
+fn cmd_rollout(args: &Args) -> i32 {
+    let devices: usize = args.get_parse_or("devices", 1usize).max(1);
+    let serve_cfg = ServeConfig::default()
+        .max_delay_ms(args.get_parse_or("max-delay-ms", 5u64))
+        .workers(args.get_parse_or("workers", 2))
+        .queue_cap(args.get_parse_or("queue-cap", 256));
+    let rollout_cfg = RolloutConfig::default()
+        .rounds(args.get_parse_or("rounds", 3))
+        .canary_every(args.get_parse_or("canary-every", 2))
+        .gate_threshold(args.get_parse_or("gate-threshold", 0.25f32))
+        .hysteresis(args.get_parse_or("hysteresis", 1));
+    let method = args.get_or("method", "anode");
+    let dir = args.get_or("artifacts", "artifacts");
+    args.warn_unknown();
+    let engine =
+        match Engine::builder().artifacts(&dir).devices(devices).backend(cli_backend(args)).build()
+        {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("error: {e} (rollout trains a real session, so artifacts are required)");
+                return 2;
+            }
+        };
+    let cfg = engine.config().clone();
+    if cfg.image != CIFAR_HW {
+        eprintln!(
+            "error: artifact image size {} is unsupported by the synthetic CIFAR \
+             generator (renders {CIFAR_HW}x{CIFAR_HW})",
+            cfg.image
+        );
+        return 2;
+    }
+    let mut session = match engine.session(SessionConfig::with_method(method.as_str())) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let handle = match session.serve(serve_cfg) {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    println!(
+        "rollout: {} rounds x {} canary steps, gate threshold {:+.2} x{} hysteresis, \
+         {} devices (`{method}`, batch {})",
+        rollout_cfg.rounds,
+        rollout_cfg.canary_every,
+        rollout_cfg.gate_threshold,
+        rollout_cfg.hysteresis,
+        devices,
+        cfg.batch
+    );
+    let ds = SyntheticCifar::new(cfg.num_classes, 7, 0.1);
+    let (imgs, labels) = ds.generate(cfg.batch * 6, 11);
+    let batches = anode::api::make_eval_batches(&imgs, &labels, cfg.batch, 6);
+    let (train, eval) = batches.split_at(4);
+    let outcome = session.rollout(&handle, train, eval, rollout_cfg);
+    let stats = handle.stats();
+    let report = match outcome {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("rollout failed: {e}");
+            let _ = handle.shutdown();
+            return 1;
+        }
+    };
+    println!(
+        "campaign: rounds={} candidates={} promotions={} rollbacks={} paused={} \
+         baseline_loss={:.4} wall={:.3}s",
+        report.rounds_run,
+        report.candidates,
+        report.promotions,
+        report.rollbacks,
+        report.paused,
+        report.baseline_loss,
+        report.wall.as_secs_f64()
+    );
+    if let Some(p) = report.promote_latency.last() {
+        println!("snapshot->promoted latency (last): {:?}", p);
+    }
+    println!(
+        "pipeline: candidates={} promotions={} rollbacks={} swap_p99_us={}",
+        stats.rollout_candidates,
+        stats.rollout_promotions,
+        stats.rollout_rollbacks,
+        stats.rollout_swap_p99_us
+    );
+    if handle.shutdown().is_err() {
+        eprintln!("shutdown failed");
+        return 1;
+    }
+    if report.rollbacks == 0 {
+        0
+    } else {
+        1
+    }
+}
+
 /// Parse `--adaptive-delay FLOOR:CEIL` (milliseconds).
 fn parse_adaptive(spec: &str) -> Option<(u64, u64)> {
     let (floor, ceil) = spec.split_once(':')?;
@@ -619,6 +741,12 @@ where
             anode::net::metrics::scrape_value(&text, "shed_total").unwrap_or(0)
         ),
         Err(e) => eprintln!("metrics scrape failed: {e}"),
+    }
+    if server.drain_requested() {
+        // A client sent the Drain admin frame (the std-only SIGTERM
+        // stand-in): note it before the graceful shutdown below, which
+        // drains sockets first and drops no accepted request either way.
+        println!("drain requested over the wire; shutting down");
     }
     let report = match server.shutdown() {
         Ok(r) => r,

@@ -105,6 +105,26 @@ impl NetClient {
         }
     }
 
+    /// Ask the server to drain gracefully (the `Drain` admin frame — the
+    /// std-only SIGTERM stand-in) and block for the echoed acknowledgement.
+    /// The ack only means the server *recorded* the request; the owning
+    /// driver performs the actual shutdown, so replies to requests already
+    /// admitted still arrive (in order) before the socket closes.
+    pub fn drain(&mut self) -> Result<()> {
+        let id = self.fresh_id();
+        self.send_frame(&Frame::Drain { id })?;
+        match self.read_frame()? {
+            Frame::Drain { id: got } if got == id => Ok(()),
+            Frame::Error { message, .. } => {
+                Err(RuntimeError::Io(format!("net: server error: {message}")))
+            }
+            other => Err(RuntimeError::Io(format!(
+                "net: expected a drain ack, got frame id {}",
+                other.id()
+            ))),
+        }
+    }
+
     fn fresh_id(&mut self) -> u64 {
         let id = self.next_id;
         self.next_id += 1;

@@ -37,6 +37,9 @@ pub struct NetStats {
     /// Connections dropped for protocol violations (bad magic/version/
     /// frame type, malformed payload).
     pub protocol_errors: u64,
+    /// `Drain` admin frames received (each raises the server's
+    /// drain-request flag and is echoed back as the acknowledgement).
+    pub drain_requests: u64,
 }
 
 /// Render the metrics text: serve-layer stats, reactor counters, the
@@ -69,6 +72,10 @@ pub fn render(
     line("adaptive_delay", u64::from(serve.adaptive_delay));
     line("memory_traffic_bytes", serve.memory_traffic);
     line("memory_worker_peak_bytes", serve.memory_worker_peak);
+    line("rollout_candidates_total", serve.rollout_candidates);
+    line("rollout_promotions_total", serve.rollout_promotions);
+    line("rollout_rollbacks_total", serve.rollout_rollbacks);
+    line("rollout_swap_p99_us", serve.rollout_swap_p99_us);
     line("closed", u64::from(serve.closed));
     line("net_connections_total", net.connections);
     line("net_open_connections", net.open_connections);
@@ -78,6 +85,7 @@ pub fn render(
     line("net_shed_total", net.shed);
     line("net_metrics_requests_total", net.metrics_requests);
     line("net_protocol_errors_total", net.protocol_errors);
+    line("net_drain_requests_total", net.drain_requests);
     line("net_latency_samples", latencies.len() as u64);
     line("net_latency_p50_us", duration_us(wire.p50));
     line("net_latency_p95_us", duration_us(wire.p95));
@@ -140,6 +148,10 @@ mod tests {
             adaptive_delay: true,
             memory_traffic: 4096,
             memory_worker_peak: 1024,
+            rollout_candidates: 6,
+            rollout_promotions: 4,
+            rollout_rollbacks: 1,
+            rollout_swap_p99_us: 750,
             closed: false,
         }
     }
@@ -157,6 +169,11 @@ mod tests {
         assert_eq!(scrape_value(&text, "net_connections_total"), Some(5));
         assert_eq!(scrape_value(&text, "net_latency_samples"), Some(2));
         assert_eq!(scrape_value(&text, "net_latency_p50_us"), Some(300));
+        assert_eq!(scrape_value(&text, "rollout_candidates_total"), Some(6));
+        assert_eq!(scrape_value(&text, "rollout_promotions_total"), Some(4));
+        assert_eq!(scrape_value(&text, "rollout_rollbacks_total"), Some(1));
+        assert_eq!(scrape_value(&text, "rollout_swap_p99_us"), Some(750));
+        assert_eq!(scrape_value(&text, "net_drain_requests_total"), Some(0));
         assert!(text.contains("anode_device_load{device=\"1\"} 0\n"), "{text}");
         // Pipelines off the compiled backend export no compile series.
         assert_eq!(scrape_value(&text, "compile_plans_cached"), None);

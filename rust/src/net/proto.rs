@@ -29,6 +29,8 @@
 //! * `MetricsRequest`— empty
 //! * `MetricsReply`  — UTF-8 metrics text (same body the HTTP/1.0 path
 //!   serves)
+//! * `Drain`         — empty (admin: request a graceful server drain; the
+//!   server echoes the frame as the acknowledgement)
 //!
 //! The wire format is documented in rust/DESIGN.md §6e and fuzzed (hand-
 //! rolled property loop) in rust/tests/net.rs.
@@ -114,6 +116,12 @@ pub enum Frame {
     MetricsRequest { id: u64 },
     /// The metrics text.
     MetricsReply { id: u64, text: String },
+    /// Admin: ask the server to drain gracefully (stop accepting new
+    /// connections, answer everything in flight, then shut down) — the
+    /// std-only stand-in for SIGTERM. The server echoes the frame back as
+    /// the acknowledgement and raises its drain flag for the owning
+    /// driver, which also pauses any rollout promotion loop.
+    Drain { id: u64 },
 }
 
 impl Frame {
@@ -144,7 +152,8 @@ impl Frame {
             | Frame::Error { id, .. }
             | Frame::RetryAfter { id, .. }
             | Frame::MetricsRequest { id }
-            | Frame::MetricsReply { id, .. } => *id,
+            | Frame::MetricsReply { id, .. }
+            | Frame::Drain { id } => *id,
         }
     }
 
@@ -156,6 +165,7 @@ impl Frame {
             Frame::RetryAfter { .. } => 4,
             Frame::MetricsRequest { .. } => 5,
             Frame::MetricsReply { .. } => 6,
+            Frame::Drain { .. } => 7,
         }
     }
 
@@ -196,6 +206,7 @@ impl Frame {
             }
             Frame::MetricsRequest { .. } => {}
             Frame::MetricsReply { text, .. } => payload.extend_from_slice(text.as_bytes()),
+            Frame::Drain { .. } => {}
         }
         debug_assert!(payload.len() <= MAX_PAYLOAD, "encoder produced an oversized payload");
         out.reserve(HEADER_LEN + payload.len());
@@ -291,6 +302,12 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, ProtoError> {
             Frame::MetricsRequest { id }
         }
         6 => Frame::MetricsReply { id, text: get_text(p)? },
+        7 => {
+            if !p.is_empty() {
+                return Err(ProtoError::Malformed("drain request carries a payload"));
+            }
+            Frame::Drain { id }
+        }
         t => return Err(ProtoError::BadFrameType(t)),
     };
     Ok(Some((frame, total)))
@@ -404,6 +421,15 @@ mod tests {
         round_trip(&Frame::RetryAfter { id: 11, retry_after_us: 5000 });
         round_trip(&Frame::MetricsRequest { id: 12 });
         round_trip(&Frame::MetricsReply { id: 13, text: "anode_submitted 4\n".into() });
+        round_trip(&Frame::Drain { id: 14 });
+    }
+
+    #[test]
+    fn drain_with_payload_is_malformed() {
+        let mut bytes = Frame::Drain { id: 3 }.encode_vec();
+        bytes[16..20].copy_from_slice(&1u32.to_le_bytes());
+        bytes.push(0xFF);
+        assert!(matches!(decode(&bytes), Err(ProtoError::Malformed(_))));
     }
 
     #[test]

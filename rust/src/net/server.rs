@@ -88,6 +88,12 @@ pub struct NetReport {
 
 struct Shared {
     draining: AtomicBool,
+    /// Raised by a client `Drain` admin frame: the owning driver polls
+    /// [`NetServer::drain_requested`] (or shares
+    /// [`NetServer::drain_flag`] with a rollout loop, which pauses
+    /// promotion) and then calls [`NetServer::shutdown`] — the std-only
+    /// replacement for SIGTERM plumbing.
+    drain_requested: Arc<AtomicBool>,
     stats: Mutex<NetStats>,
     latencies: Mutex<LatencyRing>,
 }
@@ -141,6 +147,7 @@ impl NetServer {
             .map_err(|e| RuntimeError::Io(format!("net: set_nonblocking: {e}")))?;
         let shared = Arc::new(Shared {
             draining: AtomicBool::new(false),
+            drain_requested: Arc::new(AtomicBool::new(false)),
             stats: Mutex::new(NetStats::default()),
             latencies: Mutex::new(LatencyRing { samples: Vec::new(), next: 0 }),
         });
@@ -171,6 +178,22 @@ impl NetServer {
     /// Snapshot of the reactor counters.
     pub fn stats(&self) -> NetStats {
         self.shared.stats.lock().expect("net stats lock").clone()
+    }
+
+    /// Has a client asked for a graceful drain (a `Drain` admin frame)?
+    /// The reactor only *records* the request — acting on it (calling
+    /// [`NetServer::shutdown`]) stays with the driver that owns the
+    /// server, so the drain composes with whatever else the driver is
+    /// coordinating (e.g. pausing a rollout promotion loop first).
+    pub fn drain_requested(&self) -> bool {
+        self.shared.drain_requested.load(Ordering::SeqCst)
+    }
+
+    /// The drain-request flag itself, for wiring into other loops (the
+    /// rollout orchestrator's `pause_on` takes exactly this): the flag
+    /// flips to `true` when a `Drain` frame arrives and is never reset.
+    pub fn drain_flag(&self) -> Arc<AtomicBool> {
+        self.shared.drain_requested.clone()
     }
 
     /// Render the metrics text exactly as a scrape would see it.
@@ -442,6 +465,20 @@ impl Reactor {
                     state: InflightState::Ready(Frame::MetricsReply { id, text }),
                 });
                 self.shared.stats.lock().expect("net stats lock").metrics_requests += 1;
+            }
+            Frame::Drain { id } => {
+                // Record the request and echo the frame as the ack; the
+                // actual shutdown belongs to the driver that owns the
+                // server (so it can pause rollout promotion first). The
+                // ack rides the FIFO like any other response, so replies
+                // already in flight still leave in order.
+                self.shared.drain_requested.store(true, Ordering::SeqCst);
+                self.conns[i].inflight.push_back(Inflight {
+                    id,
+                    started: Instant::now(),
+                    state: InflightState::Ready(Frame::Drain { id }),
+                });
+                self.shared.stats.lock().expect("net stats lock").drain_requests += 1;
             }
             // Server-to-client frames arriving at the server are a
             // protocol violation, same as garbage bytes.

@@ -1,0 +1,444 @@
+//! # `anode::rollout` — the train→canary→promote/rollback loop
+//!
+//! Closes the continuous-training loop over the existing seams: a
+//! [`RolloutOrchestrator`] drives a training [`Session`] on the caller's
+//! thread **while serve traffic keeps flowing** through the session's
+//! live [`ServeHandle`] pipeline (the admission queue, batcher, and
+//! device pools never drain), periodically snapshots the trained
+//! parameters into one `Arc<Vec<Tensor>>` candidate (one allocation
+//! shared across every device runner — the PR 6 `swap_params` contract),
+//! shadow-evaluates each candidate on a held-out stream, and:
+//!
+//! * **promotes** the candidate to the live pipeline
+//!   ([`ServeHandle::promote_params`], an atomic between-batches
+//!   hot-swap) when the [`QualityGate`] passes — a configurable relative
+//!   loss threshold that must hold for `hysteresis` *consecutive*
+//!   candidates, so a flapping trainer never reaches serving;
+//! * **rolls back** to the last-good snapshot
+//!   ([`ServeHandle::rollback_params`]) on a *regression event* — a
+//!   training step or shadow evaluation that errors (e.g. a broken
+//!   device), or a candidate whose loss goes non-finite (a diverged
+//!   trainer makes the most recent promotion suspect too).
+//!
+//! ```text
+//!        ┌────────── train canary_every steps ──────────┐
+//!        │                                              ▼
+//!   Session ──▶ candidate = Arc<Vec<Tensor>> ──▶ shadow-eval (held-out)
+//!        ▲                                              │
+//!        │                 QualityGate: pass × hysteresis│
+//!   serve traffic keeps flowing                         ▼
+//!   ServeHandle ◀── promote_params ──── pass ──┬── fail: hold (streak=0)
+//!        ▲                                     └── error/non-finite:
+//!        └────────── rollback_params ◀──────────── rollback to last-good
+//! ```
+//!
+//! The shadow evaluation runs through [`Session::evaluate_with_workers`]
+//! — the ledger-free inference path over the **session's cached
+//! per-device pools** (`util::pool`), so the trainer and the evaluator
+//! share one thread substrate instead of each spawning their own.
+//!
+//! Gate semantics, rollback ordering against in-flight batches, and the
+//! CI baseline-gate workflow are documented in rust/DESIGN.md §6g. The
+//! offline e2e (sim devices, fault injection, net clients during
+//! promotion) lives in rust/tests/rollout.rs; `BENCH_rollout.json` comes
+//! from rust/benches/rollout_throughput.rs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::api::Session;
+use crate::runtime::{Result, RuntimeError};
+use crate::serve::ServeHandle;
+use crate::tensor::Tensor;
+
+/// Configuration for one [`RolloutOrchestrator::run`] campaign.
+#[derive(Debug, Clone)]
+pub struct RolloutConfig {
+    /// Training steps between candidate snapshots (min 1; default 4).
+    pub canary_every: usize,
+    /// Candidate rounds to run (default 3). Each round trains
+    /// `canary_every` steps, snapshots, and shadow-evaluates once.
+    pub rounds: usize,
+    /// Relative loss tolerance of the quality gate: a candidate passes
+    /// when `loss <= baseline * (1 + gate_threshold)` (default 0.25).
+    /// Negative thresholds demand strict improvement.
+    pub gate_threshold: f32,
+    /// Consecutive passing candidates required before a promotion
+    /// (min 1; default 1). A candidate that alternates pass/fail resets
+    /// the streak each failure and never promotes.
+    pub hysteresis: usize,
+    /// Worker threads per device for the shadow evaluation (default 1).
+    /// Evaluation runs over the session's cached pools either way.
+    pub eval_workers: usize,
+    /// Stop the campaign after the first rollback (default true). When
+    /// false the orchestrator keeps training toward a better candidate.
+    pub stop_on_rollback: bool,
+    /// External pause flag (e.g. [`crate::net::NetServer::drain_flag`]):
+    /// when it reads `true` the orchestrator stops promoting and returns
+    /// early with [`RolloutReport::paused`] set — a draining server must
+    /// not take new snapshots mid-drain.
+    pub pause_on: Option<Arc<AtomicBool>>,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        Self {
+            canary_every: 4,
+            rounds: 3,
+            gate_threshold: 0.25,
+            hysteresis: 1,
+            eval_workers: 1,
+            stop_on_rollback: true,
+            pause_on: None,
+        }
+    }
+}
+
+impl RolloutConfig {
+    /// Set the training steps per candidate snapshot.
+    pub fn canary_every(mut self, steps: usize) -> Self {
+        self.canary_every = steps.max(1);
+        self
+    }
+
+    /// Set the candidate rounds to run.
+    pub fn rounds(mut self, rounds: usize) -> Self {
+        self.rounds = rounds;
+        self
+    }
+
+    /// Set the gate's relative loss tolerance.
+    pub fn gate_threshold(mut self, threshold: f32) -> Self {
+        self.gate_threshold = threshold;
+        self
+    }
+
+    /// Set the consecutive-pass requirement.
+    pub fn hysteresis(mut self, passes: usize) -> Self {
+        self.hysteresis = passes.max(1);
+        self
+    }
+
+    /// Set the shadow-evaluation worker count per device.
+    pub fn eval_workers(mut self, workers: usize) -> Self {
+        self.eval_workers = workers.max(1);
+        self
+    }
+
+    /// Keep running after a rollback instead of stopping.
+    pub fn continue_after_rollback(mut self) -> Self {
+        self.stop_on_rollback = false;
+        self
+    }
+
+    /// Pause promotion (and the campaign) when `flag` reads true.
+    pub fn pause_on(mut self, flag: Arc<AtomicBool>) -> Self {
+        self.pause_on = Some(flag);
+        self
+    }
+}
+
+/// What the quality gate said about one candidate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateDecision {
+    /// The candidate passed `hysteresis` consecutive evaluations: promote.
+    Promote,
+    /// The candidate passed, but the streak is still building: hold.
+    Hold,
+    /// The candidate failed the threshold (or its loss was non-finite):
+    /// hold serving on the current snapshot and reset the streak.
+    Reject,
+}
+
+/// The promotion gate: a relative loss threshold with a consecutive-pass
+/// hysteresis window. Pure state machine — no I/O — so the flapping
+/// semantics are unit-testable without a pipeline.
+///
+/// A candidate *passes* when its held-out loss is finite and within
+/// `threshold` (relative) of the baseline — the loss of the currently
+/// promoted snapshot. `hysteresis` consecutive passes promote; any
+/// failure resets the streak, so a candidate stream that alternates
+/// pass/fail ("flapping") never promotes.
+#[derive(Debug, Clone)]
+pub struct QualityGate {
+    threshold: f32,
+    hysteresis: usize,
+    streak: usize,
+}
+
+impl QualityGate {
+    /// Gate with the given relative threshold and consecutive-pass
+    /// requirement (clamped to >= 1).
+    pub fn new(threshold: f32, hysteresis: usize) -> Self {
+        Self { threshold, hysteresis: hysteresis.max(1), streak: 0 }
+    }
+
+    /// Current consecutive-pass streak.
+    pub fn streak(&self) -> usize {
+        self.streak
+    }
+
+    /// Feed one candidate evaluation. `baseline_loss` is the held-out
+    /// loss of the currently promoted snapshot; a non-finite baseline
+    /// (nothing promoted yet under a diverged start) lets any finite
+    /// candidate pass.
+    pub fn observe(&mut self, candidate_loss: f32, baseline_loss: f32) -> GateDecision {
+        let pass = candidate_loss.is_finite()
+            && (!baseline_loss.is_finite()
+                || candidate_loss <= baseline_loss * (1.0 + self.threshold));
+        if !pass {
+            self.streak = 0;
+            return GateDecision::Reject;
+        }
+        self.streak += 1;
+        if self.streak >= self.hysteresis {
+            self.streak = 0;
+            GateDecision::Promote
+        } else {
+            GateDecision::Hold
+        }
+    }
+}
+
+/// Outcome of one [`RolloutOrchestrator::run`] campaign.
+#[derive(Debug, Clone)]
+pub struct RolloutReport {
+    /// Rounds actually run (< `rounds` on an early stop).
+    pub rounds_run: usize,
+    /// Candidates snapshot-and-evaluated.
+    pub candidates: usize,
+    /// Candidates promoted to the live pipeline.
+    pub promotions: usize,
+    /// Regression events rolled back to the last-good snapshot.
+    pub rollbacks: usize,
+    /// Did the campaign stop because the pause flag was raised?
+    pub paused: bool,
+    /// Held-out loss of the snapshot serving when the campaign ended
+    /// (NaN before the first baseline evaluation completes).
+    pub baseline_loss: f32,
+    /// Snapshot→promoted wall-clock per promotion, in order.
+    pub promote_latency: Vec<Duration>,
+    /// Detection→rolled-back wall-clock per rollback, in order.
+    pub rollback_latency: Vec<Duration>,
+    /// Total campaign wall-clock.
+    pub wall: Duration,
+}
+
+/// The train→canary→promote/rollback driver over one [`ServeHandle`].
+///
+/// The orchestrator owns the promotion bookkeeping — the `live` snapshot
+/// (what the pipeline serves now) and the `last_good` snapshot (the live
+/// before the most recent promotion, the rollback target) — and survives
+/// across [`RolloutOrchestrator::run`] calls, so a later campaign (even
+/// with a different session over the same model) rolls back to what an
+/// earlier campaign promoted. Construct it over the snapshot the handle
+/// is currently serving; [`Session::rollout`] wires that up for the
+/// common case.
+pub struct RolloutOrchestrator {
+    handle: ServeHandle,
+    config: RolloutConfig,
+    gate: QualityGate,
+    live: Arc<Vec<Tensor>>,
+    last_good: Arc<Vec<Tensor>>,
+    baseline_loss: f32,
+}
+
+impl RolloutOrchestrator {
+    /// Orchestrator over a running pipeline. `initial` must be the
+    /// snapshot `handle` currently serves (it seeds both `live` and
+    /// `last_good`); the baseline loss is established by the first
+    /// shadow evaluation.
+    pub fn new(handle: ServeHandle, initial: Arc<Vec<Tensor>>, config: RolloutConfig) -> Self {
+        let gate = QualityGate::new(config.gate_threshold, config.hysteresis);
+        Self {
+            handle,
+            config,
+            gate,
+            live: initial.clone(),
+            last_good: initial,
+            baseline_loss: f32::NAN,
+        }
+    }
+
+    /// The snapshot the pipeline serves now (per this orchestrator's
+    /// bookkeeping).
+    pub fn live(&self) -> Arc<Vec<Tensor>> {
+        self.live.clone()
+    }
+
+    /// The rollback target: the live snapshot before the most recent
+    /// promotion (= `live` until something promotes).
+    pub fn last_good(&self) -> Arc<Vec<Tensor>> {
+        self.last_good.clone()
+    }
+
+    fn paused(&self) -> bool {
+        self.config.pause_on.as_ref().is_some_and(|f| f.load(Ordering::SeqCst))
+    }
+
+    /// Swap the last-good snapshot back into the pipeline and record the
+    /// regression event. `live` becomes `last_good` again; the gate
+    /// streak resets (whatever was accumulating is no longer trusted).
+    fn roll_back(&mut self, detected: Instant, report: &mut RolloutReport) -> Result<()> {
+        self.handle.rollback_params(self.last_good.clone())?;
+        self.live = self.last_good.clone();
+        self.gate = QualityGate::new(self.config.gate_threshold, self.config.hysteresis);
+        report.rollbacks += 1;
+        report.rollback_latency.push(detected.elapsed());
+        Ok(())
+    }
+
+    /// Run one campaign: `rounds` × (train `canary_every` steps →
+    /// snapshot → shadow-eval → gate). Training batches cycle through
+    /// `train` in order; `eval` is the held-out stream. Returns the
+    /// campaign report; the serve pipeline keeps running either way.
+    ///
+    /// Errors out of this function are *orchestration* failures (empty
+    /// streams, a rollback swap that itself failed). Training/evaluation
+    /// errors and non-finite candidate losses are regression events —
+    /// handled by rolling back, not surfaced as `Err`.
+    pub fn run(
+        &mut self,
+        session: &mut Session<'_>,
+        train: &[(Tensor, Tensor)],
+        eval: &[(Tensor, Tensor)],
+    ) -> Result<RolloutReport> {
+        if train.is_empty() || eval.is_empty() {
+            return Err(RuntimeError::Shape(
+                "rollout: need at least one training batch and one held-out batch".into(),
+            ));
+        }
+        let t0 = Instant::now();
+        let mut report = RolloutReport {
+            rounds_run: 0,
+            candidates: 0,
+            promotions: 0,
+            rollbacks: 0,
+            paused: false,
+            baseline_loss: self.baseline_loss,
+            promote_latency: Vec::new(),
+            rollback_latency: Vec::new(),
+            wall: Duration::ZERO,
+        };
+        let mut cursor = 0usize;
+        'campaign: for _ in 0..self.config.rounds {
+            if self.paused() {
+                report.paused = true;
+                break;
+            }
+            report.rounds_run += 1;
+            // Train toward the next candidate. A failing step is a
+            // regression event: the trainer (or its device) is broken,
+            // so serving returns to the last-good snapshot.
+            for _ in 0..self.config.canary_every.max(1) {
+                let (images, labels) = &train[cursor % train.len()];
+                cursor += 1;
+                if session.step(images, labels).is_err() {
+                    self.roll_back(Instant::now(), &mut report)?;
+                    if self.config.stop_on_rollback {
+                        break 'campaign;
+                    }
+                    continue 'campaign;
+                }
+            }
+            // One allocation shared across every device runner: the
+            // candidate Arc is what promote_params fans out.
+            let snapshot_at = Instant::now();
+            let candidate = Arc::new(session.params().to_vec());
+            self.handle.note_candidate();
+            report.candidates += 1;
+            // Shadow-evaluate on the held-out stream via the session's
+            // cached per-device pools (ledger-free inference path).
+            let loss = match session.evaluate_with_workers(eval, self.config.eval_workers) {
+                Ok(stats) => stats.loss,
+                Err(_) => {
+                    self.roll_back(Instant::now(), &mut report)?;
+                    if self.config.stop_on_rollback {
+                        break 'campaign;
+                    }
+                    continue 'campaign;
+                }
+            };
+            if !loss.is_finite() {
+                // A diverged trainer also makes the most recent promotion
+                // suspect: fail closed, back to last-good.
+                self.roll_back(Instant::now(), &mut report)?;
+                if self.config.stop_on_rollback {
+                    break 'campaign;
+                }
+                continue 'campaign;
+            }
+            match self.gate.observe(loss, self.baseline_loss) {
+                GateDecision::Promote => {
+                    if self.paused() {
+                        // A drain arrived mid-round: never promote into a
+                        // draining pipeline.
+                        report.paused = true;
+                        break 'campaign;
+                    }
+                    self.handle.promote_params(candidate.clone())?;
+                    self.last_good = std::mem::replace(&mut self.live, candidate);
+                    self.baseline_loss = loss;
+                    report.promotions += 1;
+                    report.promote_latency.push(snapshot_at.elapsed());
+                }
+                GateDecision::Hold | GateDecision::Reject => {
+                    // Serving stays on `live`; a failed candidate never
+                    // touched the pipeline, so nothing rolls back.
+                    if !self.baseline_loss.is_finite() {
+                        // First evaluation under an unset baseline: adopt
+                        // it so later rounds have a reference even when
+                        // the gate is still building its streak.
+                        self.baseline_loss = loss;
+                    }
+                }
+            }
+        }
+        report.baseline_loss = self.baseline_loss;
+        report.wall = t0.elapsed();
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_promotes_after_hysteresis_consecutive_passes() {
+        let mut gate = QualityGate::new(0.10, 3);
+        assert_eq!(gate.observe(1.0, 1.0), GateDecision::Hold);
+        assert_eq!(gate.observe(1.05, 1.0), GateDecision::Hold);
+        assert_eq!(gate.observe(0.9, 1.0), GateDecision::Promote);
+        // The streak reset on promotion: the next pass starts over.
+        assert_eq!(gate.observe(0.9, 0.9), GateDecision::Hold);
+    }
+
+    #[test]
+    fn gate_flapping_candidate_never_promotes() {
+        let mut gate = QualityGate::new(0.0, 2);
+        for _ in 0..32 {
+            assert_eq!(gate.observe(0.5, 1.0), GateDecision::Hold, "pass builds the streak");
+            assert_eq!(gate.observe(2.0, 1.0), GateDecision::Reject, "fail resets it");
+        }
+        assert_eq!(gate.streak(), 0);
+    }
+
+    #[test]
+    fn gate_rejects_non_finite_candidates() {
+        let mut gate = QualityGate::new(10.0, 1);
+        assert_eq!(gate.observe(f32::NAN, 1.0), GateDecision::Reject);
+        assert_eq!(gate.observe(f32::INFINITY, 1.0), GateDecision::Reject);
+        // A non-finite baseline (nothing promoted yet) lets a finite
+        // candidate through.
+        assert_eq!(gate.observe(3.0, f32::NAN), GateDecision::Promote);
+    }
+
+    #[test]
+    fn gate_negative_threshold_demands_improvement() {
+        let mut gate = QualityGate::new(-0.5, 1);
+        assert_eq!(gate.observe(0.6, 1.0), GateDecision::Reject);
+        assert_eq!(gate.observe(0.4, 1.0), GateDecision::Promote);
+    }
+}

@@ -63,7 +63,8 @@ mod delay;
 mod pool;
 mod queue;
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -318,6 +319,44 @@ pub(crate) struct Counters {
     pub mem_traffic: AtomicU64,
     /// Max single-worker ledger peak observed so far (bytes).
     pub mem_worker_peak: AtomicU64,
+    /// Rollout candidates shadow-evaluated against this pipeline.
+    pub rollout_candidates: AtomicU64,
+    /// Candidates promoted to the live snapshot
+    /// ([`ServeHandle::promote_params`]).
+    pub rollout_promotions: AtomicU64,
+    /// Regressions rolled back to the last-good snapshot
+    /// ([`ServeHandle::rollback_params`]).
+    pub rollout_rollbacks: AtomicU64,
+    /// True while a promote/rollback swap is applying — workers record
+    /// the latency of requests completing inside the window into
+    /// `swap_lat_us`, so "serving p99 during swap" is measurable.
+    pub swap_window: AtomicBool,
+    /// End-to-end request latencies (µs) completed during swap windows
+    /// (bounded ring; see [`SWAP_LATENCY_WINDOW`]).
+    pub swap_lat_us: Mutex<VecDeque<u64>>,
+}
+
+/// Capacity of the during-swap latency ring: enough for p99 resolution,
+/// bounded so a long-lived pipeline with many rollouts cannot grow it.
+pub(crate) const SWAP_LATENCY_WINDOW: usize = 4096;
+
+impl Counters {
+    /// Record one request's end-to-end latency if a parameter swap is in
+    /// flight right now (called by pool workers at reply time).
+    pub(crate) fn note_swap_latency(&self, total: Duration) {
+        if !self.swap_window.load(Ordering::Relaxed) {
+            return;
+        }
+        let us = total.as_micros().min(u64::MAX as u128) as u64;
+        let mut ring = match self.swap_lat_us.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        if ring.len() == SWAP_LATENCY_WINDOW {
+            ring.pop_front();
+        }
+        ring.push_back(us);
+    }
 }
 
 /// Point-in-time serving statistics (see [`ServeHandle::stats`]).
@@ -356,6 +395,17 @@ pub struct ServeStats {
     pub memory_traffic: u64,
     /// Max single-worker ledger peak observed so far, in bytes.
     pub memory_worker_peak: u64,
+    /// Rollout candidates shadow-evaluated against this pipeline
+    /// ([`ServeHandle::note_candidate`]).
+    pub rollout_candidates: u64,
+    /// Candidates promoted to the live snapshot.
+    pub rollout_promotions: u64,
+    /// Regressions rolled back to the last-good snapshot.
+    pub rollout_rollbacks: u64,
+    /// p99 end-to-end latency (µs) of requests that completed while a
+    /// promote/rollback swap was applying — 0 until a swap window has
+    /// seen traffic.
+    pub rollout_swap_p99_us: u64,
     /// Has shutdown been initiated?
     pub closed: bool,
 }
@@ -609,18 +659,54 @@ impl ServeHandle {
             Ok(guard) => guard,
             Err(poisoned) => poisoned.into_inner(),
         };
-        for (d, runner) in self.inner.runners.iter().enumerate() {
-            runner.validate_swap(&params).map_err(|e| {
-                RuntimeError::Shape(format!("serve: hot-swap rejected on device {d}: {e}"))
-            })?;
-        }
-        for (d, runner) in self.inner.runners.iter().enumerate() {
-            // Validated above; a failure here (a runner whose validate and
-            // swap disagree) is surfaced, not swallowed.
-            runner.swap_params(params.clone()).map_err(|e| {
-                RuntimeError::Shape(format!("serve: hot-swap failed on device {d}: {e}"))
-            })?;
-        }
+        // Requests completing while the swap applies are the
+        // "serving during swap" population (rollout_swap_p99_us); the
+        // window closes before the lock releases.
+        self.inner.counters.swap_window.store(true, Ordering::Relaxed);
+        let outcome = (|| {
+            for (d, runner) in self.inner.runners.iter().enumerate() {
+                runner.validate_swap(&params).map_err(|e| {
+                    RuntimeError::Shape(format!("serve: hot-swap rejected on device {d}: {e}"))
+                })?;
+            }
+            for (d, runner) in self.inner.runners.iter().enumerate() {
+                // Validated above; a failure here (a runner whose validate
+                // and swap disagree) is surfaced, not swallowed.
+                runner.swap_params(params.clone()).map_err(|e| {
+                    RuntimeError::Shape(format!("serve: hot-swap failed on device {d}: {e}"))
+                })?;
+            }
+            Ok(())
+        })();
+        self.inner.counters.swap_window.store(false, Ordering::Relaxed);
+        outcome
+    }
+
+    /// Count one rollout candidate shadow-evaluated against this pipeline
+    /// (exported as `anode_rollout_candidates_total`). Evaluation itself
+    /// happens off-pipeline (the orchestrator's held-out stream); serving
+    /// traffic is untouched.
+    pub fn note_candidate(&self) {
+        self.inner.counters.rollout_candidates.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// [`ServeHandle::swap_params`] plus promotion accounting: a rollout
+    /// candidate that passed its quality gate becomes the live snapshot.
+    /// The counter only moves on a *successful* swap.
+    pub fn promote_params(&self, params: Arc<Vec<Tensor>>) -> Result<()> {
+        self.swap_params(params)?;
+        self.inner.counters.rollout_promotions.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// [`ServeHandle::swap_params`] plus rollback accounting: serving
+    /// returns to the last-good snapshot after a detected regression.
+    /// In-flight batches finish on the regressed snapshot (between-batches
+    /// swap semantics); every batch dispatched after this returns uses the
+    /// last-good weights.
+    pub fn rollback_params(&self, params: Arc<Vec<Tensor>>) -> Result<()> {
+        self.swap_params(params)?;
+        self.inner.counters.rollout_rollbacks.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
@@ -734,8 +820,31 @@ impl ServeHandle {
     }
 
     /// Point-in-time counters (cheap; safe from any thread).
+    ///
+    /// The snapshot is **coherent with respect to parameter swaps**: it
+    /// holds the swap serialization lock, so `device_loads`, the queue
+    /// depth, and the rollout counters are never sampled in the middle of
+    /// a multi-device promote/rollback apply loop (previously each field
+    /// was read under its own lock, so a mid-swap scrape could pair a
+    /// pre-swap load vector with post-swap counters).
     pub fn stats(&self) -> ServeStats {
+        let _coherent = match self.inner.swap_lock.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => poisoned.into_inner(),
+        };
         let c = &self.inner.counters;
+        let rollout_swap_p99_us = {
+            let ring = match c.swap_lat_us.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            let mut lat: Vec<u64> = ring.iter().copied().collect();
+            lat.sort_unstable();
+            match lat.len() {
+                0 => 0,
+                n => lat[((n as f64 * 0.99).ceil() as usize).clamp(1, n) - 1],
+            }
+        };
         ServeStats {
             submitted: c.submitted.load(Ordering::Relaxed),
             submitted_interactive: c.submitted_interactive.load(Ordering::Relaxed),
@@ -752,6 +861,10 @@ impl ServeHandle {
             adaptive_delay: self.inner.delay.is_adaptive(),
             memory_traffic: c.mem_traffic.load(Ordering::Relaxed),
             memory_worker_peak: c.mem_worker_peak.load(Ordering::Relaxed),
+            rollout_candidates: c.rollout_candidates.load(Ordering::Relaxed),
+            rollout_promotions: c.rollout_promotions.load(Ordering::Relaxed),
+            rollout_rollbacks: c.rollout_rollbacks.load(Ordering::Relaxed),
+            rollout_swap_p99_us,
             closed: self.inner.queue.is_closed(),
         }
     }

@@ -164,6 +164,7 @@ fn execute(runner: &dyn BatchRunner, job: BatchJob, ledger: &mut MemoryLedger, c
                     batch_fill: fill,
                     batch_size: capacity,
                 };
+                c.note_swap_latency(stats.total());
                 let reply = Tensor::from_vec(vec![k], data[i * k..(i + 1) * k].to_vec())
                     .map(|logits| ServeReply { class: pred.classes[i], logits, stats })
                     .map_err(|e| RuntimeError::Shape(e.to_string()));

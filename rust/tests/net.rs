@@ -69,7 +69,7 @@ fn random_text(rng: &mut Rng) -> String {
 
 fn random_frame(rng: &mut Rng) -> Frame {
     let id = rng.next_u64();
-    match rng.below(6) {
+    match rng.below(7) {
         0 => Frame::Request {
             id,
             class: if rng.below(2) == 0 { SloClass::Interactive } else { SloClass::Batch },
@@ -87,6 +87,7 @@ fn random_frame(rng: &mut Rng) -> Frame {
         2 => Frame::Error { id, message: random_text(rng) },
         3 => Frame::RetryAfter { id, retry_after_us: rng.next_u64() },
         4 => Frame::MetricsRequest { id },
+        5 => Frame::Drain { id },
         _ => Frame::MetricsReply { id, text: random_text(rng) },
     }
 }
@@ -476,6 +477,44 @@ fn metrics_scrape_over_binary_frame_and_http() {
     assert_eq!(scrape_value(body, "net_metrics_requests_total"), Some(1), "{body}");
 
     server.shutdown().unwrap();
+}
+
+/// The `Drain` admin frame (the std-only SIGTERM stand-in): the ack is
+/// echoed back in FIFO order with the connection's other replies, the
+/// server's drain flag latches for the owning driver, the scrapeable
+/// counter ticks — and the reactor keeps serving (the flag only pauses
+/// rollout promotion; shutdown stays with the driver).
+#[test]
+fn drain_frame_raises_flag_and_serving_continues() {
+    let shape = [2, 2];
+    let config = ServeConfig::default().max_delay_ms(2).workers(1).queue_cap(64);
+    let server = spawn_net(TestRunner::new(2, &shape, 3), config, NetConfig::default());
+    let addr = server.local_addr().to_string();
+    assert!(!server.drain_requested(), "flag must start lowered");
+    let flag = server.drain_flag();
+    assert!(!flag.load(Ordering::SeqCst));
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    let reply = client.request(&example(&shape, 0), SloClass::Interactive).unwrap();
+    assert!(matches!(reply, ClientReply::Reply { .. }));
+    client.drain().unwrap();
+    assert!(server.drain_requested(), "drain ack arrived but the flag stayed low");
+    assert!(flag.load(Ordering::SeqCst), "the shared flag handle must see the drain too");
+
+    // The reactor records, it does not shut down: later requests (same
+    // connection and fresh ones) still get served.
+    let reply = client.request(&example(&shape, 1), SloClass::Interactive).unwrap();
+    assert!(matches!(reply, ClientReply::Reply { .. }));
+    let mut fresh = NetClient::connect(&addr).unwrap();
+    let reply = fresh.request(&example(&shape, 2), SloClass::Interactive).unwrap();
+    assert!(matches!(reply, ClientReply::Reply { .. }));
+
+    let text = fresh.metrics().unwrap();
+    assert_eq!(scrape_value(&text, "net_drain_requests_total"), Some(1), "{text}");
+
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.net.drain_requests, 1);
+    assert_eq!(report.net.replies, 3, "drain acks are not reply frames");
 }
 
 /// Garbage on the socket gets a typed error frame and a close — the

@@ -1,0 +1,463 @@
+//! Integration tests for `anode::rollout` — the train→canary→promote/
+//! rollback orchestrator over a live serve pipeline.
+//!
+//! Everything runs offline on the simulated-device harness
+//! (`runtime::sim`), across the device grid and under whichever backend
+//! `ANODE_BACKEND` selects (the CI `rollout-e2e` leg runs this file with
+//! a 4-device compiled-backend topology). Covered:
+//!
+//! * promotion end-to-end: an improving trainer's candidates hot-swap
+//!   into the pipeline, and what serves afterwards is **bitwise** the
+//!   trainer's promoted parameters;
+//! * rollback end-to-end: a fault-injected device (the
+//!   `open_simulated_with_fault` registry) fails the canary training
+//!   step, and serving returns **bitwise** to the last-good snapshot —
+//!   with the pipeline never draining;
+//! * gate hysteresis: candidates that pass but never accumulate the
+//!   consecutive-pass streak leave serving untouched (the pure flapping
+//!   state machine is unit-tested inside `anode::rollout` itself);
+//! * promotion churn under concurrent wire clients: no reply is dropped,
+//!   reordered, or shed while snapshots swap mid-traffic;
+//! * the PR 8 stats fix: `ServeStats` (and the metrics text rendered
+//!   from it) is one coherent snapshot even while swaps churn —
+//!   `device_loads` never tears;
+//! * drain → pause: a wire `Drain` frame raises the server flag that the
+//!   orchestrator's `pause_on` watches, so a draining server never takes
+//!   another promotion.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use anode::api::{Engine, Session, SessionConfig};
+use anode::net::metrics::scrape_value;
+use anode::net::{ClientReply, NetClient, NetConfig};
+use anode::rollout::{RolloutConfig, RolloutOrchestrator};
+use anode::runtime::sim::{write_artifacts, SimSpec};
+use anode::runtime::{sim_devices_env, ArtifactRegistry};
+use anode::serve::{split_examples, ServeConfig, ServeHandle, SloClass};
+use anode::tensor::Tensor;
+
+/// Write the sim artifact set into a fresh temp dir.
+fn sim_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("anode_rollout_{}_{tag}", std::process::id()));
+    write_artifacts(&dir, &SimSpec::default()).unwrap();
+    dir
+}
+
+/// Device counts under test: {1, 2} plus the CI topology when set.
+fn device_grid() -> Vec<usize> {
+    let mut grid = vec![1usize, 2];
+    if let Some(n) = sim_devices_env() {
+        if !grid.contains(&n) {
+            grid.push(n);
+        }
+    }
+    grid
+}
+
+fn sim_engine(dir: &std::path::Path, devices: usize) -> Engine {
+    Engine::builder().artifacts(dir).devices(devices).simulate(true).build().unwrap()
+}
+
+/// Deterministic (images, labels) batches off the spec's shared
+/// generators, offset by `seed` so train and held-out streams differ.
+fn stream(spec: &SimSpec, n: usize, seed: usize) -> Vec<(Tensor, Tensor)> {
+    (0..n).map(|k| (spec.image_batch(seed + k), spec.label_batch(seed + k))).collect()
+}
+
+fn param_bits(params: &[Tensor]) -> Vec<u32> {
+    params.iter().flat_map(|p| p.data().iter().map(|x| x.to_bits())).collect()
+}
+
+/// A serve pipeline that only flushes full batches (far deadline): with
+/// ordered single-threaded submission the batcher reassembles exactly
+/// the original batch tensors, so replies compare bitwise against the
+/// predict path (the same idiom rust/tests/net.rs phase 1 locks in).
+fn far_deadline() -> ServeConfig {
+    ServeConfig::default().max_delay_ms(600_000).workers(2).queue_cap(512)
+}
+
+/// Submit every example of `images` in order and collect the
+/// (class, logits) rows the pipeline answers with.
+fn serve_rows(handle: &ServeHandle, images: &[Tensor]) -> Vec<(usize, Vec<f32>)> {
+    let examples: Vec<Tensor> = images.iter().flat_map(|b| split_examples(b).unwrap()).collect();
+    let pendings: Vec<_> = examples.iter().map(|ex| handle.submit(ex.clone()).unwrap()).collect();
+    pendings
+        .into_iter()
+        .map(|p| {
+            let reply = p.wait().unwrap();
+            (reply.class, reply.logits.data().to_vec())
+        })
+        .collect()
+}
+
+/// The reference rows: `predict_batches` over the same batches with the
+/// session's current parameters.
+fn predict_rows(session: &Session, images: &[Tensor]) -> Vec<(usize, Vec<f32>)> {
+    let pred = session.predict_batches_with_workers(images, 1).unwrap();
+    let mut rows = Vec::new();
+    for p in &pred.predictions {
+        let k = *p.logits.shape().last().unwrap();
+        for (r, &class) in p.classes.iter().enumerate() {
+            rows.push((class, p.logits.data()[r * k..(r + 1) * k].to_vec()));
+        }
+    }
+    rows
+}
+
+/// Promotion end-to-end across the device grid: two one-round campaigns
+/// through the same long-lived orchestrator. Each promotes, the
+/// live/last-good bookkeeping advances exactly one snapshot per
+/// promotion, and the pipeline serves the trainer's latest parameters
+/// bitwise — all through `promote_params` hot-swaps, zero drain.
+#[test]
+fn promotion_campaigns_hot_swap_trained_params_bitwise() {
+    let dir = sim_dir("promote");
+    for devices in device_grid() {
+        let engine = sim_engine(&dir, devices);
+        let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+        let initial_bits = param_bits(session.params());
+        let handle = session.serve(far_deadline()).unwrap();
+
+        let spec = SimSpec::default();
+        let train = stream(&spec, 3, 0);
+        let eval = stream(&spec, 2, 100);
+        let config = RolloutConfig::default().rounds(1).canary_every(2).gate_threshold(10.0);
+        let mut orch = RolloutOrchestrator::new(
+            handle.clone(),
+            Arc::new(session.params().to_vec()),
+            config,
+        );
+
+        let r1 = orch.run(&mut session, &train, &eval).unwrap();
+        assert_eq!(r1.rounds_run, 1, "devices={devices}");
+        assert_eq!(r1.candidates, 1, "devices={devices}");
+        assert_eq!(r1.promotions, 1, "devices={devices}");
+        assert_eq!(r1.rollbacks, 0, "devices={devices}");
+        assert!(!r1.paused, "devices={devices}");
+        assert_eq!(r1.promote_latency.len(), 1, "devices={devices}");
+        assert!(r1.baseline_loss.is_finite(), "devices={devices}");
+        let c1_bits = param_bits(&orch.live());
+        assert_ne!(c1_bits, initial_bits, "training never moved the params");
+        assert_eq!(c1_bits, param_bits(session.params()), "devices={devices}");
+        assert_eq!(param_bits(&orch.last_good()), initial_bits, "devices={devices}");
+
+        let r2 = orch.run(&mut session, &train, &eval).unwrap();
+        assert_eq!(r2.promotions, 1, "devices={devices}");
+        assert_eq!(param_bits(&orch.last_good()), c1_bits, "devices={devices}");
+        assert_eq!(
+            param_bits(&orch.live()),
+            param_bits(session.params()),
+            "devices={devices}"
+        );
+
+        let stats = handle.stats();
+        assert_eq!(stats.rollout_candidates, 2, "devices={devices}");
+        assert_eq!(stats.rollout_promotions, 2, "devices={devices}");
+        assert_eq!(stats.rollout_rollbacks, 0, "devices={devices}");
+
+        // What the pipeline serves now is bitwise the trainer's params.
+        let images: Vec<Tensor> = (0..2).map(|k| spec.image_batch(500 + k)).collect();
+        assert_eq!(serve_rows(&handle, &images), predict_rows(&session, &images), "d={devices}");
+        handle.shutdown().unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Rollback end-to-end: after a healthy campaign promotes once, a second
+/// campaign over a fault-injected session (device 0's registry fails
+/// every `stem_fwd` call) hits the regression path. The orchestrator
+/// swaps the last-good snapshot back in; serving afterwards is bitwise
+/// the pre-promotion parameters and the pipeline never drained.
+#[test]
+fn injected_device_fault_rolls_back_to_last_good_bitwise() {
+    let dir = sim_dir("rollback");
+    for devices in device_grid() {
+        let engine = sim_engine(&dir, devices);
+        let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+        let initial = Arc::new(session.params().to_vec());
+        let initial_bits = param_bits(&initial);
+        let handle = session.serve(far_deadline()).unwrap();
+
+        let spec = SimSpec::default();
+        let train = stream(&spec, 3, 0);
+        let eval = stream(&spec, 2, 100);
+        let config = RolloutConfig::default().rounds(1).canary_every(1).gate_threshold(10.0);
+        let mut orch = RolloutOrchestrator::new(handle.clone(), initial.clone(), config);
+
+        // Phase 1, healthy: one promotion (live = candidate, last-good =
+        // the initial snapshot).
+        let r1 = orch.run(&mut session, &train, &eval).unwrap();
+        assert_eq!(r1.promotions, 1, "devices={devices}");
+        assert_ne!(param_bits(&orch.live()), initial_bits, "devices={devices}");
+
+        // Phase 2, regressed: the same orchestrator drives a session over
+        // the fault-injected registry for the same artifacts — the canary
+        // training step errors, which is a regression event.
+        let reg = Arc::new(
+            ArtifactRegistry::open_simulated_with_fault(&dir, 0, "stem_fwd").unwrap(),
+        );
+        let faulty_engine = Engine::builder().registry(reg).devices(devices).build().unwrap();
+        let mut faulty = faulty_engine.session(SessionConfig::with_method("anode")).unwrap();
+        let r2 = orch.run(&mut faulty, &train, &eval).unwrap();
+        assert_eq!(r2.rollbacks, 1, "devices={devices}");
+        assert_eq!(r2.promotions, 0, "devices={devices}");
+        assert_eq!(r2.rollback_latency.len(), 1, "devices={devices}");
+        assert_eq!(param_bits(&orch.live()), initial_bits, "rollback target is last-good");
+
+        let stats = handle.stats();
+        assert_eq!(stats.rollout_promotions, 1, "devices={devices}");
+        assert_eq!(stats.rollout_rollbacks, 1, "devices={devices}");
+
+        // Zero drain: the same pipeline keeps serving, and its replies
+        // are bitwise the last-good (initial) parameters — verified via a
+        // healthy session pinned to that snapshot.
+        let verify_engine = sim_engine(&dir, devices);
+        let mut verify = verify_engine.session(SessionConfig::with_method("anode")).unwrap();
+        verify.params_mut().clone_from_slice(&initial);
+        let images: Vec<Tensor> = (0..2).map(|k| spec.image_batch(700 + k)).collect();
+        assert_eq!(serve_rows(&handle, &images), predict_rows(&verify, &images), "d={devices}");
+        handle.shutdown().unwrap();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Hysteresis end-to-end: with the consecutive-pass bar above the round
+/// count, every candidate passes the threshold yet none promotes — the
+/// pipeline still serves the initial snapshot bitwise after the campaign
+/// (the flapping-resets-the-streak state machine is unit-tested in
+/// `anode::rollout`).
+#[test]
+fn hysteresis_streak_short_of_the_bar_never_promotes() {
+    let dir = sim_dir("hysteresis");
+    let engine = sim_engine(&dir, 1);
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let handle = session.serve(far_deadline()).unwrap();
+
+    let spec = SimSpec::default();
+    let train = stream(&spec, 3, 0);
+    let eval = stream(&spec, 2, 100);
+    let config =
+        RolloutConfig::default().rounds(3).canary_every(1).gate_threshold(10.0).hysteresis(5);
+    let mut orch =
+        RolloutOrchestrator::new(handle.clone(), Arc::new(session.params().to_vec()), config);
+    let report = orch.run(&mut session, &train, &eval).unwrap();
+
+    assert_eq!(report.rounds_run, 3);
+    assert_eq!(report.candidates, 3);
+    assert_eq!(report.promotions, 0, "the streak never reached the hysteresis bar");
+    assert_eq!(report.rollbacks, 0);
+    let stats = handle.stats();
+    assert_eq!(stats.rollout_candidates, 3);
+    assert_eq!(stats.rollout_promotions, 0);
+
+    // Serving is untouched: a fresh session holds the initial params.
+    let fresh = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let images: Vec<Tensor> = (0..2).map(|k| spec.image_batch(900 + k)).collect();
+    assert_eq!(serve_rows(&handle, &images), predict_rows(&fresh, &images));
+    handle.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The one-shot `Session::rollout` convenience wires the orchestrator up
+/// over the session's current params and runs a campaign.
+#[test]
+fn session_rollout_convenience_promotes() {
+    let dir = sim_dir("convenience");
+    let engine = sim_engine(&dir, 1);
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let handle = session.serve(far_deadline()).unwrap();
+    let spec = SimSpec::default();
+    let report = session
+        .rollout(
+            &handle,
+            &stream(&spec, 2, 0),
+            &stream(&spec, 2, 100),
+            RolloutConfig::default().rounds(1).canary_every(1).gate_threshold(10.0),
+        )
+        .unwrap();
+    assert_eq!(report.promotions, 1);
+    assert_eq!(handle.stats().rollout_promotions, 1);
+    handle.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Promotion churn under concurrent wire clients: while a background
+/// thread hot-swaps snapshots as fast as it can, pipelined protocol
+/// clients must see every reply — none dropped, none reordered (the
+/// client asserts FIFO ids), none shed — and every logits row stays
+/// well-formed whichever snapshot served it.
+#[test]
+fn promotion_churn_drops_no_replies_under_concurrent_net_clients() {
+    let dir = sim_dir("churn");
+    let engine = sim_engine(&dir, 2);
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let serve_cfg =
+        ServeConfig::default().max_delay_ms(5).batch_delay_ms(20).workers(2).queue_cap(512);
+    let server = session.serve_net(serve_cfg, NetConfig::default(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+    let handle = server.handle().clone();
+
+    let spec = SimSpec::default();
+    let num_classes = spec.num_classes;
+    let examples: Vec<Tensor> =
+        (0..3).flat_map(|b| split_examples(&spec.image_batch(b)).unwrap()).collect();
+
+    // Two valid snapshots to flip between: the initial params and a
+    // one-step-trained variant.
+    let snap_a = Arc::new(session.params().to_vec());
+    session.step(&spec.image_batch(0), &spec.label_batch(0)).unwrap();
+    let snap_b = Arc::new(session.params().to_vec());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let churn = {
+        let handle = handle.clone();
+        let stop = stop.clone();
+        let (a, b) = (snap_a.clone(), snap_b.clone());
+        thread::spawn(move || {
+            let mut swaps = 0u64;
+            while !stop.load(Ordering::SeqCst) {
+                let snap = if swaps % 2 == 0 { b.clone() } else { a.clone() };
+                handle.promote_params(snap).unwrap();
+                swaps += 1;
+                thread::sleep(Duration::from_millis(1));
+            }
+            swaps
+        })
+    };
+
+    let clients = 3usize;
+    let rounds = 4usize;
+    thread::scope(|s| {
+        for c in 0..clients {
+            let addr = addr.clone();
+            let examples = &examples;
+            s.spawn(move || {
+                let mut client = NetClient::connect(&addr).unwrap();
+                for round in 0..rounds {
+                    let replies = client.pipeline(examples, SloClass::Interactive).unwrap();
+                    assert_eq!(replies.len(), examples.len(), "client {c} round {round}");
+                    for (i, reply) in replies.iter().enumerate() {
+                        let ClientReply::Reply { class, logits, .. } = reply else {
+                            panic!("client {c} round {round} request {i} shed mid-promotion");
+                        };
+                        assert!(*class < num_classes, "client {c} round {round} request {i}");
+                        assert!(
+                            logits.data().iter().all(|v| v.is_finite()),
+                            "client {c} round {round} request {i}"
+                        );
+                    }
+                }
+            });
+        }
+    });
+    stop.store(true, Ordering::SeqCst);
+    let swaps = churn.join().unwrap();
+    assert!(swaps >= 1, "the churn thread never swapped");
+
+    let stats = handle.stats();
+    assert_eq!(stats.rollout_promotions, swaps);
+    let total = (clients * rounds * examples.len()) as u64;
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.net.replies, total, "a promotion dropped or duplicated replies");
+    assert_eq!(report.net.shed, 0);
+    assert_eq!(report.serve.requests, total);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The PR 8 stats fix, regression-locked: `ServeStats` snapshots (and
+/// the metrics text rendered from them) are taken under the swap lock,
+/// so a scrape landing mid-swap can never observe a torn multi-device
+/// view — `device_loads` always has one entry per device and the
+/// pipeline never reads as closed while swaps churn.
+#[test]
+fn stats_snapshot_stays_coherent_while_swaps_churn() {
+    let dir = sim_dir("coherent");
+    let devices = 2usize;
+    let engine = sim_engine(&dir, devices);
+    let session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let serve_cfg = ServeConfig::default().max_delay_ms(2).workers(2).queue_cap(512);
+    let server = session.serve_net(serve_cfg, NetConfig::default(), "127.0.0.1:0").unwrap();
+    let handle = server.handle().clone();
+
+    let spec = SimSpec::default();
+    let snap = Arc::new(session.params().to_vec());
+    let stop = Arc::new(AtomicBool::new(false));
+    let churn = {
+        let handle = handle.clone();
+        let stop = stop.clone();
+        let snap = snap.clone();
+        thread::spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                handle.promote_params(snap.clone()).unwrap();
+            }
+        })
+    };
+
+    let examples = split_examples(&spec.image_batch(0)).unwrap();
+    for i in 0..100 {
+        // Keep the routers busy so device loads actually move.
+        if i % 10 == 0 {
+            let pendings: Vec<_> =
+                examples.iter().map(|ex| handle.submit(ex.clone()).unwrap()).collect();
+            for p in pendings {
+                p.wait().unwrap();
+            }
+        }
+        let stats = handle.stats();
+        assert_eq!(stats.device_loads.len(), devices, "iteration {i}: torn device snapshot");
+        assert!(!stats.closed, "iteration {i}");
+        let text = server.metrics_text();
+        let load_lines = text.lines().filter(|l| l.starts_with("anode_device_load{")).count();
+        assert_eq!(load_lines, devices, "iteration {i}: torn metrics render\n{text}");
+        assert_eq!(scrape_value(&text, "closed"), Some(0), "iteration {i}");
+    }
+    stop.store(true, Ordering::SeqCst);
+    churn.join().unwrap();
+    assert!(handle.stats().rollout_promotions >= 1);
+    server.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Drain → pause: a wire `Drain` frame raises the server flag; an
+/// orchestrator whose `pause_on` watches that flag stops before taking
+/// (or promoting) another candidate, and says so in its report.
+#[test]
+fn drain_frame_pauses_rollout_promotion() {
+    let dir = sim_dir("drain");
+    let engine = sim_engine(&dir, 1);
+    let mut session = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let serve_cfg = ServeConfig::default().max_delay_ms(5).workers(2).queue_cap(256);
+    let server = session.serve_net(serve_cfg, NetConfig::default(), "127.0.0.1:0").unwrap();
+    let addr = server.local_addr().to_string();
+
+    let mut client = NetClient::connect(&addr).unwrap();
+    client.drain().unwrap();
+    assert!(server.drain_requested());
+
+    let spec = SimSpec::default();
+    let config = RolloutConfig::default()
+        .rounds(3)
+        .canary_every(1)
+        .gate_threshold(10.0)
+        .pause_on(server.drain_flag());
+    let mut orch = RolloutOrchestrator::new(
+        server.handle().clone(),
+        Arc::new(session.params().to_vec()),
+        config,
+    );
+    let report = orch.run(&mut session, &stream(&spec, 2, 0), &stream(&spec, 2, 100)).unwrap();
+    assert!(report.paused, "the campaign must report the pause");
+    assert_eq!(report.rounds_run, 0, "a drained server trains no canary");
+    assert_eq!(report.promotions, 0);
+    assert_eq!(server.handle().stats().rollout_promotions, 0);
+
+    let text = client.metrics().unwrap();
+    assert_eq!(scrape_value(&text, "net_drain_requests_total"), Some(1), "{text}");
+    assert_eq!(scrape_value(&text, "rollout_promotions_total"), Some(0), "{text}");
+    server.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
