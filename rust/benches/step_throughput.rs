@@ -33,6 +33,7 @@ use anode::api::{head_logits, Engine, SessionConfig};
 use anode::data::SyntheticCifar;
 use anode::memory::MemoryLedger;
 use anode::runtime::sim::{write_artifacts, SimSpec};
+use anode::runtime::Backend;
 use anode::serve::{split_examples, BatchRunner, HostTailRunner, ServeConfig, ServeHandle};
 use anode::tensor::Tensor;
 use anode::util::bench::{bench, black_box, percentile, quick_mode};
@@ -481,6 +482,8 @@ fn train_throughput(engine: Option<&Engine>) {
         eprintln!("WARNING: parallel step diverged bitwise from serial");
     }
 
+    let compiled_extra = compiled_train_section(iters).unwrap_or_default();
+
     let json = format!(
         "{{\n  \"bench\": \"train_throughput\",\n  \"mode\": \"{mode}\",\n  \
          \"micro_batches\": {accum},\n  \"workers\": {WORKERS},\n  \
@@ -489,12 +492,93 @@ fn train_throughput(engine: Option<&Engine>) {
          \"step_speedup\": {speedup:.3},\n  \"bit_identical\": {identical},\n  \
          \"predict_reused_pool_median_secs\": {reused_secs:.6},\n  \
          \"predict_per_call_spawn_median_secs\": {per_call_secs:.6},\n  \
-         \"spawn_overhead_savings_secs\": {savings:.6}\n}}\n"
+         \"spawn_overhead_savings_secs\": {savings:.6}{compiled_extra}\n}}\n"
     );
     match std::fs::write("BENCH_train.json", &json) {
         Ok(()) => println!("wrote BENCH_train.json"),
         Err(e) => eprintln!("could not write BENCH_train.json: {e}"),
     }
+}
+
+/// Compiled-vs-sim training step, per gradient strategy, on the sim
+/// harness (runs on every build — no `artifacts/` needed): per-backend
+/// step medians, the fused `TrainProgram`'s arena counters, and two
+/// invariants the bench-baseline gate hard-fails on — bitwise identity
+/// between the backends and zero steady-state arena allocations after
+/// warmup. Returns the extra `BENCH_train.json` fields.
+fn compiled_train_section(iters: usize) -> Option<String> {
+    const STRATEGIES: [&str; 5] =
+        ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"];
+    println!("\n--- compiled vs sim training step (per strategy, sim harness) ---\n");
+    let dir = std::env::temp_dir().join(format!("anode_bench_ctrain_{}", std::process::id()));
+    if let Err(e) = write_artifacts(&dir, &SimSpec::default()) {
+        eprintln!("could not write sim artifacts: {e} — skipping compiled train section");
+        return None;
+    }
+    let build = |backend: Backend| {
+        Engine::builder().artifacts(&dir).devices(1).backend(backend).build().unwrap()
+    };
+    let sim = build(Backend::Sim);
+    let compiled = build(Backend::Compiled);
+    let spec = SimSpec::default();
+    let (x, y) = (spec.image_batch(0), spec.label_batch(0));
+
+    let mut fields = String::new();
+    let mut identical = true;
+    let mut steady_zero = true;
+    for method in STRATEGIES {
+        let mut a = sim.session(SessionConfig::with_method(method)).unwrap();
+        let mut b = compiled.session(SessionConfig::with_method(method)).unwrap();
+        // Warmup both sides (the compiled arena allocates here), spot-check
+        // the loss bits, then pin the alloc counter across the timed runs.
+        let la = a.step(&x, &y).unwrap().loss.to_bits();
+        let lb = b.step(&x, &y).unwrap().loss.to_bits();
+        identical &= la == lb;
+        let warm = compiled.registry().compile_stats().unwrap().train_arena_allocs;
+        let s = bench(&format!("step[sim,{method}]"), 1, iters, || {
+            black_box(a.step(&x, &y).unwrap());
+        });
+        let c = bench(&format!("step[compiled,{method}]"), 1, iters, || {
+            black_box(b.step(&x, &y).unwrap());
+        });
+        println!("{}", s.report());
+        println!("{}", c.report());
+        steady_zero &= compiled.registry().compile_stats().unwrap().train_arena_allocs == warm;
+        let key = method.replace('-', "_");
+        fields.push_str(&format!(
+            ",\n  \"{key}_sim_step_median_secs\": {:.6},\n  \
+             \"{key}_compiled_step_median_secs\": {:.6}",
+            s.median.as_secs_f64(),
+            c.median.as_secs_f64(),
+        ));
+    }
+    let stats = compiled.registry().compile_stats().unwrap();
+    println!(
+        "compiled train arena: allocs={} reuses={} trajectory={}B recompute_segments={}",
+        stats.train_arena_allocs,
+        stats.train_arena_reuses,
+        stats.trajectory_bytes,
+        stats.train_recompute_segments
+    );
+    println!("bit-identical to sim: {identical}  steady-state allocs zero: {steady_zero}");
+    if !identical {
+        eprintln!("WARNING: compiled training steps diverged bitwise from sim");
+    }
+    if !steady_zero {
+        eprintln!("WARNING: compiled training allocated arenas after warmup");
+    }
+    fields.push_str(&format!(
+        ",\n  \"train_arena_allocs\": {},\n  \"train_arena_reuses\": {},\n  \
+         \"train_trajectory_bytes\": {},\n  \"train_recompute_segments\": {},\n  \
+         \"train_compiled_bit_identical\": {identical},\n  \
+         \"train_steady_state_allocs_zero\": {steady_zero}",
+        stats.train_arena_allocs,
+        stats.train_arena_reuses,
+        stats.trajectory_bytes,
+        stats.train_recompute_segments
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    Some(fields)
 }
 
 /// Pool-per-device sharding on **simulated devices**, emitted to

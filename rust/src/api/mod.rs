@@ -80,7 +80,9 @@ pub use session::{
     argmax_rows, head_logits, BatchPredictReport, EvalStats, FitOptions, FitReport,
     GradCheckReport, PredictStats, Prediction, Session, SessionConfig, StepStats,
 };
-pub use strategy::{BlockContext, GradientStrategy, ModuleExec, StrategyRegistry};
+pub use strategy::{
+    BlockContext, CompiledBlockBackward, GradientStrategy, ModuleExec, StrategyRegistry,
+};
 
 /// Open an artifact registry for sharing across several engines — and,
 /// since the registry is `Send + Sync`, across threads (the

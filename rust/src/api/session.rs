@@ -376,6 +376,13 @@ impl<'e> Session<'e> {
     /// One training step: forward, strategy backward, clip, SGD update.
     /// Non-finite losses/gradients skip the update and report
     /// `finite: false` instead of corrupting the parameters.
+    ///
+    /// Under [`Backend::Compiled`](crate::runtime::Backend::Compiled) the
+    /// whole loss-and-grad body dispatches as one fused
+    /// [`TrainProgram`](crate::compile::TrainProgram) over a
+    /// checkpoint-aware arena (zero steady-state allocations); losses,
+    /// parameters and ledger traffic stay bit-identical to the sim
+    /// interpreter for every built-in strategy.
     pub fn step(&mut self, images: &Tensor, labels: &Tensor) -> Result<StepStats> {
         self.check_batch(images)?;
         self.check_labels(labels)?;
@@ -417,6 +424,13 @@ impl<'e> Session<'e> {
     /// property survives parallelism (asserted across all registered
     /// strategies in `rust/tests/concurrency.rs`). Every micro-batch must
     /// have the AOT-compiled batch shape.
+    ///
+    /// Under [`Backend::Compiled`](crate::runtime::Backend::Compiled)
+    /// each worker's per-micro-batch loss-and-grad runs the fused
+    /// [`TrainProgram`](crate::compile::TrainProgram) (arena buffers pool
+    /// per concurrent caller), and the unchanged fixed-order reduction
+    /// keeps the result bitwise equal to sim serial across the whole
+    /// (devices × workers × strategies) grid.
     pub fn step_accumulate(&mut self, micro_batches: &[(Tensor, Tensor)]) -> Result<StepStats> {
         self.step_accumulate_with_workers(micro_batches, self.config.grad_workers)
     }

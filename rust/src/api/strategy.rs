@@ -18,7 +18,7 @@
 //! whichever thread runs the backward pass, so all per-call scratch state
 //! stays on the stack of `block_backward`.
 
-use crate::checkpoint::{plan, run_backward, Strategy as CheckpointStrategy};
+use crate::checkpoint::{plan, run_backward, Schedule, Strategy as CheckpointStrategy};
 use crate::memory::{Category, MemoryLedger};
 use crate::models::{parse_budget, GradMethod};
 use crate::runtime::{Result, RuntimeError};
@@ -50,6 +50,25 @@ pub struct BlockContext<'a> {
     pub pidx: &'a [usize],
 }
 
+/// How a strategy's block backward lowers into a compiled
+/// [`crate::compile::TrainProgram`] — the shape of the calls, decoupled
+/// from the `required_kinds` strings (a custom strategy may declare
+/// `["vjp"]` yet compute something else entirely, so the compiled
+/// backend never guesses from kinds; it only lowers strategies that
+/// opt in through this seam).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompiledBlockBackward {
+    /// One fused call `(z_in, θ..., gz) -> (gz, gθ...)` on the module of
+    /// this kind (`anode`, `otd`).
+    Fused { kind: &'static str },
+    /// One call `(z_out, θ..., gz) -> (gz, gθ..., z0_rec)` starting from
+    /// the block output (`node`); the reconstruction is dead in training.
+    FromOutput { kind: &'static str },
+    /// `step_fwd`/`step_vjp` unrolled through the strategy's
+    /// [`GradientStrategy::checkpoint_schedule`].
+    Checkpointed,
+}
+
 /// One adjoint method, dispatched per ODE block in reverse network order.
 ///
 /// `Send + Sync` is part of the contract: the strategy object is owned by
@@ -63,6 +82,23 @@ pub trait GradientStrategy: Send + Sync {
     /// Block-module kinds this strategy calls; validated against the
     /// manifest when a session is created (fail-fast, not mid-backward).
     fn required_kinds(&self) -> &'static [&'static str];
+
+    /// The checkpoint schedule this strategy drives its backward with,
+    /// for a block of `nt` steps — `None` for strategies that do not
+    /// checkpoint (fused VJP, reverse-time solve). The compiled backend
+    /// uses this to turn checkpointed activations into long-lived arena
+    /// slots and recompute segments into statically unrolled replays.
+    fn checkpoint_schedule(&self, _nt: usize) -> Option<Schedule> {
+        None
+    }
+
+    /// How this strategy lowers into a compiled training plan. `None`
+    /// (the default) keeps sessions on the interpreter path even under
+    /// `Backend::Compiled` — correct for plugged-in custom strategies
+    /// the compiler cannot know the semantics of.
+    fn compiled_backward(&self) -> Option<CompiledBlockBackward> {
+        None
+    }
 
     /// Backward through one ODE block: consume dL/d(z_out), write this
     /// block's parameter gradients into `grads[ctx.pidx]`, return
@@ -111,6 +147,10 @@ impl GradientStrategy for AnodeStrategy {
         &["vjp"]
     }
 
+    fn compiled_backward(&self) -> Option<CompiledBlockBackward> {
+        Some(CompiledBlockBackward::Fused { kind: "vjp" })
+    }
+
     fn block_backward(
         &self,
         ctx: &BlockContext<'_>,
@@ -133,6 +173,10 @@ impl GradientStrategy for OtdStrategy {
 
     fn required_kinds(&self) -> &'static [&'static str] {
         &["otd"]
+    }
+
+    fn compiled_backward(&self) -> Option<CompiledBlockBackward> {
+        Some(CompiledBlockBackward::Fused { kind: "otd" })
     }
 
     fn block_backward(
@@ -180,6 +224,10 @@ impl GradientStrategy for NodeStrategy {
 
     fn required_kinds(&self) -> &'static [&'static str] {
         &["node"]
+    }
+
+    fn compiled_backward(&self) -> Option<CompiledBlockBackward> {
+        Some(CompiledBlockBackward::FromOutput { kind: "node" })
     }
 
     fn block_backward(
@@ -251,6 +299,14 @@ impl GradientStrategy for CheckpointedStrategy {
         &["step_fwd", "step_vjp"]
     }
 
+    fn checkpoint_schedule(&self, nt: usize) -> Option<Schedule> {
+        Some(plan(self.schedule, nt))
+    }
+
+    fn compiled_backward(&self) -> Option<CompiledBlockBackward> {
+        Some(CompiledBlockBackward::Checkpointed)
+    }
+
     fn block_backward(
         &self,
         ctx: &BlockContext<'_>,
@@ -258,7 +314,11 @@ impl GradientStrategy for CheckpointedStrategy {
         grads: &mut [Tensor],
         ledger: &mut MemoryLedger,
     ) -> Result<Tensor> {
-        let schedule = plan(self.schedule, ctx.nt);
+        // Single source of truth with the compiled lowering: both paths
+        // drive the exact schedule this seam hands out.
+        let schedule = self
+            .checkpoint_schedule(ctx.nt)
+            .expect("checkpointed strategy always has a schedule");
         let errs = schedule.validate();
         if !errs.is_empty() {
             return Err(RuntimeError::Io(format!("invalid schedule: {}", errs.join("; "))));
@@ -504,6 +564,57 @@ mod tests {
         assert_eq!(reg.create("custom").unwrap().name(), "custom");
         // Built-ins still resolve.
         assert_eq!(reg.create("anode").unwrap().name(), "anode");
+    }
+
+    #[test]
+    fn compiled_seam_covers_builtins_and_defaults_off_for_custom() {
+        let reg = StrategyRegistry::builtin();
+        assert_eq!(
+            reg.create("anode").unwrap().compiled_backward(),
+            Some(CompiledBlockBackward::Fused { kind: "vjp" })
+        );
+        assert_eq!(
+            reg.create("otd").unwrap().compiled_backward(),
+            Some(CompiledBlockBackward::Fused { kind: "otd" })
+        );
+        assert_eq!(
+            reg.create("node").unwrap().compiled_backward(),
+            Some(CompiledBlockBackward::FromOutput { kind: "node" })
+        );
+        for spec in ["anode-revolve3", "anode-equispaced2"] {
+            let s = reg.create(spec).unwrap();
+            assert_eq!(s.compiled_backward(), Some(CompiledBlockBackward::Checkpointed));
+            let schedule = s.checkpoint_schedule(8).expect("checkpointed strategies plan");
+            assert_eq!(schedule.nt, 8);
+            assert!(schedule.validate().is_empty(), "{spec} emits a valid schedule");
+        }
+        // Fused/solve strategies do not checkpoint.
+        assert!(reg.create("anode").unwrap().checkpoint_schedule(8).is_none());
+        assert!(reg.create("node").unwrap().checkpoint_schedule(8).is_none());
+
+        // A plugged-in strategy with a familiar kind string must NOT be
+        // lowered by kind-matching: the default seam keeps it on the
+        // interpreter, where its (arbitrary) semantics are honored.
+        struct Custom;
+        impl GradientStrategy for Custom {
+            fn name(&self) -> String {
+                "custom".into()
+            }
+            fn required_kinds(&self) -> &'static [&'static str] {
+                &["vjp"]
+            }
+            fn block_backward(
+                &self,
+                _ctx: &BlockContext<'_>,
+                gz: Tensor,
+                _grads: &mut [Tensor],
+                _ledger: &mut MemoryLedger,
+            ) -> Result<Tensor> {
+                Ok(gz)
+            }
+        }
+        assert_eq!(Custom.compiled_backward(), None);
+        assert!(Custom.checkpoint_schedule(8).is_none());
     }
 
     #[test]

@@ -123,6 +123,77 @@ pub(crate) fn element_count(shape: &[usize]) -> usize {
     shape.iter().product::<usize>().max(1)
 }
 
+/// Shape-check one lowered call site against a module spec: arity first,
+/// then each *known* supplied shape against the declaration. `None`
+/// entries skip the shape check (program inputs whose shape only the
+/// session knows — the image batch on the first chain step, the label
+/// batch). Shared by [`super::plan::InferProgram`] and
+/// [`super::plan::TrainProgram`] so both fused lowerings reject a
+/// mismatched manifest with the same typed errors.
+pub(crate) fn check_module_args(spec: &ModuleSpec, supplied: &[Option<&[usize]>]) -> Result<()> {
+    if spec.inputs.len() != supplied.len() {
+        return Err(CompileError::ArityMismatch {
+            module: spec.name.clone(),
+            expected: spec.inputs.len(),
+            found: supplied.len(),
+        });
+    }
+    for (decl, sup) in spec.inputs.iter().zip(supplied) {
+        if let Some(shape) = sup {
+            if decl.shape.as_slice() != *shape {
+                return Err(CompileError::ShapeMismatch {
+                    module: spec.name.clone(),
+                    input: decl.name.clone(),
+                    expected: decl.shape.clone(),
+                    found: shape.to_vec(),
+                });
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Operand of a training-step IR op: where the data comes from before
+/// the arena layout exists.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainArg {
+    /// The image batch (a program input, never in the arena).
+    Image,
+    /// The label batch (program input of the loss/grad head).
+    Labels,
+    /// A parameter tensor (index into the canonical parameter vector).
+    Param(usize),
+    /// A virtual value defined by an earlier op.
+    Val(usize),
+}
+
+/// One op of the training-step IR: module calls over virtual values plus
+/// the two scalar-free accumulator primitives the adjoint needs
+/// (`Zero`/`Acc` replicate the interpreter's `Tensor::zeros` +
+/// `axpy(1.0, g)` per-step parameter-gradient fold, in the same order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TrainOp {
+    /// Execute plan `plan` over `args`; `outs[i]` is the value holding
+    /// output `i`, or `None` when the fill was pruned as dead
+    /// ([`super::passes::prune_dead_outputs`]) — the digest is shared,
+    /// so skipping a dead fill cannot perturb live outputs.
+    Call { plan: usize, args: Vec<TrainArg>, outs: Vec<Option<usize>> },
+    /// Define `out` as all zeros (a parameter-gradient accumulator).
+    Zero { out: usize },
+    /// `dst += src`, elementwise (`axpy` with alpha = 1.0).
+    Acc { src: usize, dst: usize },
+}
+
+/// The training step as a value graph before arena layout: ops in
+/// program order over `value_count` virtual values, with `roots` (loss,
+/// correct count, parameter gradients) pinned live to the epilogue.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TrainIr {
+    pub ops: Vec<TrainOp>,
+    pub value_count: usize,
+    pub roots: Vec<usize>,
+}
+
 /// Build the typed IR for one module, performing all validation the hot
 /// path will skip: dtype support, output materializability, non-empty
 /// output set. Inputs with zero elements are legal (they absorb only

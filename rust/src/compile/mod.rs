@@ -47,9 +47,14 @@ use std::sync::Arc;
 
 use crate::runtime::ModuleSpec;
 
-pub use ir::{build_module_ir, AbsorbStep, ModuleIr, Op, OpKind, ValueId};
-pub use passes::{run_default_passes, PassStats};
-pub use plan::{compile_module, InferCall, InferProgram, ModulePlan};
+pub use ir::{
+    build_module_ir, AbsorbStep, ModuleIr, Op, OpKind, TrainArg, TrainIr, TrainOp, ValueId,
+};
+pub use passes::{prune_dead_outputs, run_default_passes, PassStats};
+pub use plan::{
+    compile_module, InferCall, InferProgram, ModulePlan, TrainBackward, TrainBlock, TrainChain,
+    TrainProgram, TrainStage, TransCall,
+};
 
 /// Compile-time result type.
 pub type Result<T> = std::result::Result<T, CompileError>;
@@ -137,12 +142,25 @@ pub struct CompileStats {
     pub fused_ops: AtomicU64,
     /// IR ops constant-folded away at compile time.
     pub folded_consts: AtomicU64,
-    /// Bytes of liveness-planned arena backing fused infer programs.
+    /// Bytes of liveness-planned arena backing fused programs (infer
+    /// and train).
     pub arena_bytes: AtomicU64,
     /// Arena buffers allocated (warmup only, in steady state).
     pub arena_allocs: AtomicU64,
     /// Arena buffers reused from the pool (the steady-state path).
     pub arena_reuses: AtomicU64,
+    /// Bytes of train-arena slots holding trajectory state (block
+    /// boundaries plus checkpointed/taped step states) — the planned
+    /// O(L)+O(N_t) budget of the paper, per built [`plan::TrainProgram`].
+    pub trajectory_bytes: AtomicU64,
+    /// Recompute segments (checkpoint restores replayed as sub-programs)
+    /// unrolled into train programs at build time.
+    pub train_recompute_segments: AtomicU64,
+    /// Training-arena buffers allocated (warmup only, in steady state).
+    pub train_arena_allocs: AtomicU64,
+    /// Training-arena buffers reused from the pool (every steady-state
+    /// training step).
+    pub train_arena_reuses: AtomicU64,
 }
 
 impl CompileStats {
@@ -155,6 +173,10 @@ impl CompileStats {
             arena_bytes: self.arena_bytes.load(Ordering::Relaxed),
             arena_allocs: self.arena_allocs.load(Ordering::Relaxed),
             arena_reuses: self.arena_reuses.load(Ordering::Relaxed),
+            trajectory_bytes: self.trajectory_bytes.load(Ordering::Relaxed),
+            train_recompute_segments: self.train_recompute_segments.load(Ordering::Relaxed),
+            train_arena_allocs: self.train_arena_allocs.load(Ordering::Relaxed),
+            train_arena_reuses: self.train_arena_reuses.load(Ordering::Relaxed),
         }
     }
 }
@@ -169,6 +191,10 @@ pub struct CompileStatsSnapshot {
     pub arena_bytes: u64,
     pub arena_allocs: u64,
     pub arena_reuses: u64,
+    pub trajectory_bytes: u64,
+    pub train_recompute_segments: u64,
+    pub train_arena_allocs: u64,
+    pub train_arena_reuses: u64,
 }
 
 impl CompileStatsSnapshot {
@@ -181,6 +207,10 @@ impl CompileStatsSnapshot {
         self.arena_bytes += other.arena_bytes;
         self.arena_allocs += other.arena_allocs;
         self.arena_reuses += other.arena_reuses;
+        self.trajectory_bytes += other.trajectory_bytes;
+        self.train_recompute_segments += other.train_recompute_segments;
+        self.train_arena_allocs += other.train_arena_allocs;
+        self.train_arena_reuses += other.train_arena_reuses;
     }
 }
 

@@ -22,7 +22,7 @@ use std::collections::{HashMap, HashSet};
 
 use crate::runtime::sim;
 
-use super::ir::{AbsorbStep, ModuleIr, Op, OpKind, ValueId};
+use super::ir::{AbsorbStep, ModuleIr, Op, OpKind, TrainArg, TrainIr, TrainOp, ValueId};
 
 /// What one full pass pipeline did to a module's IR.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -160,6 +160,50 @@ pub fn fuse(ir: &mut ModuleIr) -> usize {
     }
     ir.ops = out;
     fused_created
+}
+
+/// Dead-fill elimination over a training-step IR ([`TrainIr`]): a call
+/// output that no later op reads and that is not a program root (loss,
+/// correct count, a parameter gradient) is never materialized — its
+/// `outs` entry becomes `None`, so the lowering assigns it no arena slot
+/// and the runtime skips its fill. The digest absorbs *inputs* only, so
+/// a skipped fill cannot perturb any live output: bit-identity is
+/// structural. The concrete win: `node`'s z0_rec reconstruction (a full
+/// activation per block) costs neither arena bytes nor fill time in the
+/// training plan. Returns the number of fills pruned.
+pub fn prune_dead_outputs(ir: &mut TrainIr) -> usize {
+    let mut read = vec![false; ir.value_count];
+    for op in &ir.ops {
+        match op {
+            TrainOp::Call { args, .. } => {
+                for a in args {
+                    if let TrainArg::Val(v) = a {
+                        read[*v] = true;
+                    }
+                }
+            }
+            TrainOp::Zero { .. } => {}
+            TrainOp::Acc { src, dst } => {
+                read[*src] = true;
+                read[*dst] = true;
+            }
+        }
+    }
+    for &r in &ir.roots {
+        read[r] = true;
+    }
+    let mut pruned = 0usize;
+    for op in &mut ir.ops {
+        if let TrainOp::Call { outs, .. } = op {
+            for out in outs.iter_mut() {
+                if matches!(out, Some(v) if !read[*v]) {
+                    *out = None;
+                    pruned += 1;
+                }
+            }
+        }
+    }
+    pruned
 }
 
 /// The default pipeline: fold → DCE → fuse, with per-pass accounting.

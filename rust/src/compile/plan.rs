@@ -19,9 +19,16 @@ use crate::runtime::sim::{centered, mix};
 use crate::runtime::{ArtifactRegistry, ModuleSpec, RuntimeError};
 use crate::tensor::Tensor;
 
-use super::ir::{element_count, AbsorbStep, ModuleIr, OpKind, ValueId};
-use super::passes::run_default_passes;
-use super::{CompileError, CompileStats, Result};
+use std::collections::HashMap;
+
+use crate::checkpoint::{Action, Schedule};
+
+use super::ir::{
+    check_module_args, element_count, AbsorbStep, ModuleIr, OpKind, TrainArg, TrainIr, TrainOp,
+    ValueId,
+};
+use super::passes::{prune_dead_outputs, run_default_passes};
+use super::{CompileError, CompileStats, CompiledSet, Result};
 
 /// One shape-specialized output fill of a [`ModulePlan`].
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -310,6 +317,8 @@ pub struct InferCall {
 enum Loc {
     /// The program input (the image batch).
     Image,
+    /// The label batch (train programs only).
+    Labels,
     /// A parameter tensor (index into the params slice).
     Param(usize),
     /// An arena slot (f32 offset + length).
@@ -376,38 +385,16 @@ impl InferProgram {
             let spec = reg
                 .module_spec(&call.module)
                 .map_err(|_| CompileError::MissingModule { module: call.module.clone() })?;
-            if spec.inputs.len() != 1 + call.params.len() {
-                return Err(CompileError::ArityMismatch {
-                    module: call.module.clone(),
-                    expected: spec.inputs.len(),
-                    found: 1 + call.params.len(),
-                });
-            }
-            if let Some(prev) = &activation {
-                if &spec.inputs[0].shape != prev {
-                    return Err(CompileError::ShapeMismatch {
-                        module: call.module.clone(),
-                        input: spec.inputs[0].name.clone(),
-                        expected: spec.inputs[0].shape.clone(),
-                        found: prev.clone(),
-                    });
-                }
-            }
-            for (j, &p) in call.params.iter().enumerate() {
-                let declared = &spec.inputs[1 + j];
-                let supplied = param_shapes.get(p).ok_or_else(|| CompileError::Unsupported {
+            let mut supplied: Vec<Option<&[usize]>> = Vec::with_capacity(1 + call.params.len());
+            supplied.push(activation.as_deref());
+            for &p in &call.params {
+                let shape = param_shapes.get(p).ok_or_else(|| CompileError::Unsupported {
                     module: call.module.clone(),
                     reason: format!("chain references parameter {p} outside the layout"),
                 })?;
-                if &declared.shape != supplied {
-                    return Err(CompileError::ShapeMismatch {
-                        module: call.module.clone(),
-                        input: declared.name.clone(),
-                        expected: declared.shape.clone(),
-                        found: supplied.clone(),
-                    });
-                }
+                supplied.push(Some(shape.as_slice()));
             }
+            check_module_args(spec, &supplied)?;
             if spec.outputs.len() != 1 {
                 return Err(CompileError::Unsupported {
                     module: call.module.clone(),
@@ -526,6 +513,8 @@ impl InferProgram {
                     AbsorbStep::Data(i) => {
                         let part: &[f32] = match instr.args[i] {
                             Loc::Image => x.data(),
+                            // Inference chains never reference labels.
+                            Loc::Labels => unreachable!("labels in an inference program"),
                             Loc::Param(p) => params[p].data(),
                             Loc::Slot { off, len } => &arena[off..off + len],
                         };
@@ -548,8 +537,761 @@ impl InferProgram {
     }
 }
 
-// The program is shared across worker threads via the execution core.
+/// Backward lowering of one ODE block inside a [`TrainChain`].
+#[derive(Debug, Clone)]
+pub enum TrainBackward {
+    /// One fused artifact call `(z_in, θ..., gz) -> (gz, gθ...)` — the
+    /// `anode` DTO VJP and the `otd` adjoint.
+    Fused { module: String },
+    /// One call `(z_out, θ..., gz) -> (gz, gθ..., z0_rec)` starting from
+    /// the block *output* (the `node` reverse solve); the reconstruction
+    /// output is dead in training and pruned from the plan.
+    FromOutput { module: String },
+    /// `step_fwd`/`step_vjp` artifacts unrolled through an in-block
+    /// checkpoint [`Schedule`] (`anode-revolve<m>`, `anode-equispaced<m>`):
+    /// checkpoints become value aliases with extended liveness, recompute
+    /// segments replay as straight-line sub-programs into the same arena.
+    Checkpointed { step_fwd: String, step_vjp: String, schedule: Schedule },
+}
+
+/// One ODE block of the training chain: forward module, its parameter
+/// indices, and how its backward lowers.
+#[derive(Debug, Clone)]
+pub struct TrainBlock {
+    pub fwd: String,
+    pub params: Vec<usize>,
+    pub backward: TrainBackward,
+}
+
+/// A transition between stages: forward + VJP modules and the (w, b)
+/// parameter indices.
+#[derive(Debug, Clone)]
+pub struct TransCall {
+    pub fwd: String,
+    pub vjp: String,
+    pub params: (usize, usize),
+}
+
+/// One stage: its blocks plus the transition that follows it (absent on
+/// the last stage).
+#[derive(Debug, Clone)]
+pub struct TrainStage {
+    pub blocks: Vec<TrainBlock>,
+    pub trans: Option<TransCall>,
+}
+
+/// The whole training step as data: stem, stages, loss/grad head. The
+/// [`crate::coordinator::ExecutionCore`] assembles this from its resolved
+/// module handles and parameter index; [`TrainProgram::build`] lowers it.
+#[derive(Debug, Clone)]
+pub struct TrainChain {
+    /// Discrete time steps per ODE block (the fused backward's ledger
+    /// cost is `nt` step states, matching the interpreter's accounting).
+    pub nt: usize,
+    pub stem_fwd: String,
+    pub stem_vjp: String,
+    pub stem_params: (usize, usize),
+    pub stages: Vec<TrainStage>,
+    pub head_loss_grad: String,
+    pub head_params: (usize, usize),
+}
+
+/// One flat-program instruction of a [`TrainProgram`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum TrainInstr {
+    /// Run a module plan; `outs[i]` is output `i`'s arena placement, or
+    /// `None` for a pruned dead fill.
+    Call { plan: usize, args: Vec<Loc>, outs: Vec<Option<(usize, usize)>> },
+    /// Zero an arena range (a parameter-gradient accumulator).
+    Zero { off: usize, len: usize },
+    /// `arena[dst..] += arena[src..]` elementwise (`axpy` with alpha =
+    /// 1.0 — the interpreter's per-step gradient fold, same order).
+    Acc { src: usize, dst: usize, len: usize },
+}
+
+/// Where one parameter gradient lives in the arena at the end of a run.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct GradOut {
+    param: usize,
+    off: usize,
+    len: usize,
+    shape: Vec<usize>,
+}
+
+/// The whole training step — forward with trajectory capture, the
+/// strategy's adjoint backward, and the loss/grad tail — as one flat
+/// instruction list over a liveness-planned arena.
+///
+/// The strategy's checkpoint schedule drives slot liveness: block
+/// boundaries and checkpointed/taped step states stay live from their
+/// forward definition to their last backward read (the long-lived
+/// O(L)+O(N_t) trajectory slots), every other intermediate recycles its
+/// slot as soon as its last reader retires, and revolve's recompute
+/// segments are unrolled at build time into straight-line replays over
+/// the same arena. Steady-state training steps make **zero allocations**
+/// beyond the returned gradient tensors (arena buffers recycle through a
+/// pool; `train_arena_allocs`/`train_arena_reuses` prove it).
+///
+/// Bit-identity with the interpreter path is structural: same module
+/// plans in the same order, and the two non-call primitives (`Zero`,
+/// `Acc`) replicate `Tensor::zeros` + `axpy(1.0, g)` operation for
+/// operation.
+pub struct TrainProgram {
+    plans: Vec<Arc<ModulePlan>>,
+    instrs: Vec<TrainInstr>,
+    arena_len: usize,
+    slot_count: usize,
+    loss_off: usize,
+    correct_off: usize,
+    grad_outs: Vec<GradOut>,
+    /// Layout-covered params the backward never writes get interpreter-
+    /// identical zero gradients.
+    grad_zero: Vec<(usize, Vec<usize>)>,
+    param_count: usize,
+    kernel_calls: usize,
+    trajectory_bytes: usize,
+    recompute_segments: usize,
+    pruned_fills: usize,
+    /// Interpreter ledger script, forward order: one BlockInput alloc per
+    /// stored boundary (x, block inputs, transition inputs).
+    tracked_bytes: Vec<usize>,
+    /// Interpreter ledger script, backward block order: one transient
+    /// StepState alloc+free per block backward.
+    step_state_bytes: Vec<usize>,
+    pool: Mutex<Vec<Vec<f32>>>,
+    stats: Arc<CompileStats>,
+}
+
+/// Build-time state of the chain → IR walk: virtual values with shapes,
+/// plan deduplication, call emission with spec validation.
+struct TrainBuilder<'a> {
+    reg: &'a ArtifactRegistry,
+    set: &'a CompiledSet,
+    param_shapes: &'a [Vec<usize>],
+    plans: Vec<Arc<ModulePlan>>,
+    plan_ids: HashMap<String, usize>,
+    ops: Vec<TrainOp>,
+    shapes: Vec<Vec<usize>>,
+    trajectory: Vec<bool>,
+}
+
+impl TrainBuilder<'_> {
+    fn plan_id(&mut self, module: &str) -> Result<usize> {
+        if let Some(&i) = self.plan_ids.get(module) {
+            return Ok(i);
+        }
+        let plan = self
+            .set
+            .plan(module)
+            .ok_or_else(|| CompileError::MissingModule { module: module.to_string() })?;
+        self.plans.push(plan.clone());
+        self.plan_ids.insert(module.to_string(), self.plans.len() - 1);
+        Ok(self.plans.len() - 1)
+    }
+
+    fn value(&mut self, shape: Vec<usize>) -> usize {
+        self.shapes.push(shape);
+        self.trajectory.push(false);
+        self.shapes.len() - 1
+    }
+
+    /// Emit one validated module call; returns the output value ids.
+    fn call(&mut self, module: &str, args: Vec<TrainArg>) -> Result<Vec<usize>> {
+        let spec = self
+            .reg
+            .module_spec(module)
+            .map_err(|_| CompileError::MissingModule { module: module.to_string() })?;
+        let mut supplied: Vec<Option<&[usize]>> = Vec::with_capacity(args.len());
+        for a in &args {
+            supplied.push(match a {
+                TrainArg::Image | TrainArg::Labels => None,
+                TrainArg::Param(p) => Some(
+                    self.param_shapes
+                        .get(*p)
+                        .ok_or_else(|| CompileError::Unsupported {
+                            module: module.to_string(),
+                            reason: format!("chain references parameter {p} outside the layout"),
+                        })?
+                        .as_slice(),
+                ),
+                TrainArg::Val(v) => Some(self.shapes[*v].as_slice()),
+            });
+        }
+        check_module_args(spec, &supplied)?;
+        let outs: Vec<usize> =
+            spec.outputs.iter().map(|o| o.shape.clone()).map(|s| self.value(s)).collect();
+        let plan = self.plan_id(module)?;
+        self.ops.push(TrainOp::Call { plan, args, outs: outs.iter().map(|&v| Some(v)).collect() });
+        Ok(outs)
+    }
+
+    /// Emit a call expected to produce exactly `n` outputs.
+    fn call_n(
+        &mut self,
+        module: &str,
+        args: Vec<TrainArg>,
+        n: usize,
+        what: &str,
+    ) -> Result<Vec<usize>> {
+        let outs = self.call(module, args)?;
+        if outs.len() != n {
+            return Err(CompileError::Unsupported {
+                module: module.to_string(),
+                reason: format!("{what} needs {n} outputs, manifest declares {}", outs.len()),
+            });
+        }
+        Ok(outs)
+    }
+
+    fn bytes_of(&self, v: usize) -> usize {
+        element_count(&self.shapes[v]) * std::mem::size_of::<f32>()
+    }
+}
+
+impl TrainProgram {
+    /// Lower a [`TrainChain`] against a compiled-backend registry:
+    /// forward walk, strategy backward (checkpoint schedules unrolled
+    /// statically), loss/grad tail — then dead-fill pruning, liveness
+    /// interval construction with trajectory slots pinned across the
+    /// forward→backward gap, and [`assign_slots`] arena layout. All
+    /// validation (module existence, arity, cross-module shapes,
+    /// schedule executability, full gradient coverage) happens here,
+    /// once; the runtime never checks again.
+    pub fn build(
+        reg: &ArtifactRegistry,
+        chain: &TrainChain,
+        param_shapes: &[Vec<usize>],
+    ) -> Result<TrainProgram> {
+        let Some(set) = reg.compiled_set() else {
+            return Err(CompileError::Unsupported {
+                module: "<train>".into(),
+                reason: "registry does not run the compiled backend".into(),
+            });
+        };
+        let unsupported = |module: &str, reason: String| CompileError::Unsupported {
+            module: module.to_string(),
+            reason,
+        };
+
+        let mut b = TrainBuilder {
+            reg,
+            set,
+            param_shapes,
+            plans: Vec::new(),
+            plan_ids: HashMap::new(),
+            ops: Vec::new(),
+            shapes: Vec::new(),
+            trajectory: Vec::new(),
+        };
+
+        // ---- Forward walk with trajectory capture -------------------
+        // The interpreter tracks x under BlockInput right after the stem
+        // call; replicate its ledger script exactly (same sizes, same
+        // order) so compiled training is traffic-identical to sim serial.
+        let stem_spec = reg
+            .module_spec(&chain.stem_fwd)
+            .map_err(|_| CompileError::MissingModule { module: chain.stem_fwd.clone() })?;
+        let image_bytes = stem_spec
+            .inputs
+            .first()
+            .map(|t| element_count(&t.shape) * std::mem::size_of::<f32>())
+            .ok_or_else(|| unsupported(&chain.stem_fwd, "stem takes no inputs".into()))?;
+        let (sw, sb) = chain.stem_params;
+        let mut z = b.call_n(
+            &chain.stem_fwd,
+            vec![TrainArg::Image, TrainArg::Param(sw), TrainArg::Param(sb)],
+            1,
+            "stem forward",
+        )?[0];
+        let mut tracked_bytes = vec![image_bytes];
+
+        // (z_in, z_out) per block, per stage — the captured trajectory.
+        let mut block_bounds: Vec<Vec<(usize, usize)>> = Vec::with_capacity(chain.stages.len());
+        let mut trans_inputs: Vec<usize> = Vec::new();
+        for stage in &chain.stages {
+            let mut bounds = Vec::with_capacity(stage.blocks.len());
+            for blk in &stage.blocks {
+                let mut args: Vec<TrainArg> = vec![TrainArg::Val(z)];
+                args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
+                let z1 = b.call_n(&blk.fwd, args, 1, "block forward")?[0];
+                tracked_bytes.push(b.bytes_of(z));
+                b.trajectory[z] = true;
+                bounds.push((z, z1));
+                z = z1;
+            }
+            block_bounds.push(bounds);
+            if let Some(trans) = &stage.trans {
+                tracked_bytes.push(b.bytes_of(z));
+                b.trajectory[z] = true;
+                trans_inputs.push(z);
+                let (tw, tb) = trans.params;
+                z = b.call_n(
+                    &trans.fwd,
+                    vec![TrainArg::Val(z), TrainArg::Param(tw), TrainArg::Param(tb)],
+                    1,
+                    "transition forward",
+                )?[0];
+            }
+        }
+        let z_final = z;
+
+        // ---- Loss/grad head -----------------------------------------
+        let (hw, hb) = chain.head_params;
+        let head = b.call_n(
+            &chain.head_loss_grad,
+            vec![
+                TrainArg::Val(z_final),
+                TrainArg::Param(hw),
+                TrainArg::Param(hb),
+                TrainArg::Labels,
+            ],
+            5,
+            "loss/grad head",
+        )?;
+        let (v_loss, v_correct) = (head[0], head[1]);
+        for v in [v_loss, v_correct] {
+            if element_count(&b.shapes[v]) != 1 {
+                return Err(unsupported(
+                    &chain.head_loss_grad,
+                    format!("loss/correct outputs must be scalars, found {:?}", b.shapes[v]),
+                ));
+            }
+        }
+        let mut gz = head[2];
+        let mut grad_of: HashMap<usize, usize> = HashMap::new();
+        grad_of.insert(hw, head[3]);
+        grad_of.insert(hb, head[4]);
+
+        // ---- Strategy backward, reverse network order ---------------
+        let mut step_state_bytes = Vec::new();
+        let mut recompute_segments = 0usize;
+        for (s, stage) in chain.stages.iter().enumerate().rev() {
+            if let Some(trans) = &stage.trans {
+                let (tw, tb) = trans.params;
+                let outs = b.call_n(
+                    &trans.vjp,
+                    vec![
+                        TrainArg::Val(trans_inputs[s]),
+                        TrainArg::Param(tw),
+                        TrainArg::Param(tb),
+                        TrainArg::Val(gz),
+                    ],
+                    3,
+                    "transition VJP",
+                )?;
+                gz = outs[0];
+                grad_of.insert(tw, outs[1]);
+                grad_of.insert(tb, outs[2]);
+            }
+            for (bi, blk) in stage.blocks.iter().enumerate().rev() {
+                let (z_in, z_out) = block_bounds[s][bi];
+                let act_bytes = b.bytes_of(z_in);
+                match &blk.backward {
+                    TrainBackward::Fused { module } => {
+                        let mut args: Vec<TrainArg> = vec![TrainArg::Val(z_in)];
+                        args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
+                        args.push(TrainArg::Val(gz));
+                        let outs =
+                            b.call_n(module, args, 1 + blk.params.len(), "fused block VJP")?;
+                        gz = outs[0];
+                        for (&p, &g) in blk.params.iter().zip(&outs[1..]) {
+                            grad_of.insert(p, g);
+                        }
+                        step_state_bytes.push(chain.nt * act_bytes);
+                    }
+                    TrainBackward::FromOutput { module } => {
+                        let mut args: Vec<TrainArg> = vec![TrainArg::Val(z_out)];
+                        args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
+                        args.push(TrainArg::Val(gz));
+                        // Trailing z0_rec output is dead in training; the
+                        // prune pass drops its fill and arena slot.
+                        let outs =
+                            b.call_n(module, args, 2 + blk.params.len(), "reverse-solve VJP")?;
+                        gz = outs[0];
+                        for (&p, &g) in blk.params.iter().zip(&outs[1..1 + blk.params.len()]) {
+                            grad_of.insert(p, g);
+                        }
+                    }
+                    TrainBackward::Checkpointed { step_fwd, step_vjp, schedule } => {
+                        if schedule.nt != chain.nt {
+                            return Err(unsupported(
+                                step_fwd,
+                                format!(
+                                    "schedule covers {} steps, block runs {}",
+                                    schedule.nt, chain.nt
+                                ),
+                            ));
+                        }
+                        let errs = schedule.validate();
+                        if !errs.is_empty() {
+                            return Err(unsupported(
+                                step_fwd,
+                                format!("invalid checkpoint schedule: {}", errs.join("; ")),
+                            ));
+                        }
+                        // Interpreter order: accumulators zeroed before the
+                        // sweep, one axpy(1.0) per step VJP in schedule order.
+                        let accs: Vec<usize> = blk
+                            .params
+                            .iter()
+                            .map(|&p| {
+                                let v = b.value(param_shapes[p].clone());
+                                b.ops.push(TrainOp::Zero { out: v });
+                                v
+                            })
+                            .collect();
+                        // Static unroll of the schedule, value-aliased: a
+                        // Checkpoint stores no copy — the checkpointed value
+                        // simply stays live (its arena slot is pinned) until
+                        // its last Restore replays a segment from it.
+                        let mut cp_slots: HashMap<usize, usize> = HashMap::new();
+                        let mut tape: Vec<usize> = Vec::new();
+                        let mut cur = z_in;
+                        let mut adj = gz;
+                        for (idx, action) in schedule.actions.iter().enumerate() {
+                            match *action {
+                                Action::Checkpoint { slot, .. } => {
+                                    b.trajectory[cur] = true;
+                                    cp_slots.insert(slot, cur);
+                                }
+                                Action::Restore { slot, .. } => {
+                                    cur = *cp_slots.get(&slot).ok_or_else(|| {
+                                        unsupported(
+                                            step_fwd,
+                                            format!("action {idx}: restore of empty slot {slot}"),
+                                        )
+                                    })?;
+                                    recompute_segments += 1;
+                                }
+                                Action::Forward { store_tape, .. } => {
+                                    let mut args: Vec<TrainArg> = vec![TrainArg::Val(cur)];
+                                    args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
+                                    let next =
+                                        b.call_n(step_fwd, args, 1, "checkpoint step forward")?[0];
+                                    if store_tape {
+                                        b.trajectory[cur] = true;
+                                        tape.push(cur);
+                                    }
+                                    cur = next;
+                                }
+                                Action::Backward { .. } => {
+                                    let z_tape = tape.pop().ok_or_else(|| {
+                                        unsupported(
+                                            step_vjp,
+                                            format!("action {idx}: backward over an empty tape"),
+                                        )
+                                    })?;
+                                    let mut args: Vec<TrainArg> = vec![TrainArg::Val(z_tape)];
+                                    args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
+                                    args.push(TrainArg::Val(adj));
+                                    let outs = b.call_n(
+                                        step_vjp,
+                                        args,
+                                        1 + blk.params.len(),
+                                        "checkpoint step VJP",
+                                    )?;
+                                    adj = outs[0];
+                                    for (&acc, &g) in accs.iter().zip(&outs[1..]) {
+                                        b.ops.push(TrainOp::Acc { src: g, dst: acc });
+                                    }
+                                }
+                            }
+                        }
+                        gz = adj;
+                        for (&p, &acc) in blk.params.iter().zip(&accs) {
+                            grad_of.insert(p, acc);
+                        }
+                        // Interpreter ledger cost: (m slots + 1 tape) states.
+                        let slots = schedule.strategy.slots(schedule.nt);
+                        step_state_bytes.push((slots + 1) * act_bytes);
+                    }
+                }
+            }
+        }
+        let outs = b.call_n(
+            &chain.stem_vjp,
+            vec![TrainArg::Image, TrainArg::Param(sw), TrainArg::Param(sb), TrainArg::Val(gz)],
+            2,
+            "stem VJP",
+        )?;
+        grad_of.insert(sw, outs[0]);
+        grad_of.insert(sb, outs[1]);
+
+        // ---- Dead-fill pruning + liveness + arena layout ------------
+        let kernel_calls =
+            b.ops.iter().filter(|op| matches!(op, TrainOp::Call { .. })).count();
+        let mut roots = vec![v_loss, v_correct];
+        roots.extend(grad_of.values().copied());
+        let mut ir = TrainIr { ops: b.ops, value_count: b.shapes.len(), roots };
+        let pruned_fills = prune_dead_outputs(&mut ir);
+
+        let n_ops = ir.ops.len();
+        let nvals = ir.value_count;
+        let mut def = vec![0usize; nvals];
+        let mut last = vec![0usize; nvals];
+        let mut live = vec![false; nvals];
+        for (i, op) in ir.ops.iter().enumerate() {
+            match op {
+                TrainOp::Call { args, outs, .. } => {
+                    for a in args {
+                        if let TrainArg::Val(v) = a {
+                            last[*v] = i;
+                        }
+                    }
+                    for out in outs.iter().flatten() {
+                        def[*out] = i;
+                        last[*out] = i;
+                        live[*out] = true;
+                    }
+                }
+                TrainOp::Zero { out } => {
+                    def[*out] = i;
+                    last[*out] = i;
+                    live[*out] = true;
+                }
+                TrainOp::Acc { src, dst } => {
+                    last[*src] = i;
+                    last[*dst] = i;
+                }
+            }
+        }
+        // Roots stay live through the epilogue (output extraction).
+        for &r in &ir.roots {
+            last[r] = n_ops;
+        }
+
+        let mut intervals = Vec::new();
+        let mut placed: Vec<Option<(usize, usize)>> = vec![None; nvals];
+        let mut interval_vals = Vec::new();
+        for v in 0..nvals {
+            if live[v] {
+                intervals.push((def[v], last[v], element_count(&b.shapes[v])));
+                interval_vals.push(v);
+            }
+        }
+        let (slots, slot_sizes) = assign_slots(&intervals);
+        let mut offsets = Vec::with_capacity(slot_sizes.len());
+        let mut total = 0usize;
+        for &size in &slot_sizes {
+            offsets.push(total);
+            total += size;
+        }
+        for (k, &v) in interval_vals.iter().enumerate() {
+            placed[v] = Some((offsets[slots[k]], element_count(&b.shapes[v])));
+        }
+        let place = |v: usize| placed[v].expect("live value has an arena placement");
+
+        let instrs: Vec<TrainInstr> = ir
+            .ops
+            .iter()
+            .map(|op| match op {
+                TrainOp::Call { plan, args, outs } => TrainInstr::Call {
+                    plan: *plan,
+                    args: args
+                        .iter()
+                        .map(|a| match *a {
+                            TrainArg::Image => Loc::Image,
+                            TrainArg::Labels => Loc::Labels,
+                            TrainArg::Param(p) => Loc::Param(p),
+                            TrainArg::Val(v) => {
+                                let (off, len) = place(v);
+                                Loc::Slot { off, len }
+                            }
+                        })
+                        .collect(),
+                    outs: outs.iter().map(|o| o.map(&place)).collect(),
+                },
+                TrainOp::Zero { out } => {
+                    let (off, len) = place(*out);
+                    TrainInstr::Zero { off, len }
+                }
+                TrainOp::Acc { src, dst } => {
+                    let (src, _) = place(*src);
+                    let (dst, len) = place(*dst);
+                    TrainInstr::Acc { src, dst, len }
+                }
+            })
+            .collect();
+
+        // ---- Outputs ------------------------------------------------
+        let (loss_off, _) = place(v_loss);
+        let (correct_off, _) = place(v_correct);
+        let mut grad_outs = Vec::with_capacity(grad_of.len());
+        let mut grad_zero = Vec::new();
+        for (p, shape) in param_shapes.iter().enumerate() {
+            match grad_of.get(&p) {
+                Some(&v) => {
+                    let (off, len) = place(v);
+                    grad_outs.push(GradOut { param: p, off, len, shape: b.shapes[v].clone() });
+                }
+                None => grad_zero.push((p, shape.clone())),
+            }
+        }
+
+        let trajectory_bytes: usize = (0..nvals)
+            .filter(|&v| live[v] && b.trajectory[v])
+            .map(|v| element_count(&b.shapes[v]) * std::mem::size_of::<f32>())
+            .sum();
+
+        let stats = set.stats().clone();
+        stats
+            .arena_bytes
+            .fetch_add((total * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
+        stats.trajectory_bytes.fetch_add(trajectory_bytes as u64, Ordering::Relaxed);
+        stats.train_recompute_segments.fetch_add(recompute_segments as u64, Ordering::Relaxed);
+        Ok(TrainProgram {
+            plans: b.plans,
+            instrs,
+            arena_len: total,
+            slot_count: slot_sizes.len(),
+            loss_off,
+            correct_off,
+            grad_outs,
+            grad_zero,
+            param_count: param_shapes.len(),
+            kernel_calls,
+            trajectory_bytes,
+            recompute_segments,
+            pruned_fills,
+            tracked_bytes,
+            step_state_bytes,
+            pool: Mutex::new(Vec::new()),
+            stats,
+        })
+    }
+
+    /// Kernels dispatched per run — equal to the interpreter path's
+    /// module-call count for the same strategy (call-accounting parity).
+    pub fn kernel_calls(&self) -> usize {
+        self.kernel_calls
+    }
+
+    /// Arena slots after liveness reuse.
+    pub fn slot_count(&self) -> usize {
+        self.slot_count
+    }
+
+    /// Bytes of one arena buffer.
+    pub fn arena_bytes(&self) -> usize {
+        self.arena_len * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes of arena devoted to trajectory state (block boundaries plus
+    /// checkpointed/taped step states) — the planned O(L)+O(N_t) budget.
+    pub fn trajectory_bytes(&self) -> usize {
+        self.trajectory_bytes
+    }
+
+    /// Recompute segments unrolled from checkpoint schedules (0 for the
+    /// fused/reverse-solve strategies).
+    pub fn recompute_segments(&self) -> usize {
+        self.recompute_segments
+    }
+
+    /// Dead output fills pruned at build time (e.g. `node`'s z0_rec).
+    pub fn pruned_fills(&self) -> usize {
+        self.pruned_fills
+    }
+
+    /// The interpreter's BlockInput ledger script (alloc sizes in forward
+    /// order) — the coordinator replays it so compiled training stays
+    /// traffic-identical to sim serial.
+    pub(crate) fn tracked_bytes(&self) -> &[usize] {
+        &self.tracked_bytes
+    }
+
+    /// The interpreter's transient StepState ledger script (alloc+free
+    /// sizes in backward block order).
+    pub(crate) fn step_state_bytes(&self) -> &[usize] {
+        &self.step_state_bytes
+    }
+
+    /// Run one training step: `(loss, correct, grads)` over a pooled
+    /// arena. Zero steady-state allocations beyond the returned gradient
+    /// tensors; bit-identical to the interpreter traversal with the same
+    /// strategy (same plans, same order, same accumulation arithmetic).
+    pub fn run(
+        &self,
+        x: &Tensor,
+        labels: &Tensor,
+        params: &[Tensor],
+    ) -> crate::runtime::Result<(f32, f32, Vec<Tensor>)> {
+        let mut arena = match self.pool.lock().expect("train arena pool poisoned").pop() {
+            Some(buf) => {
+                self.stats.train_arena_reuses.fetch_add(1, Ordering::Relaxed);
+                buf
+            }
+            None => {
+                self.stats.train_arena_allocs.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; self.arena_len]
+            }
+        };
+
+        for instr in &self.instrs {
+            match instr {
+                TrainInstr::Call { plan, args, outs } => {
+                    let plan = &self.plans[*plan];
+                    let mut h = plan.seed;
+                    for step in &plan.steps {
+                        match *step {
+                            AbsorbStep::Len(l) => h = mix(h, l),
+                            AbsorbStep::Data(i) => {
+                                let part: &[f32] = match args[i] {
+                                    Loc::Image => x.data(),
+                                    Loc::Labels => labels.data(),
+                                    Loc::Param(p) => params[p].data(),
+                                    Loc::Slot { off, len } => &arena[off..off + len],
+                                };
+                                for &v in part {
+                                    h = mix(h, u64::from(v.to_bits()));
+                                }
+                            }
+                        }
+                    }
+                    for (oi, out) in outs.iter().enumerate() {
+                        if let Some((off, len)) = *out {
+                            plan.fill_into(h, oi, &mut arena[off..off + len]);
+                        }
+                    }
+                }
+                TrainInstr::Zero { off, len } => arena[*off..*off + *len].fill(0.0),
+                TrainInstr::Acc { src, dst, len } => {
+                    // Disjoint slots by liveness (the accumulator overlaps
+                    // every per-step gradient's live range), so indexed
+                    // copies are safe; += v is exactly axpy(1.0, v).
+                    for j in 0..*len {
+                        let v = arena[src + j];
+                        arena[dst + j] += v;
+                    }
+                }
+            }
+        }
+
+        let loss = arena[self.loss_off];
+        let correct = arena[self.correct_off];
+        let grads = (|| -> crate::runtime::Result<Vec<Tensor>> {
+            let mut grads: Vec<Option<Tensor>> = (0..self.param_count).map(|_| None).collect();
+            for g in &self.grad_outs {
+                let t = Tensor::from_vec(g.shape.clone(), arena[g.off..g.off + g.len].to_vec())
+                    .map_err(|e| RuntimeError::Shape(format!("compiled train grad: {e}")))?;
+                grads[g.param] = Some(t);
+            }
+            for (p, shape) in &self.grad_zero {
+                grads[*p] = Some(Tensor::zeros(shape));
+            }
+            grads
+                .into_iter()
+                .collect::<Option<Vec<_>>>()
+                .ok_or_else(|| RuntimeError::Shape("train program missed a gradient".into()))
+        })();
+        self.pool.lock().expect("train arena pool poisoned").push(arena);
+        Ok((loss, correct, grads?))
+    }
+}
+
+// Both programs are shared across worker threads via the execution core.
 const _: () = {
     const fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<InferProgram>();
+    assert_send_sync::<TrainProgram>();
 };

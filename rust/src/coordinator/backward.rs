@@ -35,7 +35,7 @@ pub(crate) fn backward(
         // Transition after stage s (if any) comes first in reverse order.
         if s + 1 < co.cfg.stages() {
             let (tw, tb) = co.index.trans[s];
-            let tin = &state.trans_inputs[s];
+            let tin = state.trans_inputs[s].as_ref();
             let outs = co.call(
                 &co.modules.trans[s].vjp,
                 &[tin, &params[tw], &params[tb], &gz],
@@ -52,8 +52,8 @@ pub(crate) fn backward(
                 exec: co,
                 modules: &co.modules.stages[s],
                 nt: co.cfg.nt,
-                z_in: &state.block_inputs[s][b],
-                z_out: &state.block_outputs[s][b],
+                z_in: state.block_inputs[s][b].as_ref(),
+                z_out: state.block_outputs[s][b].as_ref(),
                 theta: &theta,
                 pidx,
             };

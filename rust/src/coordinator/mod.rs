@@ -41,8 +41,11 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 use crate::api::modules::{ModuleHandle, ModuleSet};
-use crate::api::strategy::{GradientStrategy, ModuleExec, StrategyRegistry};
-use crate::compile::{InferCall, InferProgram};
+use crate::api::strategy::{CompiledBlockBackward, GradientStrategy, ModuleExec, StrategyRegistry};
+use crate::compile::{
+    InferCall, InferProgram, TrainBackward, TrainBlock, TrainChain, TrainProgram, TrainStage,
+    TransCall,
+};
 use crate::memory::{Category, MemoryLedger};
 use crate::models::{GradMethod, ModelConfig, ParamIndex, Solver};
 use crate::runtime::{ArtifactRegistry, Backend, Result, RuntimeError};
@@ -55,17 +58,25 @@ pub type Coordinator = ExecutionCore;
 /// Activations stored by the forward pass (the O(L) term): inputs to every
 /// ODE block and transition, plus each block's output (needed by the [8]
 /// baseline, which starts its reverse solve from z1).
+///
+/// Stored activations are **shared**, not cloned: each boundary tensor is
+/// produced once by its module call and every reader (next block's input,
+/// the backward traversal, the `node` reverse solve) holds an `Arc` to
+/// that one buffer — the chain's output *is* the next input, so one
+/// activation per boundary exists, matching the paper's O(L) accounting.
 pub struct ForwardState {
     /// x (input batch) — needed for the stem VJP.
     pub x: Tensor,
     /// block_inputs[s][b] = input activation of ODE block (s, b).
-    pub block_inputs: Vec<Vec<Tensor>>,
-    /// block_outputs[s][b] = output activation (used by `node` only).
-    pub block_outputs: Vec<Vec<Tensor>>,
-    /// trans_inputs[s] = input of transition s.
-    pub trans_inputs: Vec<Tensor>,
+    pub block_inputs: Vec<Vec<Arc<Tensor>>>,
+    /// block_outputs[s][b] = output activation (used by `node` only);
+    /// shares the buffer of the next block/transition input.
+    pub block_outputs: Vec<Vec<Arc<Tensor>>>,
+    /// trans_inputs[s] = input of transition s (shares the last block
+    /// output of stage s).
+    pub trans_inputs: Vec<Arc<Tensor>>,
     /// Final activation entering the head.
-    pub z_final: Tensor,
+    pub z_final: Arc<Tensor>,
     /// Ledger ids backing the stored tensors (freed after backward).
     ledger_ids: Vec<u64>,
 }
@@ -90,6 +101,15 @@ pub struct ExecutionCore {
     /// the registry runs [`Backend::Compiled`]; `None` otherwise.
     /// Bit-identical to the sequential module-call chain by construction.
     fused_infer: Option<InferProgram>,
+    /// The full training step (forward with trajectory capture, the
+    /// strategy's adjoint backward, loss/grad tail) fused into one flat
+    /// compiled program over a checkpoint-aware arena. Built when the
+    /// registry runs [`Backend::Compiled`] **and** the strategy opts into
+    /// compiled lowering via
+    /// [`GradientStrategy::compiled_backward`]; `None` otherwise (custom
+    /// strategies stay on the interpreter). Bit-identical to the
+    /// interpreter traversal by construction.
+    fused_train: Option<TrainProgram>,
 }
 
 impl ExecutionCore {
@@ -128,10 +148,13 @@ impl ExecutionCore {
                 })?;
             }
         }
-        let fused_infer = if reg.backend() == Backend::Compiled {
-            Some(Self::build_fused_infer(&reg, &cfg, &index, &modules)?)
+        let (fused_infer, fused_train) = if reg.backend() == Backend::Compiled {
+            (
+                Some(Self::build_fused_infer(&reg, &cfg, &index, &modules)?),
+                Self::build_fused_train(&reg, &cfg, &index, &modules, strategy.as_ref())?,
+            )
         } else {
-            None
+            (None, None)
         };
         Ok(Self {
             reg,
@@ -142,6 +165,7 @@ impl ExecutionCore {
             strategy,
             call_count: AtomicUsize::new(0),
             fused_infer,
+            fused_train,
         })
     }
 
@@ -185,10 +209,90 @@ impl ExecutionCore {
         InferProgram::build(reg, &chain, &param_shapes).map_err(RuntimeError::from)
     }
 
+    /// Assemble the full training step as a [`TrainChain`] — the same
+    /// stem → blocks → transitions → head walk the interpreter runs,
+    /// plus how each block's backward lowers — and compile it into one
+    /// fused program over a checkpoint-aware arena. `Ok(None)` when the
+    /// strategy does not opt into compiled lowering: those sessions run
+    /// the interpreter even under [`Backend::Compiled`], because the
+    /// compiler cannot know a plugged-in strategy's semantics.
+    fn build_fused_train(
+        reg: &ArtifactRegistry,
+        cfg: &ModelConfig,
+        index: &ParamIndex,
+        modules: &ModuleSet,
+        strategy: &dyn GradientStrategy,
+    ) -> Result<Option<TrainProgram>> {
+        let Some(lowering) = strategy.compiled_backward() else {
+            return Ok(None);
+        };
+        let mut stages = Vec::with_capacity(cfg.stages());
+        for s in 0..cfg.stages() {
+            let stage = &modules.stages[s];
+            let fwd = stage.require("fwd")?;
+            let backward = match lowering {
+                CompiledBlockBackward::Fused { kind } => {
+                    TrainBackward::Fused { module: stage.require(kind)?.name().to_string() }
+                }
+                CompiledBlockBackward::FromOutput { kind } => {
+                    TrainBackward::FromOutput { module: stage.require(kind)?.name().to_string() }
+                }
+                CompiledBlockBackward::Checkpointed => {
+                    let schedule = strategy.checkpoint_schedule(cfg.nt).ok_or_else(|| {
+                        RuntimeError::Io(format!(
+                            "strategy `{}` lowers as checkpointed but plans no schedule",
+                            strategy.name()
+                        ))
+                    })?;
+                    TrainBackward::Checkpointed {
+                        step_fwd: stage.require("step_fwd")?.name().to_string(),
+                        step_vjp: stage.require("step_vjp")?.name().to_string(),
+                        schedule,
+                    }
+                }
+            };
+            let blocks = (0..cfg.blocks_per_stage)
+                .map(|b| TrainBlock {
+                    fwd: fwd.name().to_string(),
+                    params: index.blocks[s][b].clone(),
+                    backward: backward.clone(),
+                })
+                .collect();
+            let trans = (s + 1 < cfg.stages()).then(|| TransCall {
+                fwd: modules.trans[s].fwd.name().to_string(),
+                vjp: modules.trans[s].vjp.name().to_string(),
+                params: index.trans[s],
+            });
+            stages.push(TrainStage { blocks, trans });
+        }
+        let chain = TrainChain {
+            nt: cfg.nt,
+            stem_fwd: modules.stem_fwd.name().to_string(),
+            stem_vjp: modules.stem_vjp.name().to_string(),
+            stem_params: index.stem,
+            stages,
+            head_loss_grad: modules.head_loss_grad.name().to_string(),
+            head_params: index.head,
+        };
+        let param_shapes: Vec<Vec<usize>> = reg
+            .param_layout(&cfg.params_key())?
+            .iter()
+            .map(|p| p.shape.clone())
+            .collect();
+        TrainProgram::build(reg, &chain, &param_shapes).map(Some).map_err(RuntimeError::from)
+    }
+
     /// The fused compiled inference program, when the registry runs the
     /// compiled backend (tests and benches inspect its arena layout).
     pub fn fused_infer(&self) -> Option<&InferProgram> {
         self.fused_infer.as_ref()
+    }
+
+    /// The fused compiled training program, when the registry runs the
+    /// compiled backend and the strategy lowers (tests and benches
+    /// inspect its arena layout and trajectory budget).
+    pub fn fused_train(&self) -> Option<&TrainProgram> {
+        self.fused_train.as_ref()
     }
 
     /// Canonical name of the configured gradient method.
@@ -235,7 +339,7 @@ impl ExecutionCore {
         };
 
         let (sw, sb) = (&params[self.index.stem.0], &params[self.index.stem.1]);
-        let mut z = self.call(&self.modules.stem_fwd, &[x, sw, sb])?.remove(0);
+        let mut z = Arc::new(self.call(&self.modules.stem_fwd, &[x, sw, sb])?.remove(0));
         track(x, ledger, &mut ledger_ids);
 
         let mut block_inputs = Vec::new();
@@ -246,25 +350,26 @@ impl ExecutionCore {
             let mut outs = Vec::new();
             let fwd = self.modules.stages[s].require("fwd")?;
             for b in 0..self.cfg.blocks_per_stage {
-                let mut args: Vec<&Tensor> = vec![&z];
+                let mut args: Vec<&Tensor> = vec![z.as_ref()];
                 args.extend(self.block_params(params, s, b));
-                let z1 = self.call(fwd, &args)?.remove(0);
-                track(&z, ledger, &mut ledger_ids);
-                ins.push(z.clone());
-                // Output is the next block's input; stored once (the clone
-                // here is host-side bookkeeping, not device memory).
-                outs.push(z1.clone());
+                let z1 = Arc::new(self.call(fwd, &args)?.remove(0));
+                track(z.as_ref(), ledger, &mut ledger_ids);
+                ins.push(Arc::clone(&z));
+                // Output doubles as the next block's input: one buffer,
+                // two Arc readers — no deep copy.
+                outs.push(Arc::clone(&z1));
                 z = z1;
             }
             block_inputs.push(ins);
             block_outputs.push(outs);
             if s + 1 < self.cfg.stages() {
                 let (tw, tb) = self.index.trans[s];
-                track(&z, ledger, &mut ledger_ids);
-                trans_inputs.push(z.clone());
-                z = self
-                    .call(&self.modules.trans[s].fwd, &[&z, &params[tw], &params[tb]])?
-                    .remove(0);
+                track(z.as_ref(), ledger, &mut ledger_ids);
+                trans_inputs.push(Arc::clone(&z));
+                z = Arc::new(
+                    self.call(&self.modules.trans[s].fwd, &[z.as_ref(), &params[tw], &params[tb]])?
+                        .remove(0),
+                );
             }
         }
 
@@ -310,6 +415,11 @@ impl ExecutionCore {
     }
 
     /// Loss + gradients for one batch. Returns (loss, correct, grads).
+    ///
+    /// Under [`Backend::Compiled`] with a lowerable strategy this runs
+    /// the fused [`TrainProgram`] — one flat dispatch over a pooled
+    /// arena — instead of the interpreter traversal; results and ledger
+    /// traffic are bit-identical either way.
     pub fn loss_and_grad(
         &self,
         x: &Tensor,
@@ -317,6 +427,9 @@ impl ExecutionCore {
         params: &[Tensor],
         ledger: &mut MemoryLedger,
     ) -> Result<(f32, f32, Vec<Tensor>)> {
+        if let Some(prog) = &self.fused_train {
+            return self.loss_and_grad_compiled(prog, x, labels, params, ledger);
+        }
         let state = self.forward(x, params, ledger)?;
         let outcome = self.head_and_backward(&state, labels, params, ledger);
         // Release the O(L) stored activations on success AND error: the
@@ -324,6 +437,44 @@ impl ExecutionCore {
         // phantom BlockInput allocations.
         for id in &state.ledger_ids {
             ledger.free(*id);
+        }
+        outcome
+    }
+
+    /// One fused compiled training step, with the interpreter's ledger
+    /// script replayed around it: the same BlockInput allocations in
+    /// forward order, the same transient StepState alloc/free per block
+    /// backward. The arena is planned memory, but the paper's
+    /// O(L)+O(N_t) claim is *measured* against the ledger — so both
+    /// backends must tell it the same story (the sharding grid asserts
+    /// traffic equality compiled vs sim).
+    fn loss_and_grad_compiled(
+        &self,
+        prog: &TrainProgram,
+        x: &Tensor,
+        labels: &Tensor,
+        params: &[Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<(f32, f32, Vec<Tensor>)> {
+        self.call_count.fetch_add(prog.kernel_calls(), Ordering::Relaxed);
+        let ids: Vec<u64> = prog
+            .tracked_bytes()
+            .iter()
+            .map(|&bytes| ledger.alloc(bytes, Category::BlockInput))
+            .collect();
+        let outcome = prog.run(x, labels, params);
+        if outcome.is_ok() {
+            // The backward ran to completion: meter its per-block
+            // transient step states exactly as the strategies do.
+            for &bytes in prog.step_state_bytes() {
+                let tid = ledger.alloc(bytes, Category::StepState);
+                ledger.free(tid);
+            }
+        }
+        // Release stored activations on success AND error, mirroring the
+        // interpreter path's leak-free contract.
+        for id in ids {
+            ledger.free(id);
         }
         outcome
     }
@@ -340,7 +491,7 @@ impl ExecutionCore {
         let (hw, hb) = self.index.head;
         let mut outs = self.call(
             &self.modules.head_loss_grad,
-            &[&state.z_final, &params[hw], &params[hb], labels],
+            &[state.z_final.as_ref(), &params[hw], &params[hb], labels],
         )?;
         let loss = outs[0].item().map_err(|e| RuntimeError::Shape(e.to_string()))?;
         let correct = outs[1].item().map_err(|e| RuntimeError::Shape(e.to_string()))?;

@@ -97,6 +97,10 @@ pub fn render(
         line("compile_arena_bytes", c.arena_bytes);
         line("compile_arena_allocs_total", c.arena_allocs);
         line("compile_arena_reuses_total", c.arena_reuses);
+        line("compile_train_trajectory_bytes", c.trajectory_bytes);
+        line("compile_train_recompute_segments", c.train_recompute_segments);
+        line("compile_train_arena_allocs_total", c.train_arena_allocs);
+        line("compile_train_arena_reuses_total", c.train_arena_reuses);
     }
     for (device, load) in serve.device_loads.iter().enumerate() {
         let _ = writeln!(out, "anode_device_load{{device=\"{device}\"}} {load}");
@@ -188,6 +192,10 @@ mod tests {
             arena_bytes: 8192,
             arena_allocs: 2,
             arena_reuses: 98,
+            trajectory_bytes: 4096,
+            train_recompute_segments: 6,
+            train_arena_allocs: 3,
+            train_arena_reuses: 97,
         };
         let text = render(&stats(), &NetStats::default(), &mut [], Some(&compile));
         assert_eq!(scrape_value(&text, "compile_plans_cached"), Some(12));
@@ -196,6 +204,10 @@ mod tests {
         assert_eq!(scrape_value(&text, "compile_arena_bytes"), Some(8192));
         assert_eq!(scrape_value(&text, "compile_arena_allocs_total"), Some(2));
         assert_eq!(scrape_value(&text, "compile_arena_reuses_total"), Some(98));
+        assert_eq!(scrape_value(&text, "compile_train_trajectory_bytes"), Some(4096));
+        assert_eq!(scrape_value(&text, "compile_train_recompute_segments"), Some(6));
+        assert_eq!(scrape_value(&text, "compile_train_arena_allocs_total"), Some(3));
+        assert_eq!(scrape_value(&text, "compile_train_arena_reuses_total"), Some(97));
     }
 
     #[test]

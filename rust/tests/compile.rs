@@ -11,6 +11,7 @@
 
 use std::path::PathBuf;
 
+use anode::api::{Engine, SessionConfig};
 use anode::compile::{
     build_module_ir, compile_module, passes, plan::assign_slots, CompileError, InferCall,
     InferProgram, Op, OpKind,
@@ -18,6 +19,10 @@ use anode::compile::{
 use anode::runtime::sim::{write_artifacts, SimSpec};
 use anode::runtime::{ArtifactRegistry, Backend, ModuleSpec, TensorSpec};
 use anode::tensor::Tensor;
+
+/// Every built-in gradient method — the compiled training path must hold
+/// for all of them, not just the fused adjoint.
+const STRATEGIES: [&str; 5] = ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"];
 
 /// Write the sim artifact set into a fresh temp dir.
 fn sim_dir(tag: &str) -> PathBuf {
@@ -298,6 +303,117 @@ fn infer_program_arena_reuse_and_bitwise_identity() {
     let steady = reg.compile_stats().unwrap();
     assert_eq!(steady.arena_allocs, 1, "steady state must not allocate");
     assert_eq!(steady.arena_reuses, 11);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The fused training program, per strategy: loss, correct count and
+/// **every gradient tensor** bitwise equal to the sim interpreter —
+/// before any optimizer arithmetic — and full optimizer steps keep
+/// losses and parameters bitwise locked too. This is the training-side
+/// counterpart of the per-module bitwise test above: the whole
+/// forward + strategy backward + loss/grad tail as one arena program.
+#[test]
+fn train_program_bitwise_equal_to_sim_for_every_strategy() {
+    let dir = sim_dir("train_bitwise");
+    let sim =
+        Engine::builder().artifacts(&dir).devices(1).backend(Backend::Sim).build().unwrap();
+    let compiled =
+        Engine::builder().artifacts(&dir).devices(1).backend(Backend::Compiled).build().unwrap();
+    let spec = SimSpec::default();
+    for method in STRATEGIES {
+        let mut a = sim.session(SessionConfig::with_method(method)).unwrap();
+        let mut b = compiled.session(SessionConfig::with_method(method)).unwrap();
+
+        // Raw loss + correct + gradients first: the strongest form of
+        // the invariant, before clipping or SGD touch anything.
+        let (x, y) = (spec.image_batch(5), spec.label_batch(5));
+        let (la, ca, ga) = a.loss_and_grad(&x, &y).unwrap();
+        let (lb, cb, gb) = b.loss_and_grad(&x, &y).unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(), "{method}: loss bits diverged");
+        assert_eq!(ca.to_bits(), cb.to_bits(), "{method}: correct-count bits diverged");
+        assert_eq!(ga.len(), gb.len(), "{method}: gradient arity diverged");
+        for (i, (ta, tb)) in ga.iter().zip(&gb).enumerate() {
+            assert_eq!(ta.shape(), tb.shape(), "{method} grad {i}: shape diverged");
+            let bits_a: Vec<u32> = ta.data().iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = tb.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "{method} grad {i}: bits diverged");
+        }
+
+        // Then full optimizer steps: stats and parameters stay bitwise.
+        for step in 0..3 {
+            let (x, y) = (spec.image_batch(step), spec.label_batch(step));
+            let sa = a.step(&x, &y).unwrap();
+            let sb = b.step(&x, &y).unwrap();
+            assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "{method} step {step}: loss");
+            assert_eq!(
+                sa.batch_accuracy.to_bits(),
+                sb.batch_accuracy.to_bits(),
+                "{method} step {step}: accuracy"
+            );
+            assert_eq!(
+                sa.grad_norm.to_bits(),
+                sb.grad_norm.to_bits(),
+                "{method} step {step}: grad norm"
+            );
+        }
+        for (i, (pa, pb)) in a.params().iter().zip(b.params()).enumerate() {
+            let bits_a: Vec<u32> = pa.data().iter().map(|v| v.to_bits()).collect();
+            let bits_b: Vec<u32> = pb.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_a, bits_b, "{method} param {i}: bits diverged after training");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The training arena's hard allocation invariant: lowering a session's
+/// strategy plans the trajectory slots (visible in the build-time
+/// counters), the first step pays exactly one arena allocation, and
+/// every steady-state step after warmup performs **zero** allocations —
+/// the pooled-arena counters prove it, the same pattern the inference
+/// program locks in above.
+#[test]
+fn train_program_zero_steady_state_allocations_after_warmup() {
+    let dir = sim_dir("train_arena");
+    let engine =
+        Engine::builder().artifacts(&dir).devices(1).backend(Backend::Compiled).build().unwrap();
+    let reg = engine.registry();
+    let spec = SimSpec::default();
+    let base = reg.compile_stats().unwrap();
+    assert_eq!(base.train_arena_allocs, 0);
+    assert_eq!(base.trajectory_bytes, 0, "no training program lowered yet");
+
+    // Session creation lowers the strategy into a TrainProgram: the
+    // trajectory budget and revolve recompute segments appear at build
+    // time, arena activity does not.
+    let mut session = engine.session(SessionConfig::with_method("anode-revolve3")).unwrap();
+    let built = reg.compile_stats().unwrap();
+    assert!(built.trajectory_bytes > 0, "checkpoint slots must be planned into the arena");
+    assert!(built.train_recompute_segments > 0, "revolve must unroll recompute segments");
+    assert_eq!(built.train_arena_allocs, 0, "no arena activity before the first step");
+
+    // Warmup allocates the single arena; steady state only reuses it.
+    let (x, y) = (spec.image_batch(0), spec.label_batch(0));
+    session.step(&x, &y).unwrap();
+    let warm = reg.compile_stats().unwrap();
+    assert_eq!(warm.train_arena_allocs, 1, "exactly one warmup allocation");
+    assert_eq!(warm.train_arena_reuses, 0);
+    for _ in 0..10 {
+        session.step(&x, &y).unwrap();
+    }
+    let steady = reg.compile_stats().unwrap();
+    assert_eq!(steady.train_arena_allocs, 1, "steady-state steps must not allocate");
+    assert_eq!(steady.train_arena_reuses, 10, "every steady-state step reuses the arena");
+
+    // A fused-adjoint session on the same registry plans boundary slots
+    // but no recompute segments on top of the revolve session's.
+    let fused = engine.session(SessionConfig::with_method("anode")).unwrap();
+    let after = reg.compile_stats().unwrap();
+    assert_eq!(
+        after.train_recompute_segments, steady.train_recompute_segments,
+        "the fused adjoint replays nothing"
+    );
+    assert!(after.trajectory_bytes > steady.trajectory_bytes, "block boundaries still planned");
+    drop(fused);
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -569,6 +569,30 @@ fn backend_axis_training_grid_compiled_bitwise_equal_to_sim() {
             }
         }
     }
+
+    // Train-arena accounting across the grid: every micro-batch above ran
+    // through a fused TrainProgram, so per engine the pooled-arena pops
+    // (warmup allocations + steady-state reuses) must account for every
+    // run exactly — with reuse actually happening — and every device's
+    // build-time counters must show the checkpoint lowering.
+    let runs_per_engine = (STRATEGIES.len() * 3 * 2 * 4) as u64;
+    for (devices, engine) in &compiled {
+        let mut allocs = 0u64;
+        let mut reuses = 0u64;
+        for d in 0..*devices {
+            let stats = engine.device_set().registry(d).compile_stats().unwrap();
+            assert!(stats.trajectory_bytes > 0, "device {d}: no trajectory slots planned");
+            assert!(stats.train_recompute_segments > 0, "device {d}: revolve never unrolled");
+            allocs += stats.train_arena_allocs;
+            reuses += stats.train_arena_reuses;
+        }
+        assert_eq!(
+            allocs + reuses,
+            runs_per_engine,
+            "devices={devices}: arena pops must account for every micro-batch run"
+        );
+        assert!(allocs < runs_per_engine, "devices={devices}: arena reuse never happened");
+    }
     std::fs::remove_dir_all(&dir).ok();
 }
 
