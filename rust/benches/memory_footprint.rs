@@ -29,7 +29,9 @@ fn main() {
         "{:<22} {:>16} {:>16} {:>12}",
         "method", "block_input peak", "step_state peak", "wall"
     );
-    for method in ["anode", "anode-revolve3", "anode-revolve1", "node"] {
+    for method in
+        ["anode", "anode-revolve3", "anode-revolve1", "node", "symplectic", "interp-adjoint3"]
+    {
         let mut session = engine.session(SessionConfig::with_method(method)).unwrap();
         let t0 = std::time::Instant::now();
         session.loss_and_grad(&imgs, &y).unwrap();

@@ -507,8 +507,15 @@ fn train_throughput(engine: Option<&Engine>) {
 /// between the backends and zero steady-state arena allocations after
 /// warmup. Returns the extra `BENCH_train.json` fields.
 fn compiled_train_section(iters: usize) -> Option<String> {
-    const STRATEGIES: [&str; 5] =
-        ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"];
+    const STRATEGIES: [&str; 7] = [
+        "anode",
+        "node",
+        "otd",
+        "anode-revolve3",
+        "anode-equispaced2",
+        "symplectic",
+        "interp-adjoint3",
+    ];
     println!("\n--- compiled vs sim training step (per strategy, sim harness) ---\n");
     let dir = std::env::temp_dir().join(format!("anode_bench_ctrain_{}", std::process::id()));
     if let Err(e) = write_artifacts(&dir, &SimSpec::default()) {
@@ -554,11 +561,13 @@ fn compiled_train_section(iters: usize) -> Option<String> {
     }
     let stats = compiled.registry().compile_stats().unwrap();
     println!(
-        "compiled train arena: allocs={} reuses={} trajectory={}B recompute_segments={}",
+        "compiled train arena: allocs={} reuses={} trajectory={}B recompute_segments={} \
+         interp_nodes={}",
         stats.train_arena_allocs,
         stats.train_arena_reuses,
         stats.trajectory_bytes,
-        stats.train_recompute_segments
+        stats.train_recompute_segments,
+        stats.train_interp_nodes
     );
     println!("bit-identical to sim: {identical}  steady-state allocs zero: {steady_zero}");
     if !identical {
@@ -570,12 +579,14 @@ fn compiled_train_section(iters: usize) -> Option<String> {
     fields.push_str(&format!(
         ",\n  \"train_arena_allocs\": {},\n  \"train_arena_reuses\": {},\n  \
          \"train_trajectory_bytes\": {},\n  \"train_recompute_segments\": {},\n  \
+         \"train_interp_nodes\": {},\n  \
          \"train_compiled_bit_identical\": {identical},\n  \
          \"train_steady_state_allocs_zero\": {steady_zero}",
         stats.train_arena_allocs,
         stats.train_arena_reuses,
         stats.trajectory_bytes,
-        stats.train_recompute_segments
+        stats.train_recompute_segments,
+        stats.train_interp_nodes
     ));
     std::fs::remove_dir_all(&dir).ok();
     Some(fields)

@@ -18,7 +18,11 @@
 //! whichever thread runs the backward pass, so all per-call scratch state
 //! stays on the stack of `block_backward`.
 
-use crate::checkpoint::{plan, run_backward, Schedule, Strategy as CheckpointStrategy};
+use std::sync::Arc;
+
+use crate::checkpoint::{
+    interp_coeffs, interp_nodes, plan, run_backward, Schedule, Strategy as CheckpointStrategy,
+};
 use crate::memory::{Category, MemoryLedger};
 use crate::models::{parse_budget, GradMethod};
 use crate::runtime::{Result, RuntimeError};
@@ -48,6 +52,12 @@ pub struct BlockContext<'a> {
     pub theta: &'a [&'a Tensor],
     /// Canonical parameter indices matching `theta` (into `grads`).
     pub pidx: &'a [usize],
+    /// Interior trajectory node states captured by a stepwise forward
+    /// (strategies returning `Some` from
+    /// [`GradientStrategy::forward_nodes`]), in increasing time order,
+    /// endpoints excluded (`z_in`/`z_out` are always held). Empty for
+    /// every other strategy.
+    pub nodes: &'a [Arc<Tensor>],
 }
 
 /// How a strategy's block backward lowers into a compiled
@@ -67,6 +77,12 @@ pub enum CompiledBlockBackward {
     /// `step_fwd`/`step_vjp` unrolled through the strategy's
     /// [`GradientStrategy::checkpoint_schedule`].
     Checkpointed,
+    /// Stepwise `step_fwd` forward capturing a sparse trajectory-node grid,
+    /// then a `step_vjp` backward whose step inputs are barycentric
+    /// interpolations of the pinned node states (`interp-adjoint<p>`).
+    /// The interpolation coefficients are const-folded into the plan;
+    /// `nodes` is the requested node count p.
+    Interpolated { nodes: usize },
 }
 
 /// One adjoint method, dispatched per ODE block in reverse network order.
@@ -89,6 +105,16 @@ pub trait GradientStrategy: Send + Sync {
     /// uses this to turn checkpointed activations into long-lived arena
     /// slots and recompute segments into statically unrolled replays.
     fn checkpoint_schedule(&self, _nt: usize) -> Option<Schedule> {
+        None
+    }
+
+    /// Trajectory node indices (into states `0..=nt`) this strategy needs
+    /// captured during the FORWARD pass. `Some` switches the coordinator
+    /// to a stepwise block forward via `step_fwd`, storing the listed
+    /// interior states into `ForwardState` (the endpoints are always
+    /// held as block inputs/outputs). `None` — the default — keeps the
+    /// fused single-call forward.
+    fn forward_nodes(&self, _nt: usize) -> Option<Vec<usize>> {
         None
     }
 
@@ -319,79 +345,268 @@ impl GradientStrategy for CheckpointedStrategy {
         let schedule = self
             .checkpoint_schedule(ctx.nt)
             .expect("checkpointed strategy always has a schedule");
-        let errs = schedule.validate();
-        if !errs.is_empty() {
-            return Err(RuntimeError::Io(format!("invalid schedule: {}", errs.join("; "))));
+        scheduled_backward(ctx, &schedule, gz, grads, ledger)
+    }
+}
+
+/// Shared body of the schedule-driven strategies (`anode-revolve<m>`,
+/// `anode-equispaced<m>`, `symplectic`): `step_fwd`/`step_vjp` artifacts
+/// driven through a checkpoint schedule by the revolve executor.
+fn scheduled_backward(
+    ctx: &BlockContext<'_>,
+    schedule: &Schedule,
+    gz: Tensor,
+    grads: &mut [Tensor],
+    ledger: &mut MemoryLedger,
+) -> Result<Tensor> {
+    let errs = schedule.validate();
+    if !errs.is_empty() {
+        return Err(RuntimeError::Io(format!("invalid schedule: {}", errs.join("; "))));
+    }
+
+    let fwd = ctx.modules.require("step_fwd")?;
+    let vjp = ctx.modules.require("step_vjp")?;
+    let mut theta_grads: Vec<Tensor> =
+        ctx.pidx.iter().map(|&i| Tensor::zeros(grads[i].shape())).collect();
+    // The revolve executor's callbacks are infallible; the first module
+    // error is parked here and re-raised after the sweep. Call-local
+    // state, so it has no bearing on the strategy object's Sync-ness;
+    // a OnceCell keeps exactly the first error with no locking.
+    let call_err: std::cell::OnceCell<RuntimeError> = std::cell::OnceCell::new();
+    let record = |e: RuntimeError| {
+        let _ = call_err.set(e);
+    };
+
+    // Ledger: model peak as (schedule slots + 1 tape) states of this
+    // block's size — m+1 for revolve/equispaced(m), nt+2 for the
+    // store-everything schedule.
+    let act = ctx.z_in.byte_size();
+    let tid =
+        ledger.alloc((schedule.strategy.slots(schedule.nt) + 1) * act, Category::StepState);
+
+    let step = |z: &Tensor| -> Tensor {
+        let mut args: Vec<&Tensor> = vec![z];
+        args.extend(ctx.theta.iter().copied());
+        match ctx.exec.call_module(fwd, &args) {
+            Ok(mut o) => o.remove(0),
+            Err(e) => {
+                record(e);
+                Tensor::zeros(z.shape())
+            }
+        }
+    };
+
+    let step_grad = |z: &Tensor, a: &Tensor| -> Tensor {
+        let mut args: Vec<&Tensor> = vec![z];
+        args.extend(ctx.theta.iter().copied());
+        args.push(a);
+        match ctx.exec.call_module(vjp, &args) {
+            Ok(mut outs) => {
+                if outs.len() != ctx.pidx.len() + 1 {
+                    record(RuntimeError::Shape(format!(
+                        "{}: returned {} outputs, expected {} (gz + {} param grads)",
+                        vjp.name(),
+                        outs.len(),
+                        ctx.pidx.len() + 1,
+                        ctx.pidx.len()
+                    )));
+                    return Tensor::zeros(z.shape());
+                }
+                let gz_step = outs.remove(0);
+                for (acc, g) in theta_grads.iter_mut().zip(outs.into_iter()) {
+                    if let Err(e) = acc.axpy(1.0, &g) {
+                        record(RuntimeError::Shape(format!("{}: {e}", vjp.name())));
+                    }
+                }
+                gz_step
+            }
+            Err(e) => {
+                record(e);
+                Tensor::zeros(z.shape())
+            }
+        }
+    };
+
+    let swept =
+        run_backward(schedule, ctx.z_in, gz, step, step_grad, |_| {}).map_err(RuntimeError::Io);
+    // Free before propagating: the session's ledger outlives this call.
+    ledger.free(tid);
+
+    if let Some(e) = call_err.into_inner() {
+        return Err(e);
+    }
+    let g_in = swept?;
+    for (&i, tg) in ctx.pidx.iter().zip(theta_grads.into_iter()) {
+        grads[i] = tg;
+    }
+    Ok(g_in)
+}
+
+/// Symplectic adjoint (Matsubara et al., 2021 — see PAPERS.md): the
+/// backward sweep consumes the exact stored forward trajectory through the
+/// paired integrator, so gradients are exact to machine precision with
+/// zero recomputed steps. In this discrete harness that is precisely the
+/// step-level adjoint under a store-everything schedule: `step_fwd` tapes
+/// all `nt` states once, `step_vjp` replays them in reverse — the
+/// no-recompute endpoint of the `anode-revolve<m>` memory/compute axis.
+pub struct SymplecticStrategy;
+
+impl GradientStrategy for SymplecticStrategy {
+    fn name(&self) -> String {
+        "symplectic".into()
+    }
+
+    fn required_kinds(&self) -> &'static [&'static str] {
+        &["step_fwd", "step_vjp"]
+    }
+
+    fn checkpoint_schedule(&self, nt: usize) -> Option<Schedule> {
+        Some(plan(CheckpointStrategy::StoreAll, nt))
+    }
+
+    fn compiled_backward(&self) -> Option<CompiledBlockBackward> {
+        Some(CompiledBlockBackward::Checkpointed)
+    }
+
+    fn block_backward(
+        &self,
+        ctx: &BlockContext<'_>,
+        gz: Tensor,
+        grads: &mut [Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<Tensor> {
+        let schedule = self
+            .checkpoint_schedule(ctx.nt)
+            .expect("symplectic strategy always has a schedule");
+        scheduled_backward(ctx, &schedule, gz, grads, ledger)
+    }
+}
+
+/// Interpolated adjoint (Daulbaev et al., 2020 — see PAPERS.md): the
+/// forward pass stores a sparse `p`-node grid of trajectory states
+/// (captured stepwise via [`GradientStrategy::forward_nodes`]); the
+/// backward reconstructs every step input by barycentric Lagrange
+/// interpolation over those nodes — no recomputation, O(p) extra storage
+/// per block instead of O(Nt), accuracy set by the interpolation error
+/// (`p == nt + 1` is exact).
+pub struct InterpAdjointStrategy {
+    p: usize,
+}
+
+impl InterpAdjointStrategy {
+    /// `p`-node interpolation grid. Both endpoints are always nodes, so
+    /// `p >= 2` is required.
+    pub fn new(p: usize) -> Result<Self> {
+        if p < 2 {
+            return Err(RuntimeError::Io(format!(
+                "interp-adjoint needs >= 2 interpolation nodes (both endpoints), got p={p}"
+            )));
+        }
+        Ok(Self { p })
+    }
+}
+
+impl GradientStrategy for InterpAdjointStrategy {
+    fn name(&self) -> String {
+        format!("interp-adjoint{}", self.p)
+    }
+
+    fn required_kinds(&self) -> &'static [&'static str] {
+        &["step_fwd", "step_vjp"]
+    }
+
+    fn forward_nodes(&self, nt: usize) -> Option<Vec<usize>> {
+        Some(interp_nodes(nt, self.p))
+    }
+
+    fn compiled_backward(&self) -> Option<CompiledBlockBackward> {
+        Some(CompiledBlockBackward::Interpolated { nodes: self.p })
+    }
+
+    fn block_backward(
+        &self,
+        ctx: &BlockContext<'_>,
+        gz: Tensor,
+        grads: &mut [Tensor],
+        ledger: &mut MemoryLedger,
+    ) -> Result<Tensor> {
+        let vjp = ctx.modules.require("step_vjp")?;
+        let nodes = interp_nodes(ctx.nt, self.p);
+        // Interior node states come from the stepwise forward; endpoints
+        // are the block input/output the coordinator holds anyway.
+        let interior = nodes.iter().filter(|&&t| t != 0 && t != ctx.nt).count();
+        if ctx.nodes.len() != interior {
+            return Err(RuntimeError::Shape(format!(
+                "{}: forward captured {} interior node states, expected {}",
+                self.name(),
+                ctx.nodes.len(),
+                interior
+            )));
+        }
+        let mut by_node: Vec<&Tensor> = Vec::with_capacity(nodes.len());
+        let mut next_interior = 0usize;
+        for &t in &nodes {
+            if t == 0 {
+                by_node.push(ctx.z_in);
+            } else if t == ctx.nt {
+                by_node.push(ctx.z_out);
+            } else {
+                by_node.push(ctx.nodes[next_interior].as_ref());
+                next_interior += 1;
+            }
         }
 
-        let fwd = ctx.modules.require("step_fwd")?;
-        let vjp = ctx.modules.require("step_vjp")?;
         let mut theta_grads: Vec<Tensor> =
             ctx.pidx.iter().map(|&i| Tensor::zeros(grads[i].shape())).collect();
-        // The revolve executor's callbacks are infallible; the first module
-        // error is parked here and re-raised after the sweep. Call-local
-        // state, so it has no bearing on the strategy object's Sync-ness;
-        // a OnceCell keeps exactly the first error with no locking.
-        let call_err: std::cell::OnceCell<RuntimeError> = std::cell::OnceCell::new();
-        let record = |e: RuntimeError| {
-            let _ = call_err.set(e);
-        };
-
-        // Ledger: model peak as (m slots + 1 tape) states of this block's size.
+        // Backward transient: one reconstructed state at a time (the node
+        // storage itself is metered as BlockInput by the forward pass).
         let act = ctx.z_in.byte_size();
-        let tid = ledger.alloc((self.m + 1) * act, Category::StepState);
-
-        let step = |z: &Tensor| -> Tensor {
-            let mut args: Vec<&Tensor> = vec![z];
-            args.extend(ctx.theta.iter().copied());
-            match ctx.exec.call_module(fwd, &args) {
-                Ok(mut o) => o.remove(0),
-                Err(e) => {
-                    record(e);
-                    Tensor::zeros(z.shape())
-                }
-            }
-        };
-
-        let step_grad = |z: &Tensor, a: &Tensor| -> Tensor {
-            let mut args: Vec<&Tensor> = vec![z];
-            args.extend(ctx.theta.iter().copied());
-            args.push(a);
-            match ctx.exec.call_module(vjp, &args) {
-                Ok(mut outs) => {
-                    if outs.len() != ctx.pidx.len() + 1 {
-                        record(RuntimeError::Shape(format!(
-                            "{}: returned {} outputs, expected {} (gz + {} param grads)",
-                            vjp.name(),
-                            outs.len(),
-                            ctx.pidx.len() + 1,
-                            ctx.pidx.len()
-                        )));
-                        return Tensor::zeros(z.shape());
-                    }
-                    let gz_step = outs.remove(0);
-                    for (acc, g) in theta_grads.iter_mut().zip(outs.into_iter()) {
-                        if let Err(e) = acc.axpy(1.0, &g) {
-                            record(RuntimeError::Shape(format!("{}: {e}", vjp.name())));
+        let tid = ledger.alloc(act, Category::StepState);
+        // Immediately-invoked so the ledger free below runs on every exit
+        // path — the session's ledger outlives this call.
+        let swept = (|| -> Result<Tensor> {
+            let mut adj = gz;
+            for t in (0..ctx.nt).rev() {
+                // At a node the stored tensor is used directly (bitwise),
+                // matching the compiled plan's aliasing of node slots.
+                let zt_owned;
+                let zt: &Tensor = match nodes.iter().position(|&x| x == t) {
+                    Some(j) => by_node[j],
+                    None => {
+                        let coeffs = interp_coeffs(&nodes, t);
+                        let mut acc = Tensor::zeros(ctx.z_in.shape());
+                        for (&c, &node) in coeffs.iter().zip(by_node.iter()) {
+                            acc.axpy(c, node).map_err(|e| {
+                                RuntimeError::Shape(format!("{}: node mix: {e}", self.name()))
+                            })?;
                         }
+                        zt_owned = acc;
+                        &zt_owned
                     }
-                    gz_step
+                };
+                let mut args: Vec<&Tensor> = vec![zt];
+                args.extend(ctx.theta.iter().copied());
+                args.push(&adj);
+                let mut outs = ctx.exec.call_module(vjp, &args)?;
+                if outs.len() != ctx.pidx.len() + 1 {
+                    return Err(RuntimeError::Shape(format!(
+                        "{}: returned {} outputs, expected {} (gz + {} param grads)",
+                        vjp.name(),
+                        outs.len(),
+                        ctx.pidx.len() + 1,
+                        ctx.pidx.len()
+                    )));
                 }
-                Err(e) => {
-                    record(e);
-                    Tensor::zeros(z.shape())
+                adj = outs.remove(0);
+                for (acc, g) in theta_grads.iter_mut().zip(outs.into_iter()) {
+                    acc.axpy(1.0, &g)
+                        .map_err(|e| RuntimeError::Shape(format!("{}: {e}", vjp.name())))?;
                 }
             }
-        };
-
-        let swept =
-            run_backward(&schedule, ctx.z_in, gz, step, step_grad, |_| {}).map_err(RuntimeError::Io);
-        // Free before propagating: the session's ledger outlives this call.
+            Ok(adj)
+        })();
         ledger.free(tid);
 
-        if let Some(e) = call_err.into_inner() {
-            return Err(e);
-        }
         let g_in = swept?;
         for (&i, tg) in ctx.pidx.iter().zip(theta_grads.into_iter()) {
             grads[i] = tg;
@@ -417,7 +632,9 @@ impl StrategyRegistry {
         Self { factories: Vec::new() }
     }
 
-    /// Registry with the paper's five built-in methods.
+    /// Registry with the seven built-in methods: the paper's five plus
+    /// the symplectic (Matsubara 2021) and interpolated (Daulbaev 2020)
+    /// adjoints from the related literature.
     pub fn builtin() -> Self {
         let mut reg = Self::empty();
         reg.register("anode", |spec| {
@@ -442,6 +659,17 @@ impl StrategyRegistry {
                 m.and_then(|m| {
                     CheckpointedStrategy::equispaced(m)
                         .map(|s| Box::new(s) as Box<dyn GradientStrategy>)
+                })
+            })
+        });
+        reg.register("symplectic", |spec| {
+            (spec == "symplectic")
+                .then(|| Ok(Box::new(SymplecticStrategy) as Box<dyn GradientStrategy>))
+        });
+        reg.register("interp-adjoint<p>", |spec| {
+            parse_budget(spec, "interp-adjoint").map(|p| {
+                p.and_then(|p| {
+                    InterpAdjointStrategy::new(p).map(|s| Box::new(s) as Box<dyn GradientStrategy>)
                 })
             })
         });
@@ -493,9 +721,17 @@ mod tests {
     use super::*;
 
     #[test]
-    fn builtin_round_trip_all_five() {
+    fn builtin_round_trip_all_seven() {
         let reg = StrategyRegistry::builtin();
-        for spec in ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"] {
+        for spec in [
+            "anode",
+            "node",
+            "otd",
+            "anode-revolve3",
+            "anode-equispaced2",
+            "symplectic",
+            "interp-adjoint3",
+        ] {
             let s = reg.create(spec).unwrap();
             assert_eq!(s.name(), spec, "round-trip failed for {spec}");
         }
@@ -510,6 +746,8 @@ mod tests {
             GradMethod::Otd,
             GradMethod::AnodeRevolve(4),
             GradMethod::AnodeEquispaced(5),
+            GradMethod::Symplectic,
+            GradMethod::InterpAdjoint(3),
         ] {
             assert_eq!(reg.create_from_method(m).unwrap().name(), m.name());
         }
@@ -518,13 +756,18 @@ mod tests {
     #[test]
     fn degenerate_budgets_rejected() {
         let reg = StrategyRegistry::builtin();
-        for spec in ["anode-revolve0", "anode-equispaced0"] {
+        for spec in ["anode-revolve0", "anode-equispaced0", "interp-adjoint0"] {
             let err = reg.create(spec).unwrap_err();
             assert!(err.to_string().contains(">= 1"), "{spec}: {err}");
         }
+        // A single node cannot hold both endpoints.
+        let err = reg.create("interp-adjoint1").unwrap_err();
+        assert!(err.to_string().contains(">= 2"), "{err}");
         assert!(CheckpointedStrategy::revolve(0).is_err());
         assert!(CheckpointedStrategy::equispaced(0).is_err());
         assert!(CheckpointedStrategy::revolve(1).is_ok());
+        assert!(InterpAdjointStrategy::new(1).is_err());
+        assert!(InterpAdjointStrategy::new(2).is_ok());
     }
 
     #[test]
@@ -581,12 +824,29 @@ mod tests {
             reg.create("node").unwrap().compiled_backward(),
             Some(CompiledBlockBackward::FromOutput { kind: "node" })
         );
-        for spec in ["anode-revolve3", "anode-equispaced2"] {
+        for spec in ["anode-revolve3", "anode-equispaced2", "symplectic"] {
             let s = reg.create(spec).unwrap();
             assert_eq!(s.compiled_backward(), Some(CompiledBlockBackward::Checkpointed));
             let schedule = s.checkpoint_schedule(8).expect("checkpointed strategies plan");
             assert_eq!(schedule.nt, 8);
             assert!(schedule.validate().is_empty(), "{spec} emits a valid schedule");
+        }
+        // Symplectic's schedule is store-everything: zero recomputation.
+        let symp = reg.create("symplectic").unwrap().checkpoint_schedule(8).unwrap();
+        assert_eq!(symp.strategy, CheckpointStrategy::StoreAll);
+        assert_eq!(symp.forward_evals(), 8, "symplectic never recomputes a step");
+        // The interpolated adjoint lowers through its own seam: node
+        // count in the variant, stepwise forward capture, no schedule.
+        let interp = reg.create("interp-adjoint3").unwrap();
+        assert_eq!(
+            interp.compiled_backward(),
+            Some(CompiledBlockBackward::Interpolated { nodes: 3 })
+        );
+        assert!(interp.checkpoint_schedule(8).is_none());
+        assert_eq!(interp.forward_nodes(8), Some(vec![0, 4, 8]));
+        // Fused/solve/scheduled strategies run a fused forward.
+        for spec in ["anode", "node", "otd", "anode-revolve3", "symplectic"] {
+            assert!(reg.create(spec).unwrap().forward_nodes(8).is_none(), "{spec}");
         }
         // Fused/solve strategies do not checkpoint.
         assert!(reg.create("anode").unwrap().checkpoint_schedule(8).is_none());
@@ -627,5 +887,27 @@ mod tests {
             reg.create("anode-revolve2").unwrap().required_kinds(),
             &["step_fwd", "step_vjp"]
         );
+        // Both new adjoints drive the same step-level artifact pair.
+        assert_eq!(
+            reg.create("symplectic").unwrap().required_kinds(),
+            &["step_fwd", "step_vjp"]
+        );
+        assert_eq!(
+            reg.create("interp-adjoint4").unwrap().required_kinds(),
+            &["step_fwd", "step_vjp"]
+        );
+    }
+
+    #[test]
+    fn interp_forward_nodes_clamp_to_grid() {
+        let reg = StrategyRegistry::builtin();
+        let s = reg.create("interp-adjoint16").unwrap();
+        // p > nt+1 clamps to every state being a node (exact adjoint).
+        assert_eq!(s.forward_nodes(4), Some(vec![0, 1, 2, 3, 4]));
+        // Endpoints are always present.
+        let nodes = s.forward_nodes(32).unwrap();
+        assert_eq!(nodes.first(), Some(&0));
+        assert_eq!(nodes.last(), Some(&32));
+        assert!(nodes.windows(2).all(|w| w[0] < w[1]));
     }
 }

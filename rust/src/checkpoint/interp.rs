@@ -1,0 +1,167 @@
+//! Barycentric trajectory interpolation for the interpolated adjoint
+//! (Daulbaev et al., 2020 — see PAPERS.md).
+//!
+//! Instead of storing the whole forward trajectory (store-all) or
+//! recomputing it from checkpoints (revolve/equispaced), the
+//! interpolated adjoint stores a sparse set of **node states** captured
+//! during the forward pass and reconstructs every intermediate step
+//! input by barycentric Lagrange interpolation over those nodes.
+//!
+//! These helpers are the single source of node placement and
+//! interpolation weights for BOTH execution paths — the interpreter
+//! (`api::strategy`'s interp-adjoint strategy) and the compiled lowering
+//! (`compile::plan::TrainProgram`, which const-folds the coefficient
+//! bits into the plan) — which is what makes compiled ≡ sim bitwise for
+//! the strategy: identical node indices, identical f32 coefficients,
+//! identical zero-then-axpy accumulation order.
+
+/// Node indices for a `p`-node interpolation grid over states `0..=nt`,
+/// always including both endpoints (the block input and output, which
+/// the coordinator holds anyway). `p` is clamped to `[2, nt + 1]`; with
+/// `p == nt + 1` every state is a node and reconstruction is exact.
+pub fn interp_nodes(nt: usize, p: usize) -> Vec<usize> {
+    let p = p.clamp(2, nt + 1);
+    // Equispaced with exact endpoints; floor(j*nt/(p-1)) is strictly
+    // increasing because the real step nt/(p-1) is >= 1 when p <= nt+1.
+    (0..p).map(|j| j * nt / (p - 1)).collect()
+}
+
+/// Barycentric Lagrange coefficients `c_j(t)` such that the
+/// reconstructed state is `ẑ_t = Σ_j c_j(t) · z_{nodes[j]}`.
+///
+/// Weights are computed in f64 and rounded to f32 once per coefficient —
+/// the exact bits the compiled plan folds in at build time. At a node
+/// point the coefficients are exactly one-hot, so stored node states are
+/// reproduced bitwise (the backward at a node never mixes arithmetic in).
+pub fn interp_coeffs(nodes: &[usize], t: usize) -> Vec<f32> {
+    if let Some(j) = nodes.iter().position(|&x| x == t) {
+        let mut c = vec![0.0f32; nodes.len()];
+        c[j] = 1.0;
+        return c;
+    }
+    // w_j = 1 / Π_{k≠j} (x_j - x_k); c_j(t) = (w_j / (t - x_j)) / Σ_k (...).
+    let xs: Vec<f64> = nodes.iter().map(|&x| x as f64).collect();
+    let td = t as f64;
+    let terms: Vec<f64> = xs
+        .iter()
+        .enumerate()
+        .map(|(j, &xj)| {
+            let prod: f64 = xs
+                .iter()
+                .enumerate()
+                .filter(|&(k, _)| k != j)
+                .map(|(_, &xk)| xj - xk)
+                .product();
+            1.0 / (prod * (td - xj))
+        })
+        .collect();
+    let denom: f64 = terms.iter().sum();
+    terms.iter().map(|&w| (w / denom) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nodes_are_strictly_increasing_with_exact_endpoints() {
+        for nt in 1..=12usize {
+            for p in 0..=16usize {
+                let nodes = interp_nodes(nt, p);
+                assert_eq!(nodes.len(), p.clamp(2, nt + 1), "nt={nt} p={p}");
+                assert_eq!(nodes[0], 0, "nt={nt} p={p}");
+                assert_eq!(*nodes.last().unwrap(), nt, "nt={nt} p={p}");
+                assert!(nodes.windows(2).all(|w| w[0] < w[1]), "nt={nt} p={p}: {nodes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn coeffs_are_exactly_one_hot_at_node_points() {
+        let nodes = interp_nodes(8, 4);
+        for (j, &n) in nodes.iter().enumerate() {
+            let c = interp_coeffs(&nodes, n);
+            for (k, &ck) in c.iter().enumerate() {
+                let want = if k == j { 1.0f32 } else { 0.0 };
+                assert_eq!(ck.to_bits(), want.to_bits(), "node {n} coeff {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn coeffs_sum_to_one_and_reproduce_polynomials() {
+        // Barycentric interpolation on p nodes is exact for polynomials of
+        // degree <= p-1; the trajectory z_t = 2 + 3t - t^2 + t^3/4 has
+        // degree 3, so p = 4 nodes reconstruct every state.
+        let nt = 8usize;
+        let nodes = interp_nodes(nt, 4);
+        let z = |t: f64| 2.0 + 3.0 * t - t * t + t * t * t / 4.0;
+        for t in 0..=nt {
+            let c = interp_coeffs(&nodes, t);
+            let sum: f64 = c.iter().map(|&x| x as f64).sum();
+            assert!((sum - 1.0).abs() < 1e-6, "t={t}: coeffs sum {sum}");
+            let rec: f64 = nodes.iter().zip(&c).map(|(&j, &cj)| cj as f64 * z(j as f64)).sum();
+            assert!(
+                (rec - z(t as f64)).abs() < 1e-4 * z(t as f64).abs().max(1.0),
+                "t={t}: reconstructed {rec} vs exact {}",
+                z(t as f64)
+            );
+        }
+    }
+
+    /// One adjoint sweep over smooth scalar dynamics
+    /// `z_{t+1} = z_t + h·(θ·z_t − z_t³)`, loss `L = ½·z_nt²`,
+    /// reconstructing step inputs from `p` interpolation nodes
+    /// (`p == nt+1` degenerates to the exact store-everything sweep —
+    /// the symplectic strategy's shape). Returns dL/dθ.
+    fn adjoint_grad(nt: usize, p: usize, theta: f64) -> f64 {
+        let h = 0.1f64;
+        let step = |z: f64| z + h * (theta * z - z * z * z);
+        let mut traj = vec![0.8f64];
+        for t in 0..nt {
+            traj.push(step(traj[t]));
+        }
+        let nodes = interp_nodes(nt, p);
+        let mut adj = traj[nt]; // dL/dz_nt
+        let mut gtheta = 0.0f64;
+        for t in (0..nt).rev() {
+            let c = interp_coeffs(&nodes, t);
+            let zt: f64 = nodes.iter().zip(&c).map(|(&j, &cj)| cj as f64 * traj[j]).sum();
+            gtheta += adj * h * zt; // ∂f/∂θ = h·z
+            adj *= 1.0 + h * (theta - 3.0 * zt * zt); // ∂f/∂z
+        }
+        gtheta
+    }
+
+    fn loss(nt: usize, theta: f64) -> f64 {
+        let h = 0.1f64;
+        let mut z = 0.8f64;
+        for _ in 0..nt {
+            z += h * (theta * z - z * z * z);
+        }
+        0.5 * z * z
+    }
+
+    /// Gradcheck against central finite differences: the exact sweep
+    /// (p = nt+1, the symplectic/store-everything shape) matches FD to
+    /// FD accuracy; sparse-node interpolated sweeps approximate it with
+    /// error shrinking as nodes are added (Daulbaev's accuracy knob).
+    #[test]
+    fn adjoint_sweeps_match_finite_differences() {
+        let (nt, theta, eps) = (8usize, 0.7f64, 1e-6f64);
+        let fd = (loss(nt, theta + eps) - loss(nt, theta - eps)) / (2.0 * eps);
+        assert!(fd.abs() > 1e-3, "degenerate test problem: fd={fd}");
+
+        let exact = adjoint_grad(nt, nt + 1, theta);
+        let rel = |g: f64| (g - fd).abs() / fd.abs().max(1e-12);
+        assert!(rel(exact) < 1e-4, "exact sweep vs FD: {exact} vs {fd}");
+
+        let e3 = rel(adjoint_grad(nt, 3, theta));
+        let e5 = rel(adjoint_grad(nt, 5, theta));
+        let e9 = rel(adjoint_grad(nt, 9, theta));
+        assert!(e9 < 1e-4, "all-node interp must be exact: {e9}");
+        assert!(e5 < 0.02, "5-node interp error too large: {e5}");
+        assert!(e3 < 0.1, "3-node interp error too large: {e3}");
+        assert!(e9 <= e3, "error must shrink with nodes: e3={e3} e9={e9}");
+    }
+}

@@ -15,9 +15,11 @@
 //!   (in tests) the revolve plan achieves the theoretical minimum.
 
 mod executor;
+pub mod interp;
 mod revolve;
 
 pub use executor::run_backward;
+pub use interp::{interp_coeffs, interp_nodes};
 pub use revolve::{binomial_eta, min_recomputations, revolve_plan};
 
 /// How to trade memory for recomputation inside one ODE block.
@@ -204,24 +206,34 @@ impl Schedule {
 }
 
 /// Build the action schedule for a strategy over `nt` steps.
+///
+/// Degenerate grids (`m >= nt`, which covers `nt == 1` and `m == nt`)
+/// hold every state within budget, so budgeted strategies emit the
+/// store-everything action list instead of a restore/replay schedule
+/// with zero-length recompute segments.
 pub fn plan(strategy: Strategy, nt: usize) -> Schedule {
     assert!(nt > 0);
     let actions = match strategy {
-        Strategy::StoreAll => {
-            let mut acts = Vec::with_capacity(2 * nt);
-            for i in 0..nt {
-                acts.push(Action::Forward { state: i, store_tape: true });
-            }
-            for i in (0..nt).rev() {
-                acts.push(Action::Backward { state: i });
-            }
-            acts
-        }
+        Strategy::StoreAll => store_all_plan(nt),
         Strategy::MinMemory => min_memory_plan(nt),
+        Strategy::Equispaced(m) | Strategy::Revolve(m) if m.max(1) >= nt => store_all_plan(nt),
         Strategy::Equispaced(m) => equispaced_plan(nt, m.max(1)),
         Strategy::Revolve(m) => revolve::revolve_plan(nt, m.max(1)),
     };
     Schedule { nt, strategy, actions }
+}
+
+/// Store-everything action list: tape every forward, then run the VJPs
+/// in reverse — no checkpoint slots, no recomputation.
+fn store_all_plan(nt: usize) -> Vec<Action> {
+    let mut acts = Vec::with_capacity(2 * nt);
+    for i in 0..nt {
+        acts.push(Action::Forward { state: i, store_tape: true });
+    }
+    for i in (0..nt).rev() {
+        acts.push(Action::Backward { state: i });
+    }
+    acts
 }
 
 /// Pick the cheapest strategy whose per-block activation memory fits
@@ -344,6 +356,39 @@ mod tests {
         for m in [2, 4, 8] {
             let e = plan(Strategy::Equispaced(m), nt).forward_evals();
             assert!(e >= all && e <= one, "m={m}: {e} not in [{all}, {one}]");
+        }
+    }
+
+    /// Regression sweep over the degenerate (nt, m) edge: `nt < m`,
+    /// `nt == 1`, and `m == nt` must all produce the valid
+    /// store-everything schedule — exactly nt taped forwards, no
+    /// checkpoint slots, no restore/replay with zero-length recompute
+    /// segments (what the budgeted planners used to emit here).
+    #[test]
+    fn degenerate_grids_produce_store_everything_schedules() {
+        let budgeted: [fn(usize) -> Strategy; 2] = [Strategy::Equispaced, Strategy::Revolve];
+        for make in budgeted {
+            for (nt, m) in [(1, 1), (1, 4), (2, 2), (3, 3), (3, 7), (5, 5), (5, 6), (8, 64)] {
+                let s = plan(make(m), nt);
+                let errs = s.validate();
+                assert!(errs.is_empty(), "nt={nt} m={m}: {errs:?}");
+                assert_eq!(s.forward_evals(), nt, "nt={nt} m={m}: must not recompute");
+                assert_eq!(s.extra_forwards(), 0, "nt={nt} m={m}");
+                assert_eq!(s.peak_slots(), 0, "nt={nt} m={m}: no checkpoint slots needed");
+                assert_eq!(s.peak_tape(), nt, "nt={nt} m={m}: whole trajectory taped");
+                assert_eq!(
+                    s.actions,
+                    plan(Strategy::StoreAll, nt).actions,
+                    "nt={nt} m={m}: not the store-everything action list"
+                );
+            }
+        }
+        // The edge of the edge: m = nt - 1 must still be a real
+        // checkpointing schedule (the degenerate arm must not over-fire).
+        for nt in [2usize, 3, 5, 8] {
+            let s = plan(Strategy::Revolve(nt - 1), nt);
+            assert!(s.validate().is_empty());
+            assert!(s.extra_forwards() > 0, "nt={nt}: m=nt-1 must recompute");
         }
     }
 

@@ -182,6 +182,13 @@ pub enum TrainOp {
     Zero { out: usize },
     /// `dst += src`, elementwise (`axpy` with alpha = 1.0).
     Acc { src: usize, dst: usize },
+    /// Define `out` as the barycentric mix `Σ_j c_j · vals[j]` over the
+    /// interpolated adjoint's trajectory nodes: zero `out`, then
+    /// `out += c_j · src_j` in term order — replicating the
+    /// interpreter's `Tensor::zeros` + `axpy(c_j, node_j)` fold exactly.
+    /// Coefficients are const-folded at build time and carried as f32
+    /// bit patterns so the op stays `Eq`/hashable.
+    Interp { out: usize, terms: Vec<(usize, u32)> },
 }
 
 /// The training step as a value graph before arena layout: ops in

@@ -156,6 +156,9 @@ pub struct CompileStats {
     /// Recompute segments (checkpoint restores replayed as sub-programs)
     /// unrolled into train programs at build time.
     pub train_recompute_segments: AtomicU64,
+    /// Interior trajectory node states pinned in long-lived arena slots
+    /// by interpolated-adjoint blocks, per built [`plan::TrainProgram`].
+    pub train_interp_nodes: AtomicU64,
     /// Training-arena buffers allocated (warmup only, in steady state).
     pub train_arena_allocs: AtomicU64,
     /// Training-arena buffers reused from the pool (every steady-state
@@ -175,6 +178,7 @@ impl CompileStats {
             arena_reuses: self.arena_reuses.load(Ordering::Relaxed),
             trajectory_bytes: self.trajectory_bytes.load(Ordering::Relaxed),
             train_recompute_segments: self.train_recompute_segments.load(Ordering::Relaxed),
+            train_interp_nodes: self.train_interp_nodes.load(Ordering::Relaxed),
             train_arena_allocs: self.train_arena_allocs.load(Ordering::Relaxed),
             train_arena_reuses: self.train_arena_reuses.load(Ordering::Relaxed),
         }
@@ -193,6 +197,7 @@ pub struct CompileStatsSnapshot {
     pub arena_reuses: u64,
     pub trajectory_bytes: u64,
     pub train_recompute_segments: u64,
+    pub train_interp_nodes: u64,
     pub train_arena_allocs: u64,
     pub train_arena_reuses: u64,
 }
@@ -209,6 +214,7 @@ impl CompileStatsSnapshot {
         self.arena_reuses += other.arena_reuses;
         self.trajectory_bytes += other.trajectory_bytes;
         self.train_recompute_segments += other.train_recompute_segments;
+        self.train_interp_nodes += other.train_interp_nodes;
         self.train_arena_allocs += other.train_arena_allocs;
         self.train_arena_reuses += other.train_arena_reuses;
     }

@@ -187,6 +187,13 @@ pub fn prune_dead_outputs(ir: &mut TrainIr) -> usize {
                 read[*src] = true;
                 read[*dst] = true;
             }
+            TrainOp::Interp { terms, .. } => {
+                // Node states are read by every reconstruction — without
+                // this the stepwise forward's interior fills look dead.
+                for (src, _) in terms {
+                    read[*src] = true;
+                }
+            }
         }
     }
     for &r in &ir.roots {

@@ -21,7 +21,7 @@ use crate::tensor::Tensor;
 
 use std::collections::HashMap;
 
-use crate::checkpoint::{Action, Schedule};
+use crate::checkpoint::{interp_coeffs, interp_nodes, Action, Schedule};
 
 use super::ir::{
     check_module_args, element_count, AbsorbStep, ModuleIr, OpKind, TrainArg, TrainIr, TrainOp,
@@ -548,10 +548,18 @@ pub enum TrainBackward {
     /// output is dead in training and pruned from the plan.
     FromOutput { module: String },
     /// `step_fwd`/`step_vjp` artifacts unrolled through an in-block
-    /// checkpoint [`Schedule`] (`anode-revolve<m>`, `anode-equispaced<m>`):
+    /// checkpoint [`Schedule`] (`anode-revolve<m>`, `anode-equispaced<m>`,
+    /// `symplectic` via its store-everything schedule):
     /// checkpoints become value aliases with extended liveness, recompute
     /// segments replay as straight-line sub-programs into the same arena.
     Checkpointed { step_fwd: String, step_vjp: String, schedule: Schedule },
+    /// Stepwise `step_fwd` forward capturing a sparse `nodes`-point
+    /// trajectory grid, then a `step_vjp` backward whose step inputs are
+    /// barycentric mixes of the pinned node values (`interp-adjoint<p>`):
+    /// node states become long-lived arena slots, interpolation
+    /// coefficients are const-folded into [`TrainInstr`] terms at build
+    /// time, and nothing is ever recomputed.
+    Interpolated { step_fwd: String, step_vjp: String, nodes: usize },
 }
 
 /// One ODE block of the training chain: forward module, its parameter
@@ -607,6 +615,11 @@ enum TrainInstr {
     /// `arena[dst..] += arena[src..]` elementwise (`axpy` with alpha =
     /// 1.0 — the interpreter's per-step gradient fold, same order).
     Acc { src: usize, dst: usize, len: usize },
+    /// Barycentric node mix: zero `arena[off..off+len]`, then for each
+    /// `(src, bits)` term in order add `f32::from_bits(bits) *
+    /// arena[src..]` — operation-for-operation the interpreter's
+    /// `Tensor::zeros` + `axpy(c_j, node_j)` reconstruction.
+    Interp { off: usize, len: usize, terms: Vec<(usize, u32)> },
 }
 
 /// Where one parameter gradient lives in the arena at the end of a run.
@@ -652,8 +665,12 @@ pub struct TrainProgram {
     trajectory_bytes: usize,
     recompute_segments: usize,
     pruned_fills: usize,
+    /// Interior trajectory node states pinned in long-lived arena slots
+    /// by interpolated-adjoint blocks (0 for every other strategy).
+    interp_nodes_pinned: usize,
     /// Interpreter ledger script, forward order: one BlockInput alloc per
-    /// stored boundary (x, block inputs, transition inputs).
+    /// stored boundary (x, block inputs, transition inputs, interior
+    /// interpolation nodes).
     tracked_bytes: Vec<usize>,
     /// Interpreter ledger script, backward block order: one transient
     /// StepState alloc+free per block backward.
@@ -805,21 +822,57 @@ impl TrainProgram {
         )?[0];
         let mut tracked_bytes = vec![image_bytes];
 
-        // (z_in, z_out) per block, per stage — the captured trajectory.
+        // (z_in, z_out) per block, per stage — the captured trajectory —
+        // plus, for interpolated-adjoint blocks, the interior node value
+        // ids captured by the stepwise forward (in increasing t order).
         let mut block_bounds: Vec<Vec<(usize, usize)>> = Vec::with_capacity(chain.stages.len());
+        let mut block_node_vals: Vec<Vec<Vec<usize>>> = Vec::with_capacity(chain.stages.len());
         let mut trans_inputs: Vec<usize> = Vec::new();
+        let mut interp_nodes_pinned = 0usize;
         for stage in &chain.stages {
             let mut bounds = Vec::with_capacity(stage.blocks.len());
+            let mut node_vals = Vec::with_capacity(stage.blocks.len());
             for blk in &stage.blocks {
-                let mut args: Vec<TrainArg> = vec![TrainArg::Val(z)];
-                args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
-                let z1 = b.call_n(&blk.fwd, args, 1, "block forward")?[0];
-                tracked_bytes.push(b.bytes_of(z));
-                b.trajectory[z] = true;
-                bounds.push((z, z1));
-                z = z1;
+                if let TrainBackward::Interpolated { step_fwd, nodes, .. } = &blk.backward {
+                    // Stepwise forward so the node states exist to pin —
+                    // the same walk the interpreter's coordinator runs,
+                    // with the same BlockInput ledger entries (z_in, then
+                    // interior nodes as they appear).
+                    tracked_bytes.push(b.bytes_of(z));
+                    b.trajectory[z] = true;
+                    let z_in = z;
+                    let node_ids = interp_nodes(chain.nt, *nodes);
+                    let mut captured = Vec::new();
+                    let mut cur = z;
+                    for t in 0..chain.nt {
+                        let mut args: Vec<TrainArg> = vec![TrainArg::Val(cur)];
+                        args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
+                        let next =
+                            b.call_n(step_fwd, args, 1, "interpolated step forward")?[0];
+                        if t + 1 < chain.nt && node_ids.contains(&(t + 1)) {
+                            tracked_bytes.push(b.bytes_of(next));
+                            b.trajectory[next] = true;
+                            captured.push(next);
+                            interp_nodes_pinned += 1;
+                        }
+                        cur = next;
+                    }
+                    bounds.push((z_in, cur));
+                    node_vals.push(captured);
+                    z = cur;
+                } else {
+                    let mut args: Vec<TrainArg> = vec![TrainArg::Val(z)];
+                    args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
+                    let z1 = b.call_n(&blk.fwd, args, 1, "block forward")?[0];
+                    tracked_bytes.push(b.bytes_of(z));
+                    b.trajectory[z] = true;
+                    bounds.push((z, z1));
+                    node_vals.push(Vec::new());
+                    z = z1;
+                }
             }
             block_bounds.push(bounds);
+            block_node_vals.push(node_vals);
             if let Some(trans) = &stage.trans {
                 tracked_bytes.push(b.bytes_of(z));
                 b.trajectory[z] = true;
@@ -1005,6 +1058,90 @@ impl TrainProgram {
                         let slots = schedule.strategy.slots(schedule.nt);
                         step_state_bytes.push((slots + 1) * act_bytes);
                     }
+                    TrainBackward::Interpolated { step_vjp, nodes, .. } => {
+                        let node_ids = interp_nodes(chain.nt, *nodes);
+                        // Node values by node index: the block endpoints
+                        // plus the interior states pinned by the forward.
+                        let interior = &block_node_vals[s][bi];
+                        if interior.len()
+                            != node_ids.iter().filter(|&&t| t != 0 && t != chain.nt).count()
+                        {
+                            return Err(unsupported(
+                                step_vjp,
+                                format!(
+                                    "forward pinned {} interior nodes, backward expects {}",
+                                    interior.len(),
+                                    node_ids.len().saturating_sub(2)
+                                ),
+                            ));
+                        }
+                        let mut by_node: Vec<usize> = Vec::with_capacity(node_ids.len());
+                        let mut next_interior = 0usize;
+                        for &t in &node_ids {
+                            if t == 0 {
+                                by_node.push(z_in);
+                            } else if t == chain.nt {
+                                by_node.push(z_out);
+                            } else {
+                                by_node.push(interior[next_interior]);
+                                next_interior += 1;
+                            }
+                        }
+                        // Interpreter order: accumulators zeroed before the
+                        // sweep, one axpy(1.0) per step VJP, t descending.
+                        let accs: Vec<usize> = blk
+                            .params
+                            .iter()
+                            .map(|&p| {
+                                let v = b.value(param_shapes[p].clone());
+                                b.ops.push(TrainOp::Zero { out: v });
+                                v
+                            })
+                            .collect();
+                        let mut adj = gz;
+                        for t in (0..chain.nt).rev() {
+                            // At a node the pinned value is read directly
+                            // (bitwise); elsewhere a const-folded
+                            // barycentric mix reconstructs the step input.
+                            let zt = match node_ids.iter().position(|&x| x == t) {
+                                Some(j) => by_node[j],
+                                None => {
+                                    let coeffs = interp_coeffs(&node_ids, t);
+                                    let shape = b.shapes[z_in].clone();
+                                    let v = b.value(shape);
+                                    b.ops.push(TrainOp::Interp {
+                                        out: v,
+                                        terms: by_node
+                                            .iter()
+                                            .zip(&coeffs)
+                                            .map(|(&src, &c)| (src, c.to_bits()))
+                                            .collect(),
+                                    });
+                                    v
+                                }
+                            };
+                            let mut args: Vec<TrainArg> = vec![TrainArg::Val(zt)];
+                            args.extend(blk.params.iter().map(|&p| TrainArg::Param(p)));
+                            args.push(TrainArg::Val(adj));
+                            let outs = b.call_n(
+                                step_vjp,
+                                args,
+                                1 + blk.params.len(),
+                                "interpolated step VJP",
+                            )?;
+                            adj = outs[0];
+                            for (&acc, &g) in accs.iter().zip(&outs[1..]) {
+                                b.ops.push(TrainOp::Acc { src: g, dst: acc });
+                            }
+                        }
+                        gz = adj;
+                        for (&p, &acc) in blk.params.iter().zip(&accs) {
+                            grad_of.insert(p, acc);
+                        }
+                        // Interpreter ledger cost: one reconstructed state
+                        // at a time (nodes are metered as BlockInput).
+                        step_state_bytes.push(act_bytes);
+                    }
                 }
             }
         }
@@ -1052,6 +1189,14 @@ impl TrainProgram {
                 TrainOp::Acc { src, dst } => {
                     last[*src] = i;
                     last[*dst] = i;
+                }
+                TrainOp::Interp { out, terms } => {
+                    for (src, _) in terms {
+                        last[*src] = i;
+                    }
+                    def[*out] = i;
+                    last[*out] = i;
+                    live[*out] = true;
                 }
             }
         }
@@ -1110,6 +1255,14 @@ impl TrainProgram {
                     let (dst, len) = place(*dst);
                     TrainInstr::Acc { src, dst, len }
                 }
+                TrainOp::Interp { out, terms } => {
+                    let (off, len) = place(*out);
+                    TrainInstr::Interp {
+                        off,
+                        len,
+                        terms: terms.iter().map(|&(src, bits)| (place(src).0, bits)).collect(),
+                    }
+                }
             })
             .collect();
 
@@ -1139,6 +1292,7 @@ impl TrainProgram {
             .fetch_add((total * std::mem::size_of::<f32>()) as u64, Ordering::Relaxed);
         stats.trajectory_bytes.fetch_add(trajectory_bytes as u64, Ordering::Relaxed);
         stats.train_recompute_segments.fetch_add(recompute_segments as u64, Ordering::Relaxed);
+        stats.train_interp_nodes.fetch_add(interp_nodes_pinned as u64, Ordering::Relaxed);
         Ok(TrainProgram {
             plans: b.plans,
             instrs,
@@ -1153,6 +1307,7 @@ impl TrainProgram {
             trajectory_bytes,
             recompute_segments,
             pruned_fills,
+            interp_nodes_pinned,
             tracked_bytes,
             step_state_bytes,
             pool: Mutex::new(Vec::new()),
@@ -1191,6 +1346,12 @@ impl TrainProgram {
     /// Dead output fills pruned at build time (e.g. `node`'s z0_rec).
     pub fn pruned_fills(&self) -> usize {
         self.pruned_fills
+    }
+
+    /// Interior trajectory node states pinned in long-lived arena slots by
+    /// interpolated-adjoint blocks (0 for every other strategy).
+    pub fn interp_nodes_pinned(&self) -> usize {
+        self.interp_nodes_pinned
     }
 
     /// The interpreter's BlockInput ledger script (alloc sizes in forward
@@ -1262,6 +1423,20 @@ impl TrainProgram {
                     for j in 0..*len {
                         let v = arena[src + j];
                         arena[dst + j] += v;
+                    }
+                }
+                TrainInstr::Interp { off, len, terms } => {
+                    // Zero-then-accumulate in term order — exactly the
+                    // interpreter's Tensor::zeros + axpy(c_j, node_j).
+                    // Output and operand slots are disjoint by liveness
+                    // (node slots stay live past this instruction).
+                    arena[*off..*off + *len].fill(0.0);
+                    for &(src, bits) in terms {
+                        let c = f32::from_bits(bits);
+                        for j in 0..*len {
+                            let v = arena[src + j];
+                            arena[*off + j] += c * v;
+                        }
                     }
                 }
             }

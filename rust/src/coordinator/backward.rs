@@ -56,6 +56,7 @@ pub(crate) fn backward(
                 z_out: state.block_outputs[s][b].as_ref(),
                 theta: &theta,
                 pidx,
+                nodes: &state.block_nodes[s][b],
             };
             gz = co.strategy.block_backward(&ctx, gz, grads, ledger)?;
         }

@@ -72,6 +72,13 @@ pub struct ForwardState {
     /// block_outputs[s][b] = output activation (used by `node` only);
     /// shares the buffer of the next block/transition input.
     pub block_outputs: Vec<Vec<Arc<Tensor>>>,
+    /// block_nodes[s][b] = interior trajectory node states of ODE block
+    /// (s, b) captured by a stepwise forward, in increasing time order —
+    /// populated only for strategies that request node capture via
+    /// [`GradientStrategy::forward_nodes`] (the interpolated adjoint);
+    /// empty vectors otherwise. Endpoints are not duplicated here: state
+    /// 0 is the block input, state nt the block output.
+    pub block_nodes: Vec<Vec<Vec<Arc<Tensor>>>>,
     /// trans_inputs[s] = input of transition s (shares the last block
     /// output of stage s).
     pub trans_inputs: Vec<Arc<Tensor>>,
@@ -250,6 +257,11 @@ impl ExecutionCore {
                         schedule,
                     }
                 }
+                CompiledBlockBackward::Interpolated { nodes } => TrainBackward::Interpolated {
+                    step_fwd: stage.require("step_fwd")?.name().to_string(),
+                    step_vjp: stage.require("step_vjp")?.name().to_string(),
+                    nodes,
+                },
             };
             let blocks = (0..cfg.blocks_per_stage)
                 .map(|b| TrainBlock {
@@ -338,23 +350,53 @@ impl ExecutionCore {
             ids.push(ledger.alloc(t.byte_size(), Category::BlockInput));
         };
 
+        // Strategies that reconstruct the backward from sparse trajectory
+        // nodes (the interpolated adjoint) need the forward run stepwise
+        // so the node states exist to capture; every other strategy keeps
+        // the fused one-call-per-block forward.
+        let forward_nodes = self.strategy.forward_nodes(self.cfg.nt);
+
         let (sw, sb) = (&params[self.index.stem.0], &params[self.index.stem.1]);
         let mut z = Arc::new(self.call(&self.modules.stem_fwd, &[x, sw, sb])?.remove(0));
         track(x, ledger, &mut ledger_ids);
 
         let mut block_inputs = Vec::new();
         let mut block_outputs = Vec::new();
+        let mut block_nodes = Vec::new();
         let mut trans_inputs = Vec::new();
         for s in 0..self.cfg.stages() {
             let mut ins = Vec::new();
             let mut outs = Vec::new();
+            let mut nodes_of = Vec::new();
             let fwd = self.modules.stages[s].require("fwd")?;
             for b in 0..self.cfg.blocks_per_stage {
-                let mut args: Vec<&Tensor> = vec![z.as_ref()];
-                args.extend(self.block_params(params, s, b));
-                let z1 = Arc::new(self.call(fwd, &args)?.remove(0));
                 track(z.as_ref(), ledger, &mut ledger_ids);
                 ins.push(Arc::clone(&z));
+                let z1 = if let Some(nodes) = &forward_nodes {
+                    let step_fwd = self.modules.stages[s].require("step_fwd")?;
+                    let mut captured = Vec::new();
+                    let mut cur = Arc::clone(&z);
+                    for t in 0..self.cfg.nt {
+                        let mut args: Vec<&Tensor> = vec![cur.as_ref()];
+                        args.extend(self.block_params(params, s, b));
+                        let next = Arc::new(self.call(step_fwd, &args)?.remove(0));
+                        // Interior nodes are stored (and metered) as they
+                        // appear; the endpoints are the block input/output
+                        // already held above/below.
+                        if t + 1 < self.cfg.nt && nodes.contains(&(t + 1)) {
+                            track(next.as_ref(), ledger, &mut ledger_ids);
+                            captured.push(Arc::clone(&next));
+                        }
+                        cur = next;
+                    }
+                    nodes_of.push(captured);
+                    cur
+                } else {
+                    let mut args: Vec<&Tensor> = vec![z.as_ref()];
+                    args.extend(self.block_params(params, s, b));
+                    nodes_of.push(Vec::new());
+                    Arc::new(self.call(fwd, &args)?.remove(0))
+                };
                 // Output doubles as the next block's input: one buffer,
                 // two Arc readers — no deep copy.
                 outs.push(Arc::clone(&z1));
@@ -362,6 +404,7 @@ impl ExecutionCore {
             }
             block_inputs.push(ins);
             block_outputs.push(outs);
+            block_nodes.push(nodes_of);
             if s + 1 < self.cfg.stages() {
                 let (tw, tb) = self.index.trans[s];
                 track(z.as_ref(), ledger, &mut ledger_ids);
@@ -377,6 +420,7 @@ impl ExecutionCore {
             x: x.clone(),
             block_inputs,
             block_outputs,
+            block_nodes,
             trans_inputs,
             z_final: z,
             ledger_ids,

@@ -78,6 +78,7 @@ fn print_help() {
          \n\
          train:     --arch resnet|sqnxt  --solver euler|rk2|rk45\n\
          \u{20}          --method anode|node|otd|anode-revolve<m>|anode-equispaced<m>\n\
+         \u{20}          |symplectic|interp-adjoint<p>\n\
          \u{20}          --classes 10|100 --steps N --lr F --train-size N --seed N\n\
          \u{20}          --workers N (parallel evaluation sweeps; default 1)\n\
          \u{20}          --grad-accum K (micro-batches per optimizer step)\n\

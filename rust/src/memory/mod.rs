@@ -49,8 +49,14 @@ struct Alloc {
 /// Per-thread by design: each session (and each worker in the parallel
 /// predict/evaluate paths) owns its own ledger; worker ledgers are folded
 /// into an aggregate afterward with [`MemoryLedger::merge`].
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Clone)]
 pub struct MemoryLedger {
+    /// Identity of the *logical* ledger — fresh per [`MemoryLedger::new`],
+    /// shared by clones (a clone is a snapshot of the same meter, not a
+    /// new one). [`MemoryLedger::absorb_parallel`] keys its idempotence
+    /// bookkeeping on this, so absorbing the same worker twice cannot
+    /// double-count its contribution.
+    uid: u64,
     live: HashMap<u64, Alloc>,
     next_id: u64,
     current: usize,
@@ -64,11 +70,34 @@ pub struct MemoryLedger {
     /// therefore the paper's measured memory claim) is suspect, so it is
     /// surfaced in [`MemoryLedger::summary`] instead of silently dropped.
     unknown_frees: u64,
+    /// Per worker-uid `(traffic, unknown_frees)` already folded in by
+    /// [`MemoryLedger::absorb_parallel`] — the re-absorb delta base.
+    absorbed: HashMap<u64, (u64, u64)>,
+}
+
+impl Default for MemoryLedger {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl MemoryLedger {
     pub fn new() -> Self {
-        Self::default()
+        // Process-wide uid counter: ledger identity must survive cloning
+        // (snapshots share the uid), so it cannot be the address.
+        static NEXT_UID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        Self {
+            uid: NEXT_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+            live: HashMap::new(),
+            next_id: 0,
+            current: 0,
+            peak: 0,
+            peak_by_cat: HashMap::new(),
+            current_by_cat: HashMap::new(),
+            total_allocated: 0,
+            unknown_frees: 0,
+            absorbed: HashMap::new(),
+        }
     }
 
     /// Record an allocation; returns a handle for [`Self::free`].
@@ -186,20 +215,43 @@ impl MemoryLedger {
     /// devices own *separate* memories, so the cross-device candidate is
     /// the **max over devices**, not their sum (regression-pinned in the
     /// tests below).
+    /// Absorb is **idempotent per worker**: each worker ledger is keyed by
+    /// its identity (`uid`, shared by clones), and one that was already
+    /// absorbed — earlier in the same round via a duplicate slice entry,
+    /// or in a previous round without new activity since — contributes
+    /// nothing again. A re-absorbed worker that *did* run more work since
+    /// (its traffic grew) re-enters the concurrent sum with its current
+    /// peak and adds only its traffic/anomaly delta, so stale round-N
+    /// peaks are never double-counted into round N+1's candidate.
     pub fn absorb_parallel(&mut self, workers: &[MemoryLedger]) {
-        let phase_peak: usize = workers.iter().map(|w| w.peak).sum();
+        // Dedupe by identity within the round, then drop workers with no
+        // activity beyond what an earlier absorb already folded in.
+        let mut seen = std::collections::HashSet::new();
+        let contributing: Vec<&MemoryLedger> = workers
+            .iter()
+            .filter(|w| seen.insert(w.uid))
+            .filter(|w| match self.absorbed.get(&w.uid) {
+                Some(&(traffic, frees)) => {
+                    w.total_allocated > traffic || w.unknown_frees > frees
+                }
+                None => true,
+            })
+            .collect();
+        let phase_peak: usize = contributing.iter().map(|w| w.peak).sum();
         self.peak = self.peak.max(self.current + phase_peak);
         let cats: std::collections::HashSet<Category> =
-            workers.iter().flat_map(|w| w.peak_by_cat.keys().copied()).collect();
+            contributing.iter().flat_map(|w| w.peak_by_cat.keys().copied()).collect();
         for cat in cats {
-            let phase_cat: usize = workers.iter().map(|w| w.peak_of(cat)).sum();
+            let phase_cat: usize = contributing.iter().map(|w| w.peak_of(cat)).sum();
             let candidate = self.current_of(cat) + phase_cat;
             let cat_peak = self.peak_by_cat.entry(cat).or_default();
             *cat_peak = (*cat_peak).max(candidate);
         }
-        for w in workers {
-            self.total_allocated += w.total_allocated;
-            self.unknown_frees += w.unknown_frees;
+        for w in contributing {
+            let (traffic, frees) = self.absorbed.get(&w.uid).copied().unwrap_or((0, 0));
+            self.total_allocated += w.total_allocated.saturating_sub(traffic);
+            self.unknown_frees += w.unknown_frees.saturating_sub(frees);
+            self.absorbed.insert(w.uid, (w.total_allocated, w.unknown_frees));
         }
     }
 
@@ -402,6 +454,52 @@ mod tests {
         assert_eq!(session.peak_bytes(), 260);
         assert_eq!(session.peak_of(Category::StepState), 160);
         assert_eq!(session.total_traffic(), 390);
+        assert_eq!(session.unknown_frees(), 0);
+    }
+
+    #[test]
+    fn absorb_parallel_is_idempotent_per_worker() {
+        // Regression: absorbing one worker ledger twice — a duplicate
+        // slice entry in one round, or the same (unchanged) worker again
+        // in a later round — used to double-count its concurrent-peak
+        // term and its traffic. Identity is the ledger uid, which clones
+        // share (a clone is a snapshot of the same meter).
+        let worker = |bytes: usize| {
+            let mut w = MemoryLedger::new();
+            let id = w.alloc(bytes, Category::StepState);
+            w.free(id);
+            w
+        };
+        let w = worker(40);
+        let mut session = MemoryLedger::new();
+        session.alloc(100, Category::Param);
+
+        // Duplicate entry within one round counts once.
+        session.absorb_parallel(&[w.clone(), w.clone()]);
+        assert_eq!(session.peak_bytes(), 140, "duplicate entry must not double the peak");
+        assert_eq!(session.peak_of(Category::StepState), 40);
+        assert_eq!(session.total_traffic(), 140);
+
+        // Re-absorbing the unchanged worker in a later round is a no-op.
+        session.absorb_parallel(std::slice::from_ref(&w));
+        assert_eq!(session.peak_bytes(), 140, "unchanged re-absorb must be a no-op");
+        assert_eq!(session.total_traffic(), 140);
+
+        // Once the worker runs more work, a re-absorb counts its current
+        // peak in the new round's candidate and adds only the delta of
+        // its traffic — never the already-folded prefix again.
+        let mut grown = w.clone();
+        let id = grown.alloc(60, Category::StepState);
+        grown.free(id);
+        session.absorb_parallel(std::slice::from_ref(&grown));
+        assert_eq!(session.peak_bytes(), 160, "live 100 + grown worker peak 60");
+        assert_eq!(session.peak_of(Category::StepState), 60);
+        assert_eq!(session.total_traffic(), 200, "only the 60B delta adds");
+
+        // Fresh workers are untouched by the bookkeeping.
+        session.absorb_parallel(&[worker(80)]);
+        assert_eq!(session.peak_bytes(), 180);
+        assert_eq!(session.total_traffic(), 280);
         assert_eq!(session.unknown_frees(), 0);
     }
 

@@ -70,6 +70,13 @@ pub enum GradMethod {
     Node,
     /// Optimize-then-discretize adjoint with stored trajectory (§IV).
     Otd,
+    /// Symplectic adjoint (Matsubara et al., 2021): exact gradients from
+    /// the paired integrator over the stored boundary trajectory.
+    Symplectic,
+    /// Interpolated adjoint (Daulbaev et al., 2020): store p trajectory
+    /// nodes per block, reconstruct step inputs by barycentric
+    /// interpolation in the backward sweep.
+    InterpAdjoint(usize),
 }
 
 impl GradMethod {
@@ -80,6 +87,8 @@ impl GradMethod {
             GradMethod::AnodeEquispaced(m) => format!("anode-equispaced{m}"),
             GradMethod::Node => "node".into(),
             GradMethod::Otd => "otd".into(),
+            GradMethod::Symplectic => "symplectic".into(),
+            GradMethod::InterpAdjoint(p) => format!("interp-adjoint{p}"),
         }
     }
 
@@ -97,39 +106,58 @@ impl GradMethod {
         if s == "otd" {
             return Some(GradMethod::Otd);
         }
+        if s == "symplectic" {
+            return Some(GradMethod::Symplectic);
+        }
         // Budget syntax + validation live in parse_budget (shared with the
-        // api strategy registry); a Some(Err) — pattern matched, degenerate
-        // budget — parses to None.
+        // api strategy registry); a Some(Err) — pattern matched, malformed
+        // or degenerate budget — parses to None.
         if let Some(m) = parse_budget(s, "anode-revolve") {
             return m.ok().map(GradMethod::AnodeRevolve);
         }
         if let Some(m) = parse_budget(s, "anode-equispaced") {
             return m.ok().map(GradMethod::AnodeEquispaced);
         }
+        if let Some(p) = parse_budget(s, "interp-adjoint") {
+            // Interpolation needs both endpoints: p >= 2 nodes.
+            return p.ok().filter(|&p| p >= 2).map(GradMethod::InterpAdjoint);
+        }
         None
     }
 }
 
 /// Parse `"<prefix><m>"` checkpoint-budget specs. `None` if `spec` is not
-/// this pattern; `Some(Err)` if it is but the budget is degenerate
-/// (m < 1). The single source of truth for budget syntax — both
+/// this pattern (no budget digits at all after the prefix); `Some(Err)`
+/// if it is but the budget is degenerate (m < 1), malformed (garbage
+/// before/after the digits, e.g. `anode-revolve:4x`), or out of range.
+/// The single source of truth for budget syntax — both
 /// [`GradMethod::parse`] and the `api::strategy` registry delegate here.
 pub(crate) fn parse_budget(
     spec: &str,
     prefix: &str,
 ) -> Option<Result<usize, RuntimeError>> {
     let rest = spec.strip_prefix(prefix)?;
-    // Digits only: `usize::from_str` would accept a leading '+', breaking
-    // the spec-name round-trip ("anode-revolve+3" -> "anode-revolve3").
-    if rest.is_empty() || !rest.bytes().all(|b| b.is_ascii_digit()) {
+    if rest.is_empty() || !rest.bytes().any(|b| b.is_ascii_digit()) {
         return None;
+    }
+    // Digits only: `usize::from_str` would accept a leading '+', breaking
+    // the spec-name round-trip ("anode-revolve+3" -> "anode-revolve3");
+    // and trailing garbage after a valid budget ("4x", ":4") must fail
+    // with the same typed error as a degenerate budget rather than be
+    // silently dropped (or fall through to an unknown-spec path).
+    if !rest.bytes().all(|b| b.is_ascii_digit()) {
+        return Some(Err(RuntimeError::Io(format!(
+            "{prefix}{rest}: malformed checkpoint budget (want {prefix}<m> with m >= 1)"
+        ))));
     }
     match rest.parse::<usize>() {
         Ok(m) if m >= 1 => Some(Ok(m)),
         Ok(m) => Some(Err(RuntimeError::Io(format!(
             "{prefix}{m}: checkpoint budget must be >= 1 slot"
         )))),
-        Err(_) => None,
+        Err(_) => Some(Err(RuntimeError::Io(format!(
+            "{prefix}{rest}: checkpoint budget out of range"
+        )))),
     }
 }
 
@@ -381,5 +409,54 @@ mod tests {
         assert_eq!(GradMethod::parse("anode-equispaced"), None);
         assert_eq!(GradMethod::parse("anode-revolve-3"), None);
         assert_eq!(GradMethod::parse("anode-revolveX"), None);
+        assert_eq!(GradMethod::parse("interp-adjoint0"), None);
+        assert_eq!(GradMethod::parse("interp-adjoint1"), None); // needs both endpoints
+        assert_eq!(GradMethod::parse("interp-adjoint"), None);
+        assert_eq!(GradMethod::parse("symplectic2"), None);
+    }
+
+    #[test]
+    fn parse_round_trips_new_strategy_specs() {
+        assert_eq!(GradMethod::parse("symplectic"), Some(GradMethod::Symplectic));
+        assert_eq!(GradMethod::parse("interp-adjoint2"), Some(GradMethod::InterpAdjoint(2)));
+        assert_eq!(GradMethod::parse("interp-adjoint3"), Some(GradMethod::InterpAdjoint(3)));
+        assert_eq!(GradMethod::Symplectic.name(), "symplectic");
+        assert_eq!(GradMethod::InterpAdjoint(3).name(), "interp-adjoint3");
+        for spec in ["symplectic", "interp-adjoint3", "interp-adjoint16"] {
+            assert_eq!(GradMethod::parse(spec).unwrap().name(), spec);
+        }
+    }
+
+    /// Trailing or embedded garbage around an otherwise-valid budget must
+    /// surface the same typed error as a degenerate budget — not parse as
+    /// the budget with the garbage silently ignored, and not fall through
+    /// to the not-this-pattern `None` arm that unknown-spec callers treat
+    /// as "try the next prefix".
+    #[test]
+    fn parse_budget_rejects_trailing_garbage_with_typed_error() {
+        for (spec, prefix) in [
+            ("anode-revolve:4x", "anode-revolve"),
+            ("anode-revolve4x", "anode-revolve"),
+            ("anode-revolve:4", "anode-revolve"),
+            ("anode-revolve+3", "anode-revolve"),
+            ("anode-equispaced2.5", "anode-equispaced"),
+            ("interp-adjoint3x", "interp-adjoint"),
+            ("interp-adjoint:3", "interp-adjoint"),
+        ] {
+            let got = parse_budget(spec, prefix);
+            assert!(
+                matches!(got, Some(Err(RuntimeError::Io(_)))),
+                "{spec}: want typed budget error, got {got:?}"
+            );
+            assert_eq!(GradMethod::parse(spec), None, "{spec} must not parse");
+        }
+        // No digits after the prefix at all: genuinely not the pattern.
+        assert_eq!(parse_budget("anode-revolveX", "anode-revolve"), None);
+        assert!(matches!(parse_budget("anode-revolve0", "anode-revolve"), Some(Err(_))));
+        // A budget too large for usize is the pattern, malformed.
+        assert!(matches!(
+            parse_budget("anode-revolve99999999999999999999999", "anode-revolve"),
+            Some(Err(_))
+        ));
     }
 }

@@ -99,6 +99,7 @@ pub fn render(
         line("compile_arena_reuses_total", c.arena_reuses);
         line("compile_train_trajectory_bytes", c.trajectory_bytes);
         line("compile_train_recompute_segments", c.train_recompute_segments);
+        line("compile_train_interp_nodes", c.train_interp_nodes);
         line("compile_train_arena_allocs_total", c.train_arena_allocs);
         line("compile_train_arena_reuses_total", c.train_arena_reuses);
     }
@@ -194,6 +195,7 @@ mod tests {
             arena_reuses: 98,
             trajectory_bytes: 4096,
             train_recompute_segments: 6,
+            train_interp_nodes: 5,
             train_arena_allocs: 3,
             train_arena_reuses: 97,
         };
@@ -206,6 +208,7 @@ mod tests {
         assert_eq!(scrape_value(&text, "compile_arena_reuses_total"), Some(98));
         assert_eq!(scrape_value(&text, "compile_train_trajectory_bytes"), Some(4096));
         assert_eq!(scrape_value(&text, "compile_train_recompute_segments"), Some(6));
+        assert_eq!(scrape_value(&text, "compile_train_interp_nodes"), Some(5));
         assert_eq!(scrape_value(&text, "compile_train_arena_allocs_total"), Some(3));
         assert_eq!(scrape_value(&text, "compile_train_arena_reuses_total"), Some(97));
     }

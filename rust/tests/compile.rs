@@ -22,7 +22,15 @@ use anode::tensor::Tensor;
 
 /// Every built-in gradient method — the compiled training path must hold
 /// for all of them, not just the fused adjoint.
-const STRATEGIES: [&str; 5] = ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"];
+const STRATEGIES: [&str; 7] = [
+    "anode",
+    "node",
+    "otd",
+    "anode-revolve3",
+    "anode-equispaced2",
+    "symplectic",
+    "interp-adjoint3",
+];
 
 /// Write the sim artifact set into a fresh temp dir.
 fn sim_dir(tag: &str) -> PathBuf {
@@ -414,6 +422,38 @@ fn train_program_zero_steady_state_allocations_after_warmup() {
     );
     assert!(after.trajectory_bytes > steady.trajectory_bytes, "block boundaries still planned");
     drop(fused);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Interpolated-adjoint lowering pins its interior node states in
+/// long-lived arena slots at build time: the `train_interp_nodes`
+/// counter reports them, they join the trajectory budget, and no other
+/// strategy pins any (symplectic stores everything but interpolates
+/// nothing).
+#[test]
+fn interp_adjoint_lowering_pins_node_states_at_build_time() {
+    let dir = sim_dir("interp_nodes");
+    let engine =
+        Engine::builder().artifacts(&dir).devices(1).backend(Backend::Compiled).build().unwrap();
+    let reg = engine.registry();
+    assert_eq!(reg.compile_stats().unwrap().train_interp_nodes, 0);
+
+    let symp = engine.session(SessionConfig::with_method("symplectic")).unwrap();
+    let after_symp = reg.compile_stats().unwrap();
+    assert_eq!(after_symp.train_interp_nodes, 0, "symplectic pins no interpolation nodes");
+    assert!(after_symp.trajectory_bytes > 0, "store-everything tape must be planned");
+
+    // interp-adjoint3 over the SimSpec nt = 4 grid places nodes {0, 2, 4}
+    // — one interior node per block, over stages × blocks_per_stage = 2
+    // blocks.
+    let interp = engine.session(SessionConfig::with_method("interp-adjoint3")).unwrap();
+    let after = reg.compile_stats().unwrap();
+    assert_eq!(after.train_interp_nodes, 2, "one interior node pinned per block");
+    assert!(
+        after.trajectory_bytes > after_symp.trajectory_bytes,
+        "pinned nodes must join the trajectory budget"
+    );
+    drop((symp, interp));
     std::fs::remove_dir_all(&dir).ok();
 }
 

@@ -289,7 +289,15 @@ fn train_accumulate(
 fn data_parallel_grad_accumulation_is_bit_identical_for_all_strategies() {
     let Some(engine) = real_engine() else { return };
     let (accum, steps) = (4usize, 2usize);
-    for method in ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"] {
+    for method in [
+        "anode",
+        "node",
+        "otd",
+        "anode-revolve3",
+        "anode-equispaced2",
+        "symplectic",
+        "interp-adjoint3",
+    ] {
         let (loss1, params1, traffic1) = train_accumulate(&engine, method, 1, accum, steps);
         for workers in [2usize, 4, 8] {
             let (loss_w, params_w, traffic_w) =

@@ -30,7 +30,15 @@ use anode::tensor::Tensor;
 use anode::util::pool::{sharded_map_with, PersistentPool, ShardRouter};
 
 const WAIT: Duration = Duration::from_secs(20);
-const STRATEGIES: [&str; 5] = ["anode", "node", "otd", "anode-revolve3", "anode-equispaced2"];
+const STRATEGIES: [&str; 7] = [
+    "anode",
+    "node",
+    "otd",
+    "anode-revolve3",
+    "anode-equispaced2",
+    "symplectic",
+    "interp-adjoint3",
+];
 
 /// Write the sim artifact set into a fresh temp dir.
 fn sim_dir(tag: &str) -> PathBuf {
@@ -131,6 +139,31 @@ fn training_grid_bit_identical_to_serial_for_all_strategies() {
                     "{method}: ledger traffic diverged at devices={devices} workers={workers}"
                 );
             }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Adjoint-consistency lock-in: where a checkpoint schedule degenerates
+/// to store-everything (budget m >= nt), the checkpointed adjoint runs
+/// exactly the store-all action list the symplectic strategy always uses
+/// — so per-step losses and final params must match **bitwise**, on both
+/// execution backends. (Ledger traffic is deliberately not compared: the
+/// strategies meter different StepState slot counts over the same action
+/// list — nt+1 for symplectic's store-all vs m for the degenerate
+/// budget.)
+#[test]
+fn symplectic_matches_degenerate_schedules_bitwise() {
+    let dir = sim_dir("symplectic_consistency");
+    for backend in [Backend::Sim, Backend::Compiled] {
+        let engine = backend_engine(&dir, 1, backend);
+        let (loss_ref, params_ref, _) = train_run(&engine, "symplectic", 1, 2);
+        // SimSpec::default() runs nt = 4 steps, so a budget of 8 is past
+        // the degenerate edge for both schedule families.
+        for degenerate in ["anode-revolve8", "anode-equispaced8"] {
+            let (loss, params, _) = train_run(&engine, degenerate, 1, 2);
+            assert_eq!(loss_ref, loss, "{backend:?} {degenerate}: losses diverged");
+            assert_eq!(params_ref, params, "{backend:?} {degenerate}: params diverged");
         }
     }
     std::fs::remove_dir_all(&dir).ok();
